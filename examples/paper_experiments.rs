@@ -1,0 +1,35 @@
+//! Regenerate every table and figure from the paper's evaluation section
+//! in one run (also available piecewise via `cargo bench` or
+//! `layerkv experiment <id>`).
+//!
+//! ```sh
+//! cargo run --release --example paper_experiments            # full sweep
+//! LAYERKV_QUICK=1 cargo run --release --example paper_experiments
+//! cargo run --release --example paper_experiments fig4 fig8  # subset
+//! ```
+
+use layerkv::experiments as exp;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let all = ["table1", "fig1", "fig4", "fig5", "fig6", "fig7", "fig8"];
+    let which: Vec<&str> = if args.is_empty() {
+        all.to_vec()
+    } else {
+        args.iter().map(String::as_str).collect()
+    };
+    for id in which {
+        let t0 = std::time::Instant::now();
+        match id {
+            "table1" => exp::print_table1(),
+            "fig1" => exp::print_fig1(&exp::fig1()),
+            "fig4" => exp::print_fig4(&exp::fig4()),
+            "fig5" => exp::print_fig5(&exp::fig5()),
+            "fig6" => exp::print_fig6(&exp::fig6_7()),
+            "fig7" => exp::print_fig7(&exp::fig6_7()),
+            "fig8" => exp::print_fig8(&exp::fig8()),
+            other => eprintln!("unknown experiment '{other}' (choose from {all:?})"),
+        }
+        eprintln!("[{id} done in {:.1}s]", t0.elapsed().as_secs_f64());
+    }
+}

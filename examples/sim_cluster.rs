@@ -1,0 +1,84 @@
+//! Cluster-scale scenario: Llama-3.1-70B on 4x L20 (the paper's biggest
+//! setup) under a bursty long-context workload — LayerKV vs vLLM, with the
+//! engine's internal counters exposed (preemptions, offload traffic,
+//! streaming stalls).
+//!
+//! ```sh
+//! cargo run --release --example sim_cluster
+//! ```
+
+use layerkv::config::Policy;
+use layerkv::coordinator::run_trace;
+use layerkv::experiments::Table;
+use layerkv::util::Rng;
+use layerkv::workload::arrivals::Arrivals;
+use layerkv::workload::fixed::FixedWorkload;
+use layerkv::workload::sharegpt::ShareGptWorkload;
+use layerkv::workload::Trace;
+
+fn mixed_trace(seed: u64) -> Trace {
+    // 60 ShareGPT-like chat requests + 25 long-document requests (12k):
+    // the long documents make the run KV-bound (the regime the paper
+    // targets), not merely prefill-compute-bound.
+    let mut rng = Rng::new(seed);
+    let mut chat = ShareGptWorkload::paper(1.5, 60).generate(&mut rng);
+    let docs = FixedWorkload {
+        prompt_len: 12288,
+        output_len: 192,
+        n_requests: 15,
+        arrivals: Arrivals::Poisson { rate: 0.3 },
+    }
+    .generate(&mut rng);
+    for (i, mut d) in docs.requests.into_iter().enumerate() {
+        d.id = 60 + i;
+        chat.requests.push(d);
+    }
+    chat.requests.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+    for (i, r) in chat.requests.iter_mut().enumerate() {
+        r.id = i;
+    }
+    chat
+}
+
+fn main() {
+    let trace = mixed_trace(42);
+    println!(
+        "mixed workload: {} requests, {} total tokens, max prompt {}",
+        trace.len(),
+        trace.total_tokens(),
+        trace.max_prompt_len()
+    );
+
+    let mut t = Table::new(
+        "Llama-3.1-70B, TP4 on L20s — chat + long-document mix",
+        &[
+            "policy",
+            "TTFT mean(s)",
+            "TTFT p99(s)",
+            "TPOT mean(s)",
+            "tok/s",
+            "preempts",
+            "offload GB",
+            "stream stalls(s)",
+        ],
+    );
+    for policy in
+        [Policy::Vllm, Policy::LayerKv { slo_aware: true }, Policy::LayerKv { slo_aware: false }]
+    {
+        let cfg = layerkv::config::ServingConfig::llama31_70b_tp4().with_policy(policy);
+        let (rep, stats) = run_trace(cfg, &trace, 0.8);
+        let mut ttft = rep.ttft();
+        t.row(&[
+            policy.name().to_string(),
+            format!("{:.2}", ttft.mean()),
+            format!("{:.2}", ttft.p99()),
+            format!("{:.4}", rep.tpot().mean()),
+            format!("{:.1}", rep.throughput_tok_s()),
+            stats.preemptions.to_string(),
+            format!("{:.2}", stats.offload_bytes / 1e9),
+            format!("{:.2}", stats.stream_stall_s),
+        ]);
+    }
+    t.print();
+    println!("\nsim_cluster OK");
+}

@@ -1,0 +1,153 @@
+"""AOT build: lower the L2 model (with its L1 Pallas kernels) to HLO *text*
+artifacts the rust runtime loads via the xla crate's PJRT CPU client.
+
+HLO text — NOT ``lowered.compile()`` / ``.serialize()`` — is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids that
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (in ``artifacts/``):
+  weights.bin            f32 LE weights, concatenated in sorted-key order
+  prefill_t{T}.hlo.txt   per prompt-length bucket
+  decode_b{B}.hlo.txt    per decode batch-size bucket
+  paged_attn.hlo.txt     standalone paged-attention kernel (perf target)
+  manifest.json          model config + weight table + executable index
+
+Run once via ``make artifacts``; python never appears on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .kernels import paged_decode_attention
+from .model import ModelConfig, decode_step, init_params, param_specs, prefill
+
+PREFILL_BUCKETS = (16, 32, 64, 128, 256)
+DECODE_BATCHES = (1, 2, 4, 8)
+PAGED_SHAPE = dict(batch=4, pages=64, page_size=16, max_pages_per_seq=16)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    rust side always unwraps one tuple)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build(out_dir: pathlib.Path, cfg: ModelConfig, seed: int) -> dict:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    params = init_params(cfg, seed)
+    specs = param_specs(cfg)
+
+    # --- weights.bin (sorted-key order == jax dict flatten order) ---
+    flat = np.concatenate([np.asarray(params[name]).reshape(-1) for name, _ in specs])
+    flat.astype("<f4").tofile(out_dir / "weights.bin")
+
+    params_spec = {
+        name: jax.ShapeDtypeStruct(shape, jnp.float32) for name, shape in specs
+    }
+    executables = []
+
+    # --- prefill buckets ---
+    for t in PREFILL_BUCKETS:
+        if t > cfg.max_seq:
+            continue
+        tok = jax.ShapeDtypeStruct((t,), jnp.int32)
+        lowered = jax.jit(lambda p, tk: prefill(p, tk, cfg=cfg)).lower(params_spec, tok)
+        path = f"prefill_t{t}.hlo.txt"
+        (out_dir / path).write_text(to_hlo_text(lowered))
+        executables.append(
+            {
+                "kind": "prefill",
+                "path": path,
+                "seq_len": t,
+                # inputs: weights (sorted order), tokens[t] i32
+                # outputs: logits[vocab], n_layers x kv [2, KH, t, D]
+            }
+        )
+        print(f"  lowered prefill T={t}")
+
+    # --- decode buckets ---
+    for b in DECODE_BATCHES:
+        tok = jax.ShapeDtypeStruct((b,), jnp.int32)
+        lens = jax.ShapeDtypeStruct((b,), jnp.int32)
+        kvs = [
+            jax.ShapeDtypeStruct(
+                (b, 2, cfg.n_kv_heads, cfg.max_seq, cfg.head_dim), jnp.float32
+            )
+            for _ in range(cfg.n_layers)
+        ]
+        lowered = jax.jit(
+            lambda p, tk, ln, *kv: decode_step(p, tk, ln, *kv, cfg=cfg)
+        ).lower(params_spec, tok, lens, *kvs)
+        path = f"decode_b{b}.hlo.txt"
+        (out_dir / path).write_text(to_hlo_text(lowered))
+        executables.append({"kind": "decode", "path": path, "batch": b, "max_seq": cfg.max_seq})
+        print(f"  lowered decode B={b}")
+
+    # --- standalone paged-attention kernel (kernel-level perf target) ---
+    ps = PAGED_SHAPE
+    q = jax.ShapeDtypeStruct((ps["batch"], cfg.n_heads, cfg.head_dim), jnp.float32)
+    pages = jax.ShapeDtypeStruct(
+        (ps["pages"], 2, cfg.n_kv_heads, ps["page_size"], cfg.head_dim), jnp.float32
+    )
+    table = jax.ShapeDtypeStruct((ps["batch"], ps["max_pages_per_seq"]), jnp.int32)
+    lens = jax.ShapeDtypeStruct((ps["batch"],), jnp.int32)
+    lowered = jax.jit(
+        lambda q, p, t, l: (paged_decode_attention(q, p, t, l),)
+    ).lower(q, pages, table, lens)
+    (out_dir / "paged_attn.hlo.txt").write_text(to_hlo_text(lowered))
+    executables.append({"kind": "paged_attn", "path": "paged_attn.hlo.txt", **ps})
+    print("  lowered paged_attn")
+
+    manifest = {
+        "model": {
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "n_kv_heads": cfg.n_kv_heads,
+            "head_dim": cfg.head_dim,
+            "ffn_hidden": cfg.ffn_hidden,
+            "max_seq": cfg.max_seq,
+            "rope_theta": cfg.rope_theta,
+            "seed": seed,
+        },
+        "weights": {
+            "file": "weights.bin",
+            "dtype": "f32",
+            "entries": [{"name": n, "shape": list(s)} for n, s in specs],
+        },
+        "prefill_buckets": [t for t in PREFILL_BUCKETS if t <= cfg.max_seq],
+        "decode_batches": list(DECODE_BATCHES),
+        "executables": executables,
+    }
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    cfg = ModelConfig()
+    out_dir = pathlib.Path(args.out)
+    print(f"AOT-lowering tiny model ({cfg.n_params} params) to {out_dir}")
+    manifest = build(out_dir, cfg, args.seed)
+    print(f"wrote {len(manifest['executables'])} executables + weights.bin + manifest.json")
+
+
+if __name__ == "__main__":
+    main()

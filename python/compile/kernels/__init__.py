@@ -1,0 +1,6 @@
+# L1: Pallas kernel(s) for the paper's compute hot-spot.
+from .decode_attn import decode_attention
+from .flash_attn import flash_attention
+from .paged_attn import paged_decode_attention
+
+__all__ = ["flash_attention", "decode_attention", "paged_decode_attention"]

@@ -1,0 +1,63 @@
+"""Layer-1 Pallas kernel: batched single-token decode attention.
+
+Dense, length-masked KV cache with native GQA: the grid walks (batch,
+kv-head) and each cell computes the whole query-head *group* against that
+kv head's cache, so the cache tile is loaded into VMEM once per group
+rather than once per query head — the same KV-reuse trick GQA buys on
+CUDA, expressed via BlockSpec.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, *, scale: float):
+    # q_ref: [1, group, D]; k_ref/v_ref: [1, 1, S, D]; len_ref: [1] i32
+    s = k_ref.shape[2]
+    q = q_ref[0].astype(jnp.float32) * scale  # [group, D]
+    k = k_ref[0, 0].astype(jnp.float32)  # [S, D]
+    v = v_ref[0, 0].astype(jnp.float32)
+    length = len_ref[0]
+    scores = q @ k.T  # [group, S]
+    pos = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    scores = jnp.where(pos < length, scores, NEG_INF)
+    m = jnp.max(scores, axis=1, keepdims=True)
+    p = jnp.exp(scores - m)
+    denom = jnp.sum(p, axis=1, keepdims=True)
+    denom = jnp.where(denom == 0.0, 1.0, denom)
+    o_ref[0] = ((p / denom) @ v).astype(o_ref.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, lengths, *, scale: float | None = None):
+    """q: [B, H, D]; k_cache/v_cache: [B, KH, S, D]; lengths: [B] i32.
+
+    Returns [B, H, D]. Query head h attends kv head h // (H // KH).
+    """
+    b, h, d = q.shape
+    _, kh, s, _ = k_cache.shape
+    group = h // kh
+    if h % kh != 0:
+        raise ValueError(f"H={h} not divisible by KH={kh}")
+    if scale is None:
+        scale = 1.0 / (d**0.5)
+    kernel = functools.partial(_decode_kernel, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, kh),
+        in_specs=[
+            pl.BlockSpec((1,), lambda bb, hh: (bb,)),
+            pl.BlockSpec((1, group, d), lambda bb, hh: (bb, hh, 0)),
+            pl.BlockSpec((1, 1, s, d), lambda bb, hh: (bb, hh, 0, 0)),
+            pl.BlockSpec((1, 1, s, d), lambda bb, hh: (bb, hh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, group, d), lambda bb, hh: (bb, hh, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        interpret=True,
+    )(lengths, q, k_cache, v_cache)

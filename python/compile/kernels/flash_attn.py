@@ -1,0 +1,120 @@
+"""Layer-1 Pallas kernel: tiled causal flash attention (prefill hot path).
+
+TPU adaptation of the paper's CUDA prefill path (DESIGN.md
+§Hardware-Adaptation): instead of threadblock/SMEM staging, the HBM->VMEM
+schedule is expressed with BlockSpecs — the grid walks (head, q-tile) and an
+inner fori_loop streams k/v tiles through VMEM with an online-softmax
+accumulator, so VMEM holds only O(block_q * D + block_k * D + block_q *
+block_k) floats regardless of sequence length.
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; the real-TPU perf story is estimated in DESIGN.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, causal: bool, scale: float, seq_k: int):
+    """One (head, q-tile) cell: stream k/v tiles with online softmax."""
+    qi = pl.program_id(1)
+    block_q = q_ref.shape[1]
+    d = q_ref.shape[2]
+
+    q = q_ref[0].astype(jnp.float32) * scale  # [block_q, D]
+
+    # Causal: kv index offset of this q tile's last row; only k tiles whose
+    # first index <= that row can contribute.
+    offset = seq_k - pl.num_programs(1) * block_q  # kv len minus q len
+    if causal:
+        last_q = (qi + 1) * block_q + offset
+        num_kb = jnp.minimum(pl.cdiv(seq_k, block_k), pl.cdiv(last_q, block_k))
+    else:
+        num_kb = pl.cdiv(seq_k, block_k)
+
+    def body(kb, carry):
+        acc, m_prev, l_prev = carry
+        k = pl.load(k_ref, (0, pl.ds(kb * block_k, block_k), slice(None))).astype(jnp.float32)
+        v = pl.load(v_ref, (0, pl.ds(kb * block_k, block_k), slice(None))).astype(jnp.float32)
+        s = q @ k.T  # [block_q, block_k]
+        ki = kb * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        valid = ki < seq_k
+        if causal:
+            qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) + offset
+            valid = valid & (ki <= qpos)
+        s = jnp.where(valid, s, NEG_INF)
+        m_cur = jnp.max(s, axis=1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=1)
+        acc = acc * alpha[:, None] + p @ v
+        return acc, m_new, l_new
+
+    init = (
+        jnp.zeros((block_q, d), jnp.float32),
+        jnp.full((block_q,), NEG_INF, jnp.float32),
+        jnp.zeros((block_q,), jnp.float32),
+    )
+    acc, _m, l = jax.lax.fori_loop(0, num_kb, body, init)
+    # Fully-masked rows (can't happen for causal self-attention, but guard
+    # against l == 0 from padded tails) normalise to zero.
+    l = jnp.where(l == 0.0, 1.0, l)
+    o_ref[0] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q,
+    k,
+    v,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    block_q: int = 64,
+    block_k: int = 64,
+):
+    # §Perf (EXPERIMENTS.md): 64x64 tiles halve the grid/loop trip count
+    # vs 32x32 at a VMEM cost of (Bq*D + 2*Bk*D + Bq*Bk)*4B ~ 73 KiB for
+    # D=128 — far under the ~16 MiB/core budget, and still (8,128)-aligned.
+    """Tiled causal attention. q: [H, Tq, D], k/v: [H, Tk, D] -> [H, Tq, D].
+
+    Tq must be a multiple of block_q (callers pad to bucket sizes); Tk is
+    masked so any Tk works. GQA callers repeat kv heads to H beforehand.
+    """
+    h, tq, d = q.shape
+    _, tk, _ = k.shape
+    if scale is None:
+        scale = 1.0 / (d**0.5)
+    block_q = min(block_q, tq)
+    block_k = min(block_k, tk)
+    if tq % block_q != 0:
+        raise ValueError(f"Tq={tq} not a multiple of block_q={block_q}")
+    grid = (h, tq // block_q)
+    kernel = functools.partial(
+        _flash_kernel, block_k=block_k, causal=causal, scale=scale, seq_k=tk
+    )
+    # Pad Tk up to a multiple of block_k so pl.ds tile loads stay in bounds;
+    # the in-kernel `ki < seq_k` mask discards the padding.
+    tk_pad = (block_k - tk % block_k) % block_k
+    if tk_pad:
+        k = jnp.pad(k, ((0, 0), (0, tk_pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, tk_pad), (0, 0)))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda hh, qq: (hh, qq, 0)),
+            pl.BlockSpec((1, k.shape[1], d), lambda hh, qq: (hh, 0, 0)),
+            pl.BlockSpec((1, v.shape[1], d), lambda hh, qq: (hh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda hh, qq: (hh, qq, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, tq, d), q.dtype),
+        interpret=True,
+    )(q, k, v)

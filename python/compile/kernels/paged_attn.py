@@ -1,0 +1,85 @@
+"""Layer-1 Pallas kernel: paged (block-table) decode attention.
+
+TPU rethink of vLLM's PagedAttention CUDA kernel (the mechanism LayerKV
+plugs into): the KV cache lives in fixed-size physical pages; a per-request
+block table maps logical page -> physical page. On CUDA the gather happens
+through SMEM staging per threadblock; here the whole page pool stays in the
+kernel's memory space and an inner fori_loop walks the block table,
+pl.ds-loading one page at a time (the VMEM-resident tile) with an
+online-softmax accumulator, masking the tail page against the context
+length.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(q_ref, pages_ref, table_ref, len_ref, o_ref, *, scale: float):
+    # q_ref: [1, group, D]; pages_ref: [P, 2, 1, page, D] (this kv head's
+    # slice of the pool); table_ref: [1, maxp] i32; len_ref: [1] i32
+    page = pages_ref.shape[3]
+    d = pages_ref.shape[4]
+    group = q_ref.shape[1]
+    q = q_ref[0].astype(jnp.float32) * scale  # [group, D]
+    length = len_ref[0]
+    num_pages = pl.cdiv(length, page)
+
+    def body(lp, carry):
+        acc, m_prev, l_prev = carry
+        phys = table_ref[0, lp]
+        kv = pl.load(pages_ref, (pl.ds(phys, 1), slice(None), 0, slice(None), slice(None)))
+        k = kv[0, 0].astype(jnp.float32)  # [page, D]
+        v = kv[0, 1].astype(jnp.float32)
+        s = q @ k.T  # [group, page]
+        pos = lp * page + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(pos < length, s, NEG_INF)
+        m_cur = jnp.max(s, axis=1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=1)
+        acc = acc * alpha[:, None] + p @ v
+        return acc, m_new, l_new
+
+    init = (
+        jnp.zeros((group, d), jnp.float32),
+        jnp.full((group,), NEG_INF, jnp.float32),
+        jnp.zeros((group,), jnp.float32),
+    )
+    acc, _m, l = jax.lax.fori_loop(0, num_pages, body, init)
+    l = jnp.where(l == 0.0, 1.0, l)
+    o_ref[0] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def paged_decode_attention(q, kv_pages, block_table, lengths, *, scale: float | None = None):
+    """q: [B, H, D]; kv_pages: [P, 2, KH, page, D]; block_table: [B, maxp]
+    i32; lengths: [B] i32 -> [B, H, D]."""
+    b, h, d = q.shape
+    p_, two, kh, page, _ = kv_pages.shape
+    group = h // kh
+    if h % kh != 0:
+        raise ValueError(f"H={h} not divisible by KH={kh}")
+    if scale is None:
+        scale = 1.0 / (d**0.5)
+    maxp = block_table.shape[1]
+    kernel = functools.partial(_paged_kernel, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, kh),
+        in_specs=[
+            pl.BlockSpec((1, group, d), lambda bb, hh: (bb, hh, 0)),
+            pl.BlockSpec((p_, 2, 1, page, d), lambda bb, hh: (0, 0, hh, 0, 0)),
+            pl.BlockSpec((1, maxp), lambda bb, hh: (bb, 0)),
+            pl.BlockSpec((1,), lambda bb, hh: (bb,)),
+        ],
+        out_specs=pl.BlockSpec((1, group, d), lambda bb, hh: (bb, hh, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        interpret=True,
+    )(q, kv_pages, block_table, lengths)

@@ -1,0 +1,81 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here, written
+with plain jax.numpy so it is obviously correct. pytest/hypothesis compare
+the Pallas kernels (interpret=True) against these under shape/dtype sweeps.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def ref_attention(q, k, v, *, causal: bool = True, scale: float | None = None):
+    """Full multi-head attention.
+
+    q: [H, Tq, D], k/v: [H, Tk, D]  ->  [H, Tq, D]
+
+    With ``causal=True`` query position i (counted from the *end* of the
+    kv sequence, i.e. offset = Tk - Tq) attends to kv positions <= offset+i.
+    """
+    h, tq, d = q.shape
+    tk = k.shape[1]
+    if scale is None:
+        scale = 1.0 / (d**0.5)
+    scores = jnp.einsum("hqd,hkd->hqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    if causal:
+        offset = tk - tq
+        qi = jnp.arange(tq)[:, None] + offset
+        ki = jnp.arange(tk)[None, :]
+        scores = jnp.where(ki <= qi, scores, NEG_INF)
+    p = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("hqk,hkd->hqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def ref_decode_attention(q, k_cache, v_cache, lengths, *, scale: float | None = None):
+    """Single-token (decode) attention over a dense, length-masked KV cache.
+
+    q: [B, H, D]; k_cache/v_cache: [B, KH, S, D]; lengths: [B] (valid kv
+    entries per batch element, including the current token's KV).
+    GQA: query head h reads kv head h // (H // KH).  ->  [B, H, D]
+    """
+    b, h, d = q.shape
+    kh = k_cache.shape[1]
+    s = k_cache.shape[2]
+    group = h // kh
+    if scale is None:
+        scale = 1.0 / (d**0.5)
+    # expand kv heads to query heads
+    k = jnp.repeat(k_cache, group, axis=1).astype(jnp.float32)  # [B, H, S, D]
+    v = jnp.repeat(v_cache, group, axis=1).astype(jnp.float32)
+    scores = jnp.einsum("bhd,bhsd->bhs", q.astype(jnp.float32), k) * scale
+    mask = jnp.arange(s)[None, None, :] < lengths[:, None, None]
+    scores = jnp.where(mask, scores, NEG_INF)
+    p = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhs,bhsd->bhd", p, v)
+    return out.astype(q.dtype)
+
+
+def ref_paged_decode_attention(q, kv_pages, block_table, lengths, *, scale: float | None = None):
+    """Decode attention over a paged KV cache (vLLM-style block gather).
+
+    q: [B, H, D]; kv_pages: [P, 2, KH, page, D]; block_table: [B, maxp] i32
+    (physical page id per logical page; entries past the context are
+    arbitrary); lengths: [B].  ->  [B, H, D]
+
+    The oracle simply gathers the pages into a dense cache and defers to
+    ref_decode_attention.
+    """
+    b = q.shape[0]
+    p_, two, kh, page, d = kv_pages.shape
+    maxp = block_table.shape[1]
+    # gather: dense[b, :, l*page:(l+1)*page, :] = kv_pages[block_table[b, l]]
+    gathered = kv_pages[block_table.reshape(-1)]  # [B*maxp, 2, KH, page, D]
+    gathered = gathered.reshape(b, maxp, 2, kh, page, d)
+    dense = jnp.moveaxis(gathered, 1, 3).reshape(b, 2, kh, maxp * page, d)
+    return ref_decode_attention(q, dense[:, 0], dense[:, 1], lengths, scale=scale)

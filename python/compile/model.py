@@ -1,0 +1,205 @@
+"""Layer-2: tiny GQA llama-style transformer served end-to-end by the rust
+coordinator.
+
+Two entry points are AOT-lowered by aot.py:
+
+* ``prefill(params, tokens[T])`` -> ``(logits[T, V], kv_0 .. kv_{L-1})``
+  where each per-layer ``kv_i`` is ``[2, KH, T, D]``. Per-layer outputs are
+  deliberately *separate* tuple elements: the rust coordinator takes
+  ownership of each layer's KV independently, which is exactly the handle
+  LayerKV's layer-wise offloading needs (a layer can live in the device
+  pool or the host pool without reassembling a monolithic cache).
+
+* ``decode_step(params, tokens[B], cache_lens[B], kv_0 .. kv_{L-1})`` ->
+  ``(logits[B, V], new_kv_0 .. new_kv_{L-1})`` with each ``kv_i`` shaped
+  ``[B, 2, KH, Smax, D]``. The new token's K/V is written at position
+  ``cache_lens[b]`` and attention runs over ``cache_lens[b] + 1`` entries.
+
+Attention hot paths call the Pallas kernels from ``kernels/`` so they lower
+into the same HLO module (interpret=True -> plain HLO ops the CPU PJRT
+client executes).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import decode_attention, flash_attention
+
+
+class ModelConfig(NamedTuple):
+    """Shape of the tiny serving model (llama-flavoured, GQA)."""
+
+    vocab: int = 256
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    n_kv_heads: int = 2
+    head_dim: int = 32
+    ffn_hidden: int = 256
+    max_seq: int = 256
+    rope_theta: float = 10000.0
+
+    @property
+    def group(self) -> int:
+        return self.n_heads // self.n_kv_heads
+
+    @property
+    def n_params(self) -> int:
+        return sum(int(np.prod(s)) for _, s in param_specs(self))
+
+
+def param_specs(cfg: ModelConfig) -> list[tuple[str, tuple[int, ...]]]:
+    """Ordered (name, shape) for every weight. jax flattens dicts in sorted
+    key order; this list IS sorted, and the rust loader reads weights.bin
+    in exactly this order (recorded in the manifest)."""
+    dm, hd = cfg.d_model, cfg.head_dim
+    specs: list[tuple[str, tuple[int, ...]]] = []
+    for i in range(cfg.n_layers):
+        p = f"l{i:02d}."
+        specs += [
+            (p + "norm_attn", (dm,)),
+            (p + "norm_ffn", (dm,)),
+            (p + "w_down", (cfg.ffn_hidden, dm)),
+            (p + "w_gate", (dm, cfg.ffn_hidden)),
+            (p + "w_up", (dm, cfg.ffn_hidden)),
+            (p + "wk", (dm, cfg.n_kv_heads * hd)),
+            (p + "wo", (cfg.n_heads * hd, dm)),
+            (p + "wq", (dm, cfg.n_heads * hd)),
+            (p + "wv", (dm, cfg.n_kv_heads * hd)),
+        ]
+    specs += [("z_embed", (cfg.vocab, dm)), ("z_norm_f", (dm,)), ("z_unembed", (dm, cfg.vocab))]
+    return sorted(specs)
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> dict[str, jax.Array]:
+    """Deterministic random init (scaled normal; ones for norms)."""
+    rng = np.random.default_rng(seed)
+    params = {}
+    for name, shape in param_specs(cfg):
+        if "norm" in name:
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            fan_in = shape[0] if len(shape) > 1 else 1
+            params[name] = jnp.asarray(
+                rng.standard_normal(shape).astype(np.float32) / np.sqrt(max(fan_in, 1))
+            )
+    return params
+
+
+def _rms_norm(x, w, eps: float = 1e-5):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def _rope(x, positions, theta: float):
+    """Rotary embedding. x: [..., T, H, D]; positions: [..., T]."""
+    d = x.shape[-1]
+    freqs = 1.0 / (theta ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., T, D/2]
+    cos = jnp.cos(angles)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    out = jnp.stack([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.reshape(x.shape).astype(x.dtype)
+
+
+def _ffn(p, prefix, x):
+    gate = jax.nn.silu(x @ p[prefix + "w_gate"])
+    return (gate * (x @ p[prefix + "w_up"])) @ p[prefix + "w_down"]
+
+
+def prefill(params: dict, tokens: jax.Array, cfg: ModelConfig | None = None):
+    """Process a whole prompt. tokens: [T] i32 -> (last_logits[V], *kv)."""
+    cfg = cfg or _cfg_of(params)
+    t = tokens.shape[0]
+    pos = jnp.arange(t)
+    x = params["z_embed"][tokens]  # [T, dm]
+    kvs = []
+    for i in range(cfg.n_layers):
+        p = f"l{i:02d}."
+        h = _rms_norm(x, params[p + "norm_attn"])
+        q = (h @ params[p + "wq"]).reshape(t, cfg.n_heads, cfg.head_dim)
+        k = (h @ params[p + "wk"]).reshape(t, cfg.n_kv_heads, cfg.head_dim)
+        v = (h @ params[p + "wv"]).reshape(t, cfg.n_kv_heads, cfg.head_dim)
+        q = _rope(q, pos, cfg.rope_theta)
+        k = _rope(k, pos, cfg.rope_theta)
+        kvs.append(jnp.stack([k, v]).transpose(0, 2, 1, 3))  # [2, KH, T, D]
+        # GQA: expand kv heads for the prefill kernel.
+        k_full = jnp.repeat(k, cfg.group, axis=1).transpose(1, 0, 2)  # [H, T, D]
+        v_full = jnp.repeat(v, cfg.group, axis=1).transpose(1, 0, 2)
+        attn = flash_attention(q.transpose(1, 0, 2), k_full, v_full, causal=True)
+        x = x + attn.transpose(1, 0, 2).reshape(t, -1) @ params[p + "wo"]
+        x = x + _ffn(params, p, _rms_norm(x, params[p + "norm_ffn"]))
+    normed = _rms_norm(x, params["z_norm_f"])
+    logits = normed @ params["z_unembed"]  # [T, V]: rust picks the row at
+    # the true prompt end (prompts are padded up to the bucket length)
+    return (logits, *kvs)
+
+
+def decode_step(params: dict, tokens: jax.Array, cache_lens: jax.Array, *kvs, cfg: ModelConfig | None = None):
+    """One decode iteration for a batch.
+
+    tokens: [B] i32; cache_lens: [B] i32 (entries already in the cache);
+    kvs: n_layers tensors [B, 2, KH, Smax, D]. Returns (logits[B, V],
+    *new_kvs) with the new token's KV written at cache_lens[b].
+    """
+    cfg = cfg or _cfg_of(params)
+    b = tokens.shape[0]
+    x = params["z_embed"][tokens]  # [B, dm]
+    new_kvs = []
+    for i in range(cfg.n_layers):
+        p = f"l{i:02d}."
+        kv = kvs[i]
+        h = _rms_norm(x, params[p + "norm_attn"])
+        q = (h @ params[p + "wq"]).reshape(b, cfg.n_heads, cfg.head_dim)
+        k = (h @ params[p + "wk"]).reshape(b, cfg.n_kv_heads, cfg.head_dim)
+        v = (h @ params[p + "wv"]).reshape(b, cfg.n_kv_heads, cfg.head_dim)
+        q = _rope(q[:, None], cache_lens[:, None], cfg.rope_theta)[:, 0]
+        k = _rope(k[:, None], cache_lens[:, None], cfg.rope_theta)[:, 0]
+        # Append this token's K/V at position cache_lens[b].
+        new = jnp.stack([k, v], axis=1).transpose(0, 1, 2, 3)  # [B, 2, KH, D]
+        kv = _scatter_kv(kv, new, cache_lens)
+        new_kvs.append(kv)
+        attn = decode_attention(q, kv[:, 0], kv[:, 1], cache_lens + 1)
+        x = x + attn.reshape(b, -1) @ params[p + "wo"]
+        x = x + _ffn(params, p, _rms_norm(x, params[p + "norm_ffn"]))
+    last = _rms_norm(x, params["z_norm_f"])
+    logits = last @ params["z_unembed"]
+    return (logits, *new_kvs)
+
+
+def _scatter_kv(kv, new, cache_lens):
+    """kv: [B, 2, KH, S, D]; new: [B, 2, KH, D]; write at S-index len[b]."""
+
+    def one(kv_b, new_b, len_b):
+        return jax.lax.dynamic_update_slice(
+            kv_b, new_b[:, :, None, :], (0, 0, len_b, 0)
+        )
+
+    return jax.vmap(one)(kv, new, cache_lens)
+
+
+def _cfg_of(params: dict) -> ModelConfig:
+    """Reconstruct the default-head-dim config from weight shapes (callers
+    that deviate from head_dim=32 must pass cfg explicitly)."""
+    dm = params["z_norm_f"].shape[0]
+    vocab = params["z_embed"].shape[0]
+    n_layers = sum(1 for k in params if k.endswith(".wq"))
+    hd = 32
+    n_heads = params["l00.wq"].shape[1] // hd
+    n_kv_heads = params["l00.wk"].shape[1] // hd
+    ffn_hidden = params["l00.w_up"].shape[1]
+    return ModelConfig(
+        vocab=vocab,
+        d_model=dm,
+        n_layers=n_layers,
+        n_heads=n_heads,
+        n_kv_heads=n_kv_heads,
+        head_dim=hd,
+        ffn_hidden=ffn_hidden,
+    )

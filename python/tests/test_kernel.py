@@ -1,0 +1,182 @@
+"""Kernel-vs-oracle correctness: the CORE signal for the L1 layer.
+
+hypothesis sweeps shapes/dtypes; every example asserts allclose against the
+pure-jnp oracle in kernels/ref.py.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import decode_attention, flash_attention, paged_decode_attention
+from compile.kernels.ref import (
+    ref_attention,
+    ref_decode_attention,
+    ref_paged_decode_attention,
+)
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _rand(rng, shape, dtype):
+    x = rng.standard_normal(shape).astype(np.float32)
+    return jnp.asarray(x, dtype)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=2e-5, atol=2e-5)
+
+
+class TestFlashAttention:
+    @settings(**SETTINGS)
+    @given(
+        h=st.sampled_from([1, 2, 4]),
+        tq_blocks=st.integers(1, 4),
+        block_q=st.sampled_from([8, 16, 32]),
+        d=st.sampled_from([16, 32, 64]),
+        block_k=st.sampled_from([8, 16, 32]),
+        causal=st.booleans(),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_self_attention_matches_ref(self, h, tq_blocks, block_q, d, block_k, causal, seed):
+        rng = np.random.default_rng(seed)
+        t = tq_blocks * block_q
+        q = _rand(rng, (h, t, d), jnp.float32)
+        k = _rand(rng, (h, t, d), jnp.float32)
+        v = _rand(rng, (h, t, d), jnp.float32)
+        out = flash_attention(q, k, v, causal=causal, block_q=block_q, block_k=block_k)
+        ref = ref_attention(q, k, v, causal=causal)
+        np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+    @settings(**SETTINGS)
+    @given(
+        tk_extra=st.integers(1, 40),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_cross_length_kv(self, tk_extra, seed):
+        """Tk > Tq and Tk not a multiple of block_k (tail masking)."""
+        rng = np.random.default_rng(seed)
+        h, tq, d = 2, 32, 32
+        tk = tq + tk_extra
+        q = _rand(rng, (h, tq, d), jnp.float32)
+        k = _rand(rng, (h, tk, d), jnp.float32)
+        v = _rand(rng, (h, tk, d), jnp.float32)
+        out = flash_attention(q, k, v, causal=True, block_q=16, block_k=16)
+        ref = ref_attention(q, k, v, causal=True)
+        np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+    def test_bf16(self):
+        rng = np.random.default_rng(0)
+        q = _rand(rng, (2, 32, 32), jnp.bfloat16)
+        k = _rand(rng, (2, 32, 32), jnp.bfloat16)
+        v = _rand(rng, (2, 32, 32), jnp.bfloat16)
+        out = flash_attention(q, k, v)
+        ref = ref_attention(q, k, v)
+        assert out.dtype == jnp.bfloat16
+        np.testing.assert_allclose(
+            out.astype(np.float32), ref.astype(np.float32), **_tol(jnp.bfloat16)
+        )
+
+    def test_rejects_ragged_q(self):
+        rng = np.random.default_rng(0)
+        q = _rand(rng, (1, 33, 16), jnp.float32)
+        k = _rand(rng, (1, 33, 16), jnp.float32)
+        with pytest.raises(ValueError, match="multiple"):
+            flash_attention(q, k, k, block_q=16)
+
+    def test_first_row_attends_only_itself(self):
+        """Causal row 0 output == v[0] exactly (softmax over one entry)."""
+        rng = np.random.default_rng(0)
+        q = _rand(rng, (1, 16, 16), jnp.float32)
+        k = _rand(rng, (1, 16, 16), jnp.float32)
+        v = _rand(rng, (1, 16, 16), jnp.float32)
+        out = flash_attention(q, k, v, causal=True)
+        np.testing.assert_allclose(out[0, 0], v[0, 0], rtol=1e-6, atol=1e-6)
+
+
+class TestDecodeAttention:
+    @settings(**SETTINGS)
+    @given(
+        b=st.integers(1, 8),
+        kh=st.sampled_from([1, 2, 4]),
+        group=st.sampled_from([1, 2, 4]),
+        s=st.sampled_from([16, 48, 256]),
+        d=st.sampled_from([16, 32]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, b, kh, group, s, d, seed):
+        rng = np.random.default_rng(seed)
+        h = kh * group
+        q = _rand(rng, (b, h, d), jnp.float32)
+        kc = _rand(rng, (b, kh, s, d), jnp.float32)
+        vc = _rand(rng, (b, kh, s, d), jnp.float32)
+        lens = jnp.asarray(rng.integers(1, s + 1, (b,)), jnp.int32)
+        out = decode_attention(q, kc, vc, lens)
+        ref = ref_decode_attention(q, kc, vc, lens)
+        np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+    def test_length_one_returns_v0(self):
+        rng = np.random.default_rng(3)
+        q = _rand(rng, (2, 4, 16), jnp.float32)
+        kc = _rand(rng, (2, 2, 32, 16), jnp.float32)
+        vc = _rand(rng, (2, 2, 32, 16), jnp.float32)
+        lens = jnp.array([1, 1], jnp.int32)
+        out = decode_attention(q, kc, vc, lens)
+        # every query head h reads kv head h//2's v[0]
+        for b in range(2):
+            for h in range(4):
+                np.testing.assert_allclose(out[b, h], vc[b, h // 2, 0], rtol=1e-6, atol=1e-6)
+
+    def test_mask_ignores_garbage_tail(self):
+        """Entries past `lengths` must not affect the output."""
+        rng = np.random.default_rng(4)
+        q = _rand(rng, (1, 2, 16), jnp.float32)
+        kc = _rand(rng, (1, 1, 16, 16), jnp.float32)
+        vc = _rand(rng, (1, 1, 16, 16), jnp.float32)
+        lens = jnp.array([7], jnp.int32)
+        base = decode_attention(q, kc, vc, lens)
+        kc2 = kc.at[:, :, 7:, :].set(1e6)
+        vc2 = vc.at[:, :, 7:, :].set(-1e6)
+        poisoned = decode_attention(q, kc2, vc2, lens)
+        np.testing.assert_allclose(base, poisoned, rtol=0, atol=0)
+
+
+class TestPagedDecodeAttention:
+    @settings(**SETTINGS)
+    @given(
+        b=st.integers(1, 4),
+        kh=st.sampled_from([1, 2]),
+        group=st.sampled_from([1, 2]),
+        page=st.sampled_from([4, 8, 16]),
+        maxp=st.integers(1, 6),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, b, kh, group, page, maxp, seed):
+        rng = np.random.default_rng(seed)
+        h, d = kh * group, 16
+        pool = maxp * b + 3
+        q = _rand(rng, (b, h, d), jnp.float32)
+        pages = _rand(rng, (pool, 2, kh, page, d), jnp.float32)
+        table = jnp.asarray(rng.integers(0, pool, (b, maxp)), jnp.int32)
+        lens = jnp.asarray(rng.integers(1, maxp * page + 1, (b,)), jnp.int32)
+        out = paged_decode_attention(q, pages, table, lens)
+        ref = ref_paged_decode_attention(q, pages, table, lens)
+        np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+    def test_equivalent_to_dense_decode(self):
+        """A contiguous block table must reproduce dense decode attention."""
+        rng = np.random.default_rng(5)
+        b, kh, h, page, maxp, d = 2, 2, 4, 8, 4, 16
+        pages = _rand(rng, (b * maxp, 2, kh, page, d), jnp.float32)
+        table = jnp.arange(b * maxp, dtype=jnp.int32).reshape(b, maxp)
+        q = _rand(rng, (b, h, d), jnp.float32)
+        lens = jnp.array([13, 29], jnp.int32)
+        dense = (
+            pages.reshape(b, maxp, 2, kh, page, d)
+            .transpose(0, 2, 3, 1, 4, 5)
+            .reshape(b, 2, kh, maxp * page, d)
+        )
+        out = paged_decode_attention(q, pages, table, lens)
+        ref = decode_attention(q, dense[:, 0], dense[:, 1], lens)
+        np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)

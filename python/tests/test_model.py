@@ -1,0 +1,154 @@
+"""L2 model tests: shapes, prefill/decode consistency, determinism."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (
+    ModelConfig,
+    _rope,
+    _scatter_kv,
+    decode_step,
+    init_params,
+    param_specs,
+    prefill,
+)
+
+CFG = ModelConfig()
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(CFG, 0)
+
+
+def _dec_cache(kvs, t):
+    """Per-layer prefill kv [2, KH, T, D] -> decode cache [1, 2, KH, Smax, D]."""
+    out = []
+    for kv in kvs:
+        buf = jnp.zeros((1, 2, CFG.n_kv_heads, CFG.max_seq, CFG.head_dim), jnp.float32)
+        out.append(buf.at[0, :, :, :t, :].set(kv[:, :, :t, :]))
+    return out
+
+
+class TestParamSpecs:
+    def test_sorted_and_unique(self):
+        specs = param_specs(CFG)
+        names = [n for n, _ in specs]
+        assert names == sorted(names)
+        assert len(set(names)) == len(names)
+
+    def test_matches_init(self, params):
+        for name, shape in param_specs(CFG):
+            assert params[name].shape == shape
+
+    def test_n_params(self):
+        assert CFG.n_params == sum(int(np.prod(s)) for _, s in param_specs(CFG))
+
+    def test_sorted_keys_equals_tree_flatten_order(self, params):
+        """The weights.bin contract: jax dict flatten order == sorted keys."""
+        leaves, _ = jax.tree_util.tree_flatten(params)
+        by_sorted = [params[k] for k in sorted(params)]
+        assert all(a is b for a, b in zip(leaves, by_sorted))
+
+
+class TestPrefill:
+    def test_shapes(self, params):
+        t = 16
+        toks = jnp.zeros((t,), jnp.int32)
+        out = prefill(params, toks)
+        assert out[0].shape == (t, CFG.vocab)
+        assert len(out) == 1 + CFG.n_layers
+        for kv in out[1:]:
+            assert kv.shape == (2, CFG.n_kv_heads, t, CFG.head_dim)
+
+    def test_deterministic(self, params):
+        toks = jnp.arange(16, dtype=jnp.int32) % CFG.vocab
+        a = prefill(params, toks)
+        b = prefill(params, toks)
+        np.testing.assert_array_equal(a[0], b[0])
+
+    def test_causality(self, params):
+        """Changing the last token must not change earlier layers' KV rows."""
+        rng = np.random.default_rng(0)
+        toks = jnp.asarray(rng.integers(0, CFG.vocab, (16,)), jnp.int32)
+        toks2 = toks.at[-1].set((toks[-1] + 1) % CFG.vocab)
+        kv_a = prefill(params, toks)[1]
+        kv_b = prefill(params, toks2)[1]
+        np.testing.assert_allclose(kv_a[:, :, :-1, :], kv_b[:, :, :-1, :], atol=0)
+
+
+class TestDecodeConsistency:
+    @pytest.mark.parametrize("t", [8, 16, 32])
+    def test_decode_matches_prefill(self, params, t):
+        """prefill(t-1) + decode(token t-1) == prefill(t) logits."""
+        rng = np.random.default_rng(t)
+        toks = jnp.asarray(rng.integers(0, CFG.vocab, (t,)), jnp.int32)
+        full = prefill(params, toks)
+        part = prefill(params, toks[: t - 1])
+        caches = _dec_cache(part[1:], t - 1)
+        res = decode_step(params, toks[t - 1 : t], jnp.array([t - 1], jnp.int32), *caches)
+        np.testing.assert_allclose(res[0][0], full[0][-1], rtol=1e-4, atol=1e-4)
+        # appended KV row equals prefill's row t-1
+        for i in range(CFG.n_layers):
+            np.testing.assert_allclose(
+                res[1 + i][0, :, :, t - 1, :], full[1 + i][:, :, t - 1, :], rtol=1e-4, atol=1e-4
+            )
+
+    def test_batched_decode_is_per_request(self, params):
+        """Batching two requests must give identical logits to running each
+        alone — the core soundness requirement for continuous batching."""
+        rng = np.random.default_rng(9)
+        t1, t2 = 8, 12
+        toks1 = jnp.asarray(rng.integers(0, CFG.vocab, (t1,)), jnp.int32)
+        toks2 = jnp.asarray(rng.integers(0, CFG.vocab, (t2,)), jnp.int32)
+        p1, p2 = prefill(params, toks1), prefill(params, toks2)
+        c1, c2 = _dec_cache(p1[1:], t1), _dec_cache(p2[1:], t2)
+        batch = [jnp.concatenate([a, b]) for a, b in zip(c1, c2)]
+        tok = jnp.array([3, 5], jnp.int32)
+        lens = jnp.array([t1, t2], jnp.int32)
+        out_b = decode_step(params, tok, lens, *batch)
+        out_1 = decode_step(params, tok[:1], lens[:1], *c1)
+        out_2 = decode_step(params, tok[1:], lens[1:], *c2)
+        np.testing.assert_allclose(out_b[0][0], out_1[0][0], rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(out_b[0][1], out_2[0][0], rtol=1e-4, atol=1e-4)
+
+
+class TestHelpers:
+    def test_rope_norm_preserving(self):
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.standard_normal((4, 2, 32)).astype(np.float32))
+        pos = jnp.arange(4)
+        y = _rope(x, pos, 10000.0)
+        np.testing.assert_allclose(
+            jnp.linalg.norm(x, axis=-1), jnp.linalg.norm(y, axis=-1), rtol=1e-5
+        )
+
+    def test_rope_position_zero_identity(self):
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.standard_normal((1, 2, 32)).astype(np.float32))
+        y = _rope(x, jnp.zeros((1,), jnp.int32), 10000.0)
+        np.testing.assert_allclose(x, y, rtol=1e-6, atol=1e-6)
+
+    def test_rope_relative(self):
+        """<rope(q,p), rope(k,p)> depends only on relative offset."""
+        rng = np.random.default_rng(2)
+        q = jnp.asarray(rng.standard_normal((1, 1, 32)).astype(np.float32))
+        k = jnp.asarray(rng.standard_normal((1, 1, 32)).astype(np.float32))
+        dots = []
+        for base in (0, 7):
+            qr = _rope(q, jnp.array([base + 3]), 10000.0)
+            kr = _rope(k, jnp.array([base]), 10000.0)
+            dots.append(float(jnp.vdot(qr, kr)))
+        assert abs(dots[0] - dots[1]) < 1e-3
+
+    def test_scatter_kv_writes_only_target_row(self):
+        kv = jnp.zeros((2, 2, 2, 8, 4), jnp.float32)
+        new = jnp.ones((2, 2, 2, 4), jnp.float32)
+        lens = jnp.array([3, 5], jnp.int32)
+        out = _scatter_kv(kv, new, lens)
+        assert float(out[0, :, :, 3, :].min()) == 1.0
+        assert float(out[1, :, :, 5, :].min()) == 1.0
+        # one [2, KH, D] row of ones per batch element -> 2 * (2*2*4) = 32
+        assert float(jnp.abs(out).sum()) == 32.0

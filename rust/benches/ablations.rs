@@ -1,0 +1,126 @@
+//! Ablation benches for the design choices DESIGN.md §7 calls out:
+//!
+//! 1. retained-layer solve: x from Eqs. 3-4 vs forced x=0 vs x=L;
+//! 2. predictor accuracy sweep (oracle -> coin-flip buckets);
+//! 3. §3.1.3 PCIe chunking on/off under TP over PCIe;
+//! 4. Eq. 5 proactive-offload threshold sweep.
+
+use layerkv::config::Policy;
+use layerkv::experiments as exp;
+use layerkv::experiments::Table;
+use layerkv::coordinator::run_trace;
+use layerkv::sim::{BusyWindow, PcieLink};
+use layerkv::util::Rng;
+use layerkv::workload::fixed::FixedWorkload;
+
+fn main() {
+    let n = if exp::quick() { 30 } else { 100 };
+
+    // --- 1. retained-layer policy -----------------------------------
+    let mut t = Table::new(
+        "Ablation: retained layers x at admission (7B, ctx 8192, 1 req/s)",
+        &["x policy", "TTFT mean(s)", "TPOT mean(s)", "tput tok/s"],
+    );
+    for (name, x_override) in [
+        ("solve Eq.3/4", None),
+        ("x = 0 (offload all)", Some(0)),
+        ("x = L/2", Some(16)),
+        ("x = L (no offload)", Some(32)),
+    ] {
+        let mut cfg = exp::setup("7b").with_policy(Policy::LayerKv { slo_aware: true });
+        cfg.x_override = x_override;
+        let rep = exp::run_fixed(cfg, 8192, n, 23);
+        t.row(&[
+            name.to_string(),
+            format!("{:.2}", rep.ttft().mean()),
+            format!("{:.4}", rep.tpot().mean()),
+            format!("{:.1}", rep.throughput_tok_s()),
+        ]);
+    }
+    t.print();
+
+    // --- 2. predictor accuracy --------------------------------------
+    let mut t = Table::new(
+        "Ablation: output-length predictor accuracy (7B, ShareGPT-like, 7 req/s)",
+        &["bucket accuracy", "TTFT mean(s)", "violations %"],
+    );
+    for acc in [1.0, 0.8, 0.5, 0.2] {
+        let cfg = exp::setup("7b").with_policy(Policy::LayerKv { slo_aware: true });
+        // rate past the saturation knee so the forecast/slack paths that
+        // consume the prediction actually bind
+        let trace = layerkv::workload::sharegpt::ShareGptWorkload::paper(7.0, n * 5)
+            .generate(&mut Rng::new(29));
+        let (rep, _) = run_trace(cfg.clone(), &trace, acc);
+        t.row(&[
+            format!("{acc:.1}"),
+            format!("{:.2}", rep.ttft().mean()),
+            format!("{:.1}", 100.0 * rep.slo_violation_rate(&cfg.slo)),
+        ]);
+    }
+    t.print();
+
+    // --- 3. PCIe chunking (§3.1.3), kernel-level --------------------
+    let mut t = Table::new(
+        "Ablation: PCIe contention mechanism (1 GB swap vs 50%-duty all-reduces)",
+        &["mechanism", "swap finish (s)", "all-reduce contention (s)"],
+    );
+    let busy: Vec<BusyWindow> = (0..50)
+        .map(|i| BusyWindow { start: i as f64 * 0.02, end: i as f64 * 0.02 + 0.01 })
+        .collect();
+    for (name, chunking) in [("check + chunk (LayerKV)", true), ("naive swap", false)] {
+        let link = PcieLink::new(13.0e9, 10e-6, chunking);
+        let out = link.schedule_swap(0.0, 1.0e9, &busy);
+        t.row(&[
+            name.to_string(),
+            format!("{:.4}", out.finish),
+            format!("{:.4}", out.contended),
+        ]);
+    }
+    t.print();
+
+    // --- 4. Eq. 5 threshold -----------------------------------------
+    let mut t = Table::new(
+        "Ablation: Eq. 5 proactive-offload threshold (7B, ctx 4096, 1 req/s)",
+        &["threshold frac", "TTFT mean(s)", "TPOT mean(s)"],
+    );
+    for thresh in [0.0, 0.05, 0.10, 0.25] {
+        let mut cfg = exp::setup("7b").with_policy(Policy::LayerKv { slo_aware: true });
+        cfg.avail_threshold_frac = thresh;
+        let trace = FixedWorkload::paper(4096).generate(&mut Rng::new(31));
+        let trace = layerkv::workload::Trace { requests: trace.requests[..n].to_vec() };
+        let (rep, _) = run_trace(cfg, &trace, exp::PREDICTOR_ACC);
+        t.row(&[
+            format!("{thresh:.2}"),
+            format!("{:.2}", rep.ttft().mean()),
+            format!("{:.4}", rep.tpot().mean()),
+        ]);
+    }
+    t.print();
+
+    // --- 5. §8 extension: KV quantization on the offload path --------
+    {
+        use layerkv::config::OffloadQuant;
+        let mut t = Table::new(
+            "Extension (§8): offload-path KV quantization (7B, ctx 8192, 1 req/s)",
+            &["offload precision", "TTFT mean(s)", "TPOT mean(s)", "offload GB"],
+        );
+        for (name, q) in [
+            ("fp16 (lossless)", OffloadQuant::None),
+            ("fp8", OffloadQuant::Fp8),
+            ("int4", OffloadQuant::Int4),
+        ] {
+            let mut cfg = exp::setup("7b").with_policy(Policy::LayerKv { slo_aware: true });
+            cfg.offload_quant = q;
+            let trace = FixedWorkload::paper(8192).generate(&mut Rng::new(37));
+            let trace = layerkv::workload::Trace { requests: trace.requests[..n].to_vec() };
+            let (rep, stats) = run_trace(cfg, &trace, exp::PREDICTOR_ACC);
+            t.row(&[
+                name.to_string(),
+                format!("{:.2}", rep.ttft().mean()),
+                format!("{:.4}", rep.tpot().mean()),
+                format!("{:.2}", stats.offload_bytes / 1e9),
+            ]);
+        }
+        t.print();
+    }
+}

@@ -1,0 +1,22 @@
+//! Regenerates Fig. 1: TTFT/TPOT and the queueing-vs-prefill breakdown
+//! across context lengths (Llama-2-7B, 1 GPU, 1 req/s, output 512, vLLM).
+//!
+//! Expected shape (paper): TTFT rises superlinearly with context while
+//! TPOT grows ~linearly; past ~1k tokens queueing dominates TTFT.
+
+use layerkv::benchutil::bench;
+use layerkv::experiments as exp;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let rows = exp::fig1();
+    exp::print_fig1(&rows);
+    println!("\n(fig1 sweep took {:.1}s)", t0.elapsed().as_secs_f64());
+
+    // micro: one full 2k-context simulation run, timed
+    bench("sim_run/7b_vllm_ctx2048_n20", 3.0, || {
+        std::env::set_var("LAYERKV_QUICK", "1");
+        let cfg = exp::setup("7b");
+        let _ = exp::run_fixed(cfg, 2048, 20, 3);
+    });
+}

@@ -1,0 +1,15 @@
+//! Regenerates Fig. 4: LayerKV vs vLLM across context lengths on the three
+//! paper models (Llama-2-7B TP1, Yi-34B TP2, Llama-3.1-70B TP4).
+//!
+//! Expected shape (paper): vLLM TTFT explodes with context (queueing);
+//! LayerKV rises gently — gap widening to >=an order of magnitude — while
+//! throughput stays within ~3%.
+
+use layerkv::experiments as exp;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let rows = exp::fig4();
+    exp::print_fig4(&rows);
+    println!("\n(fig4 sweep took {:.1}s)", t0.elapsed().as_secs_f64());
+}

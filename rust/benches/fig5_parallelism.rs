@@ -1,0 +1,14 @@
+//! Regenerates Fig. 5: Yi-34B-200K under varying degree of parallelism
+//! (TP 2/4/8).
+//!
+//! Expected shape (paper): higher DoP shrinks absolute TTFT and narrows
+//! the throughput gap, but LayerKV keeps a clear TTFT lead.
+
+use layerkv::experiments as exp;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let rows = exp::fig5();
+    exp::print_fig5(&rows);
+    println!("\n(fig5 sweep took {:.1}s)", t0.elapsed().as_secs_f64());
+}

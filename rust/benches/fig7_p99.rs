@@ -1,0 +1,13 @@
+//! Regenerates Fig. 7: P99 TTFT across arrival rates (same runs as Fig. 6).
+//!
+//! Expected shape (paper): tail latency gap even larger than the mean gap
+//! (paper reports up to 45x P99 reduction).
+
+use layerkv::experiments as exp;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let rows = exp::fig6_7();
+    exp::print_fig7(&rows);
+    println!("\n(fig7 sweep took {:.1}s)", t0.elapsed().as_secs_f64());
+}

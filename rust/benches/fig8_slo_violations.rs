@@ -1,0 +1,16 @@
+//! Regenerates Fig. 8: SLO violation rate (TTFT<=3s, TPOT<=200ms) across
+//! arrival rates, including the LayerKV-without-SLO-scheduler ablation.
+//!
+//! Expected shape (paper): vLLM violations surge past ~6 req/s; LayerKV
+//! stays 17.7-28.7 points lower; the no-SLO ablation trades TPOT
+//! violations for TTFT and can dip below vLLM around ~5.5 req/s.
+
+use layerkv::experiments as exp;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let rows = exp::fig8();
+    exp::print_fig8(&rows);
+    exp::print_table1();
+    println!("\n(fig8 sweep took {:.1}s)", t0.elapsed().as_secs_f64());
+}

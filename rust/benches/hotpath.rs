@@ -1,0 +1,115 @@
+//! Hot-path micro-benchmarks (the §Perf targets in DESIGN.md):
+//!
+//! * scheduler decision latency (vLLM + LayerKV) under a deep queue;
+//! * block allocator alloc/release throughput;
+//! * one simulated engine decode step;
+//! * PcieLink chunked-swap scheduling;
+//! * real PJRT prefill/decode latency (skipped if artifacts are absent).
+
+use layerkv::benchutil::{bench, black_box};
+use layerkv::config::{Policy, ServingConfig};
+use layerkv::coordinator::block::KvManager;
+use layerkv::coordinator::predict::LengthPredictor;
+use layerkv::coordinator::run_trace;
+use layerkv::sim::{BusyWindow, PcieLink};
+use layerkv::util::Rng;
+use layerkv::workload::fixed::FixedWorkload;
+use layerkv::workload::arrivals::Arrivals;
+
+fn main() {
+    // --- allocator ----------------------------------------------------
+    bench("kv_manager/alloc_release_64_layerwise", 2.0, || {
+        let mut m = KvManager::new(100_000, 500_000, 16, 32);
+        for i in 0..64 {
+            m.allocate_layerwise(i, 2048, 4).unwrap();
+        }
+        for i in 0..64 {
+            m.release(i).unwrap();
+        }
+        black_box(m.gpu.available());
+    });
+
+    bench("kv_manager/append_token_4096", 2.0, || {
+        let mut m = KvManager::new(200_000, 200_000, 16, 32);
+        m.allocate_layerwise(0, 16, 32).unwrap();
+        for _ in 0..4096 {
+            m.append_token(0).unwrap();
+        }
+        m.release(0).unwrap();
+    });
+
+    // --- pcie link ------------------------------------------------------
+    let busy: Vec<BusyWindow> = (0..100)
+        .map(|i| BusyWindow { start: i as f64 * 0.01, end: i as f64 * 0.01 + 0.004 })
+        .collect();
+    let link = PcieLink::new(13.0e9, 10e-6, true);
+    bench("pcie/schedule_swap_1GB_100_windows", 2.0, || {
+        black_box(link.schedule_swap(0.0, 1.0e9, &busy));
+    });
+
+    // --- whole-engine step throughput ----------------------------------
+    for policy in [Policy::Vllm, Policy::LayerKv { slo_aware: true }] {
+        let name = format!("engine/steps_per_run_{}", policy.name());
+        bench(&name, 5.0, || {
+            let cfg = ServingConfig::llama2_7b_tp1().with_policy(policy);
+            let trace = FixedWorkload {
+                prompt_len: 2048,
+                output_len: 64,
+                n_requests: 20,
+                arrivals: Arrivals::Poisson { rate: 2.0 },
+            }
+            .generate(&mut Rng::new(5));
+            black_box(run_trace(cfg, &trace, 0.8));
+        });
+    }
+
+    // --- predictor ------------------------------------------------------
+    let p = LengthPredictor::new(2048, 0.8, 1);
+    bench("predictor/predict", 1.0, || {
+        for id in 0..1000 {
+            black_box(p.predict(id, 300));
+        }
+    });
+
+    // --- real PJRT path --------------------------------------------------
+    let dir = layerkv::runtime::artifacts::default_dir();
+    if dir.join("manifest.json").exists() {
+        let model = layerkv::runtime::TinyModel::load(&dir).expect("artifacts");
+        let prompt: Vec<i32> = (0..120).map(|i| (i * 5) % 256).collect();
+        bench("pjrt/prefill_t128", 5.0, || {
+            black_box(model.prefill(&prompt).unwrap());
+        });
+        let m = &model.art.model;
+        let b = 4usize;
+        let per_layer = b * 2 * m.n_kv_heads * m.max_seq * m.head_dim;
+        let mut kvs: Vec<Vec<f32>> = (0..m.n_layers).map(|_| vec![0.0f32; per_layer]).collect();
+        let tokens = vec![1i32; b];
+        let lens = vec![64i32; b];
+        bench("pjrt/decode_b4", 5.0, || {
+            black_box(model.decode(&tokens, &lens, &mut kvs).unwrap());
+        });
+        if model.has_paged_kernel() {
+            let q = vec![0.1f32; 4 * m.n_heads * m.head_dim];
+            let pages = vec![0.1f32; 64 * 2 * m.n_kv_heads * 16 * m.head_dim];
+            let table: Vec<i32> = (0..64).cycle().take(4 * 16).collect();
+            let lens = vec![100i32; 4];
+            bench("pjrt/paged_attn_kernel", 5.0, || {
+                black_box(
+                    model
+                        .paged_attn(
+                            &q,
+                            &[4, m.n_heads, m.head_dim],
+                            &pages,
+                            &[64, 2, m.n_kv_heads, 16, m.head_dim],
+                            &table,
+                            &[4, 16],
+                            &lens,
+                        )
+                        .unwrap(),
+                );
+            });
+        }
+    } else {
+        println!("pjrt benches skipped: run `make artifacts` first");
+    }
+}

@@ -1,0 +1,114 @@
+//! Minimal benchmark harness (in-tree substitute for `criterion`,
+//! unavailable offline — DESIGN.md §2).
+//!
+//! Benches are `harness = false` binaries: they time closures with warmup,
+//! report mean / stddev / min like criterion's summary line, and print the
+//! experiment tables the paper's figures correspond to. `cargo bench`
+//! runs them all.
+
+use std::time::Instant;
+
+/// Timing summary for one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!(
+            "bench {:<44} {:>10}  ±{:>9}  (min {:>9}, n={})",
+            self.name,
+            fmt_time(self.mean_s),
+            fmt_time(self.std_s),
+            fmt_time(self.min_s),
+            self.iters
+        );
+    }
+}
+
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Time `f` adaptively: warm up, then run until ~`budget_s` seconds or
+/// `max_iters`, whichever first. Returns per-iteration stats.
+pub fn bench<F: FnMut()>(name: &str, budget_s: f64, mut f: F) -> BenchResult {
+    // warmup
+    let warm = Instant::now();
+    let mut warm_iters = 0usize;
+    while warm.elapsed().as_secs_f64() < budget_s * 0.2 && warm_iters < 3 {
+        f();
+        warm_iters += 1;
+    }
+    let mut samples: Vec<f64> = Vec::new();
+    let start = Instant::now();
+    while start.elapsed().as_secs_f64() < budget_s && samples.len() < 10_000 {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    if samples.is_empty() {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    let n = samples.len();
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    let var = if n > 1 {
+        samples.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (n - 1) as f64
+    } else {
+        0.0
+    };
+    let min = samples.iter().copied().fold(f64::INFINITY, f64::min);
+    let r = BenchResult {
+        name: name.to_string(),
+        iters: n,
+        mean_s: mean,
+        std_s: var.sqrt(),
+        min_s: min,
+    };
+    r.print();
+    r
+}
+
+/// Black-box to keep the optimizer honest.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_stats() {
+        let r = bench("noop-spin", 0.05, || {
+            black_box((0..100).sum::<u64>());
+        });
+        assert!(r.iters >= 1);
+        assert!(r.mean_s >= 0.0);
+        assert!(r.min_s <= r.mean_s + 1e-12);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(2.0).ends_with(" s"));
+        assert!(fmt_time(2e-3).ends_with(" ms"));
+        assert!(fmt_time(2e-6).contains("µs"));
+        assert!(fmt_time(2e-9).ends_with(" ns"));
+    }
+}

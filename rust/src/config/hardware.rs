@@ -1,0 +1,121 @@
+//! Hardware description: GPU, interconnect, host. Numbers default to the
+//! paper's testbed (NVIDIA L20 48 GB, PCIe 4.0 x16 shared per GPU pair,
+//! 2 TB host RAM) so the simulator's cost models (sim/costmodel.rs)
+//! reproduce the paper's latency regime.
+
+/// One accelerator.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    /// Device memory in bytes.
+    pub memory_bytes: u64,
+    /// Peak dense fp16 throughput in FLOP/s.
+    pub peak_flops: f64,
+    /// HBM/GDDR bandwidth in bytes/s (decode is memory-bound).
+    pub mem_bw: f64,
+}
+
+impl GpuSpec {
+    /// NVIDIA L20: 48 GB GDDR6, 119.5 TFLOPs fp16 tensor, 864 GB/s.
+    pub fn l20() -> Self {
+        GpuSpec {
+            name: "L20",
+            memory_bytes: 48 * (1 << 30),
+            peak_flops: 119.5e12,
+            mem_bw: 864.0e9,
+        }
+    }
+
+    /// NVIDIA A100-80G, for cross-checking against common baselines.
+    pub fn a100_80g() -> Self {
+        GpuSpec {
+            name: "A100-80G",
+            memory_bytes: 80 * (1 << 30),
+            peak_flops: 312.0e12,
+            mem_bw: 2039.0e9,
+        }
+    }
+}
+
+/// Host-device interconnect.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PcieSpec {
+    /// Unidirectional bandwidth in bytes/s for one x16 link.
+    pub bandwidth: f64,
+    /// Per-transfer fixed latency (launch + DMA setup), seconds.
+    pub latency: f64,
+    /// GPUs sharing one link (the paper's testbed: each two GPUs share one
+    /// PCIe connection).
+    pub gpus_per_link: usize,
+}
+
+impl PcieSpec {
+    /// PCIe 4.0 x16: ~32 GB/s raw, ~26 GB/s achievable.
+    pub fn gen4_x16() -> Self {
+        PcieSpec { bandwidth: 26.0e9, latency: 10e-6, gpus_per_link: 2 }
+    }
+}
+
+/// Inter-GPU fabric for tensor parallelism.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fabric {
+    /// NVLink: all-reduce does not touch PCIe (no contention with LayerKV
+    /// swaps — §3.1.3).
+    NvLink,
+    /// All-reduce shares PCIe with KV offload traffic (contention path).
+    Pcie,
+}
+
+/// A serving node.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeSpec {
+    pub gpu: GpuSpec,
+    pub n_gpus: usize,
+    pub pcie: PcieSpec,
+    pub fabric: Fabric,
+    /// Host DRAM available for offloaded KV (bytes).
+    pub host_memory_bytes: u64,
+    /// NVLink bandwidth if fabric == NvLink (bytes/s per direction).
+    pub nvlink_bw: f64,
+}
+
+impl NodeSpec {
+    /// The paper's testbed: 8x L20, PCIe-only fabric (L20 has no NVLink),
+    /// 2048 GB host memory.
+    pub fn l20_node() -> Self {
+        NodeSpec {
+            gpu: GpuSpec::l20(),
+            n_gpus: 8,
+            pcie: PcieSpec::gen4_x16(),
+            fabric: Fabric::Pcie,
+            host_memory_bytes: 2048 * (1u64 << 30),
+            nvlink_bw: 0.0,
+        }
+    }
+
+    /// NVLink variant (for the §3.1.3 contention ablation).
+    pub fn l20_node_nvlink() -> Self {
+        NodeSpec { fabric: Fabric::NvLink, nvlink_bw: 300.0e9, ..Self::l20_node() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn l20_datasheet() {
+        let g = GpuSpec::l20();
+        assert_eq!(g.memory_bytes, 51_539_607_552);
+        assert!(g.peak_flops > 1e14);
+    }
+
+    #[test]
+    fn testbed_matches_paper() {
+        let n = NodeSpec::l20_node();
+        assert_eq!(n.n_gpus, 8);
+        assert_eq!(n.fabric, Fabric::Pcie);
+        assert_eq!(n.pcie.gpus_per_link, 2);
+        assert_eq!(n.host_memory_bytes, 2048 * (1u64 << 30));
+    }
+}

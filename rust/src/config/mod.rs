@@ -1,0 +1,9 @@
+//! Configuration system: model zoo, hardware descriptions, serving knobs.
+
+pub mod hardware;
+pub mod model;
+pub mod serving;
+
+pub use hardware::{Fabric, GpuSpec, NodeSpec, PcieSpec};
+pub use model::ModelSpec;
+pub use serving::{OffloadQuant, Policy, ServingConfig, SloTargets};

@@ -1,0 +1,158 @@
+//! Model zoo: the shapes of the models the paper evaluates plus the tiny
+//! model actually served end-to-end through PJRT.
+//!
+//! Latency/memory experiments need shapes and parameter counts, not
+//! weights (DESIGN.md §2): every cost in the simulator derives from these
+//! numbers through Eqs. 3–4 of the paper.
+
+/// Architectural description of a decoder-only transformer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSpec {
+    pub name: &'static str,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    /// GQA: number of KV heads (== n_heads for vanilla MHA).
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub hidden: usize,
+    pub ffn_hidden: usize,
+    pub vocab: usize,
+    /// Total parameter count (reported, not derived, to match the paper's
+    /// n_param in Eq. 3).
+    pub n_params: u64,
+    /// Bytes per weight/KV element as served (fp16 on the paper's testbed).
+    pub dtype_bytes: usize,
+    /// Maximum context window the serving config may allow.
+    pub max_context: usize,
+}
+
+impl ModelSpec {
+    /// KV cache bytes for ONE token across ALL layers.
+    pub fn kv_bytes_per_token(&self) -> u64 {
+        (2 * self.n_layers * self.n_kv_heads * self.head_dim * self.dtype_bytes) as u64
+    }
+
+    /// KV cache bytes for one token of ONE layer.
+    pub fn kv_bytes_per_token_layer(&self) -> u64 {
+        (2 * self.n_kv_heads * self.head_dim * self.dtype_bytes) as u64
+    }
+
+    /// Weight bytes (total across the whole model, before TP sharding).
+    pub fn weight_bytes(&self) -> u64 {
+        self.n_params * self.dtype_bytes as u64
+    }
+
+    /// Llama-2-7B: 32 layers, MHA, 4k native context (paper runs it to 16k
+    /// prompts on 1 GPU).
+    pub fn llama2_7b() -> Self {
+        ModelSpec {
+            name: "llama2-7b",
+            n_layers: 32,
+            n_heads: 32,
+            n_kv_heads: 32,
+            head_dim: 128,
+            hidden: 4096,
+            ffn_hidden: 11008,
+            vocab: 32000,
+            n_params: 6_738_000_000,
+            dtype_bytes: 2,
+            max_context: 16384,
+        }
+    }
+
+    /// Yi-34B-200K: 60 layers, GQA 8 kv heads, long-context flagship.
+    pub fn yi_34b_200k() -> Self {
+        ModelSpec {
+            name: "yi-34b-200k",
+            n_layers: 60,
+            n_heads: 56,
+            n_kv_heads: 8,
+            head_dim: 128,
+            hidden: 7168,
+            ffn_hidden: 20480,
+            vocab: 64000,
+            n_params: 34_400_000_000,
+            dtype_bytes: 2,
+            max_context: 200_000,
+        }
+    }
+
+    /// Llama-3.1-70B: 80 layers, GQA 8 kv heads.
+    pub fn llama31_70b() -> Self {
+        ModelSpec {
+            name: "llama3.1-70b",
+            n_layers: 80,
+            n_heads: 64,
+            n_kv_heads: 8,
+            head_dim: 128,
+            hidden: 8192,
+            ffn_hidden: 28672,
+            vocab: 128_256,
+            n_params: 70_600_000_000,
+            dtype_bytes: 2,
+            max_context: 131_072,
+        }
+    }
+
+    /// The tiny model actually compiled by `make artifacts` and served via
+    /// PJRT (matches python/compile/model.py ModelConfig defaults).
+    pub fn tiny() -> Self {
+        ModelSpec {
+            name: "tiny",
+            n_layers: 4,
+            n_heads: 4,
+            n_kv_heads: 2,
+            head_dim: 32,
+            hidden: 128,
+            ffn_hidden: 256,
+            vocab: 256,
+            n_params: 656_384, // filled from manifest at load; this is the default-seed count
+            dtype_bytes: 4,    // f32 on the CPU PJRT path
+            max_context: 256,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "llama2-7b" => Some(Self::llama2_7b()),
+            "yi-34b-200k" => Some(Self::yi_34b_200k()),
+            "llama3.1-70b" => Some(Self::llama31_70b()),
+            "tiny" => Some(Self::tiny()),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kv_bytes_match_hand_calc() {
+        let m = ModelSpec::llama2_7b();
+        // 2 (K+V) * 32 layers * 32 heads * 128 dim * 2 bytes = 524288 B/token
+        assert_eq!(m.kv_bytes_per_token(), 524_288);
+        assert_eq!(m.kv_bytes_per_token_layer(), 16_384);
+    }
+
+    #[test]
+    fn gqa_models_have_smaller_kv() {
+        let mha = ModelSpec::llama2_7b();
+        let gqa = ModelSpec::yi_34b_200k();
+        // Yi-34B has ~5x the params but GQA keeps per-token-per-layer KV smaller
+        assert!(gqa.kv_bytes_per_token_layer() < mha.kv_bytes_per_token_layer());
+    }
+
+    #[test]
+    fn zoo_lookup() {
+        for name in ["llama2-7b", "yi-34b-200k", "llama3.1-70b", "tiny"] {
+            assert_eq!(ModelSpec::by_name(name).unwrap().name, name);
+        }
+        assert!(ModelSpec::by_name("gpt-5").is_none());
+    }
+
+    #[test]
+    fn weight_bytes_fp16() {
+        assert_eq!(ModelSpec::llama2_7b().weight_bytes(), 13_476_000_000);
+    }
+}

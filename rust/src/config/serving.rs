@@ -1,0 +1,270 @@
+//! Serving configuration: the knobs vLLM exposes (block size, memory
+//! utilisation, batching caps) plus LayerKV's additions (policy, SLO
+//! targets, offload thresholds).
+
+use super::hardware::NodeSpec;
+use super::model::ModelSpec;
+
+/// Which scheduler/KV-management policy the engine runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// Baseline: request-wise KV block admission, prefill-priority
+    /// continuous batching, recompute preemption (vLLM 0.5.x semantics).
+    Vllm,
+    /// LayerKV: layer-wise allocation + offloading. `slo_aware = false` is
+    /// the Fig. 8 ablation (admit prefills whenever layer-blocks allow,
+    /// ignoring decoding requests' TPOT slack).
+    LayerKv { slo_aware: bool },
+}
+
+impl Policy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::Vllm => "vllm",
+            Policy::LayerKv { slo_aware: true } => "layerkv",
+            Policy::LayerKv { slo_aware: false } => "layerkv-no-slo",
+        }
+    }
+}
+
+/// Service level objectives (per request). Paper §5.2.4: TTFT 3000 ms,
+/// TPOT 200 ms.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloTargets {
+    pub ttft_s: f64,
+    pub tpot_s: f64,
+}
+
+impl Default for SloTargets {
+    fn default() -> Self {
+        SloTargets { ttft_s: 3.0, tpot_s: 0.2 }
+    }
+}
+
+/// Everything the engine needs to size pools and drive policies.
+#[derive(Debug, Clone)]
+pub struct ServingConfig {
+    pub model: ModelSpec,
+    pub node: NodeSpec,
+    /// Tensor-parallel degree (1 for 7B, 2 for 34B, 4 for 70B in the paper).
+    pub tp: usize,
+    /// Tokens per KV block (vLLM default 16).
+    pub block_size: usize,
+    /// Fraction of post-weights GPU memory given to KV blocks (vLLM 0.9).
+    pub gpu_mem_util: f64,
+    /// Maximum configured input size — drives the activation reserve during
+    /// profiling (the Fig. 2 effect: bigger max input => fewer KV blocks).
+    pub max_model_len: usize,
+    /// Iteration-level batching caps (vLLM defaults).
+    pub max_num_seqs: usize,
+    pub max_batched_tokens: usize,
+    pub policy: Policy,
+    pub slo: SloTargets,
+    /// LayerKV Eq. 5: offload retained layers when forecast free blocks
+    /// drop below this fraction of the pool.
+    pub avail_threshold_frac: f64,
+    /// §3.1.3: chunk swaps + check PCIe before launching (multi-GPU).
+    pub pcie_chunking: bool,
+    /// Host KV swap space in bytes.
+    pub cpu_swap_bytes: u64,
+    /// Empirical correction factors of Eqs. 3-4 (calibrated in EXPERIMENTS.md).
+    pub alpha: f64,
+    pub beta: f64,
+    /// Ablation override for §3.1.1's x (retained layers at admission):
+    /// None = solve Eq. 3 vs Eq. 4; Some(x) = force x.
+    pub x_override: Option<usize>,
+    /// §8 future-work extension: quantize KV on the offload path. Scales
+    /// every PCIe transfer (Eq. 4, decode streaming) by
+    /// `quant_bytes / dtype_bytes`; on-GPU compute stays full precision.
+    pub offload_quant: OffloadQuant,
+}
+
+/// Precision of offloaded KV (paper §8: "integrating KV cache quantization
+/// techniques to further optimize memory efficiency").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OffloadQuant {
+    /// Keep the serving dtype (lossless — the paper's shipped design).
+    None,
+    /// 8-bit with per-block scales (~2x fp16 traffic reduction).
+    Fp8,
+    /// 4-bit (KIVI-style) (~4x reduction).
+    Int4,
+}
+
+impl OffloadQuant {
+    /// Bytes on the wire per original dtype byte-pair, as a ratio.
+    pub fn ratio(&self, dtype_bytes: usize) -> f64 {
+        match self {
+            OffloadQuant::None => 1.0,
+            OffloadQuant::Fp8 => 1.0 / dtype_bytes as f64,
+            OffloadQuant::Int4 => 0.5 / dtype_bytes as f64,
+        }
+    }
+}
+
+impl ServingConfig {
+    pub fn new(model: ModelSpec, node: NodeSpec, tp: usize) -> Self {
+        let max_model_len = model.max_context.min(16384);
+        ServingConfig {
+            model,
+            node,
+            tp,
+            block_size: 16,
+            gpu_mem_util: 0.9,
+            max_model_len,
+            max_num_seqs: 256,
+            max_batched_tokens: max_model_len.max(2048),
+            policy: Policy::Vllm,
+            slo: SloTargets::default(),
+            avail_threshold_frac: 0.10,
+            pcie_chunking: true,
+            cpu_swap_bytes: 256 * (1u64 << 30),
+            alpha: 1.0,
+            beta: 1.10,
+            x_override: None,
+            offload_quant: OffloadQuant::None,
+        }
+    }
+
+    /// Paper's three eval setups.
+    pub fn llama2_7b_tp1() -> Self {
+        Self::new(ModelSpec::llama2_7b(), NodeSpec::l20_node(), 1)
+    }
+    pub fn yi_34b_tp2() -> Self {
+        Self::new(ModelSpec::yi_34b_200k(), NodeSpec::l20_node(), 2)
+    }
+    pub fn llama31_70b_tp4() -> Self {
+        Self::new(ModelSpec::llama31_70b(), NodeSpec::l20_node(), 4)
+    }
+
+    pub fn with_policy(mut self, policy: Policy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    pub fn with_max_model_len(mut self, len: usize) -> Self {
+        self.max_model_len = len;
+        self.max_batched_tokens = len.max(2048);
+        self
+    }
+
+    /// Per-GPU weight bytes under TP sharding.
+    pub fn weight_bytes_per_gpu(&self) -> u64 {
+        self.model.weight_bytes() / self.tp as u64
+    }
+
+    /// Activation reserve measured by the init-time profiling pass: vLLM
+    /// runs `max_model_len` tokens through the model and keeps the peak
+    /// activation footprint out of the KV pool. Model: per-token peak
+    /// activations ~ (4*hidden + 2*ffn_hidden) elements (attention proj
+    /// buffers + the fused FFN intermediate), sharded by TP.
+    pub fn activation_reserve_bytes(&self) -> u64 {
+        let per_token = (4 * self.model.hidden + 2 * self.model.ffn_hidden)
+            * self.model.dtype_bytes;
+        (self.max_model_len as u64 * per_token as u64) / self.tp as u64
+    }
+
+    /// Bytes of one KV block (all layers, `block_size` tokens), per GPU.
+    /// KV heads shard across TP ranks.
+    pub fn block_bytes_per_gpu(&self) -> u64 {
+        self.model.kv_bytes_per_token() * self.block_size as u64 / self.tp as u64
+    }
+
+    /// Number of whole-request KV blocks the profiling pass yields
+    /// (request-wise accounting, i.e. a block spans all layers — vLLM's
+    /// unit). LayerKV subdivides each into `n_layers` layer-blocks.
+    pub fn num_gpu_blocks(&self) -> usize {
+        let gpu = &self.node.gpu;
+        let budget = (gpu.memory_bytes as f64 * self.gpu_mem_util) as i128
+            - self.weight_bytes_per_gpu() as i128
+            - self.activation_reserve_bytes() as i128;
+        if budget <= 0 {
+            return 0;
+        }
+        (budget as u64 / self.block_bytes_per_gpu()) as usize
+    }
+
+    /// LayerKV's allocation unit: one block of ONE layer.
+    pub fn num_gpu_layer_blocks(&self) -> usize {
+        self.num_gpu_blocks() * self.model.n_layers
+    }
+
+    /// Capacity of the host swap pool in layer-blocks.
+    pub fn num_cpu_layer_blocks(&self) -> usize {
+        let layer_block_bytes = self.block_bytes_per_gpu() / self.model.n_layers as u64;
+        if layer_block_bytes == 0 {
+            return 0;
+        }
+        (self.cpu_swap_bytes / layer_block_bytes) as usize
+    }
+
+    /// Blocks a prompt of `len` tokens needs under request-wise accounting.
+    pub fn blocks_for_tokens(&self, len: usize) -> usize {
+        len.div_ceil(self.block_size)
+    }
+
+    /// Bytes per token-layer actually pushed over PCIe when offloading
+    /// (full dtype, scaled by the §8 quantization extension if enabled).
+    pub fn offload_bytes_per_token_layer(&self) -> f64 {
+        self.model.kv_bytes_per_token_layer() as f64
+            * self.offload_quant.ratio(self.model.dtype_bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profiling_matches_hand_calc_7b() {
+        let c = ServingConfig::llama2_7b_tp1();
+        // 48 GiB * 0.9 - 13.476 GB weights - act reserve; block = 8 MiB
+        let blocks = c.num_gpu_blocks();
+        assert!(blocks > 3000 && blocks < 4500, "blocks={blocks}");
+        assert_eq!(c.num_gpu_layer_blocks(), blocks * 32);
+    }
+
+    #[test]
+    fn bigger_max_len_fewer_blocks() {
+        let short = ServingConfig::llama2_7b_tp1().with_max_model_len(2048);
+        let long = ServingConfig::llama2_7b_tp1().with_max_model_len(16384);
+        assert!(short.num_gpu_blocks() > long.num_gpu_blocks());
+    }
+
+    #[test]
+    fn tp_shards_weights_and_kv() {
+        let c = ServingConfig::yi_34b_tp2();
+        assert_eq!(c.weight_bytes_per_gpu(), ModelSpec::yi_34b_200k().weight_bytes() / 2);
+        // 34B in fp16 = 68.8 GB > 48 GB: must not fit on one GPU
+        let c1 = ServingConfig::new(ModelSpec::yi_34b_200k(), NodeSpec::l20_node(), 1);
+        assert_eq!(c1.num_gpu_blocks(), 0);
+        assert!(c.num_gpu_blocks() > 0);
+    }
+
+    #[test]
+    fn policy_names() {
+        assert_eq!(Policy::Vllm.name(), "vllm");
+        assert_eq!(Policy::LayerKv { slo_aware: true }.name(), "layerkv");
+        assert_eq!(Policy::LayerKv { slo_aware: false }.name(), "layerkv-no-slo");
+    }
+
+    #[test]
+    fn blocks_for_tokens_rounds_up() {
+        let c = ServingConfig::llama2_7b_tp1();
+        assert_eq!(c.blocks_for_tokens(1), 1);
+        assert_eq!(c.blocks_for_tokens(16), 1);
+        assert_eq!(c.blocks_for_tokens(17), 2);
+    }
+
+    #[test]
+    fn offload_quant_ratios() {
+        // fp16 serving dtype: fp8 halves traffic, int4 quarters it
+        assert_eq!(OffloadQuant::None.ratio(2), 1.0);
+        assert_eq!(OffloadQuant::Fp8.ratio(2), 0.5);
+        assert_eq!(OffloadQuant::Int4.ratio(2), 0.25);
+        let mut c = ServingConfig::llama2_7b_tp1();
+        let full = c.offload_bytes_per_token_layer();
+        c.offload_quant = OffloadQuant::Int4;
+        assert_eq!(c.offload_bytes_per_token_layer(), full * 0.25);
+    }
+}

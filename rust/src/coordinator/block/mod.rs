@@ -1,0 +1,353 @@
+//! KV cache manager: physical pools + layer-wise block tables + the
+//! residency moves (offload/onload) the LayerKV execution engine performs.
+
+pub mod allocator;
+pub mod table;
+
+pub use allocator::{BlockId, BlockPool};
+pub use table::{LayerBlockTable, LayerEntry, Residency};
+
+use std::collections::HashMap;
+
+use crate::coordinator::request::ReqId;
+
+/// Why an allocation failed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvError {
+    GpuExhausted,
+    CpuExhausted,
+    UnknownRequest,
+}
+
+/// Manages both pools (denominated in layer-blocks) and every live
+/// request's layer-wise block table.
+#[derive(Debug)]
+pub struct KvManager {
+    pub gpu: BlockPool,
+    pub cpu: BlockPool,
+    pub block_size: usize,
+    pub n_layers: usize,
+    tables: HashMap<ReqId, LayerBlockTable>,
+}
+
+impl KvManager {
+    pub fn new(gpu_layer_blocks: usize, cpu_layer_blocks: usize, block_size: usize, n_layers: usize) -> Self {
+        KvManager {
+            gpu: BlockPool::new(gpu_layer_blocks),
+            cpu: BlockPool::new(cpu_layer_blocks),
+            block_size,
+            n_layers,
+            tables: HashMap::new(),
+        }
+    }
+
+    pub fn table(&self, req: ReqId) -> Option<&LayerBlockTable> {
+        self.tables.get(&req)
+    }
+
+    pub fn live_requests(&self) -> usize {
+        self.tables.len()
+    }
+
+    fn blocks_per_layer(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_size)
+    }
+
+    /// GPU layer-blocks a *request-wise* (vLLM) admission of `tokens` needs:
+    /// every layer resident.
+    pub fn gpu_blocks_full(&self, tokens: usize) -> usize {
+        self.blocks_per_layer(tokens) * self.n_layers
+    }
+
+    /// GPU layer-blocks a *layer-wise* (LayerKV) admission needs when only
+    /// `x` layers are retained.
+    pub fn gpu_blocks_layerwise(&self, tokens: usize, x: usize) -> usize {
+        self.blocks_per_layer(tokens) * x
+    }
+
+    /// vLLM-style admission: all layers on GPU, or nothing.
+    pub fn allocate_full(&mut self, req: ReqId, tokens: usize) -> Result<(), KvError> {
+        self.allocate_layerwise(req, tokens, self.n_layers)
+    }
+
+    /// LayerKV admission (§3.1.1): retain `x` interleaved layers on GPU,
+    /// place the other L-x on the host. All-or-nothing.
+    pub fn allocate_layerwise(&mut self, req: ReqId, tokens: usize, x: usize) -> Result<(), KvError> {
+        let x = x.min(self.n_layers);
+        let per_layer = self.blocks_per_layer(tokens);
+        let need_gpu = per_layer * x;
+        let need_cpu = per_layer * (self.n_layers - x);
+        if self.gpu.available() < need_gpu {
+            return Err(KvError::GpuExhausted);
+        }
+        if self.cpu.available() < need_cpu {
+            return Err(KvError::CpuExhausted);
+        }
+        let retained = LayerBlockTable::interleaved_retained(self.n_layers, x);
+        let mut t = LayerBlockTable::new(self.n_layers, self.block_size);
+        t.tokens = tokens;
+        for (i, entry) in t.layers.iter_mut().enumerate() {
+            if retained.contains(&i) {
+                entry.residency = Residency::Gpu;
+                entry.blocks = self.gpu.alloc(per_layer).expect("checked above");
+            } else {
+                entry.residency = Residency::Cpu;
+                entry.blocks = self.cpu.alloc(per_layer).expect("checked above");
+            }
+        }
+        let prev = self.tables.insert(req, t);
+        debug_assert!(prev.is_none(), "request {req} allocated twice");
+        Ok(())
+    }
+
+    /// One more token for `req` (a decode iteration). Grows each layer's
+    /// block list across a block boundary, drawing from the pool that
+    /// layer currently resides in. On GPU exhaustion nothing is mutated
+    /// (caller decides: preempt, or offload someone and retry).
+    pub fn append_token(&mut self, req: ReqId) -> Result<(), KvError> {
+        let t = self.tables.get(&req).ok_or(KvError::UnknownRequest)?;
+        let old = self.blocks_per_layer(t.tokens);
+        let new = self.blocks_per_layer(t.tokens + 1);
+        if new > old {
+            let gpu_layers = t.n_gpu_layers();
+            let cpu_layers = self.n_layers - gpu_layers;
+            if self.gpu.available() < gpu_layers {
+                return Err(KvError::GpuExhausted);
+            }
+            if self.cpu.available() < cpu_layers {
+                return Err(KvError::CpuExhausted);
+            }
+            let t = self.tables.get_mut(&req).unwrap();
+            for entry in &mut t.layers {
+                let b = match entry.residency {
+                    Residency::Gpu => self.gpu.alloc_one().expect("checked"),
+                    Residency::Cpu => self.cpu.alloc_one().expect("checked"),
+                };
+                entry.blocks.push(b);
+            }
+        }
+        self.tables.get_mut(&req).unwrap().tokens += 1;
+        Ok(())
+    }
+
+    /// Move one layer GPU -> host (§3.1.1 proactive offload / OOM relief).
+    /// Returns the number of GPU layer-blocks freed.
+    pub fn offload_layer(&mut self, req: ReqId, layer: usize) -> Result<usize, KvError> {
+        let t = self.tables.get(&req).ok_or(KvError::UnknownRequest)?;
+        let entry = &t.layers[layer];
+        if entry.residency == Residency::Cpu {
+            return Ok(0);
+        }
+        let n = entry.blocks.len();
+        if self.cpu.available() < n {
+            return Err(KvError::CpuExhausted);
+        }
+        let cpu_blocks = self.cpu.alloc(n).expect("checked");
+        let t = self.tables.get_mut(&req).unwrap();
+        let gpu_blocks = std::mem::replace(&mut t.layers[layer].blocks, cpu_blocks);
+        t.layers[layer].residency = Residency::Cpu;
+        self.gpu.release(&gpu_blocks);
+        Ok(n)
+    }
+
+    /// Move one layer host -> GPU (decode-phase restore).
+    pub fn onload_layer(&mut self, req: ReqId, layer: usize) -> Result<usize, KvError> {
+        let t = self.tables.get(&req).ok_or(KvError::UnknownRequest)?;
+        let entry = &t.layers[layer];
+        if entry.residency == Residency::Gpu {
+            return Ok(0);
+        }
+        let n = entry.blocks.len();
+        if self.gpu.available() < n {
+            return Err(KvError::GpuExhausted);
+        }
+        let gpu_blocks = self.gpu.alloc(n).expect("checked");
+        let t = self.tables.get_mut(&req).unwrap();
+        let cpu_blocks = std::mem::replace(&mut t.layers[layer].blocks, gpu_blocks);
+        t.layers[layer].residency = Residency::Gpu;
+        self.cpu.release(&cpu_blocks);
+        Ok(n)
+    }
+
+    /// Release everything a request holds (completion or recompute
+    /// preemption — serving systems are stateless across requests, §2.2).
+    pub fn release(&mut self, req: ReqId) -> Result<(), KvError> {
+        let t = self.tables.remove(&req).ok_or(KvError::UnknownRequest)?;
+        for entry in &t.layers {
+            match entry.residency {
+                Residency::Gpu => self.gpu.release(&entry.blocks),
+                Residency::Cpu => self.cpu.release(&entry.blocks),
+            }
+        }
+        Ok(())
+    }
+
+    /// Bytes of one layer of a request's KV (for transfer-time estimates).
+    pub fn layer_tokens(&self, req: ReqId) -> usize {
+        self.tables.get(&req).map(|t| t.tokens).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop;
+
+    fn mgr(gpu: usize, cpu: usize) -> KvManager {
+        KvManager::new(gpu, cpu, 16, 4)
+    }
+
+    #[test]
+    fn full_allocation_uses_all_layers() {
+        let mut m = mgr(64, 64);
+        m.allocate_full(0, 33).unwrap(); // 3 blocks/layer * 4 layers
+        assert_eq!(m.gpu.used(), 12);
+        assert_eq!(m.cpu.used(), 0);
+        let t = m.table(0).unwrap();
+        assert_eq!(t.n_gpu_layers(), 4);
+        t.check().unwrap();
+    }
+
+    #[test]
+    fn layerwise_allocation_splits_pools() {
+        let mut m = mgr(64, 64);
+        m.allocate_layerwise(0, 33, 1).unwrap();
+        assert_eq!(m.gpu.used(), 3);
+        assert_eq!(m.cpu.used(), 9);
+        assert_eq!(m.table(0).unwrap().n_gpu_layers(), 1);
+    }
+
+    #[test]
+    fn layerwise_x0_needs_no_gpu() {
+        let mut m = mgr(0, 64);
+        m.allocate_layerwise(0, 40, 0).unwrap();
+        assert_eq!(m.gpu.used(), 0);
+        assert_eq!(m.cpu.used(), 12);
+    }
+
+    #[test]
+    fn admission_is_all_or_nothing() {
+        let mut m = mgr(10, 0);
+        // needs 12 gpu blocks -> must fail without touching pools
+        assert_eq!(m.allocate_full(0, 33), Err(KvError::GpuExhausted));
+        assert_eq!(m.gpu.used(), 0);
+        assert!(m.table(0).is_none());
+    }
+
+    #[test]
+    fn append_token_grows_on_boundary() {
+        let mut m = mgr(64, 64);
+        m.allocate_full(0, 16).unwrap();
+        assert_eq!(m.gpu.used(), 4);
+        m.append_token(0).unwrap(); // token 17 -> new block per layer
+        assert_eq!(m.gpu.used(), 8);
+        for _ in 0..15 {
+            m.append_token(0).unwrap(); // up to 32: no growth
+        }
+        assert_eq!(m.gpu.used(), 8);
+        assert_eq!(m.table(0).unwrap().tokens, 32);
+        m.table(0).unwrap().check().unwrap();
+    }
+
+    #[test]
+    fn append_oom_leaves_state_clean() {
+        let mut m = mgr(4, 0);
+        m.allocate_full(0, 16).unwrap(); // uses all 4
+        assert_eq!(m.append_token(0), Err(KvError::GpuExhausted));
+        assert_eq!(m.table(0).unwrap().tokens, 16);
+        m.table(0).unwrap().check().unwrap();
+    }
+
+    #[test]
+    fn offload_onload_roundtrip() {
+        let mut m = mgr(64, 64);
+        m.allocate_full(0, 33).unwrap();
+        let freed = m.offload_layer(0, 2).unwrap();
+        assert_eq!(freed, 3);
+        assert_eq!(m.gpu.used(), 9);
+        assert_eq!(m.cpu.used(), 3);
+        assert_eq!(m.table(0).unwrap().cpu_layers(), vec![2]);
+        // idempotent
+        assert_eq!(m.offload_layer(0, 2).unwrap(), 0);
+        let back = m.onload_layer(0, 2).unwrap();
+        assert_eq!(back, 3);
+        assert_eq!(m.gpu.used(), 12);
+        assert_eq!(m.cpu.used(), 0);
+    }
+
+    #[test]
+    fn release_returns_everything() {
+        let mut m = mgr(64, 64);
+        m.allocate_layerwise(0, 40, 2).unwrap();
+        m.allocate_layerwise(1, 16, 4).unwrap();
+        m.release(0).unwrap();
+        m.release(1).unwrap();
+        assert_eq!(m.gpu.used(), 0);
+        assert_eq!(m.cpu.used(), 0);
+        assert_eq!(m.release(0), Err(KvError::UnknownRequest));
+    }
+
+    #[test]
+    fn prop_no_leaks_under_random_lifecycle() {
+        prop(100, |rng| {
+            let gpu_total = rng.range_usize(8, 128);
+            let cpu_total = rng.range_usize(8, 128);
+            let mut m = KvManager::new(gpu_total, cpu_total, 16, 4);
+            let mut live: Vec<ReqId> = Vec::new();
+            let mut next_id = 0;
+            for _ in 0..200 {
+                match rng.range(0, 5) {
+                    0 => {
+                        let tokens = rng.range_usize(1, 100);
+                        let x = rng.range_usize(0, 5);
+                        if m.allocate_layerwise(next_id, tokens, x).is_ok() {
+                            live.push(next_id);
+                        }
+                        next_id += 1;
+                    }
+                    1 => {
+                        if !live.is_empty() {
+                            let r = live[rng.range_usize(0, live.len())];
+                            let _ = m.append_token(r);
+                        }
+                    }
+                    2 => {
+                        if !live.is_empty() {
+                            let r = live[rng.range_usize(0, live.len())];
+                            let _ = m.offload_layer(r, rng.range_usize(0, 4));
+                        }
+                    }
+                    3 => {
+                        if !live.is_empty() {
+                            let r = live[rng.range_usize(0, live.len())];
+                            let _ = m.onload_layer(r, rng.range_usize(0, 4));
+                        }
+                    }
+                    _ => {
+                        if !live.is_empty() {
+                            let i = rng.range_usize(0, live.len());
+                            let r = live.swap_remove(i);
+                            m.release(r).unwrap();
+                        }
+                    }
+                }
+                // conservation: pool accounting matches the sum of tables
+                let gpu_held: usize =
+                    live.iter().map(|&r| m.table(r).unwrap().gpu_blocks_held()).sum();
+                let cpu_held: usize =
+                    live.iter().map(|&r| m.table(r).unwrap().cpu_blocks_held()).sum();
+                assert_eq!(m.gpu.used(), gpu_held);
+                assert_eq!(m.cpu.used(), cpu_held);
+                for &r in &live {
+                    m.table(r).unwrap().check().unwrap();
+                }
+            }
+            // drain
+            for r in live {
+                m.release(r).unwrap();
+            }
+            assert_eq!(m.gpu.used(), 0);
+            assert_eq!(m.cpu.used(), 0);
+        });
+    }
+}

@@ -1,0 +1,185 @@
+//! Layer-wise block tables (§3.1.2): per request, per layer, the ordered
+//! list of physical blocks holding its KV and *where each layer lives*
+//! (GPU or host). This is the paper's extension of vLLM's block table —
+//! "we add layer-wise information to each block, indicating the indices of
+//! the layers where the KV cache is retained on the GPU and the indices of
+//! the layers stored on the CPU."
+
+use super::allocator::BlockId;
+
+/// Which memory holds a layer's blocks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Residency {
+    Gpu,
+    Cpu,
+}
+
+/// One layer's slice of a request's KV cache.
+#[derive(Debug, Clone)]
+pub struct LayerEntry {
+    pub residency: Residency,
+    /// Physical blocks, in token order. Ids are in the GPU pool's space
+    /// when residency == Gpu, the CPU pool's space otherwise.
+    pub blocks: Vec<BlockId>,
+}
+
+/// Per-request layer-wise block table.
+#[derive(Debug, Clone)]
+pub struct LayerBlockTable {
+    pub layers: Vec<LayerEntry>,
+    /// Tokens currently stored (same for every layer).
+    pub tokens: usize,
+    pub block_size: usize,
+}
+
+impl LayerBlockTable {
+    pub fn new(n_layers: usize, block_size: usize) -> Self {
+        LayerBlockTable {
+            layers: (0..n_layers)
+                .map(|_| LayerEntry { residency: Residency::Gpu, blocks: Vec::new() })
+                .collect(),
+            tokens: 0,
+            block_size,
+        }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Blocks needed per layer for `tokens` tokens.
+    pub fn blocks_per_layer(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_size)
+    }
+
+    /// Layers currently resident on GPU.
+    pub fn gpu_layers(&self) -> Vec<usize> {
+        (0..self.layers.len())
+            .filter(|&i| self.layers[i].residency == Residency::Gpu)
+            .collect()
+    }
+
+    pub fn cpu_layers(&self) -> Vec<usize> {
+        (0..self.layers.len())
+            .filter(|&i| self.layers[i].residency == Residency::Cpu)
+            .collect()
+    }
+
+    pub fn n_gpu_layers(&self) -> usize {
+        self.layers.iter().filter(|l| l.residency == Residency::Gpu).count()
+    }
+
+    /// Total GPU layer-blocks held.
+    pub fn gpu_blocks_held(&self) -> usize {
+        self.layers
+            .iter()
+            .filter(|l| l.residency == Residency::Gpu)
+            .map(|l| l.blocks.len())
+            .sum()
+    }
+
+    pub fn cpu_blocks_held(&self) -> usize {
+        self.layers
+            .iter()
+            .filter(|l| l.residency == Residency::Cpu)
+            .map(|l| l.blocks.len())
+            .sum()
+    }
+
+    /// §3.1.2 interleaving: which layer indices to *retain on GPU* when
+    /// keeping `x` of `l` layers. The retained set is spread evenly so each
+    /// offloaded layer's h2d can overlap the compute of the retained layer
+    /// before it (the paper's 8-layer example keeps 1,3,5,7 and offloads
+    /// 0,2,4,6).
+    pub fn interleaved_retained(l: usize, x: usize) -> Vec<usize> {
+        if x == 0 {
+            return Vec::new();
+        }
+        if x >= l {
+            return (0..l).collect();
+        }
+        // Evenly spaced, biased to the *later* congruence class like the
+        // paper's example (offload even indices, retain odd).
+        let mut out: Vec<usize> = (0..x)
+            .map(|i| ((2 * i + 1) * l / (2 * x)).min(l - 1))
+            .collect();
+        out.dedup();
+        // rare collisions at tiny l: fill greedily
+        let mut next = 0;
+        while out.len() < x {
+            if !out.contains(&next) {
+                out.push(next);
+            }
+            next += 1;
+        }
+        out.sort_unstable();
+        out
+    }
+
+    /// Validate internal consistency (used by property tests).
+    pub fn check(&self) -> Result<(), String> {
+        let want = self.blocks_per_layer(self.tokens);
+        for (i, l) in self.layers.iter().enumerate() {
+            if l.blocks.len() != want && self.tokens > 0 {
+                return Err(format!(
+                    "layer {i}: {} blocks for {} tokens (want {want})",
+                    l.blocks.len(),
+                    self.tokens
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_example_8_layers_keep_4() {
+        // §3.1.2: 8-layer model keeping 4 on GPU retains 1,3,5,7
+        assert_eq!(LayerBlockTable::interleaved_retained(8, 4), vec![1, 3, 5, 7]);
+    }
+
+    #[test]
+    fn retained_edge_cases() {
+        assert!(LayerBlockTable::interleaved_retained(8, 0).is_empty());
+        assert_eq!(LayerBlockTable::interleaved_retained(8, 8), (0..8).collect::<Vec<_>>());
+        assert_eq!(LayerBlockTable::interleaved_retained(4, 1).len(), 1);
+        for x in 0..=32 {
+            let r = LayerBlockTable::interleaved_retained(32, x);
+            assert_eq!(r.len(), x, "x={x}");
+            let mut d = r.clone();
+            d.dedup();
+            assert_eq!(d, r, "duplicates at x={x}");
+            assert!(r.iter().all(|&i| i < 32));
+        }
+    }
+
+    #[test]
+    fn residency_bookkeeping() {
+        let mut t = LayerBlockTable::new(4, 16);
+        t.tokens = 33;
+        for l in &mut t.layers {
+            l.blocks = vec![0, 1, 2];
+        }
+        t.layers[1].residency = Residency::Cpu;
+        t.layers[3].residency = Residency::Cpu;
+        assert_eq!(t.gpu_layers(), vec![0, 2]);
+        assert_eq!(t.cpu_layers(), vec![1, 3]);
+        assert_eq!(t.n_gpu_layers(), 2);
+        assert_eq!(t.gpu_blocks_held(), 6);
+        assert_eq!(t.cpu_blocks_held(), 6);
+        t.check().unwrap();
+    }
+
+    #[test]
+    fn check_catches_inconsistency() {
+        let mut t = LayerBlockTable::new(2, 16);
+        t.tokens = 40; // needs 3 blocks/layer
+        t.layers[0].blocks = vec![0, 1, 2];
+        t.layers[1].blocks = vec![3];
+        assert!(t.check().is_err());
+    }
+}

@@ -1,0 +1,607 @@
+//! The continuous-batching execution engine (simulated executor).
+//!
+//! Drives the full request lifecycle against the analytical cost models:
+//! iteration-level scheduling (one prefill batch or one decode iteration
+//! per step), layer-wise KV allocation/offloading per the active policy,
+//! recompute preemption, and the decode-phase host-KV streaming penalty.
+//!
+//! Virtual time: the engine advances `now` by each step's modeled
+//! duration; all latency metrics fall out of the same clock the paper
+//! measures with wall time.
+
+use std::collections::VecDeque;
+
+use crate::config::{Fabric, Policy, ServingConfig};
+use crate::coordinator::block::{KvError, KvManager};
+use crate::coordinator::predict::LengthPredictor;
+use crate::coordinator::request::{Phase, ReqId, Request};
+use crate::coordinator::scheduler::{make_scheduler, Action, SchedContext, Scheduler};
+use crate::metrics::{Report, RequestRecord};
+use crate::sim::CostModel;
+use crate::workload::Trace;
+
+/// Counters the experiments report alongside latency.
+#[derive(Debug, Clone, Default)]
+pub struct EngineStats {
+    pub steps: u64,
+    pub prefill_steps: u64,
+    pub decode_steps: u64,
+    pub preemptions: u64,
+    pub proactive_offload_layers: u64,
+    pub oom_forced_offload_layers: u64,
+    pub onloaded_layers: u64,
+    pub offload_bytes: f64,
+    pub onload_stream_bytes: f64,
+    pub dropped: Vec<ReqId>,
+    /// Seconds decode steps were inflated by host-KV streaming.
+    pub stream_stall_s: f64,
+    /// Seconds lost to PCIe contention (TP over PCIe without chunking).
+    pub contention_s: f64,
+}
+
+/// Simulation engine. One instance runs one trace to completion.
+pub struct Engine {
+    pub cfg: ServingConfig,
+    pub cost: CostModel,
+    pub kv: KvManager,
+    scheduler: Box<dyn Scheduler>,
+    predictor: LengthPredictor,
+    requests: Vec<Request>,
+    waiting: VecDeque<ReqId>,
+    running: Vec<ReqId>,
+    now: f64,
+    stats: EngineStats,
+    records: Vec<RequestRecord>,
+}
+
+impl Engine {
+    pub fn new(cfg: ServingConfig, predictor: LengthPredictor) -> Self {
+        let cost = CostModel::new(cfg.clone());
+        let kv = KvManager::new(
+            cfg.num_gpu_layer_blocks(),
+            cfg.num_cpu_layer_blocks(),
+            cfg.block_size,
+            cfg.model.n_layers,
+        );
+        let scheduler = make_scheduler(&cfg);
+        Engine {
+            cfg,
+            cost,
+            kv,
+            scheduler,
+            predictor,
+            requests: Vec::new(),
+            waiting: VecDeque::new(),
+            running: Vec::new(),
+            now: 0.0,
+            stats: EngineStats::default(),
+            records: Vec::new(),
+        }
+    }
+
+    pub fn stats(&self) -> &EngineStats {
+        &self.stats
+    }
+
+    /// Run a trace to completion; returns the latency report.
+    pub fn run(&mut self, trace: &Trace) -> Report {
+        self.requests = trace
+            .requests
+            .iter()
+            .map(|t| Request::from_trace(t, self.predictor.predict(t.id, t.output_len)))
+            .collect();
+        let mut next_arrival = 0usize;
+        // generous step bound: every token plus scheduling slack
+        let max_steps = 1000 + 4 * trace.total_tokens() as u64;
+
+        loop {
+            // admit arrivals up to `now`
+            while next_arrival < self.requests.len()
+                && self.requests[next_arrival].arrival <= self.now + 1e-12
+            {
+                self.waiting.push_back(next_arrival);
+                next_arrival += 1;
+            }
+
+            let action = {
+                // §Perf: make_contiguous avoids a per-step Vec allocation
+                let waiting = self.waiting.make_contiguous();
+                let ctx = SchedContext {
+                    now: self.now,
+                    waiting,
+                    running: &self.running,
+                    requests: &self.requests,
+                    kv: &self.kv,
+                    cost: &self.cost,
+                    cfg: &self.cfg,
+                };
+                self.scheduler.decide(&ctx)
+            };
+
+            match action {
+                Action::Prefill(reqs) => self.step_prefill(&reqs),
+                Action::Decode => self.step_decode(),
+                Action::Wait => {
+                    if let Some(&r) = self.waiting.front() {
+                        // a request that can never fit (prompt KV exceeds the
+                        // whole pool under this policy) would deadlock FCFS:
+                        // reject it like a serving front-end would
+                        if self.never_fits(r) {
+                            self.waiting.pop_front();
+                            self.stats.dropped.push(r);
+                            self.requests[r].phase = Phase::Finished;
+                            continue;
+                        }
+                    }
+                    if next_arrival < self.requests.len() {
+                        self.now = self.requests[next_arrival].arrival.max(self.now);
+                        continue;
+                    }
+                    if self.running.is_empty() && self.waiting.is_empty() {
+                        break; // drained
+                    }
+                    if self.running.is_empty() && next_arrival >= self.requests.len() {
+                        // waiting blocked forever (pool busy by nothing):
+                        // cannot happen unless never_fits missed it
+                        let r = self.waiting.pop_front().unwrap();
+                        self.stats.dropped.push(r);
+                        self.requests[r].phase = Phase::Finished;
+                    }
+                }
+            }
+
+            self.stats.steps += 1;
+            if self.stats.steps > max_steps {
+                panic!(
+                    "engine exceeded {max_steps} steps ({} waiting, {} running) — livelock",
+                    self.waiting.len(),
+                    self.running.len()
+                );
+            }
+        }
+        Report::new(std::mem::take(&mut self.records))
+    }
+
+    /// Could `r` EVER be admitted on an empty machine under this policy?
+    fn never_fits(&self, r: ReqId) -> bool {
+        let len = self.requests[r].prefill_len();
+        let per_layer = len.div_ceil(self.cfg.block_size);
+        match self.cfg.policy {
+            Policy::Vllm => per_layer * self.cfg.model.n_layers > self.kv.gpu.total(),
+            Policy::LayerKv { .. } => {
+                let x = self.cost.min_resident_layers(len);
+                per_layer * x > self.kv.gpu.total()
+                    || per_layer * (self.cfg.model.n_layers - x) > self.kv.cpu.total()
+            }
+        }
+    }
+
+    // --- prefill -------------------------------------------------------
+
+    fn step_prefill(&mut self, reqs: &[ReqId]) {
+        let mut duration = 0.0;
+        let mut offload_bytes = 0.0;
+        for &rid in reqs {
+            let len = self.requests[rid].prefill_len();
+            let x = {
+                let waiting = self.waiting.make_contiguous();
+                let ctx = SchedContext {
+                    now: self.now,
+                    waiting,
+                    running: &self.running,
+                    requests: &self.requests,
+                    kv: &self.kv,
+                    cost: &self.cost,
+                    cfg: &self.cfg,
+                };
+                self.scheduler.retained_layers(&ctx, len)
+            };
+            let alloc = match self.cfg.policy {
+                Policy::Vllm => self.kv.allocate_full(rid, len),
+                Policy::LayerKv { .. } => self.kv.allocate_layerwise(rid, len, x),
+            };
+            if alloc.is_err() {
+                // scheduler overcommitted (shouldn't happen; defensive):
+                // leave in queue for the next round
+                continue;
+            }
+            // d2h of the L-x offloaded layers rides under the prefill
+            // (§3.1.1 chose x so T_offload <= T_prefill)
+            let l = self.cfg.model.n_layers;
+            offload_bytes += len as f64
+                * (l - x.min(l)) as f64
+                * self.cfg.offload_bytes_per_token_layer()
+                / self.cfg.tp as f64;
+
+            self.waiting.retain(|&w| w != rid);
+            let r = &mut self.requests[rid];
+            if r.prefill_start.is_none() {
+                r.prefill_start = Some(self.now);
+            }
+            duration += self.cost.prefill_time(len);
+            r.preemptions += matches!(r.phase, Phase::Preempted) as usize;
+            r.phase = Phase::Decoding;
+            self.running.push(rid);
+        }
+        self.stats.offload_bytes += offload_bytes;
+        self.now += duration;
+        self.stats.prefill_steps += 1;
+
+        // first token emitted at prefill end
+        for &rid in reqs {
+            let r = &mut self.requests[rid];
+            if r.phase == Phase::Decoding && r.first_token.is_none() {
+                r.first_token = Some(self.now);
+                r.generated = 1;
+                if r.done() {
+                    self.complete(rid);
+                }
+            }
+        }
+    }
+
+    // --- decode ----------------------------------------------------------
+
+    fn step_decode(&mut self) {
+        debug_assert!(!self.running.is_empty());
+
+        // Restore parked KV first: LayerKV "maximizes the number of layers
+        // retained on the GPU" — oldest admitted requests restore first
+        // (they finish soonest and free blocks fastest).
+        if matches!(self.cfg.policy, Policy::LayerKv { .. }) {
+            self.restore_layers();
+        }
+
+        // The decode batch is the GPU-resident subset. Requests whose KV
+        // is still (partly) on the host are *parked*: they already got
+        // their first token at prefill end (the TTFT win) and rejoin once
+        // blocks free up. If nothing is fully resident, force-run the
+        // oldest parked request with layer-by-layer host streaming (§4's
+        // decode-phase h2d path) so progress is guaranteed.
+        let mut active: Vec<ReqId> = self
+            .running
+            .iter()
+            .copied()
+            .filter(|&r| self.kv.table(r).map(|t| t.cpu_layers().is_empty()).unwrap_or(false))
+            .collect();
+        let mut stream_bytes = 0.0;
+        if active.is_empty() {
+            let oldest = self
+                .running
+                .iter()
+                .copied()
+                .min_by(|&a, &b| {
+                    let ta = self.requests[a].prefill_start.unwrap_or(0.0);
+                    let tb = self.requests[b].prefill_start.unwrap_or(0.0);
+                    ta.partial_cmp(&tb).unwrap()
+                })
+                .expect("running nonempty");
+            if let Some(t) = self.kv.table(oldest) {
+                stream_bytes = t.cpu_layers().len() as f64
+                    * t.tokens as f64
+                    * self.cfg.offload_bytes_per_token_layer()
+                    / self.cfg.tp as f64;
+            }
+            active.push(oldest);
+        }
+
+        let ctx_lens: Vec<usize> =
+            active.iter().map(|&r| self.requests[r].context_len()).collect();
+        let compute = self.cost.decode_step_time(&ctx_lens);
+        let stream_time = if stream_bytes > 0.0 {
+            stream_bytes / self.cost.pcie_bw_per_gpu() + self.cfg.node.pcie.latency
+        } else {
+            0.0
+        };
+        let mut step = compute.max(stream_time);
+        self.stats.stream_stall_s += (stream_time - compute).max(0.0);
+        self.stats.onload_stream_bytes += stream_bytes;
+
+        // §3.1.3 PCIe contention: TP over PCIe shares the link between
+        // all-reduce and KV streams. The check+chunk mechanism confines the
+        // penalty to chunk tails; without it the overlap serializes.
+        if self.cfg.tp > 1 && self.cfg.node.fabric == Fabric::Pcie && stream_bytes > 0.0 {
+            let ar = self.cost.allreduce_time(active.len());
+            let penalty = if self.cfg.pcie_chunking { 0.05 * ar } else { ar.min(stream_time) };
+            step += penalty;
+            self.stats.contention_s += penalty;
+        }
+
+        self.now += step;
+        self.stats.decode_steps += 1;
+        self.scheduler.observe_decode_step(step);
+
+        // advance the active batch by one token
+        let mut finished = Vec::new();
+        for rid in active {
+            match self.kv.append_token(rid) {
+                Ok(()) => {}
+                Err(KvError::GpuExhausted) => {
+                    if !self.relieve_gpu_pressure(rid) {
+                        continue; // token lost this step; retried next step
+                    }
+                    if self.kv.append_token(rid).is_err() {
+                        continue;
+                    }
+                }
+                Err(KvError::CpuExhausted) => continue,
+                Err(KvError::UnknownRequest) => continue,
+            }
+            let r = &mut self.requests[rid];
+            if r.phase != Phase::Decoding {
+                continue;
+            }
+            r.generated += 1;
+            if r.done() {
+                finished.push(rid);
+            }
+        }
+        for rid in finished {
+            self.complete(rid);
+        }
+
+        // Eq. 5 proactive offload check
+        let plan = {
+            let waiting = self.waiting.make_contiguous();
+            let ctx = SchedContext {
+                now: self.now,
+                waiting,
+                running: &self.running,
+                requests: &self.requests,
+                kv: &self.kv,
+                cost: &self.cost,
+                cfg: &self.cfg,
+            };
+            self.scheduler.proactive_offloads(&ctx)
+        };
+        for (rid, layer) in plan {
+            if let Ok(n) = self.kv.offload_layer(rid, layer) {
+                if n > 0 {
+                    self.stats.proactive_offload_layers += 1;
+                    self.stats.offload_bytes += n as f64
+                        * self.cfg.block_size as f64
+                        * self.cfg.offload_bytes_per_token_layer()
+                        / self.cfg.tp as f64;
+                }
+            }
+        }
+    }
+
+    /// GPU pool exhausted mid-decode. LayerKV: force-offload resident
+    /// layers of the most recently prefilled requests (§3.1.1: x/2 first,
+    /// then all). vLLM: recompute-preempt the most recent request.
+    fn relieve_gpu_pressure(&mut self, needy: ReqId) -> bool {
+        match self.cfg.policy {
+            Policy::LayerKv { .. } => {
+                let mut victims: Vec<ReqId> = self
+                    .running
+                    .iter()
+                    .copied()
+                    .filter(|&r| self.kv.table(r).map(|t| t.n_gpu_layers() > 0).unwrap_or(false))
+                    .collect();
+                victims.sort_by(|&a, &b| {
+                    let ta = self.requests[a].prefill_start.unwrap_or(0.0);
+                    let tb = self.requests[b].prefill_start.unwrap_or(0.0);
+                    tb.partial_cmp(&ta).unwrap()
+                });
+                let need = self.requests[needy].context_len() / self.cfg.block_size + 1;
+                let mut freed = 0usize;
+                for pass in 0..2 {
+                    for &v in &victims {
+                        let Some(t) = self.kv.table(v) else { continue };
+                        let gpu_layers = t.gpu_layers();
+                        let take = if pass == 0 { gpu_layers.len() / 2 } else { gpu_layers.len() };
+                        for layer in gpu_layers.into_iter().take(take) {
+                            if freed >= need {
+                                return true;
+                            }
+                            if let Ok(n) = self.kv.offload_layer(v, layer) {
+                                freed += n;
+                                self.stats.oom_forced_offload_layers += 1;
+                            }
+                        }
+                    }
+                    if freed >= need {
+                        return true;
+                    }
+                }
+                freed > 0
+            }
+            Policy::Vllm => {
+                // preempt the most recently admitted running request
+                // (not the needy one if possible)
+                let victim = self
+                    .running
+                    .iter()
+                    .copied()
+                    .filter(|&r| r != needy)
+                    .max_by(|&a, &b| {
+                        let ta = self.requests[a].prefill_start.unwrap_or(0.0);
+                        let tb = self.requests[b].prefill_start.unwrap_or(0.0);
+                        ta.partial_cmp(&tb).unwrap()
+                    })
+                    .or(Some(needy));
+                match victim {
+                    Some(v) => {
+                        self.preempt_recompute(v);
+                        true
+                    }
+                    None => false,
+                }
+            }
+        }
+    }
+
+    /// vLLM recompute preemption: drop all KV, requeue at the FRONT.
+    fn preempt_recompute(&mut self, rid: ReqId) {
+        let _ = self.kv.release(rid);
+        self.running.retain(|&r| r != rid);
+        self.requests[rid].phase = Phase::Preempted;
+        self.waiting.push_front(rid);
+        self.stats.preemptions += 1;
+    }
+
+    /// Move CPU-resident layers back to GPU while free blocks last
+    /// (oldest running requests first — they'll finish soonest). Restores
+    /// stop at the Eq. 5 threshold so restore and proactive offload don't
+    /// thrash against each other (hysteresis).
+    fn restore_layers(&mut self) {
+        if self.kv.cpu.used() == 0 {
+            return; // §Perf: nothing parked — skip the sort entirely
+        }
+        let threshold =
+            (self.cfg.avail_threshold_frac * self.kv.gpu.total() as f64) as usize;
+        let mut order: Vec<ReqId> = self.running.clone();
+        order.sort_by(|&a, &b| {
+            let ta = self.requests[a].prefill_start.unwrap_or(0.0);
+            let tb = self.requests[b].prefill_start.unwrap_or(0.0);
+            ta.partial_cmp(&tb).unwrap()
+        });
+        for rid in order {
+            let Some(t) = self.kv.table(rid) else { continue };
+            let per_layer = t.blocks_per_layer(t.tokens).max(1);
+            for layer in t.cpu_layers() {
+                if self.kv.gpu.available() < threshold + per_layer {
+                    return; // stay above the proactive-offload watermark
+                }
+                match self.kv.onload_layer(rid, layer) {
+                    Ok(n) if n > 0 => self.stats.onloaded_layers += 1,
+                    _ => return, // pool full: stop restoring entirely
+                }
+            }
+        }
+    }
+
+    fn complete(&mut self, rid: ReqId) {
+        let _ = self.kv.release(rid);
+        self.running.retain(|&r| r != rid);
+        let r = &mut self.requests[rid];
+        r.phase = Phase::Finished;
+        r.finish = Some(self.now);
+        self.records.push(RequestRecord {
+            id: r.id,
+            arrival: r.arrival,
+            prefill_start: r.prefill_start.unwrap_or(r.arrival),
+            first_token: r.first_token.unwrap_or(self.now),
+            finish: self.now,
+            prompt_len: r.prompt_len,
+            output_len: r.output_len,
+        });
+    }
+
+}
+
+/// Convenience: run one (config, trace) pair with the standard predictor.
+pub fn run_trace(cfg: ServingConfig, trace: &Trace, predictor_accuracy: f64) -> (Report, EngineStats) {
+    let predictor = LengthPredictor::new(
+        trace.requests.iter().map(|r| r.output_len).max().unwrap_or(1024).max(2),
+        predictor_accuracy,
+        42,
+    );
+    let mut engine = Engine::new(cfg, predictor);
+    let report = engine.run(trace);
+    let stats = engine.stats().clone();
+    (report, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::fixed::FixedWorkload;
+    use crate::workload::arrivals::Arrivals;
+    use crate::util::Rng;
+
+    fn small_trace(prompt: usize, n: usize, rate: f64) -> Trace {
+        FixedWorkload {
+            prompt_len: prompt,
+            output_len: 64,
+            n_requests: n,
+            arrivals: Arrivals::Poisson { rate },
+        }
+        .generate(&mut Rng::new(1))
+    }
+
+    fn run(policy: Policy, prompt: usize, n: usize, rate: f64) -> (Report, EngineStats) {
+        let cfg = ServingConfig::llama2_7b_tp1().with_policy(policy);
+        run_trace(cfg, &small_trace(prompt, n, rate), 0.8)
+    }
+
+    #[test]
+    fn vllm_completes_all_requests() {
+        let (rep, stats) = run(Policy::Vllm, 512, 20, 1.0);
+        assert_eq!(rep.records.len(), 20);
+        assert!(stats.dropped.is_empty());
+        // every record is causally ordered
+        for r in &rep.records {
+            assert!(r.prefill_start >= r.arrival - 1e-9);
+            assert!(r.first_token >= r.prefill_start);
+            assert!(r.finish >= r.first_token);
+        }
+    }
+
+    #[test]
+    fn layerkv_completes_all_requests() {
+        let (rep, stats) = run(Policy::LayerKv { slo_aware: true }, 512, 20, 1.0);
+        assert_eq!(rep.records.len(), 20);
+        assert!(stats.dropped.is_empty());
+    }
+
+    #[test]
+    fn layerkv_beats_vllm_ttft_under_long_context_load() {
+        // the paper's core claim, in miniature: long prompts, output 512
+        // (the Fig. 4 configuration), arrivals at 1 req/s
+        let cfg_v = ServingConfig::llama2_7b_tp1();
+        let cfg_l = ServingConfig::llama2_7b_tp1()
+            .with_policy(Policy::LayerKv { slo_aware: true });
+        let trace = FixedWorkload::paper(8192).generate(&mut Rng::new(1));
+        let trace = Trace { requests: trace.requests[..40].to_vec() };
+        let (v, _) = run_trace(cfg_v, &trace, 0.8);
+        let (l, _) = run_trace(cfg_l, &trace, 0.8);
+        let vt = v.ttft().mean();
+        let lt = l.ttft().mean();
+        assert!(
+            lt < 0.5 * vt,
+            "LayerKV mean TTFT {lt:.2}s must clearly beat vLLM {vt:.2}s at 8k context"
+        );
+    }
+
+    #[test]
+    fn short_context_parity() {
+        // at short contexts both policies admit instantly; TTFT ~ equal
+        let (v, _) = run(Policy::Vllm, 128, 20, 0.5);
+        let (l, _) = run(Policy::LayerKv { slo_aware: true }, 128, 20, 0.5);
+        let ratio = l.ttft().mean() / v.ttft().mean();
+        assert!((0.5..2.0).contains(&ratio), "ratio={ratio}");
+    }
+
+    #[test]
+    fn makespan_bounded_by_arrivals_plus_service() {
+        let (rep, _) = run(Policy::Vllm, 256, 10, 2.0);
+        assert!(rep.makespan > 0.0);
+        // 10 requests * 64 tokens at >=15ms/token plus prefills: sane band
+        assert!(rep.makespan < 120.0, "makespan={}", rep.makespan);
+    }
+
+    #[test]
+    fn drops_impossible_request_instead_of_deadlock() {
+        let mut cfg = ServingConfig::llama2_7b_tp1();
+        cfg.max_model_len = 16384;
+        cfg.max_batched_tokens = 20000;
+        // shrink the pool below one 16k prompt's full-KV demand
+        cfg.gpu_mem_util = 0.30;
+        let trace = small_trace(16384, 3, 1.0);
+        let (rep, stats) = run_trace(cfg, &trace, 1.0);
+        assert_eq!(rep.records.len() + stats.dropped.len(), 3);
+        assert!(!stats.dropped.is_empty());
+    }
+
+    #[test]
+    fn engine_time_is_monotone() {
+        let cfg = ServingConfig::llama2_7b_tp1().with_policy(Policy::LayerKv { slo_aware: true });
+        let trace = small_trace(1024, 30, 2.0);
+        let (rep, _) = run_trace(cfg, &trace, 0.8);
+        for r in &rep.records {
+            assert!(r.finish <= rep.makespan + 1e-9);
+        }
+    }
+}

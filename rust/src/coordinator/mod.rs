@@ -1,0 +1,20 @@
+//! The paper's Layer-3 contribution: layer-wise KV cache management and
+//! SLO-aware scheduling for continuous-batching LLM serving.
+//!
+//! * `block`     — physical pools + layer-wise block tables (§3.1.1-3.1.2)
+//! * `scheduler` — vLLM baseline + LayerKV SLO-aware policies (Alg. 1)
+//! * `predict`   — output-length bucket predictor (§3.1)
+//! * `engine`    — continuous-batching loop over the simulated executor
+//! * `request`   — request lifecycle + Eq. 1 timing state
+
+pub mod block;
+pub mod engine;
+pub mod predict;
+pub mod request;
+pub mod scheduler;
+
+pub use block::{KvError, KvManager};
+pub use engine::{run_trace, Engine, EngineStats};
+pub use predict::LengthPredictor;
+pub use request::{Phase, ReqId, Request};
+pub use scheduler::{Action, Scheduler};

@@ -1,0 +1,164 @@
+//! Request lifecycle: the state machine every request walks through the
+//! engine, plus the timing fields the SLO-aware scheduler consumes (Eq. 1).
+
+use crate::workload::TraceRequest;
+
+pub type ReqId = usize;
+
+/// Where a request is in its lifecycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// In the queue, KV not allocated.
+    Waiting,
+    /// In the decode loop, generating tokens.
+    Decoding,
+    /// Preempted by recompute (vLLM semantics): KV dropped, waiting to
+    /// re-prefill prompt + generated-so-far.
+    Preempted,
+    /// All output tokens emitted, KV released.
+    Finished,
+}
+
+/// Engine-side request state.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: ReqId,
+    pub arrival: f64,
+    pub prompt_len: usize,
+    /// Ground-truth output length (engine stops there; the scheduler only
+    /// sees the predictor's bucket).
+    pub output_len: usize,
+    pub phase: Phase,
+    /// Tokens generated so far (N_past in Eq. 1).
+    pub generated: usize,
+    /// First time its prefill began executing (queueing ends here).
+    pub prefill_start: Option<f64>,
+    /// First token emission (TTFT ends here; T_past starts here).
+    pub first_token: Option<f64>,
+    pub finish: Option<f64>,
+    /// Predicted output-length bucket [lo, hi) from the multi-class
+    /// predictor (§3.1).
+    pub predicted: (usize, usize),
+    /// Recompute preemptions suffered (vLLM baseline path).
+    pub preemptions: usize,
+}
+
+impl Request {
+    pub fn from_trace(t: &TraceRequest, predicted: (usize, usize)) -> Self {
+        Request {
+            id: t.id,
+            arrival: t.arrival,
+            prompt_len: t.prompt_len,
+            output_len: t.output_len,
+            phase: Phase::Waiting,
+            generated: 0,
+            prefill_start: None,
+            first_token: None,
+            finish: None,
+            predicted,
+            preemptions: 0,
+        }
+    }
+
+    /// Current context length (prompt + generated tokens).
+    pub fn context_len(&self) -> usize {
+        self.prompt_len + self.generated
+    }
+
+    /// Tokens a (re-)prefill must process now: the original prompt, plus —
+    /// after a recompute preemption — everything generated so far.
+    pub fn prefill_len(&self) -> usize {
+        self.prompt_len + if self.phase == Phase::Preempted { self.generated } else { 0 }
+    }
+
+    /// T_past of Eq. 1: decoding time spent so far, *including* time spent
+    /// waiting between decode iterations.
+    pub fn decode_time_past(&self, now: f64) -> f64 {
+        match self.first_token {
+            Some(ft) => (now - ft).max(0.0),
+            None => 0.0,
+        }
+    }
+
+    /// Observed per-token decode rate; None until two tokens exist.
+    pub fn observed_tpot(&self, now: f64) -> Option<f64> {
+        if self.generated >= 2 {
+            Some(self.decode_time_past(now) / (self.generated - 1).max(1) as f64)
+        } else {
+            None
+        }
+    }
+
+    /// N_future of Eq. 1: conservative remaining-tokens estimate — the
+    /// *lower bound* of the predicted bucket minus what's generated,
+    /// floored at 1 (the paper constrains it to positive integers).
+    pub fn n_future(&self) -> usize {
+        self.predicted.0.saturating_sub(self.generated).max(1)
+    }
+
+    /// Median of the predicted bucket — the Eq. 5 Released(t) estimate of
+    /// the total generation length.
+    pub fn predicted_median(&self) -> usize {
+        (self.predicted.0 + self.predicted.1) / 2
+    }
+
+    pub fn done(&self) -> bool {
+        self.generated >= self.output_len
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req() -> Request {
+        Request::from_trace(
+            &TraceRequest { id: 0, arrival: 1.0, prompt_len: 100, output_len: 50 },
+            (32, 64),
+        )
+    }
+
+    #[test]
+    fn lifecycle_defaults() {
+        let r = req();
+        assert_eq!(r.phase, Phase::Waiting);
+        assert_eq!(r.context_len(), 100);
+        assert_eq!(r.prefill_len(), 100);
+        assert_eq!(r.decode_time_past(99.0), 0.0);
+        assert!(r.observed_tpot(99.0).is_none());
+    }
+
+    #[test]
+    fn preempted_prefill_includes_generated() {
+        let mut r = req();
+        r.generated = 10;
+        r.phase = Phase::Preempted;
+        assert_eq!(r.prefill_len(), 110);
+        r.phase = Phase::Decoding;
+        assert_eq!(r.prefill_len(), 100);
+    }
+
+    #[test]
+    fn eq1_terms() {
+        let mut r = req();
+        r.first_token = Some(10.0);
+        r.generated = 11;
+        // T_past includes waiting: 2s over 10 intervals
+        assert!((r.decode_time_past(12.0) - 2.0).abs() < 1e-12);
+        assert!((r.observed_tpot(12.0).unwrap() - 0.2).abs() < 1e-12);
+        // N_future = lower bound 32 - 11 = 21
+        assert_eq!(r.n_future(), 21);
+        r.generated = 40; // past the lower bound -> floored at 1
+        assert_eq!(r.n_future(), 1);
+        assert_eq!(r.predicted_median(), 48);
+    }
+
+    #[test]
+    fn done_at_output_len() {
+        let mut r = req();
+        r.generated = 49;
+        assert!(!r.done());
+        r.generated = 50;
+        assert!(r.done());
+    }
+}

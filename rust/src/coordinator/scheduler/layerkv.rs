@@ -1,0 +1,412 @@
+//! LayerKV's SLO-aware scheduler (§3.1, Algorithm 1) plus the Eq. 5
+//! block-availability forecaster driving proactive offload.
+//!
+//! Admission differs from the vLLM baseline in two stacked ways:
+//!
+//! 1. **Layer-wise admission** (§3.1.1): a prompt only needs GPU blocks for
+//!    the x layers whose offload cannot hide under the prefill
+//!    (x = CostModel::min_resident_layers); the other L-x layers'
+//!    KV goes straight to host blocks, so long prompts admit almost
+//!    immediately instead of waiting for whole-request block releases.
+//!
+//! 2. **TPOT-slack gating** (Eqs. 1-2, Algorithm 1): inserting prefills
+//!    stalls running decodes, so the scheduler admits at most n prefills
+//!    such that their summed estimated prefill time stays below every
+//!    decoding request's remaining TPOT-SLO slack. `slo_aware = false`
+//!    disables this gate (the Fig. 8 ablation).
+
+use super::{Action, OffloadPlan, SchedContext, Scheduler};
+use crate::coordinator::request::{Phase, ReqId};
+
+/// Forecast horizon for Eq. 5, in scheduling stages. One stage approximates
+/// `block_size` decode iterations (the cadence at which every running
+/// sequence consumes one more block per resident layer).
+const FORECAST_STAGES: usize = 4;
+
+#[derive(Debug)]
+pub struct LayerKvScheduler {
+    slo_aware: bool,
+    /// Fallback TPOT estimate until a request has its own history (EMA of
+    /// observed decode-step times, seeded from the cost model lazily).
+    tpot_ema: Option<f64>,
+}
+
+impl LayerKvScheduler {
+    pub fn new(slo_aware: bool) -> Self {
+        LayerKvScheduler { slo_aware, tpot_ema: None }
+    }
+
+    /// Feed back a measured decode-step duration (engine calls this via
+    /// the trait; public for tests).
+    pub fn observe_decode_step(&mut self, dt: f64) {
+        self.tpot_ema = Some(match self.tpot_ema {
+            Some(ema) => 0.9 * ema + 0.1 * dt,
+            None => dt,
+        });
+    }
+
+    /// Eq. 1: T_allow_prefill for one decoding request.
+    fn t_allow_prefill(&self, ctx: &SchedContext, rid: ReqId) -> f64 {
+        let r = &ctx.requests[rid];
+        let n_past = r.generated as f64;
+        let t_past = r.decode_time_past(ctx.now);
+        let n_future = r.n_future() as f64;
+        let cur_tpot = r
+            .observed_tpot(ctx.now)
+            .or(self.tpot_ema)
+            .unwrap_or_else(|| ctx.cost.decode_step_time(&[r.context_len()]));
+        let t_future = cur_tpot * n_future;
+        ctx.cfg.slo.tpot_s * (n_past + n_future) - (t_past + t_future)
+    }
+
+    /// min_i T_allow_prefill over the *actively decoding* set (Eq. 2's
+    /// bound). Requests whose KV is (partly) parked on the host are
+    /// swapped out of the decode batch — they are not "currently in the
+    /// decoding phase" that an inserted prefill would stall.
+    fn min_slack(&self, ctx: &SchedContext) -> f64 {
+        ctx.running
+            .iter()
+            .filter(|&&rid| {
+                ctx.kv.table(rid).map(|t| t.cpu_layers().is_empty()).unwrap_or(false)
+            })
+            .map(|&rid| self.t_allow_prefill(ctx, rid))
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Eq. 5 forecast: projected free GPU layer-blocks at each of the next
+    /// FORECAST_STAGES stage boundaries. Released(t) uses the predictor's
+    /// bucket *median*; Allocated(t) conservatively charges one block per
+    /// resident layer per running sequence per stage.
+    fn forecast_min_avail(&self, ctx: &SchedContext) -> i64 {
+        let mut avail = ctx.kv.gpu.available() as i64;
+        let mut min_avail = avail;
+        for stage in 1..=FORECAST_STAGES {
+            let horizon_tokens = stage * ctx.cfg.block_size;
+            let mut released = 0i64;
+            let mut allocated = 0i64;
+            for &rid in ctx.running {
+                let r = &ctx.requests[rid];
+                let Some(table) = ctx.kv.table(rid) else { continue };
+                let remaining = r.predicted_median().saturating_sub(r.generated);
+                if remaining <= horizon_tokens && remaining > (stage - 1) * ctx.cfg.block_size {
+                    // predicted to finish within this stage
+                    released += table.gpu_blocks_held() as i64;
+                } else if remaining > horizon_tokens {
+                    allocated += table.n_gpu_layers() as i64;
+                }
+            }
+            avail += released - allocated;
+            min_avail = min_avail.min(avail);
+        }
+        min_avail
+    }
+}
+
+impl Scheduler for LayerKvScheduler {
+    fn name(&self) -> &'static str {
+        if self.slo_aware {
+            "layerkv"
+        } else {
+            "layerkv-no-slo"
+        }
+    }
+
+    fn retained_layers(&self, ctx: &SchedContext, prompt_len: usize) -> usize {
+        match ctx.cfg.x_override {
+            Some(x) => x.min(ctx.cfg.model.n_layers),
+            None => ctx.cost.min_resident_layers(prompt_len),
+        }
+    }
+
+    /// Algorithm 1 + layer-wise block feasibility.
+    fn decide(&mut self, ctx: &SchedContext) -> Action {
+        let slack = if self.slo_aware { self.min_slack(ctx) } else { f64::INFINITY };
+
+        let mut admitted = Vec::new();
+        let mut sum_prefill = 0.0;
+        let mut free_gpu = ctx.kv.gpu.available();
+        let mut free_cpu = ctx.kv.cpu.available();
+        let mut batched_tokens = 0usize;
+        let mut seqs = ctx.running.len();
+
+        if slack > 0.0 {
+            for &rid in ctx.waiting {
+                let r = &ctx.requests[rid];
+                let len = r.prefill_len();
+                let x = self.retained_layers(ctx, len);
+                let per_layer = len.div_ceil(ctx.cfg.block_size);
+                let need_gpu = per_layer * x;
+                let need_cpu = per_layer * (ctx.cfg.model.n_layers - x);
+                if seqs + 1 > ctx.cfg.max_num_seqs
+                    || batched_tokens + len > ctx.cfg.max_batched_tokens
+                    || free_gpu < need_gpu
+                    || free_cpu < need_cpu
+                {
+                    break;
+                }
+                // Algorithm 1 line 6: admit while the cumulative prefill
+                // time stays inside every decoder's slack.
+                let t_prefill = ctx.cost.prefill_time(len);
+                if self.slo_aware && sum_prefill + t_prefill >= slack {
+                    break;
+                }
+                sum_prefill += t_prefill;
+                free_gpu -= need_gpu;
+                free_cpu -= need_cpu;
+                batched_tokens += len;
+                seqs += 1;
+                admitted.push(rid);
+            }
+        }
+
+        if !admitted.is_empty() {
+            Action::Prefill(admitted)
+        } else if !ctx.running.is_empty() {
+            Action::Decode
+        } else if !ctx.waiting.is_empty() {
+            // queue blocked purely by resources (or slack): if nothing is
+            // decoding we have to wait for arrivals/releases
+            Action::Wait
+        } else {
+            Action::Wait
+        }
+    }
+
+    /// §3.1.1 last paragraph: when the forecast dips below the threshold,
+    /// offload retained layers of the *most recently prefilled* decoding
+    /// requests — first half their resident layers (x/2), then all.
+    fn proactive_offloads(&mut self, ctx: &SchedContext) -> OffloadPlan {
+        // §Perf: the stage-by-stage forecast only matters near pressure;
+        // with >25% of the pool free it cannot dip below the (10%)
+        // threshold within the horizon of a few stages.
+        if ctx.kv.gpu.available() * 4 > ctx.kv.gpu.total() {
+            return Vec::new();
+        }
+        let threshold =
+            (ctx.cfg.avail_threshold_frac * ctx.kv.gpu.total() as f64) as i64;
+        let mut shortfall = threshold - self.forecast_min_avail(ctx);
+        if shortfall <= 0 {
+            return Vec::new();
+        }
+
+        // most recently prefilled first
+        let mut candidates: Vec<ReqId> = ctx
+            .running
+            .iter()
+            .copied()
+            .filter(|&rid| ctx.requests[rid].phase == Phase::Decoding)
+            .collect();
+        candidates.sort_by(|&a, &b| {
+            let ta = ctx.requests[a].prefill_start.unwrap_or(0.0);
+            let tb = ctx.requests[b].prefill_start.unwrap_or(0.0);
+            tb.partial_cmp(&ta).unwrap()
+        });
+
+        let mut plan = Vec::new();
+        // pass 1: x/2 layers each; pass 2: the rest
+        for pass in 0..2 {
+            for &rid in &candidates {
+                if shortfall <= 0 {
+                    return plan;
+                }
+                let Some(table) = ctx.kv.table(rid) else { continue };
+                let gpu_layers = table.gpu_layers();
+                let take = if pass == 0 { gpu_layers.len() / 2 } else { gpu_layers.len() };
+                let per_layer = table.blocks_per_layer(table.tokens).max(1);
+                for &layer in gpu_layers.iter().take(take) {
+                    if plan.contains(&(rid, layer)) {
+                        continue;
+                    }
+                    plan.push((rid, layer));
+                    shortfall -= per_layer as i64;
+                    if shortfall <= 0 {
+                        return plan;
+                    }
+                }
+            }
+        }
+        plan
+    }
+
+    fn observe_decode_step(&mut self, dt: f64) {
+        LayerKvScheduler::observe_decode_step(self, dt);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Policy, ServingConfig};
+    use crate::coordinator::block::KvManager;
+    use crate::coordinator::request::Request;
+    use crate::sim::CostModel;
+    use crate::workload::TraceRequest;
+
+    struct Fixture {
+        cfg: ServingConfig,
+        cost: CostModel,
+        kv: KvManager,
+        requests: Vec<Request>,
+        waiting: Vec<ReqId>,
+        running: Vec<ReqId>,
+    }
+
+    impl Fixture {
+        fn new(gpu_blocks: usize) -> Self {
+            let cfg = ServingConfig::llama2_7b_tp1()
+                .with_policy(Policy::LayerKv { slo_aware: true });
+            let cost = CostModel::new(cfg.clone());
+            let kv = KvManager::new(gpu_blocks, 1_000_000, cfg.block_size, cfg.model.n_layers);
+            Fixture { cfg, cost, kv, requests: Vec::new(), waiting: Vec::new(), running: Vec::new() }
+        }
+
+        fn add_waiting(&mut self, prompt_len: usize) -> ReqId {
+            let id = self.requests.len();
+            self.requests.push(Request::from_trace(
+                &TraceRequest { id, arrival: 0.0, prompt_len, output_len: 512 },
+                (256, 512),
+            ));
+            self.waiting.push(id);
+            id
+        }
+
+        fn add_decoding(&mut self, prompt_len: usize, generated: usize, first_token: f64) -> ReqId {
+            let id = self.requests.len();
+            let mut r = Request::from_trace(
+                &TraceRequest { id, arrival: 0.0, prompt_len, output_len: 512 },
+                (256, 512),
+            );
+            r.phase = Phase::Decoding;
+            r.generated = generated;
+            r.prefill_start = Some(first_token - 0.1);
+            r.first_token = Some(first_token);
+            self.requests.push(r);
+            self.running.push(id);
+            self.kv
+                .allocate_full(id, prompt_len + generated)
+                .expect("fixture decode alloc");
+            id
+        }
+
+        fn ctx(&self, now: f64) -> SchedContext<'_> {
+            SchedContext {
+                now,
+                waiting: &self.waiting,
+                running: &self.running,
+                requests: &self.requests,
+                kv: &self.kv,
+                cost: &self.cost,
+                cfg: &self.cfg,
+            }
+        }
+    }
+
+    #[test]
+    fn admits_long_prompt_with_few_gpu_blocks() {
+        // 16k prompt under vLLM needs 1024 blocks * 32 layers = 32768
+        // layer-blocks; LayerKV's x is 0 for 16k so a tiny pool suffices.
+        let mut f = Fixture::new(2048);
+        let rid = f.add_waiting(16 * 1024);
+        let mut s = LayerKvScheduler::new(true);
+        assert_eq!(s.retained_layers(&f.ctx(0.0), 16 * 1024), 0);
+        assert_eq!(s.decide(&f.ctx(0.0)), Action::Prefill(vec![rid]));
+    }
+
+    #[test]
+    fn short_prompt_retains_layers_on_slow_link() {
+        let mut f = Fixture::new(2048);
+        f.cfg.node.pcie.bandwidth = 1.0e9;
+        f.cost = CostModel::new(f.cfg.clone());
+        let s = LayerKvScheduler::new(true);
+        let x = s.retained_layers(&f.ctx(0.0), 64);
+        assert!(x > 0, "short prompts must retain x > 0 layers on a slow link");
+    }
+
+    #[test]
+    fn slo_gate_blocks_when_decoder_has_no_slack() {
+        let mut f = Fixture::new(100_000);
+        f.add_waiting(8192);
+        // a decoder already at its TPOT budget: 100 tokens in 100*tpot_slo
+        let now = 30.0;
+        let rid = f.add_decoding(1024, 100, now - 100.0 * f.cfg.slo.tpot_s);
+        // its future needs the full remaining budget -> slack ~ 0
+        let mut s = LayerKvScheduler::new(true);
+        s.observe_decode_step(f.cfg.slo.tpot_s); // future estimated at SLO rate
+        let slack = s.t_allow_prefill(&f.ctx(now), rid);
+        assert!(slack < 0.5, "slack={slack}");
+        assert_eq!(s.decide(&f.ctx(now)), Action::Decode);
+    }
+
+    #[test]
+    fn slo_gate_admits_when_slack_ample() {
+        let mut f = Fixture::new(100_000);
+        let w = f.add_waiting(128);
+        // decoder running well ahead of its TPOT budget
+        let now = 1.0;
+        f.add_decoding(1024, 50, now - 50.0 * 0.02); // 20ms/token << 200ms SLO
+        let mut s = LayerKvScheduler::new(true);
+        s.observe_decode_step(0.02);
+        assert_eq!(s.decide(&f.ctx(now)), Action::Prefill(vec![w]));
+    }
+
+    #[test]
+    fn no_slo_variant_ignores_slack() {
+        let mut f = Fixture::new(100_000);
+        let w = f.add_waiting(8192);
+        let now = 30.0;
+        f.add_decoding(1024, 100, now - 100.0 * f.cfg.slo.tpot_s);
+        let mut s = LayerKvScheduler::new(false);
+        s.observe_decode_step(f.cfg.slo.tpot_s);
+        // ablation admits regardless — this is what trades TPOT for TTFT
+        assert_eq!(s.decide(&f.ctx(now)), Action::Prefill(vec![w]));
+    }
+
+    #[test]
+    fn eq2_caps_number_of_admissions() {
+        let mut f = Fixture::new(1_000_000);
+        for _ in 0..8 {
+            f.add_waiting(8192);
+        }
+        let now = 1.0;
+        // decoder with ~2.5s of slack; each 8k prefill is ~1s
+        f.add_decoding(512, 20, now - 20.0 * 0.08);
+        let mut s = LayerKvScheduler::new(true);
+        s.observe_decode_step(0.08);
+        let slack = s.min_slack(&f.ctx(now));
+        assert!(slack.is_finite() && slack > 0.0);
+        match s.decide(&f.ctx(now)) {
+            Action::Prefill(reqs) => {
+                let t1 = f.cost.prefill_time(8192);
+                let expect = (slack / t1).ceil() as usize;
+                assert!(
+                    !reqs.is_empty() && reqs.len() <= expect && reqs.len() < 8,
+                    "admitted {} with slack {slack} (prefill {t1})",
+                    reqs.len()
+                );
+            }
+            a => panic!("expected Prefill, got {a:?}"),
+        }
+    }
+
+    #[test]
+    fn forecast_triggers_offload_when_pool_tight() {
+        // tiny pool: one decoder holding most blocks, queue pressure ahead
+        let mut f = Fixture::new(40);
+        let now = 5.0;
+        f.add_decoding(16, 0, now - 0.1); // 1 block * 32 layers = 32 blocks
+        let mut s = LayerKvScheduler::new(true);
+        let plan = s.proactive_offloads(&f.ctx(now));
+        assert!(!plan.is_empty(), "tight pool must trigger proactive offload");
+        // plan targets the decoding request's resident layers
+        assert!(plan.iter().all(|&(rid, layer)| rid == 0 && layer < 32));
+    }
+
+    #[test]
+    fn forecast_quiet_when_pool_ample() {
+        let mut f = Fixture::new(1_000_000);
+        let now = 5.0;
+        f.add_decoding(1024, 10, now - 0.5);
+        let mut s = LayerKvScheduler::new(true);
+        assert!(s.proactive_offloads(&f.ctx(now)).is_empty());
+    }
+}

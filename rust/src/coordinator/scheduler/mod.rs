@@ -1,0 +1,81 @@
+//! Scheduler interface shared by the vLLM baseline and LayerKV.
+//!
+//! Iteration-level (continuous) batching: every engine step the scheduler
+//! inspects queue + running set + pool state and picks ONE action —
+//! admit a batch of prefills, run one decode iteration, or idle.
+
+pub mod layerkv;
+pub mod vllm;
+
+pub use layerkv::LayerKvScheduler;
+pub use vllm::VllmScheduler;
+
+use crate::config::ServingConfig;
+use crate::coordinator::block::KvManager;
+use crate::coordinator::request::{ReqId, Request};
+use crate::sim::CostModel;
+
+/// Read-only view the engine hands the scheduler each step.
+pub struct SchedContext<'a> {
+    pub now: f64,
+    /// FCFS queue (front first). Includes recompute-preempted requests.
+    pub waiting: &'a [ReqId],
+    /// Requests currently in the decode phase.
+    pub running: &'a [ReqId],
+    /// All requests, indexed by id.
+    pub requests: &'a [Request],
+    pub kv: &'a KvManager,
+    pub cost: &'a CostModel,
+    pub cfg: &'a ServingConfig,
+}
+
+/// What the engine should do this step.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Action {
+    /// Run the prefill of these queued requests (one batched step).
+    Prefill(Vec<ReqId>),
+    /// Run one decode iteration over the running set.
+    Decode,
+    /// Nothing runnable: idle until the next arrival.
+    Wait,
+}
+
+/// A (request, layer) pair to offload GPU -> host.
+pub type OffloadPlan = Vec<(ReqId, usize)>;
+
+pub trait Scheduler {
+    fn name(&self) -> &'static str;
+
+    /// Pick this step's action.
+    fn decide(&mut self, ctx: &SchedContext) -> Action;
+
+    /// How many layers admission must retain on the GPU for a prompt of
+    /// this length (§3.1.1's x; the vLLM baseline retains all layers).
+    fn retained_layers(&self, ctx: &SchedContext, prompt_len: usize) -> usize {
+        let _ = prompt_len;
+        ctx.cfg.model.n_layers
+    }
+
+    /// Eq. 5 proactive offloading: layers to move to the host *now*
+    /// because the block-availability forecast runs short. Baseline: none.
+    fn proactive_offloads(&mut self, ctx: &SchedContext) -> OffloadPlan {
+        let _ = ctx;
+        Vec::new()
+    }
+
+    /// Feedback: a decode step of this duration just executed (LayerKV's
+    /// T_future estimator consumes it; baseline ignores it).
+    fn observe_decode_step(&mut self, dt: f64) {
+        let _ = dt;
+    }
+}
+
+/// Construct the scheduler for a policy.
+pub fn make_scheduler(cfg: &ServingConfig) -> Box<dyn Scheduler> {
+    match cfg.policy {
+        crate::config::Policy::Vllm => Box::new(VllmScheduler::new()),
+        crate::config::Policy::LayerKv { slo_aware } => {
+            Box::new(LayerKvScheduler::new(slo_aware))
+        }
+    }
+}

@@ -1,0 +1,205 @@
+//! Baseline scheduler with vLLM 0.5.x semantics (the paper's comparator):
+//!
+//! * prefill-priority continuous batching: whenever queued requests fit,
+//!   run a prefill-only step before more decode iterations;
+//! * request-wise KV admission (Fig. 2): a prompt is admitted only when
+//!   blocks for its FULL prompt KV — all layers — are free, with a small
+//!   watermark held back;
+//! * FCFS with head-of-line blocking (no reordering past the head);
+//! * caps: max_num_seqs running sequences, max_batched_tokens per step.
+//!
+//! This is exactly the admission rule whose clash with long prompts
+//! produces the queuing-delay explosion of Fig. 1.
+
+use super::{Action, SchedContext, Scheduler};
+
+/// Fraction of the GPU pool kept free at admission (vLLM's watermark).
+const WATERMARK: f64 = 0.01;
+
+#[derive(Debug, Default)]
+pub struct VllmScheduler;
+
+impl VllmScheduler {
+    pub fn new() -> Self {
+        VllmScheduler
+    }
+}
+
+impl Scheduler for VllmScheduler {
+    fn name(&self) -> &'static str {
+        "vllm"
+    }
+
+    fn decide(&mut self, ctx: &SchedContext) -> Action {
+        let watermark = (ctx.kv.gpu.total() as f64 * WATERMARK) as usize;
+        let mut admitted = Vec::new();
+        let mut free = ctx.kv.gpu.available();
+        let mut batched_tokens = 0usize;
+        let mut seqs = ctx.running.len();
+
+        for &rid in ctx.waiting {
+            let r = &ctx.requests[rid];
+            let len = r.prefill_len();
+            let need = ctx.kv.gpu_blocks_full(len);
+            if seqs + 1 > ctx.cfg.max_num_seqs
+                || batched_tokens + len > ctx.cfg.max_batched_tokens
+                || free < need + watermark
+            {
+                break; // FCFS head-of-line blocking
+            }
+            free -= need;
+            batched_tokens += len;
+            seqs += 1;
+            admitted.push(rid);
+        }
+
+        if !admitted.is_empty() {
+            Action::Prefill(admitted)
+        } else if !ctx.running.is_empty() {
+            Action::Decode
+        } else {
+            Action::Wait
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ServingConfig;
+    use crate::coordinator::block::KvManager;
+    use crate::coordinator::request::Request;
+    use crate::sim::CostModel;
+    use crate::workload::TraceRequest;
+
+    fn mk_requests(lens: &[usize]) -> Vec<Request> {
+        lens.iter()
+            .enumerate()
+            .map(|(id, &prompt_len)| {
+                Request::from_trace(
+                    &TraceRequest { id, arrival: 0.0, prompt_len, output_len: 32 },
+                    (32, 64),
+                )
+            })
+            .collect()
+    }
+
+    fn ctx_parts() -> (ServingConfig, CostModel) {
+        let cfg = ServingConfig::llama2_7b_tp1();
+        (cfg.clone(), CostModel::new(cfg))
+    }
+
+    #[test]
+    fn admits_when_blocks_free() {
+        let (cfg, cost) = ctx_parts();
+        let kv = KvManager::new(cfg.num_gpu_layer_blocks(), 1000, cfg.block_size, cfg.model.n_layers);
+        let reqs = mk_requests(&[128, 128]);
+        let waiting = vec![0, 1];
+        let mut s = VllmScheduler::new();
+        let action = s.decide(&SchedContext {
+            now: 0.0,
+            waiting: &waiting,
+            running: &[],
+            requests: &reqs,
+            kv: &kv,
+            cost: &cost,
+            cfg: &cfg,
+        });
+        assert_eq!(action, Action::Prefill(vec![0, 1]));
+    }
+
+    #[test]
+    fn head_of_line_blocks_long_prompt() {
+        let (cfg, cost) = ctx_parts();
+        // pool sized so the 16k prompt (1024 blocks * 32 layers) cannot fit
+        let kv = KvManager::new(1000, 1000, cfg.block_size, cfg.model.n_layers);
+        let reqs = mk_requests(&[16384, 128]);
+        let waiting = vec![0, 1];
+        let mut s = VllmScheduler::new();
+        let running = vec![];
+        let action = s.decide(&SchedContext {
+            now: 0.0,
+            waiting: &waiting,
+            running: &running,
+            requests: &reqs,
+            kv: &kv,
+            cost: &cost,
+            cfg: &cfg,
+        });
+        // head doesn't fit -> NOTHING admitted (short one blocked behind it)
+        assert_eq!(action, Action::Wait);
+    }
+
+    #[test]
+    fn decodes_when_queue_blocked_but_running() {
+        let (cfg, cost) = ctx_parts();
+        let kv = KvManager::new(10, 1000, cfg.block_size, cfg.model.n_layers);
+        let reqs = mk_requests(&[16384]);
+        let waiting = vec![0];
+        let running = vec![];
+        let mut s = VllmScheduler::new();
+        // no running -> Wait
+        let a = s.decide(&SchedContext {
+            now: 0.0,
+            waiting: &waiting,
+            running: &running,
+            requests: &reqs,
+            kv: &kv,
+            cost: &cost,
+            cfg: &cfg,
+        });
+        assert_eq!(a, Action::Wait);
+        // with running -> Decode
+        let running = vec![0];
+        let a = s.decide(&SchedContext {
+            now: 0.0,
+            waiting: &waiting,
+            running: &running,
+            requests: &reqs,
+            kv: &kv,
+            cost: &cost,
+            cfg: &cfg,
+        });
+        assert_eq!(a, Action::Decode);
+    }
+
+    #[test]
+    fn respects_max_num_seqs() {
+        let (mut cfg, cost) = ctx_parts();
+        cfg.max_num_seqs = 1;
+        let kv = KvManager::new(cfg.num_gpu_layer_blocks(), 1000, cfg.block_size, cfg.model.n_layers);
+        let reqs = mk_requests(&[128, 128]);
+        let waiting = vec![0, 1];
+        let mut s = VllmScheduler::new();
+        let action = s.decide(&SchedContext {
+            now: 0.0,
+            waiting: &waiting,
+            running: &[],
+            requests: &reqs,
+            kv: &kv,
+            cost: &cost,
+            cfg: &cfg,
+        });
+        assert_eq!(action, Action::Prefill(vec![0]));
+    }
+
+    #[test]
+    fn respects_token_budget() {
+        let (mut cfg, cost) = ctx_parts();
+        cfg.max_batched_tokens = 200;
+        let kv = KvManager::new(cfg.num_gpu_layer_blocks(), 1000, cfg.block_size, cfg.model.n_layers);
+        let reqs = mk_requests(&[128, 128]);
+        let waiting = vec![0, 1];
+        let mut s = VllmScheduler::new();
+        let action = s.decide(&SchedContext {
+            now: 0.0,
+            waiting: &waiting,
+            running: &[],
+            requests: &reqs,
+            kv: &kv,
+            cost: &cost,
+            cfg: &cfg,
+        });
+        assert_eq!(action, Action::Prefill(vec![0]));
+    }
+}

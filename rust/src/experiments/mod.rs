@@ -1,0 +1,419 @@
+//! Experiment harness: one runner per table/figure in the paper's
+//! evaluation (DESIGN.md §5 experiment index). Each runner sweeps the
+//! paper's parameters through the simulation engine and returns the rows
+//! the paper plots; `print_*` helpers render them as aligned text so
+//! `cargo bench`/`cargo run -- experiment <id>` regenerate the series.
+
+pub mod plot;
+pub mod report;
+
+use crate::config::{Policy, ServingConfig, SloTargets};
+use crate::coordinator::run_trace;
+use crate::metrics::Report;
+use crate::util::Rng;
+use crate::workload::fixed::FixedWorkload;
+use crate::workload::sharegpt::ShareGptWorkload;
+use crate::workload::arrivals::Arrivals;
+
+pub use plot::{render, PlotSeries};
+pub use report::{print_table, Table};
+
+/// Default predictor accuracy (the proxy-model literature the paper cites
+/// reports ~0.8 bucket accuracy).
+pub const PREDICTOR_ACC: f64 = 0.8;
+
+/// Quick mode shrinks request counts so test suites stay fast.
+pub fn quick() -> bool {
+    std::env::var("LAYERKV_QUICK").map(|v| v != "0").unwrap_or(false)
+}
+
+fn n_requests(full: usize) -> usize {
+    if quick() {
+        (full / 5).max(20)
+    } else {
+        full
+    }
+}
+
+/// The paper's three eval setups (model, TP) by short name.
+pub fn setup(name: &str) -> ServingConfig {
+    match name {
+        "7b" => ServingConfig::llama2_7b_tp1(),
+        "34b" => ServingConfig::yi_34b_tp2(),
+        "70b" => ServingConfig::llama31_70b_tp4(),
+        other => panic!("unknown setup {other}"),
+    }
+}
+
+/// One (policy, workload) run.
+pub fn run_fixed(cfg: ServingConfig, ctx_len: usize, n: usize, seed: u64) -> Report {
+    let trace = FixedWorkload {
+        prompt_len: ctx_len,
+        output_len: 512,
+        n_requests: n,
+        arrivals: Arrivals::Poisson { rate: 1.0 },
+    }
+    .generate(&mut Rng::new(seed));
+    run_trace(cfg, &trace, PREDICTOR_ACC).0
+}
+
+pub fn run_sharegpt(cfg: ServingConfig, rate: f64, n: usize, seed: u64) -> Report {
+    let trace = ShareGptWorkload::paper(rate, n).generate(&mut Rng::new(seed));
+    run_trace(cfg, &trace, PREDICTOR_ACC).0
+}
+
+// ---------------------------------------------------------------------
+// Fig. 1 — motivation: TTFT/TPOT + queuing-vs-prefill breakdown across
+// context lengths (Llama-2-7B, 1 GPU, 1 req/s, output 512, vLLM).
+// ---------------------------------------------------------------------
+
+pub struct Fig1Row {
+    pub ctx: usize,
+    pub ttft_mean: f64,
+    pub tpot_mean: f64,
+    pub queueing_mean: f64,
+    pub prefill_mean: f64,
+}
+
+pub fn fig1() -> Vec<Fig1Row> {
+    let n = n_requests(100);
+    CONTEXTS_7B
+        .iter()
+        .map(|&ctx| {
+            let max_len = ctx.max(2048);
+            let cfg = setup("7b").with_max_model_len(max_len.max(16384));
+            let rep = run_fixed(cfg, ctx, n, 7);
+            Fig1Row {
+                ctx,
+                ttft_mean: rep.ttft().mean(),
+                tpot_mean: rep.tpot().mean(),
+                queueing_mean: rep.queueing().mean(),
+                prefill_mean: rep.prefill().mean(),
+            }
+        })
+        .collect()
+}
+
+pub const CONTEXTS_7B: &[usize] = &[128, 512, 1024, 2048, 4096, 8192, 16384];
+pub const CONTEXTS_34B: &[usize] = &[128, 512, 1024, 2048, 4096, 8192];
+pub const CONTEXTS_70B: &[usize] = &[128, 512, 1024, 2048, 4096];
+
+pub fn print_fig1(rows: &[Fig1Row]) {
+    let mut t = Table::new(
+        "Fig. 1 — TTFT/TPOT and queueing-vs-prefill breakdown (Llama-2-7B, vLLM, 1 req/s)",
+        &["ctx", "TTFT(s)", "TPOT(s)", "queue(s)", "prefill(s)", "queue%"],
+    );
+    for r in rows {
+        let frac = if r.ttft_mean > 0.0 { 100.0 * r.queueing_mean / r.ttft_mean } else { 0.0 };
+        t.row(&[
+            r.ctx.to_string(),
+            format!("{:.3}", r.ttft_mean),
+            format!("{:.4}", r.tpot_mean),
+            format!("{:.3}", r.queueing_mean),
+            format!("{:.3}", r.prefill_mean),
+            format!("{frac:.1}"),
+        ]);
+    }
+    t.print();
+}
+
+// ---------------------------------------------------------------------
+// Fig. 4 — LayerKV vs vLLM across context lengths, 3 models.
+// ---------------------------------------------------------------------
+
+pub struct Fig4Row {
+    pub model: &'static str,
+    pub ctx: usize,
+    pub ttft_vllm: f64,
+    pub ttft_layerkv: f64,
+    pub tput_vllm: f64,
+    pub tput_layerkv: f64,
+}
+
+pub fn fig4_for(model: &'static str, contexts: &[usize]) -> Vec<Fig4Row> {
+    let n = n_requests(100);
+    contexts
+        .iter()
+        .map(|&ctx| {
+            let base = setup(model).with_max_model_len(16384.min(setup(model).model.max_context));
+            let v = run_fixed(base.clone().with_policy(Policy::Vllm), ctx, n, 11);
+            let l = run_fixed(
+                base.with_policy(Policy::LayerKv { slo_aware: true }),
+                ctx,
+                n,
+                11,
+            );
+            Fig4Row {
+                model,
+                ctx,
+                ttft_vllm: v.ttft().mean(),
+                ttft_layerkv: l.ttft().mean(),
+                tput_vllm: v.throughput_tok_s(),
+                tput_layerkv: l.throughput_tok_s(),
+            }
+        })
+        .collect()
+}
+
+pub fn fig4() -> Vec<Fig4Row> {
+    let mut rows = fig4_for("7b", CONTEXTS_7B);
+    rows.extend(fig4_for("34b", CONTEXTS_34B));
+    rows.extend(fig4_for("70b", CONTEXTS_70B));
+    rows
+}
+
+pub fn print_fig4(rows: &[Fig4Row]) {
+    let mut t = Table::new(
+        "Fig. 4 — LayerKV vs vLLM under varying context lengths (1 req/s, output 512)",
+        &["model", "ctx", "TTFT vLLM(s)", "TTFT LayerKV(s)", "speedup", "tput vLLM", "tput LKV", "tput ratio"],
+    );
+    for r in rows {
+        t.row(&[
+            r.model.to_string(),
+            r.ctx.to_string(),
+            format!("{:.2}", r.ttft_vllm),
+            format!("{:.2}", r.ttft_layerkv),
+            format!("{:.1}x", r.ttft_vllm / r.ttft_layerkv.max(1e-9)),
+            format!("{:.1}", r.tput_vllm),
+            format!("{:.1}", r.tput_layerkv),
+            format!("{:.3}", r.tput_layerkv / r.tput_vllm.max(1e-9)),
+        ]);
+    }
+    t.print();
+    // the paper's log-scale TTFT line plot, per model
+    for model in ["7b", "34b", "70b"] {
+        let pts = |f: &dyn Fn(&Fig4Row) -> f64| -> Vec<(f64, f64)> {
+            rows.iter().filter(|r| r.model == model).map(|r| (r.ctx as f64, f(r))).collect()
+        };
+        let series = [
+            PlotSeries { name: "vLLM".into(), points: pts(&|r| r.ttft_vllm.max(1e-3)), glyph: 'v' },
+            PlotSeries { name: "LayerKV".into(), points: pts(&|r| r.ttft_layerkv.max(1e-3)), glyph: 'L' },
+        ];
+        if !series[0].points.is_empty() {
+            print!("{}", render(&format!("Fig. 4 TTFT vs context — {model} (log y)"), &series, 64, 12, true));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Fig. 5 — degree of parallelism (Yi-34B, TP 2/4/8).
+// ---------------------------------------------------------------------
+
+pub struct Fig5Row {
+    pub tp: usize,
+    pub ctx: usize,
+    pub ttft_vllm: f64,
+    pub ttft_layerkv: f64,
+    pub tput_vllm: f64,
+    pub tput_layerkv: f64,
+}
+
+pub fn fig5() -> Vec<Fig5Row> {
+    let n = n_requests(100);
+    let mut rows = Vec::new();
+    for &tp in &[2usize, 4, 8] {
+        for &ctx in CONTEXTS_34B {
+            let mut base = setup("34b");
+            base.tp = tp;
+            let v = run_fixed(base.clone().with_policy(Policy::Vllm), ctx, n, 13);
+            let l = run_fixed(
+                base.clone().with_policy(Policy::LayerKv { slo_aware: true }),
+                ctx,
+                n,
+                13,
+            );
+            rows.push(Fig5Row {
+                tp,
+                ctx,
+                ttft_vllm: v.ttft().mean(),
+                ttft_layerkv: l.ttft().mean(),
+                tput_vllm: v.throughput_tok_s(),
+                tput_layerkv: l.throughput_tok_s(),
+            });
+        }
+    }
+    rows
+}
+
+pub fn print_fig5(rows: &[Fig5Row]) {
+    let mut t = Table::new(
+        "Fig. 5 — varying degree of parallelism (Yi-34B-200K)",
+        &["TP", "ctx", "TTFT vLLM(s)", "TTFT LayerKV(s)", "speedup", "tput ratio"],
+    );
+    for r in rows {
+        t.row(&[
+            r.tp.to_string(),
+            r.ctx.to_string(),
+            format!("{:.2}", r.ttft_vllm),
+            format!("{:.2}", r.ttft_layerkv),
+            format!("{:.1}x", r.ttft_vllm / r.ttft_layerkv.max(1e-9)),
+            format!("{:.3}", r.tput_layerkv / r.tput_vllm.max(1e-9)),
+        ]);
+    }
+    t.print();
+}
+
+// ---------------------------------------------------------------------
+// Figs. 6 & 7 — ShareGPT arrival-rate sweep: mean + P99 TTFT, throughput.
+// ---------------------------------------------------------------------
+
+pub const RATES: &[f64] = &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0];
+
+pub struct Fig67Row {
+    pub rate: f64,
+    pub ttft_mean_vllm: f64,
+    pub ttft_mean_layerkv: f64,
+    pub ttft_p99_vllm: f64,
+    pub ttft_p99_layerkv: f64,
+    pub tput_vllm: f64,
+    pub tput_layerkv: f64,
+}
+
+pub fn fig6_7() -> Vec<Fig67Row> {
+    let n = n_requests(500);
+    RATES
+        .iter()
+        .map(|&rate| {
+            let base = setup("7b");
+            let v = run_sharegpt(base.clone().with_policy(Policy::Vllm), rate, n, 17);
+            let l = run_sharegpt(
+                base.with_policy(Policy::LayerKv { slo_aware: true }),
+                rate,
+                n,
+                17,
+            );
+            let (mut vt, mut lt) = (v.ttft(), l.ttft());
+            Fig67Row {
+                rate,
+                ttft_mean_vllm: vt.mean(),
+                ttft_mean_layerkv: lt.mean(),
+                ttft_p99_vllm: vt.p99(),
+                ttft_p99_layerkv: lt.p99(),
+                tput_vllm: v.throughput_tok_s(),
+                tput_layerkv: l.throughput_tok_s(),
+            }
+        })
+        .collect()
+}
+
+pub fn print_fig6(rows: &[Fig67Row]) {
+    let mut t = Table::new(
+        "Fig. 6 — ShareGPT, varying arrival rates (Llama-2-7B): mean TTFT + throughput",
+        &["req/s", "TTFT vLLM(s)", "TTFT LayerKV(s)", "speedup", "tput vLLM", "tput LKV", "ratio"],
+    );
+    for r in rows {
+        t.row(&[
+            format!("{:.1}", r.rate),
+            format!("{:.2}", r.ttft_mean_vllm),
+            format!("{:.2}", r.ttft_mean_layerkv),
+            format!("{:.1}x", r.ttft_mean_vllm / r.ttft_mean_layerkv.max(1e-9)),
+            format!("{:.1}", r.tput_vllm),
+            format!("{:.1}", r.tput_layerkv),
+            format!("{:.3}", r.tput_layerkv / r.tput_vllm.max(1e-9)),
+        ]);
+    }
+    t.print();
+    let series = [
+        PlotSeries {
+            name: "vLLM".into(),
+            points: rows.iter().map(|r| (r.rate, r.ttft_mean_vllm.max(1e-3))).collect(),
+            glyph: 'v',
+        },
+        PlotSeries {
+            name: "LayerKV".into(),
+            points: rows.iter().map(|r| (r.rate, r.ttft_mean_layerkv.max(1e-3))).collect(),
+            glyph: 'L',
+        },
+    ];
+    print!("{}", render("Fig. 6 mean TTFT vs arrival rate (log y)", &series, 64, 12, true));
+}
+
+pub fn print_fig7(rows: &[Fig67Row]) {
+    let mut t = Table::new(
+        "Fig. 7 — ShareGPT, varying arrival rates: P99 TTFT",
+        &["req/s", "P99 vLLM(s)", "P99 LayerKV(s)", "speedup"],
+    );
+    for r in rows {
+        t.row(&[
+            format!("{:.1}", r.rate),
+            format!("{:.2}", r.ttft_p99_vllm),
+            format!("{:.2}", r.ttft_p99_layerkv),
+            format!("{:.1}x", r.ttft_p99_vllm / r.ttft_p99_layerkv.max(1e-9)),
+        ]);
+    }
+    t.print();
+}
+
+// ---------------------------------------------------------------------
+// Fig. 8 — SLO violation rate sweep, incl. the no-SLO-scheduler ablation.
+// ---------------------------------------------------------------------
+
+pub struct Fig8Row {
+    pub rate: f64,
+    pub viol_vllm: f64,
+    pub viol_layerkv: f64,
+    pub viol_layerkv_noslo: f64,
+}
+
+pub fn fig8() -> Vec<Fig8Row> {
+    let n = n_requests(500);
+    let slo = SloTargets { ttft_s: 3.0, tpot_s: 0.2 };
+    [4.0, 4.5, 5.0, 5.5, 6.0, 6.5, 7.0, 7.5, 8.0]
+        .iter()
+        .map(|&rate| {
+            let mut base = setup("7b");
+            base.slo = slo;
+            let v = run_sharegpt(base.clone().with_policy(Policy::Vllm), rate, n, 19);
+            let l = run_sharegpt(
+                base.clone().with_policy(Policy::LayerKv { slo_aware: true }),
+                rate,
+                n,
+                19,
+            );
+            let ln = run_sharegpt(
+                base.with_policy(Policy::LayerKv { slo_aware: false }),
+                rate,
+                n,
+                19,
+            );
+            Fig8Row {
+                rate,
+                viol_vllm: v.slo_violation_rate(&slo),
+                viol_layerkv: l.slo_violation_rate(&slo),
+                viol_layerkv_noslo: ln.slo_violation_rate(&slo),
+            }
+        })
+        .collect()
+}
+
+pub fn print_fig8(rows: &[Fig8Row]) {
+    let mut t = Table::new(
+        "Fig. 8 — SLO violation rate (TTFT<=3s, TPOT<=200ms), ShareGPT",
+        &["req/s", "vLLM %", "LayerKV %", "LayerKV w/o SLO-sched %"],
+    );
+    for r in rows {
+        t.row(&[
+            format!("{:.1}", r.rate),
+            format!("{:.1}", 100.0 * r.viol_vllm),
+            format!("{:.1}", 100.0 * r.viol_layerkv),
+            format!("{:.1}", 100.0 * r.viol_layerkv_noslo),
+        ]);
+    }
+    t.print();
+}
+
+// ---------------------------------------------------------------------
+// Table 1 is qualitative — rendered directly.
+// ---------------------------------------------------------------------
+
+pub fn print_table1() {
+    let mut t = Table::new(
+        "Table 1 — LLM serving system comparison",
+        &["framework", "KV mgmt", "KV offloading", "SLO-aware sched"],
+    );
+    t.row(&["vLLM".into(), "request-wise".into(), "request-wise".into(), "not supported".into()]);
+    t.row(&["DistServe".into(), "request-wise".into(), "not supported".into(), "static".into()]);
+    t.row(&["DeepSpeed-FastGen".into(), "request-wise".into(), "not supported".into(), "static".into()]);
+    t.row(&["LayerKV (ours)".into(), "layer-wise".into(), "layer-wise".into(), "dynamic".into()]);
+    t.print();
+}

@@ -1,0 +1,32 @@
+//! # LayerKV — layer-wise KV cache management for LLM serving
+//!
+//! Reproduction of *LayerKV: Optimizing Large Language Model Serving with
+//! Layer-wise KV Cache Management* (Xiong et al., Ant Group, 2024) as a
+//! three-layer rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the serving coordinator: continuous
+//!   batching, paged KV with layer-wise block tables, GPU->host offloading,
+//!   the SLO-aware scheduler (Alg. 1 / Eqs. 1-5), and the discrete-event
+//!   cluster simulator that stands in for the paper's 8xL20 testbed.
+//! * **Layer 2** (`python/compile/model.py`) — a tiny GQA transformer in
+//!   JAX with per-layer KV inputs/outputs, AOT-lowered to HLO text.
+//! * **Layer 1** (`python/compile/kernels/`) — Pallas kernels: tiled
+//!   causal flash attention, dense decode attention, paged (block-table)
+//!   decode attention.
+//!
+//! Python runs only at `make artifacts`; the serving binary loads the HLO
+//! via PJRT (`runtime/`) and never calls Python.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for
+//! paper-vs-measured results.
+
+pub mod benchutil;
+pub mod config;
+pub mod runtime;
+pub mod coordinator;
+pub mod experiments;
+pub mod metrics;
+pub mod server;
+pub mod sim;
+pub mod util;
+pub mod workload;

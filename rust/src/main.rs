@@ -1,0 +1,197 @@
+//! LayerKV command-line entry point.
+//!
+//! ```text
+//! layerkv experiment <fig1|fig4|fig5|fig6|fig7|fig8|table1|all> [--quick]
+//! layerkv sim --model <7b|34b|70b> --policy <vllm|layerkv|layerkv-no-slo>
+//!             --ctx <tokens> --rate <req/s> --requests <n> [--sharegpt]
+//! layerkv serve [--addr 127.0.0.1:7181] [--artifacts DIR] [--budget BYTES]
+//! layerkv selftest [--artifacts DIR]
+//! ```
+//!
+//! Argument parsing is hand-rolled (clap is unavailable offline).
+
+use std::process::ExitCode;
+
+use layerkv::config::{Policy, ServingConfig};
+use layerkv::coordinator::run_trace;
+use layerkv::experiments as exp;
+use layerkv::util::Rng;
+use layerkv::workload::arrivals::Arrivals;
+use layerkv::workload::fixed::FixedWorkload;
+use layerkv::workload::sharegpt::ShareGptWorkload;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let rest = &args[1..];
+    let result = match cmd {
+        "experiment" => cmd_experiment(rest),
+        "sim" => cmd_sim(rest),
+        "serve" => cmd_serve(rest),
+        "selftest" => cmd_selftest(rest),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'");
+            print_help();
+            Err(anyhow::anyhow!("bad usage"))
+        }
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "layerkv — layer-wise KV cache management for LLM serving (paper reproduction)\n\
+         \n\
+         USAGE:\n\
+         \x20 layerkv experiment <fig1|fig4|fig5|fig6|fig7|fig8|table1|all> [--quick]\n\
+         \x20 layerkv sim --model 7b --policy layerkv --ctx 4096 --rate 1.0 --requests 100 [--sharegpt]\n\
+         \x20 layerkv serve [--addr 127.0.0.1:7181] [--artifacts DIR] [--budget BYTES]\n\
+         \x20 layerkv selftest [--artifacts DIR]"
+    );
+}
+
+/// `--key value` / `--flag` extraction.
+fn opt(args: &[String], key: &str) -> Option<String> {
+    args.iter().position(|a| a == key).and_then(|i| args.get(i + 1)).cloned()
+}
+
+fn flag(args: &[String], key: &str) -> bool {
+    args.iter().any(|a| a == key)
+}
+
+fn cmd_experiment(args: &[String]) -> anyhow::Result<()> {
+    if flag(args, "--quick") {
+        std::env::set_var("LAYERKV_QUICK", "1");
+    }
+    let which = args.first().map(String::as_str).unwrap_or("all");
+    let run = |id: &str| -> anyhow::Result<()> {
+        match id {
+            "fig1" => exp::print_fig1(&exp::fig1()),
+            "fig4" => exp::print_fig4(&exp::fig4()),
+            "fig5" => exp::print_fig5(&exp::fig5()),
+            "fig6" => exp::print_fig6(&exp::fig6_7()),
+            "fig7" => exp::print_fig7(&exp::fig6_7()),
+            "table1" => exp::print_table1(),
+            "fig8" => exp::print_fig8(&exp::fig8()),
+            other => anyhow::bail!("unknown experiment '{other}'"),
+        }
+        Ok(())
+    };
+    if which == "all" {
+        for id in ["table1", "fig1", "fig4", "fig5", "fig6", "fig7", "fig8"] {
+            run(id)?;
+        }
+        Ok(())
+    } else {
+        run(which)
+    }
+}
+
+fn cmd_sim(args: &[String]) -> anyhow::Result<()> {
+    let model = opt(args, "--model").unwrap_or_else(|| "7b".into());
+    let policy = match opt(args, "--policy").as_deref().unwrap_or("layerkv") {
+        "vllm" => Policy::Vllm,
+        "layerkv" => Policy::LayerKv { slo_aware: true },
+        "layerkv-no-slo" => Policy::LayerKv { slo_aware: false },
+        other => anyhow::bail!("unknown policy '{other}'"),
+    };
+    let ctx: usize = opt(args, "--ctx").unwrap_or_else(|| "2048".into()).parse()?;
+    let rate: f64 = opt(args, "--rate").unwrap_or_else(|| "1.0".into()).parse()?;
+    let n: usize = opt(args, "--requests").unwrap_or_else(|| "100".into()).parse()?;
+    let seed: u64 = opt(args, "--seed").unwrap_or_else(|| "7".into()).parse()?;
+
+    let cfg: ServingConfig = exp::setup(&model).with_policy(policy);
+    let trace = if let Some(path) = opt(args, "--trace") {
+        // replay a recorded JSON-lines trace
+        layerkv::workload::trace::load(std::path::Path::new(&path))?
+    } else if flag(args, "--sharegpt") {
+        ShareGptWorkload::paper(rate, n).generate(&mut Rng::new(seed))
+    } else {
+        FixedWorkload {
+            prompt_len: ctx,
+            output_len: 512,
+            n_requests: n,
+            arrivals: Arrivals::Poisson { rate },
+        }
+        .generate(&mut Rng::new(seed))
+    };
+    if let Some(path) = opt(args, "--save-trace") {
+        layerkv::workload::trace::save(&trace, std::path::Path::new(&path))?;
+        println!("trace saved to {path}");
+    }
+    let (rep, stats) = run_trace(cfg.clone(), &trace, exp::PREDICTOR_ACC);
+    let (mut ttft, mut tpot) = (rep.ttft(), rep.tpot());
+    println!("model={model} policy={} ctx={ctx} rate={rate} n={n}", cfg.policy.name());
+    println!(
+        "TTFT   mean {:8.3}s   p50 {:8.3}s   p99 {:8.3}s",
+        ttft.mean(),
+        ttft.p50(),
+        ttft.p99()
+    );
+    println!(
+        "TPOT   mean {:8.4}s   p99 {:8.4}s",
+        tpot.mean(),
+        tpot.p99()
+    );
+    println!(
+        "queue  mean {:8.3}s   prefill mean {:8.3}s",
+        rep.queueing().mean(),
+        rep.prefill().mean()
+    );
+    println!(
+        "tput   {:.1} tok/s   {:.2} req/s   violations {:.1}%",
+        rep.throughput_tok_s(),
+        rep.throughput_req_s(),
+        100.0 * rep.slo_violation_rate(&cfg.slo)
+    );
+    println!(
+        "steps  {} ({} prefill, {} decode)   preemptions {}   offload {:.1} MB   onload-stream {:.1} MB",
+        stats.steps,
+        stats.prefill_steps,
+        stats.decode_steps,
+        stats.preemptions,
+        stats.offload_bytes / 1e6,
+        stats.onload_stream_bytes / 1e6,
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
+    let addr = opt(args, "--addr").unwrap_or_else(|| "127.0.0.1:7181".into());
+    let dir = opt(args, "--artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(layerkv::runtime::artifacts::default_dir);
+    let budget: usize = opt(args, "--budget").unwrap_or_else(|| "2097152".into()).parse()?;
+    layerkv::server::serve(&addr, &dir, budget)
+}
+
+fn cmd_selftest(args: &[String]) -> anyhow::Result<()> {
+    let dir = opt(args, "--artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(layerkv::runtime::artifacts::default_dir);
+    println!("loading artifacts from {}", dir.display());
+    let model = layerkv::runtime::TinyModel::load(&dir)?;
+    println!(
+        "compiled {} prefill bucket(s) {:?}, {} decode bucket(s) {:?}, paged kernel: {}",
+        model.art.prefill_buckets().len(),
+        model.art.prefill_buckets(),
+        model.art.decode_batches().len(),
+        model.art.decode_batches(),
+        model.has_paged_kernel(),
+    );
+    let prompt: Vec<i32> = (0..24).map(|i| (i * 3) % 256).collect();
+    let out = model.prefill(&prompt)?;
+    println!("prefill(24 tokens): bucket {}, first token {}", out.bucket, layerkv::runtime::argmax(&out.logits));
+    println!("selftest OK");
+    Ok(())
+}

@@ -1,0 +1,165 @@
+//! Serving metrics: per-request latency records, aggregated into the
+//! series the paper reports (mean/P99 TTFT, TPOT, queuing breakdown,
+//! throughput, SLO violation rate).
+
+use crate::config::SloTargets;
+use crate::util::Series;
+
+/// Per-request latency record (all timestamps in seconds of engine time).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RequestRecord {
+    pub id: usize,
+    pub arrival: f64,
+    /// When its prefill started executing.
+    pub prefill_start: f64,
+    /// When the first token was emitted (prefill end).
+    pub first_token: f64,
+    /// When the last token was emitted.
+    pub finish: f64,
+    pub prompt_len: usize,
+    pub output_len: usize,
+}
+
+impl RequestRecord {
+    pub fn ttft(&self) -> f64 {
+        self.first_token - self.arrival
+    }
+
+    pub fn queueing(&self) -> f64 {
+        self.prefill_start - self.arrival
+    }
+
+    pub fn prefill_latency(&self) -> f64 {
+        self.first_token - self.prefill_start
+    }
+
+    /// Time Per Output Token over the decode phase.
+    pub fn tpot(&self) -> f64 {
+        if self.output_len <= 1 {
+            return 0.0;
+        }
+        (self.finish - self.first_token) / (self.output_len - 1) as f64
+    }
+
+    pub fn violates(&self, slo: &SloTargets) -> bool {
+        self.ttft() > slo.ttft_s || self.tpot() > slo.tpot_s
+    }
+}
+
+/// Aggregated report over a run.
+#[derive(Debug, Clone)]
+pub struct Report {
+    pub records: Vec<RequestRecord>,
+    /// Engine time when the last request finished.
+    pub makespan: f64,
+}
+
+impl Report {
+    pub fn new(mut records: Vec<RequestRecord>) -> Self {
+        records.sort_by_key(|r| r.id);
+        let makespan = records.iter().map(|r| r.finish).fold(0.0, f64::max);
+        Report { records, makespan }
+    }
+
+    fn series<F: Fn(&RequestRecord) -> f64>(&self, f: F) -> Series {
+        let mut s = Series::new();
+        for r in &self.records {
+            s.push(f(r));
+        }
+        s
+    }
+
+    pub fn ttft(&self) -> Series {
+        self.series(|r| r.ttft())
+    }
+    pub fn tpot(&self) -> Series {
+        self.series(|r| r.tpot())
+    }
+    pub fn queueing(&self) -> Series {
+        self.series(|r| r.queueing())
+    }
+    pub fn prefill(&self) -> Series {
+        self.series(|r| r.prefill_latency())
+    }
+
+    /// Output tokens per second over the makespan (the paper's throughput
+    /// bar charts).
+    pub fn throughput_tok_s(&self) -> f64 {
+        if self.makespan <= 0.0 {
+            return 0.0;
+        }
+        self.records.iter().map(|r| r.output_len as f64).sum::<f64>() / self.makespan
+    }
+
+    /// Completed requests per second.
+    pub fn throughput_req_s(&self) -> f64 {
+        if self.makespan <= 0.0 {
+            return 0.0;
+        }
+        self.records.len() as f64 / self.makespan
+    }
+
+    /// Fraction of requests violating either SLO (Fig. 8).
+    pub fn slo_violation_rate(&self, slo: &SloTargets) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        self.records.iter().filter(|r| r.violates(slo)).count() as f64
+            / self.records.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(id: usize, arrival: f64, ps: f64, ft: f64, fin: f64, out: usize) -> RequestRecord {
+        RequestRecord {
+            id,
+            arrival,
+            prefill_start: ps,
+            first_token: ft,
+            finish: fin,
+            prompt_len: 128,
+            output_len: out,
+        }
+    }
+
+    #[test]
+    fn latency_decomposition() {
+        let r = rec(0, 1.0, 3.0, 4.5, 10.0, 12);
+        assert!((r.ttft() - 3.5).abs() < 1e-12);
+        assert!((r.queueing() - 2.0).abs() < 1e-12);
+        assert!((r.prefill_latency() - 1.5).abs() < 1e-12);
+        // ttft == queueing + prefill (the Fig. 1b identity)
+        assert!((r.ttft() - (r.queueing() + r.prefill_latency())).abs() < 1e-12);
+        assert!((r.tpot() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_token_output_has_zero_tpot() {
+        let r = rec(0, 0.0, 0.0, 1.0, 1.0, 1);
+        assert_eq!(r.tpot(), 0.0);
+    }
+
+    #[test]
+    fn violation_logic() {
+        let slo = SloTargets { ttft_s: 3.0, tpot_s: 0.2 };
+        assert!(!rec(0, 0.0, 1.0, 2.0, 2.0 + 0.1 * 9.0, 10).violates(&slo));
+        assert!(rec(0, 0.0, 3.0, 4.0, 5.0, 10).violates(&slo)); // ttft 4 > 3
+        assert!(rec(0, 0.0, 0.0, 1.0, 1.0 + 0.3 * 9.0, 10).violates(&slo)); // tpot
+    }
+
+    #[test]
+    fn report_aggregates() {
+        let recs = vec![rec(1, 0.0, 0.5, 1.0, 2.0, 10), rec(0, 0.0, 1.0, 2.0, 4.0, 20)];
+        let rep = Report::new(recs);
+        assert_eq!(rep.records[0].id, 0); // sorted
+        assert_eq!(rep.makespan, 4.0);
+        assert!((rep.throughput_tok_s() - 30.0 / 4.0).abs() < 1e-12);
+        assert!((rep.throughput_req_s() - 0.5).abs() < 1e-12);
+        let mut ttft = rep.ttft();
+        assert!((ttft.mean() - 1.5).abs() < 1e-12);
+        assert!(ttft.p99() > 1.0);
+    }
+}

@@ -1,0 +1,243 @@
+//! Artifact loading: the manifest + weights `make artifacts` produced.
+//!
+//! The build contract with python/compile/aot.py:
+//! * `manifest.json` — model config, ordered weight table, executable index;
+//! * `weights.bin` — f32 LE, concatenated in the manifest's entry order
+//!   (== jax's sorted-dict flatten order);
+//! * `*.hlo.txt` — HLO text per executable (text, never serialized proto:
+//!   xla_extension 0.5.1 rejects jax>=0.5's 64-bit instruction ids).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::Json;
+
+/// Mirror of python ModelConfig.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TinyModelConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub ffn_hidden: usize,
+    pub max_seq: usize,
+}
+
+/// One weight tensor's slot in weights.bin.
+#[derive(Debug, Clone)]
+pub struct WeightEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize, // elements, not bytes
+}
+
+impl WeightEntry {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-compiled program.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ExecutableKind {
+    Prefill { seq_len: usize },
+    Decode { batch: usize, max_seq: usize },
+    PagedAttn,
+}
+
+#[derive(Debug, Clone)]
+pub struct ExecutableEntry {
+    pub kind: ExecutableKind,
+    pub path: PathBuf,
+}
+
+/// Parsed artifact bundle.
+#[derive(Debug)]
+pub struct Artifacts {
+    pub dir: PathBuf,
+    pub model: TinyModelConfig,
+    pub weights: Vec<WeightEntry>,
+    pub weight_data: Vec<f32>,
+    pub executables: Vec<ExecutableEntry>,
+}
+
+impl Artifacts {
+    /// Load and validate `dir/manifest.json` + `dir/weights.bin`.
+    pub fn load(dir: &Path) -> Result<Artifacts> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {}", manifest_path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+
+        let m = j.req("model")?;
+        let get = |k: &str| -> Result<usize> {
+            Ok(m.req(k)?.as_usize().context("not a number")?)
+        };
+        let model = TinyModelConfig {
+            vocab: get("vocab")?,
+            d_model: get("d_model")?,
+            n_layers: get("n_layers")?,
+            n_heads: get("n_heads")?,
+            n_kv_heads: get("n_kv_heads")?,
+            head_dim: get("head_dim")?,
+            ffn_hidden: get("ffn_hidden")?,
+            max_seq: get("max_seq")?,
+        };
+
+        let mut weights = Vec::new();
+        let mut offset = 0usize;
+        for e in j.req("weights")?.req("entries")?.as_arr().context("entries")? {
+            let name = e.req("name")?.as_str().context("name")?.to_string();
+            let shape: Vec<usize> = e
+                .req("shape")?
+                .as_arr()
+                .context("shape")?
+                .iter()
+                .map(|x| x.as_usize().unwrap_or(0))
+                .collect();
+            let w = WeightEntry { name, shape, offset };
+            offset += w.numel();
+            weights.push(w);
+        }
+
+        let weights_file = dir.join(
+            j.req("weights")?.req("file")?.as_str().context("weights file")?,
+        );
+        let raw = std::fs::read(&weights_file)
+            .with_context(|| format!("reading {}", weights_file.display()))?;
+        if raw.len() != offset * 4 {
+            bail!(
+                "weights.bin is {} bytes; manifest expects {} f32s ({} bytes)",
+                raw.len(),
+                offset,
+                offset * 4
+            );
+        }
+        let weight_data: Vec<f32> = raw
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+
+        let mut executables = Vec::new();
+        for e in j.req("executables")?.as_arr().context("executables")? {
+            let kind_s = e.req("kind")?.as_str().context("kind")?;
+            let path = dir.join(e.req("path")?.as_str().context("path")?);
+            if !path.exists() {
+                bail!("missing artifact {}", path.display());
+            }
+            let kind = match kind_s {
+                "prefill" => ExecutableKind::Prefill {
+                    seq_len: e.req("seq_len")?.as_usize().context("seq_len")?,
+                },
+                "decode" => ExecutableKind::Decode {
+                    batch: e.req("batch")?.as_usize().context("batch")?,
+                    max_seq: e.req("max_seq")?.as_usize().context("max_seq")?,
+                },
+                "paged_attn" => ExecutableKind::PagedAttn,
+                other => bail!("unknown executable kind '{other}'"),
+            };
+            executables.push(ExecutableEntry { kind, path });
+        }
+
+        Ok(Artifacts { dir: dir.to_path_buf(), model, weights, weight_data, executables })
+    }
+
+    /// Slice of one weight's data.
+    pub fn weight(&self, entry: &WeightEntry) -> &[f32] {
+        &self.weight_data[entry.offset..entry.offset + entry.numel()]
+    }
+
+    pub fn prefill_buckets(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .executables
+            .iter()
+            .filter_map(|e| match e.kind {
+                ExecutableKind::Prefill { seq_len } => Some(seq_len),
+                _ => None,
+            })
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn decode_batches(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .executables
+            .iter()
+            .filter_map(|e| match e.kind {
+                ExecutableKind::Decode { batch, .. } => Some(batch),
+                _ => None,
+            })
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Smallest prefill bucket >= len.
+    pub fn prefill_bucket_for(&self, len: usize) -> Option<usize> {
+        self.prefill_buckets().into_iter().find(|&b| b >= len)
+    }
+
+    /// Smallest decode batch bucket >= n.
+    pub fn decode_bucket_for(&self, n: usize) -> Option<usize> {
+        self.decode_batches().into_iter().find(|&b| b >= n)
+    }
+}
+
+/// Default artifact location: `$LAYERKV_ARTIFACTS` or `./artifacts`.
+pub fn default_dir() -> PathBuf {
+    std::env::var("LAYERKV_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_artifacts() -> Option<PathBuf> {
+        let d = default_dir();
+        d.join("manifest.json").exists().then_some(d)
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let Some(dir) = have_artifacts() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let a = Artifacts::load(&dir).unwrap();
+        assert_eq!(a.model.n_layers, 4);
+        assert_eq!(a.model.vocab, 256);
+        assert!(!a.prefill_buckets().is_empty());
+        assert!(!a.decode_batches().is_empty());
+        // weights table is dense and ordered
+        let total: usize = a.weights.iter().map(|w| w.numel()).sum();
+        assert_eq!(total, a.weight_data.len());
+        let names: Vec<&str> = a.weights.iter().map(|w| w.name.as_str()).collect();
+        let mut sorted = names.clone();
+        sorted.sort_unstable();
+        assert_eq!(names, sorted, "weights must be in sorted (jax flatten) order");
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let Some(dir) = have_artifacts() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let a = Artifacts::load(&dir).unwrap();
+        assert_eq!(a.prefill_bucket_for(1), Some(16));
+        assert_eq!(a.prefill_bucket_for(17), Some(32));
+        assert_eq!(a.prefill_bucket_for(10_000), None);
+        assert_eq!(a.decode_bucket_for(3), Some(4));
+    }
+
+    #[test]
+    fn rejects_missing_dir() {
+        assert!(Artifacts::load(Path::new("/nonexistent-xyz")).is_err());
+    }
+}

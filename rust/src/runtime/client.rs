@@ -1,0 +1,268 @@
+//! PJRT runtime: load the AOT HLO-text artifacts, compile them once on the
+//! CPU client, keep weights resident as device buffers, and expose typed
+//! prefill/decode calls. Adapted from /opt/xla-example/load_hlo.
+//!
+//! This is the only module that touches the `xla` crate; everything above
+//! works with plain `Vec<f32>` tensors.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::artifacts::{Artifacts, ExecutableKind};
+
+/// Per-layer KV tensor from a prefill: `[2, KH, T, D]` row-major, with `T`
+/// trimmed to the true prompt length.
+#[derive(Debug, Clone)]
+pub struct LayerKv {
+    pub data: Vec<f32>,
+    pub kh: usize,
+    pub t: usize,
+    pub d: usize,
+}
+
+impl LayerKv {
+    pub fn numel(&self) -> usize {
+        2 * self.kh * self.t * self.d
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.numel() * 4
+    }
+}
+
+/// Result of one prefill call.
+#[derive(Debug)]
+pub struct PrefillOut {
+    /// Logits at the last true prompt position, `[vocab]`.
+    pub logits: Vec<f32>,
+    /// Per-layer KV, trimmed to the prompt length.
+    pub kv: Vec<LayerKv>,
+    /// The bucket the call actually executed (>= prompt length).
+    pub bucket: usize,
+}
+
+/// Result of one batched decode call.
+#[derive(Debug)]
+pub struct DecodeOut {
+    /// `[batch, vocab]` row-major (only the first `n_real` rows meaningful).
+    pub logits: Vec<f32>,
+    pub batch: usize,
+}
+
+/// The compiled tiny model: weights resident on the PJRT device, one
+/// executable per prefill bucket and per decode batch size.
+pub struct TinyModel {
+    client: xla::PjRtClient,
+    pub art: Artifacts,
+    weight_bufs: Vec<xla::PjRtBuffer>,
+    prefill_exes: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    decode_exes: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    paged_exe: Option<xla::PjRtLoadedExecutable>,
+}
+
+impl TinyModel {
+    /// Load artifacts from `dir`, compile every executable, upload weights.
+    pub fn load(dir: &Path) -> Result<TinyModel> {
+        let art = Artifacts::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+
+        let mut weight_bufs = Vec::with_capacity(art.weights.len());
+        for w in &art.weights {
+            let data = art.weight(w);
+            let buf = client
+                .buffer_from_host_buffer::<f32>(data, &w.shape, None)
+                .with_context(|| format!("uploading weight {}", w.name))?;
+            weight_bufs.push(buf);
+        }
+
+        let mut prefill_exes = BTreeMap::new();
+        let mut decode_exes = BTreeMap::new();
+        let mut paged_exe = None;
+        for e in &art.executables {
+            let proto = xla::HloModuleProto::from_text_file(
+                e.path.to_str().context("non-utf8 path")?,
+            )
+            .map_err(|err| anyhow::anyhow!("parsing {}: {err}", e.path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|err| anyhow::anyhow!("compiling {}: {err}", e.path.display()))?;
+            match e.kind {
+                ExecutableKind::Prefill { seq_len } => {
+                    prefill_exes.insert(seq_len, exe);
+                }
+                ExecutableKind::Decode { batch, .. } => {
+                    decode_exes.insert(batch, exe);
+                }
+                ExecutableKind::PagedAttn => paged_exe = Some(exe),
+            }
+        }
+        if prefill_exes.is_empty() || decode_exes.is_empty() {
+            bail!("artifact bundle lacks prefill/decode executables");
+        }
+        Ok(TinyModel { client, art, weight_bufs, prefill_exes, decode_exes, paged_exe })
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.art.model.n_layers
+    }
+
+    pub fn max_seq(&self) -> usize {
+        self.art.model.max_seq
+    }
+
+    pub fn has_paged_kernel(&self) -> bool {
+        self.paged_exe.is_some()
+    }
+
+    fn buf_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer::<i32>(data, dims, None)?)
+    }
+
+    fn buf_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer::<f32>(data, dims, None)?)
+    }
+
+    /// Run a prefill over `tokens` (length <= max bucket). Pads up to the
+    /// smallest bucket; trims KV back to the true length.
+    pub fn prefill(&self, tokens: &[i32]) -> Result<PrefillOut> {
+        let t_true = tokens.len();
+        let bucket = self
+            .art
+            .prefill_bucket_for(t_true)
+            .with_context(|| format!("prompt of {t_true} tokens exceeds all buckets"))?;
+        let exe = &self.prefill_exes[&bucket];
+        let mut padded = tokens.to_vec();
+        padded.resize(bucket, 0);
+
+        let mut args: Vec<&xla::PjRtBuffer> = self.weight_bufs.iter().collect();
+        let tok_buf = self.buf_i32(&padded, &[bucket])?;
+        args.push(&tok_buf);
+
+        let result = exe.execute_b::<&xla::PjRtBuffer>(&args)?;
+        let outs = result[0][0].to_literal_sync()?.to_tuple()?;
+        let m = &self.art.model;
+        anyhow::ensure!(outs.len() == 1 + m.n_layers, "unexpected output arity");
+
+        // logits [bucket, vocab] -> row at t_true-1
+        let logits_all = outs[0].to_vec::<f32>()?;
+        let logits =
+            logits_all[(t_true - 1) * m.vocab..t_true * m.vocab].to_vec();
+
+        // kv_i [2, KH, bucket, D] -> trim T axis to t_true
+        let mut kv = Vec::with_capacity(m.n_layers);
+        for out in &outs[1..] {
+            let full = out.to_vec::<f32>()?;
+            let (kh, d) = (m.n_kv_heads, m.head_dim);
+            let mut data = Vec::with_capacity(2 * kh * t_true * d);
+            for c in 0..2 {
+                for h in 0..kh {
+                    let base = (c * kh + h) * bucket * d;
+                    data.extend_from_slice(&full[base..base + t_true * d]);
+                }
+            }
+            kv.push(LayerKv { data, kh, t: t_true, d });
+        }
+        Ok(PrefillOut { logits, kv, bucket })
+    }
+
+    /// One batched decode step.
+    ///
+    /// * `tokens[i]`, `lens[i]` — next input token and current cache length
+    ///   of lane `i`;
+    /// * `kvs[layer]` — `[B, 2, KH, Smax, D]` row-major scratch the caller
+    ///   owns; the new token's KV is written back into it at `lens[i]`.
+    ///
+    /// Lanes beyond the real count must have `lens = 0` and token 0.
+    pub fn decode(
+        &self,
+        tokens: &[i32],
+        lens: &[i32],
+        kvs: &mut [Vec<f32>],
+    ) -> Result<DecodeOut> {
+        let b = tokens.len();
+        anyhow::ensure!(lens.len() == b, "tokens/lens length mismatch");
+        anyhow::ensure!(
+            self.decode_exes.contains_key(&b),
+            "no decode executable for batch {b} (buckets: {:?})",
+            self.art.decode_batches()
+        );
+        let m = &self.art.model;
+        let per_layer = b * 2 * m.n_kv_heads * m.max_seq * m.head_dim;
+        anyhow::ensure!(kvs.len() == m.n_layers, "kv layer count");
+        for kv in kvs.iter() {
+            anyhow::ensure!(kv.len() == per_layer, "kv lane size");
+        }
+
+        let exe = &self.decode_exes[&b];
+        let tok_buf = self.buf_i32(tokens, &[b])?;
+        let len_buf = self.buf_i32(lens, &[b])?;
+        let kv_dims = [b, 2, m.n_kv_heads, m.max_seq, m.head_dim];
+        let mut kv_bufs = Vec::with_capacity(kvs.len());
+        for kv in kvs.iter() {
+            kv_bufs.push(self.buf_f32(kv, &kv_dims)?);
+        }
+        let mut args: Vec<&xla::PjRtBuffer> = self.weight_bufs.iter().collect();
+        args.push(&tok_buf);
+        args.push(&len_buf);
+        for kb in &kv_bufs {
+            args.push(kb);
+        }
+
+        let result = exe.execute_b::<&xla::PjRtBuffer>(&args)?;
+        let outs = result[0][0].to_literal_sync()?.to_tuple()?;
+        anyhow::ensure!(outs.len() == 1 + m.n_layers, "unexpected output arity");
+        let logits = outs[0].to_vec::<f32>()?;
+        for (kv, out) in kvs.iter_mut().zip(&outs[1..]) {
+            *kv = out.to_vec::<f32>()?;
+        }
+        Ok(DecodeOut { logits, batch: b })
+    }
+
+    /// Run the standalone paged-attention kernel artifact (perf target).
+    /// Shapes are fixed by the manifest's PAGED_SHAPE.
+    pub fn paged_attn(
+        &self,
+        q: &[f32],
+        q_dims: &[usize],
+        pages: &[f32],
+        pages_dims: &[usize],
+        table: &[i32],
+        table_dims: &[usize],
+        lens: &[i32],
+    ) -> Result<Vec<f32>> {
+        let exe = self.paged_exe.as_ref().context("no paged_attn artifact")?;
+        let qb = self.buf_f32(q, q_dims)?;
+        let pb = self.buf_f32(pages, pages_dims)?;
+        let tb = self.buf_i32(table, table_dims)?;
+        let lb = self.buf_i32(lens, &[lens.len()])?;
+        let args = [&qb, &pb, &tb, &lb];
+        let result = exe.execute_b::<&xla::PjRtBuffer>(&args)?;
+        let outs = result[0][0].to_literal_sync()?.to_tuple()?;
+        Ok(outs[0].to_vec::<f32>()?)
+    }
+}
+
+/// Greedy (argmax) sampling over one logits row.
+pub fn argmax(logits: &[f32]) -> i32 {
+    let mut best = 0usize;
+    for (i, &x) in logits.iter().enumerate() {
+        if x > logits[best] {
+            best = i;
+        }
+    }
+    best as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_picks_max() {
+        assert_eq!(argmax(&[0.1, 3.0, -1.0, 2.9]), 1);
+        assert_eq!(argmax(&[5.0]), 0);
+    }
+}

@@ -1,0 +1,340 @@
+//! Layer-wise KV store for the real PJRT serving path (S7 in DESIGN.md).
+//!
+//! Holds every live request's per-layer KV tensors and tracks which layers
+//! sit in the bounded "device" pool vs the host pool. On the CPU-only
+//! testbed both pools are host RAM, but the copies are real and the byte
+//! accounting mirrors what a CUDA/TPU build would push over the
+//! interconnect — the policy layer (what to offload, when to restore) is
+//! identical to the simulator's.
+
+use std::collections::HashMap;
+
+use crate::coordinator::request::ReqId;
+
+use super::client::LayerKv;
+
+#[derive(Debug, Clone, Default)]
+pub struct KvStoreStats {
+    pub offloads: u64,
+    pub onloads: u64,
+    pub offload_bytes: u64,
+    pub onload_bytes: u64,
+}
+
+#[derive(Debug)]
+struct StoredLayer {
+    kv: LayerKv,
+    on_device: bool,
+}
+
+/// Byte-budgeted two-pool KV store.
+#[derive(Debug)]
+pub struct KvStore {
+    device_budget: usize,
+    device_used: usize,
+    host_used: usize,
+    entries: HashMap<ReqId, Vec<StoredLayer>>,
+    pub stats: KvStoreStats,
+}
+
+impl KvStore {
+    pub fn new(device_budget_bytes: usize) -> Self {
+        KvStore {
+            device_budget: device_budget_bytes,
+            device_used: 0,
+            host_used: 0,
+            entries: HashMap::new(),
+            stats: KvStoreStats::default(),
+        }
+    }
+
+    pub fn device_used(&self) -> usize {
+        self.device_used
+    }
+
+    pub fn host_used(&self) -> usize {
+        self.host_used
+    }
+
+    pub fn device_free(&self) -> usize {
+        self.device_budget.saturating_sub(self.device_used)
+    }
+
+    pub fn contains(&self, req: ReqId) -> bool {
+        self.entries.contains_key(&req)
+    }
+
+    /// Store a prefill's KV. Layers in `retained` go to the device pool
+    /// (if the budget allows), the rest to the host pool — the offload
+    /// traffic a GPU build would overlap with the prefill itself.
+    pub fn insert(&mut self, req: ReqId, kv: Vec<LayerKv>, retained: &[usize]) {
+        let mut layers = Vec::with_capacity(kv.len());
+        for (i, layer) in kv.into_iter().enumerate() {
+            let bytes = layer.bytes();
+            let want_device = retained.contains(&i);
+            let on_device = want_device && self.device_used + bytes <= self.device_budget;
+            if on_device {
+                self.device_used += bytes;
+            } else {
+                self.host_used += bytes;
+                self.stats.offloads += 1;
+                self.stats.offload_bytes += bytes as u64;
+            }
+            layers.push(StoredLayer { kv: layer, on_device });
+        }
+        let prev = self.entries.insert(req, layers);
+        debug_assert!(prev.is_none(), "request {req} inserted twice");
+    }
+
+    /// Layers of `req` currently on the host.
+    pub fn host_layers(&self, req: ReqId) -> Vec<usize> {
+        self.entries
+            .get(&req)
+            .map(|ls| {
+                ls.iter().enumerate().filter(|(_, l)| !l.on_device).map(|(i, _)| i).collect()
+            })
+            .unwrap_or_default()
+    }
+
+    pub fn fully_resident(&self, req: ReqId) -> bool {
+        self.entries.get(&req).map(|ls| ls.iter().all(|l| l.on_device)).unwrap_or(false)
+    }
+
+    /// Bytes of one request's KV on the host.
+    pub fn host_bytes(&self, req: ReqId) -> usize {
+        self.entries
+            .get(&req)
+            .map(|ls| ls.iter().filter(|l| !l.on_device).map(|l| l.kv.bytes()).sum())
+            .unwrap_or(0)
+    }
+
+    /// Move one layer device -> host. Returns bytes moved.
+    pub fn offload_layer(&mut self, req: ReqId, layer: usize) -> usize {
+        let Some(ls) = self.entries.get_mut(&req) else { return 0 };
+        let l = &mut ls[layer];
+        if !l.on_device {
+            return 0;
+        }
+        let bytes = l.kv.bytes();
+        l.on_device = false;
+        self.device_used -= bytes;
+        self.host_used += bytes;
+        self.stats.offloads += 1;
+        self.stats.offload_bytes += bytes as u64;
+        bytes
+    }
+
+    /// Move one layer host -> device if the budget allows. Returns bytes.
+    pub fn onload_layer(&mut self, req: ReqId, layer: usize) -> usize {
+        let Some(ls) = self.entries.get_mut(&req) else { return 0 };
+        let l = &mut ls[layer];
+        if l.on_device {
+            return 0;
+        }
+        let bytes = l.kv.bytes();
+        if self.device_used + bytes > self.device_budget {
+            return 0;
+        }
+        l.on_device = true;
+        self.device_used += bytes;
+        self.host_used -= bytes;
+        self.stats.onloads += 1;
+        self.stats.onload_bytes += bytes as u64;
+        bytes
+    }
+
+    /// Restore as many host layers of `req` as the budget allows.
+    pub fn try_restore(&mut self, req: ReqId) -> usize {
+        let layers = self.host_layers(req);
+        let mut moved = 0;
+        for l in layers {
+            moved += self.onload_layer(req, l);
+        }
+        moved
+    }
+
+    /// Copy lane `lane` of a dense decode scratch back as the appended
+    /// token's KV. `scratch[layer]` is `[B, 2, KH, Smax, D]`; the new row
+    /// sits at position `pos` of the sequence axis.
+    pub fn append_from_scratch(
+        &mut self,
+        req: ReqId,
+        scratch: &[Vec<f32>],
+        lane: usize,
+        _b: usize,
+        smax: usize,
+        pos: usize,
+    ) {
+        let Some(ls) = self.entries.get_mut(&req) else { return };
+        for (layer, s) in ls.iter_mut().zip(scratch.iter()) {
+            let kv = &mut layer.kv;
+            let (kh, d) = (kv.kh, kv.d);
+            debug_assert_eq!(s.len(), _b * 2 * kh * smax * d);
+            debug_assert_eq!(pos, kv.t, "append must be at the current tail");
+            // grow [2, KH, T, D] -> [2, KH, T+1, D]
+            let mut out = Vec::with_capacity(2 * kh * (kv.t + 1) * d);
+            for c in 0..2 {
+                for h in 0..kh {
+                    let old = (c * kh + h) * kv.t * d;
+                    out.extend_from_slice(&kv.data[old..old + kv.t * d]);
+                    let src = (((lane * 2 + c) * kh + h) * smax + pos) * d;
+                    out.extend_from_slice(&s[src..src + d]);
+                }
+            }
+            let grown = (out.len() - kv.data.len()) as u64; // 2*KH*D floats
+            kv.data = out;
+            kv.t += 1;
+            let grown_bytes = grown * 4;
+            if layer.on_device {
+                self.device_used += grown_bytes as usize;
+            } else {
+                self.host_used += grown_bytes as usize;
+            }
+        }
+    }
+
+    /// Fill lane `lane` of the dense scratch from the store (any residency;
+    /// host reads count as onload stream bytes).
+    pub fn fill_scratch(
+        &mut self,
+        req: ReqId,
+        scratch: &mut [Vec<f32>],
+        lane: usize,
+        _b: usize,
+        smax: usize,
+    ) -> usize {
+        let Some(ls) = self.entries.get(&req) else { return 0 };
+        let mut streamed = 0usize;
+        for (layer, s) in ls.iter().zip(scratch.iter_mut()) {
+            let kv = &layer.kv;
+            let (kh, d, t) = (kv.kh, kv.d, kv.t);
+            for c in 0..2 {
+                for h in 0..kh {
+                    let src = (c * kh + h) * t * d;
+                    let dst = (((lane * 2 + c) * kh + h) * smax) * d;
+                    s[dst..dst + t * d].copy_from_slice(&kv.data[src..src + t * d]);
+                }
+            }
+            if !layer.on_device {
+                streamed += kv.bytes();
+            }
+        }
+        if streamed > 0 {
+            self.stats.onload_bytes += streamed as u64;
+        }
+        streamed
+    }
+
+    pub fn tokens(&self, req: ReqId) -> usize {
+        self.entries.get(&req).and_then(|ls| ls.first()).map(|l| l.kv.t).unwrap_or(0)
+    }
+
+    pub fn release(&mut self, req: ReqId) {
+        if let Some(ls) = self.entries.remove(&req) {
+            for l in ls {
+                if l.on_device {
+                    self.device_used -= l.kv.bytes();
+                } else {
+                    self.host_used -= l.kv.bytes();
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kv(t: usize) -> LayerKv {
+        LayerKv { data: vec![1.0; 2 * 2 * t * 4], kh: 2, t, d: 4 }
+    }
+
+    fn four_layers(t: usize) -> Vec<LayerKv> {
+        (0..4).map(|_| kv(t)).collect()
+    }
+
+    #[test]
+    fn insert_respects_budget_and_retained() {
+        let layer_bytes = kv(8).bytes();
+        let mut s = KvStore::new(2 * layer_bytes);
+        s.insert(0, four_layers(8), &[1, 3]);
+        assert_eq!(s.device_used(), 2 * layer_bytes);
+        assert_eq!(s.host_layers(0), vec![0, 2]);
+        assert!(!s.fully_resident(0));
+        assert_eq!(s.stats.offloads, 2);
+    }
+
+    #[test]
+    fn budget_overflow_spills_to_host() {
+        let layer_bytes = kv(8).bytes();
+        let mut s = KvStore::new(layer_bytes); // room for one layer only
+        s.insert(0, four_layers(8), &[0, 1, 2, 3]);
+        assert_eq!(s.device_used(), layer_bytes);
+        assert_eq!(s.host_layers(0).len(), 3);
+    }
+
+    #[test]
+    fn offload_onload_roundtrip() {
+        let layer_bytes = kv(8).bytes();
+        let mut s = KvStore::new(4 * layer_bytes);
+        s.insert(0, four_layers(8), &[0, 1, 2, 3]);
+        assert!(s.fully_resident(0));
+        assert_eq!(s.offload_layer(0, 2), layer_bytes);
+        assert_eq!(s.host_layers(0), vec![2]);
+        assert_eq!(s.onload_layer(0, 2), layer_bytes);
+        assert!(s.fully_resident(0));
+        // idempotent
+        assert_eq!(s.onload_layer(0, 2), 0);
+    }
+
+    #[test]
+    fn try_restore_partial_under_budget() {
+        let layer_bytes = kv(8).bytes();
+        let mut s = KvStore::new(3 * layer_bytes);
+        s.insert(0, four_layers(8), &[]);
+        assert_eq!(s.host_layers(0).len(), 4);
+        let moved = s.try_restore(0);
+        assert_eq!(moved, 3 * layer_bytes);
+        assert_eq!(s.host_layers(0).len(), 1);
+    }
+
+    #[test]
+    fn scratch_roundtrip_appends() {
+        let (b, smax, kh, d) = (2, 16, 2, 4);
+        let mut s = KvStore::new(usize::MAX);
+        s.insert(7, four_layers(3), &[0, 1, 2, 3]);
+        let mut scratch: Vec<Vec<f32>> = (0..4).map(|_| vec![0.0; b * 2 * kh * smax * d]).collect();
+        let streamed = s.fill_scratch(7, &mut scratch, 1, b, smax);
+        assert_eq!(streamed, 0); // resident
+        // pretend the model wrote a new row at pos 3 of lane 1
+        for sc in &mut scratch {
+            for c in 0..2 {
+                for h in 0..kh {
+                    let base = (((1 * 2 + c) * kh + h) * smax + 3) * d;
+                    for x in 0..d {
+                        sc[base + x] = 9.0;
+                    }
+                }
+            }
+        }
+        s.append_from_scratch(7, &scratch, 1, b, smax, 3);
+        assert_eq!(s.tokens(7), 4);
+        // re-fill and check the appended row is there
+        let mut scratch2: Vec<Vec<f32>> =
+            (0..4).map(|_| vec![0.0; b * 2 * kh * smax * d]).collect();
+        s.fill_scratch(7, &mut scratch2, 0, b, smax);
+        let base = ((0 * kh + 0) * smax + 3) * d;
+        assert_eq!(scratch2[0][base], 9.0);
+    }
+
+    #[test]
+    fn release_frees_both_pools() {
+        let mut s = KvStore::new(kv(8).bytes() * 2);
+        s.insert(0, four_layers(8), &[0, 1]);
+        s.release(0);
+        assert_eq!(s.device_used(), 0);
+        assert_eq!(s.host_used(), 0);
+        assert!(!s.contains(0));
+    }
+}

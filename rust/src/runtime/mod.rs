@@ -1,0 +1,13 @@
+//! Runtime: the rust side of the AOT bridge. Loads `artifacts/*.hlo.txt`
+//! via the xla crate's PJRT CPU client, keeps weights resident, and serves
+//! the tiny model end-to-end with layer-wise KV residency management.
+
+pub mod artifacts;
+pub mod client;
+pub mod kvstore;
+pub mod realengine;
+
+pub use artifacts::{Artifacts, ExecutableKind, TinyModelConfig};
+pub use client::{argmax, DecodeOut, LayerKv, PrefillOut, TinyModel};
+pub use kvstore::{KvStore, KvStoreStats};
+pub use realengine::{RealEngine, RealEngineConfig, ServeRequest, ServeResult};

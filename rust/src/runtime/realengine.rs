@@ -1,0 +1,337 @@
+//! Real serving engine: continuous batching over the PJRT-compiled tiny
+//! model with LayerKV-style layer-wise KV residency. This is the
+//! end-to-end proof that all three layers compose — actual tokens flow
+//! through the Pallas-kernel HLO, and the coordinator moves real per-layer
+//! KV tensors between the bounded device pool and the host pool.
+//!
+//! Timings are wall-clock; the serving loop is Python-free.
+
+use std::collections::VecDeque;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::config::Policy;
+use crate::coordinator::request::ReqId;
+use crate::metrics::{Report, RequestRecord};
+
+use super::client::{argmax, TinyModel};
+use super::kvstore::{KvStore, KvStoreStats};
+
+/// One inference job for the real engine.
+#[derive(Debug, Clone)]
+pub struct ServeRequest {
+    pub id: ReqId,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    /// Seconds after engine start at which this request becomes visible.
+    pub arrival_s: f64,
+}
+
+/// Completed job.
+#[derive(Debug, Clone)]
+pub struct ServeResult {
+    pub id: ReqId,
+    pub output: Vec<i32>,
+    pub record: RequestRecord,
+}
+
+#[derive(Debug, Clone)]
+pub struct RealEngineConfig {
+    /// Device-pool byte budget for KV (small by default so layer-wise
+    /// offloading actually exercises on the tiny model).
+    pub device_kv_budget: usize,
+    pub policy: Policy,
+    /// Max decode lanes per step (must be <= largest decode bucket).
+    pub max_batch: usize,
+}
+
+impl Default for RealEngineConfig {
+    fn default() -> Self {
+        RealEngineConfig {
+            device_kv_budget: 2 << 20, // 2 MiB: a few requests' full KV
+            policy: Policy::LayerKv { slo_aware: true },
+            max_batch: 8,
+        }
+    }
+}
+
+struct Live {
+    id: ReqId,
+    tokens_generated: Vec<i32>,
+    max_new: usize,
+    arrival: f64,
+    prefill_start: f64,
+    first_token: f64,
+    prompt_len: usize,
+}
+
+/// Synchronous continuous-batching loop over the PJRT model.
+pub struct RealEngine {
+    pub model: TinyModel,
+    pub cfg: RealEngineConfig,
+    store: KvStore,
+}
+
+impl RealEngine {
+    pub fn load(artifacts_dir: &Path, cfg: RealEngineConfig) -> Result<Self> {
+        let model = TinyModel::load(artifacts_dir)?;
+        let store = KvStore::new(cfg.device_kv_budget);
+        Ok(RealEngine { model, cfg, store })
+    }
+
+    pub fn kv_stats(&self) -> &KvStoreStats {
+        &self.store.stats
+    }
+
+    /// Retained-layer choice at admission: LayerKV keeps a fraction that
+    /// fits the device budget (long prompts -> fewer layers, mirroring the
+    /// x-solve); the vLLM baseline wants everything resident.
+    fn retained_for(&self, prompt_len: usize) -> Vec<usize> {
+        let l = self.model.n_layers();
+        match self.cfg.policy {
+            Policy::Vllm => (0..l).collect(),
+            Policy::LayerKv { .. } => {
+                let m = &self.model.art.model;
+                let layer_bytes = 2 * m.n_kv_heads * prompt_len * m.head_dim * 4;
+                let fit = if layer_bytes == 0 {
+                    l
+                } else {
+                    (self.store.device_free() / layer_bytes).min(l)
+                };
+                crate::coordinator::block::LayerBlockTable::interleaved_retained(l, fit)
+            }
+        }
+    }
+
+    /// Serve a whole batch of requests to completion (arrivals honoured by
+    /// wall-clock). Returns per-request results + a latency report.
+    pub fn serve(&mut self, mut jobs: Vec<ServeRequest>) -> Result<(Vec<ServeResult>, Report)> {
+        jobs.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+        let t0 = Instant::now();
+        let now = || t0.elapsed().as_secs_f64();
+
+        let mut pending: VecDeque<ServeRequest> = jobs.into();
+        let mut waiting: VecDeque<ServeRequest> = VecDeque::new();
+        let mut running: Vec<Live> = Vec::new();
+        let mut results: Vec<ServeResult> = Vec::new();
+
+        let m = self.model.art.model.clone();
+        let smax = m.max_seq;
+
+        while !(pending.is_empty() && waiting.is_empty() && running.is_empty()) {
+            // arrivals
+            while pending.front().map(|j| j.arrival_s <= now()).unwrap_or(false) {
+                waiting.push_back(pending.pop_front().unwrap());
+            }
+
+            // admission: prefill everything that fits a bucket (layer-wise
+            // residency makes admission cheap; vLLM mode only admits when
+            // the full KV fits the device budget)
+            while let Some(job) = waiting.front() {
+                let plen = job.prompt.len();
+                let Some(_bucket) = self.model.art.prefill_bucket_for(plen) else {
+                    // oversized prompt: reject
+                    let job = waiting.pop_front().unwrap();
+                    results.push(ServeResult {
+                        id: job.id,
+                        output: Vec::new(),
+                        record: RequestRecord {
+                            id: job.id,
+                            arrival: job.arrival_s,
+                            prefill_start: now(),
+                            first_token: now(),
+                            finish: now(),
+                            prompt_len: plen,
+                            output_len: 0,
+                        },
+                    });
+                    continue;
+                };
+                let full_bytes = m.n_layers * 2 * m.n_kv_heads * plen * m.head_dim * 4;
+                if matches!(self.cfg.policy, Policy::Vllm)
+                    && self.store.device_free() < full_bytes
+                    // degraded-admission escape: a prompt larger than the
+                    // whole budget would head-of-line block forever; admit
+                    // it alone on an empty pool and let it spill
+                    && !(self.store.device_used() == 0 && running.is_empty())
+                {
+                    break; // vLLM: head-of-line blocked on device KV space
+                }
+                if running.len() >= self.cfg.max_batch {
+                    break;
+                }
+                let job = waiting.pop_front().unwrap();
+                let prefill_start = now();
+                let out = self.model.prefill(&job.prompt)?;
+                let first = argmax(&out.logits);
+                let retained = self.retained_for(plen);
+                self.store.insert(job.id, out.kv, &retained);
+                let first_token = now();
+                running.push(Live {
+                    id: job.id,
+                    tokens_generated: vec![first],
+                    max_new: job.max_new_tokens,
+                    arrival: job.arrival_s,
+                    prefill_start,
+                    first_token,
+                    prompt_len: plen,
+                });
+            }
+
+            // decode step over the resident subset
+            if !running.is_empty() {
+                // restore parked KV while budget allows (oldest first)
+                for live in &running {
+                    self.store.try_restore(live.id);
+                }
+                let mut lanes: Vec<usize> = (0..running.len())
+                    .filter(|&i| self.store.fully_resident(running[i].id))
+                    .take(self.cfg.max_batch)
+                    .collect();
+                if lanes.is_empty() {
+                    lanes.push(0); // force progress with host streaming
+                }
+                let b = self
+                    .model
+                    .art
+                    .decode_bucket_for(lanes.len())
+                    .context("no decode bucket")?;
+
+                let per_layer = b * 2 * m.n_kv_heads * smax * m.head_dim;
+                let mut scratch: Vec<Vec<f32>> =
+                    (0..m.n_layers).map(|_| vec![0.0; per_layer]).collect();
+                let mut tokens = vec![0i32; b];
+                let mut lens = vec![0i32; b];
+                for (lane, &ri) in lanes.iter().enumerate() {
+                    let live = &running[ri];
+                    self.store.fill_scratch(live.id, &mut scratch, lane, b, smax);
+                    tokens[lane] = *live.tokens_generated.last().unwrap();
+                    lens[lane] = (live.prompt_len + live.tokens_generated.len() - 1) as i32;
+                }
+
+                let out = self.model.decode(&tokens, &lens, &mut scratch)?;
+                let tnow = now();
+                let mut finished: Vec<usize> = Vec::new();
+                for (lane, &ri) in lanes.iter().enumerate() {
+                    let live = &mut running[ri];
+                    let next =
+                        argmax(&out.logits[lane * m.vocab..(lane + 1) * m.vocab]);
+                    self.store.append_from_scratch(
+                        live.id,
+                        &scratch,
+                        lane,
+                        b,
+                        smax,
+                        lens[lane] as usize,
+                    );
+                    live.tokens_generated.push(next);
+                    let ctx = live.prompt_len + live.tokens_generated.len();
+                    if live.tokens_generated.len() >= live.max_new || ctx >= smax {
+                        finished.push(ri);
+                    }
+                }
+                let _ = tnow;
+                finished.sort_unstable_by(|a, b| b.cmp(a));
+                for ri in finished {
+                    let live = running.swap_remove(ri);
+                    self.store.release(live.id);
+                    let fin = now();
+                    results.push(ServeResult {
+                        id: live.id,
+                        record: RequestRecord {
+                            id: live.id,
+                            arrival: live.arrival,
+                            prefill_start: live.prefill_start,
+                            first_token: live.first_token,
+                            finish: fin,
+                            prompt_len: live.prompt_len,
+                            output_len: live.tokens_generated.len(),
+                        },
+                        output: live.tokens_generated,
+                    });
+                }
+            } else if waiting.is_empty() {
+                // idle: spin-wait for the next arrival (coarse sleep)
+                if let Some(j) = pending.front() {
+                    let dt = j.arrival_s - now();
+                    if dt > 0.0 {
+                        std::thread::sleep(std::time::Duration::from_secs_f64(dt.min(0.005)));
+                    }
+                }
+            }
+        }
+
+        results.sort_by_key(|r| r.id);
+        let report = Report::new(results.iter().map(|r| r.record.clone()).collect());
+        Ok((results, report))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts::default_dir;
+
+    fn engine(policy: Policy, budget: usize) -> Option<RealEngine> {
+        let dir = default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return None;
+        }
+        RealEngine::load(
+            &dir,
+            RealEngineConfig { device_kv_budget: budget, policy, max_batch: 8 },
+        )
+        .ok()
+    }
+
+    fn jobs(n: usize, prompt_len: usize, out: usize) -> Vec<ServeRequest> {
+        (0..n)
+            .map(|id| ServeRequest {
+                id,
+                prompt: (0..prompt_len).map(|i| ((id * 7 + i) % 256) as i32).collect(),
+                max_new_tokens: out,
+                arrival_s: 0.0,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn serves_batch_end_to_end() {
+        let Some(mut e) = engine(Policy::LayerKv { slo_aware: true }, 2 << 20) else { return };
+        let (results, report) = e.serve(jobs(4, 24, 8)).unwrap();
+        assert_eq!(results.len(), 4);
+        for r in &results {
+            assert_eq!(r.output.len(), 8);
+            assert!(r.output.iter().all(|&t| (0..256).contains(&t)));
+        }
+        assert!(report.throughput_tok_s() > 0.0);
+    }
+
+    #[test]
+    fn deterministic_outputs_across_runs() {
+        let Some(mut a) = engine(Policy::LayerKv { slo_aware: true }, 2 << 20) else { return };
+        let Some(mut b) = engine(Policy::LayerKv { slo_aware: true }, 2 << 20) else { return };
+        let (ra, _) = a.serve(jobs(2, 16, 6)).unwrap();
+        let (rb, _) = b.serve(jobs(2, 16, 6)).unwrap();
+        for (x, y) in ra.iter().zip(&rb) {
+            assert_eq!(x.output, y.output);
+        }
+    }
+
+    #[test]
+    fn offloading_engaged_under_tiny_budget_same_tokens() {
+        // Ground truth with an ample budget...
+        let Some(mut big) = engine(Policy::LayerKv { slo_aware: true }, 64 << 20) else { return };
+        let (rb, _) = big.serve(jobs(3, 32, 6)).unwrap();
+        // ...must match a budget so small most layers live on the host.
+        let Some(mut tiny) = engine(Policy::LayerKv { slo_aware: true }, 16 << 10) else { return };
+        let (rt, _) = tiny.serve(jobs(3, 32, 6)).unwrap();
+        assert!(tiny.kv_stats().offload_bytes > 0, "tiny budget must offload");
+        for (x, y) in rb.iter().zip(&rt) {
+            assert_eq!(x.output, y.output, "offloading must not change tokens");
+        }
+    }
+}

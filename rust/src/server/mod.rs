@@ -1,0 +1,199 @@
+//! Serving front-end: a line-delimited TCP protocol over the real PJRT
+//! engine (S18). Thread-per-connection with a shared single engine worker
+//! — std::thread + mpsc stand in for tokio, which is unavailable offline
+//! (DESIGN.md §2).
+//!
+//! Protocol (one JSON object per line):
+//!   request:  {"id": 1, "prompt": [12, 7, ...], "max_new_tokens": 16}
+//!   response: {"id": 1, "output": [...], "ttft_ms": 1.2, "tpot_ms": 0.4}
+//!
+//! Example session: `cargo run --release -- serve` then
+//! `printf '{"id":1,"prompt":[1,2,3],"max_new_tokens":4}\n' | nc 127.0.0.1 7181`
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::Path;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use crate::config::Policy;
+use crate::runtime::{RealEngine, RealEngineConfig, ServeRequest};
+use crate::util::Json;
+
+/// A queued inference job plus its reply channel.
+struct Job {
+    req: ServeRequest,
+    reply: mpsc::Sender<String>,
+}
+
+/// Parse one request line.
+fn parse_request(line: &str) -> Result<ServeRequest> {
+    let j = Json::parse(line).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let id = j.req("id")?.as_usize().context("id")?;
+    let prompt: Vec<i32> = j
+        .req("prompt")?
+        .as_arr()
+        .context("prompt")?
+        .iter()
+        .map(|x| x.as_f64().unwrap_or(0.0) as i32)
+        .collect();
+    anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+    let max_new = j.get("max_new_tokens").and_then(|x| x.as_usize()).unwrap_or(16);
+    Ok(ServeRequest { id, prompt, max_new_tokens: max_new, arrival_s: 0.0 })
+}
+
+fn render_response(id: usize, output: &[i32], ttft_s: f64, tpot_s: f64) -> String {
+    let mut obj = BTreeMap::new();
+    obj.insert("id".to_string(), Json::Num(id as f64));
+    obj.insert(
+        "output".to_string(),
+        Json::Arr(output.iter().map(|&t| Json::Num(t as f64)).collect()),
+    );
+    obj.insert("ttft_ms".to_string(), Json::Num((ttft_s * 1e3 * 1e3).round() / 1e3));
+    obj.insert("tpot_ms".to_string(), Json::Num((tpot_s * 1e3 * 1e3).round() / 1e3));
+    Json::Obj(obj).dump()
+}
+
+/// Engine worker: drains the job queue, batching whatever is pending.
+fn engine_worker(mut engine: RealEngine, rx: mpsc::Receiver<Job>) {
+    while let Ok(first) = rx.recv() {
+        // micro-batch: grab everything already queued
+        let mut jobs = vec![first];
+        while let Ok(j) = rx.try_recv() {
+            jobs.push(j);
+        }
+        let reqs: Vec<ServeRequest> = jobs
+            .iter()
+            .enumerate()
+            .map(|(i, j)| ServeRequest { id: i, ..j.req.clone() })
+            .collect();
+        match engine.serve(reqs) {
+            Ok((results, _report)) => {
+                for r in results {
+                    let job = &jobs[r.id];
+                    let line = render_response(
+                        job.req.id,
+                        &r.output,
+                        r.record.ttft(),
+                        r.record.tpot(),
+                    );
+                    let _ = job.reply.send(line);
+                }
+            }
+            Err(e) => {
+                for job in &jobs {
+                    let _ = job.reply.send(format!("{{\"id\":{},\"error\":\"{e}\"}}", job.req.id));
+                }
+            }
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, tx: Arc<Mutex<mpsc::Sender<Job>>>) {
+    let peer = stream.peer_addr().ok();
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = match parse_request(&line) {
+            Ok(req) => {
+                let (rtx, rrx) = mpsc::channel();
+                {
+                    let guard = tx.lock().expect("engine queue poisoned");
+                    if guard.send(Job { req, reply: rtx }).is_err() {
+                        break;
+                    }
+                }
+                rrx.recv().unwrap_or_else(|_| "{\"error\":\"engine gone\"}".into())
+            }
+            Err(e) => format!("{{\"error\":\"{e}\"}}"),
+        };
+        if writeln!(writer, "{reply}").is_err() {
+            break;
+        }
+    }
+    let _ = peer;
+}
+
+/// Run the server (blocks forever).
+pub fn serve(addr: &str, artifacts_dir: &Path, device_budget: usize) -> Result<()> {
+    let (tx, rx) = mpsc::channel::<Job>();
+    // PJRT handles are not Send: the engine lives entirely on the worker
+    // thread; load errors come back over a one-shot channel.
+    let dir = artifacts_dir.to_path_buf();
+    let (init_tx, init_rx) = mpsc::channel::<Result<(), String>>();
+    std::thread::spawn(move || {
+        match RealEngine::load(
+            &dir,
+            RealEngineConfig {
+                device_kv_budget: device_budget,
+                policy: Policy::LayerKv { slo_aware: true },
+                max_batch: 8,
+            },
+        ) {
+            Ok(engine) => {
+                let _ = init_tx.send(Ok(()));
+                engine_worker(engine, rx);
+            }
+            Err(e) => {
+                let _ = init_tx.send(Err(format!("{e:#}")));
+            }
+        }
+    });
+    init_rx
+        .recv()
+        .context("engine thread died during init")?
+        .map_err(|e| anyhow::anyhow!(e))?;
+    let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    println!("layerkv serving on {addr} (artifacts: {})", artifacts_dir.display());
+    let tx = Arc::new(Mutex::new(tx));
+    for stream in listener.incoming().flatten() {
+        let tx = Arc::clone(&tx);
+        std::thread::spawn(move || handle_conn(stream, tx));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_valid_request() {
+        let r = parse_request(r#"{"id": 3, "prompt": [1, 2, 3], "max_new_tokens": 5}"#).unwrap();
+        assert_eq!(r.id, 3);
+        assert_eq!(r.prompt, vec![1, 2, 3]);
+        assert_eq!(r.max_new_tokens, 5);
+    }
+
+    #[test]
+    fn default_max_new_tokens() {
+        let r = parse_request(r#"{"id": 1, "prompt": [9]}"#).unwrap();
+        assert_eq!(r.max_new_tokens, 16);
+    }
+
+    #[test]
+    fn rejects_bad_requests() {
+        assert!(parse_request("not json").is_err());
+        assert!(parse_request(r#"{"id": 1}"#).is_err());
+        assert!(parse_request(r#"{"id": 1, "prompt": []}"#).is_err());
+    }
+
+    #[test]
+    fn response_roundtrips_as_json() {
+        let line = render_response(7, &[1, 2], 0.0123, 0.004);
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.req("id").unwrap().as_usize(), Some(7));
+        assert_eq!(j.req("output").unwrap().as_arr().unwrap().len(), 2);
+        assert!(j.req("ttft_ms").unwrap().as_f64().unwrap() > 12.0);
+    }
+}

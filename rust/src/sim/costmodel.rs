@@ -1,0 +1,241 @@
+//! Analytical cost models — the simulator's substitute for real GPU
+//! execution (DESIGN.md §2). Each formula is the one the paper itself uses
+//! to reason about overlap:
+//!
+//! * prefill time: Eq. 3 (superlinear in seqlen),
+//! * offload time: Eq. 4 (linear in seqlen),
+//! * decode step: memory-bound weights+KV streaming (standard roofline),
+//! * tensor-parallel all-reduce: per-layer ring cost on NVLink or PCIe.
+
+use crate::config::{Fabric, ServingConfig};
+
+/// Fraction of peak FLOPs a dense prefill achieves (MFU). Folded together
+/// with the paper's alpha this calibrates Eq. 3 to the L20 regime.
+const PREFILL_MFU: f64 = 0.75;
+/// Fixed per-step overhead (kernel launches, scheduler, sampler).
+const STEP_OVERHEAD_S: f64 = 2.0e-3;
+
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    pub cfg: ServingConfig,
+}
+
+impl CostModel {
+    pub fn new(cfg: ServingConfig) -> Self {
+        CostModel { cfg }
+    }
+
+    /// Eq. 3: T_prefill = alpha * s * (2*n_param + 2*s*hidden) / FLOPs,
+    /// with TP scaling and per-layer all-reduce added.
+    pub fn prefill_time(&self, seqlen: usize) -> f64 {
+        self.prefill_compute_time(seqlen) + STEP_OVERHEAD_S
+    }
+
+    /// Eq. 3 without the fixed step overhead — the window offloads can
+    /// actually overlap with (§3.1.1's x-solve uses this).
+    pub fn prefill_compute_time(&self, seqlen: usize) -> f64 {
+        let c = &self.cfg;
+        let s = seqlen as f64;
+        let flops = s * (2.0 * c.model.n_params as f64 + 2.0 * s * c.model.hidden as f64);
+        let device_flops = c.node.gpu.peak_flops * PREFILL_MFU * c.tp as f64;
+        let compute = c.alpha * flops / device_flops;
+        compute + self.allreduce_time(seqlen)
+    }
+
+    /// Eq. 4: offload time for `layers` layers of a `seqlen`-token KV
+    /// shard over the (per-GPU share of the) PCIe link.
+    pub fn offload_time(&self, seqlen: usize, layers: usize) -> f64 {
+        if layers == 0 || seqlen == 0 {
+            return 0.0;
+        }
+        let c = &self.cfg;
+        let bytes_per_gpu = seqlen as f64
+            * layers as f64
+            * c.offload_bytes_per_token_layer()
+            / c.tp as f64;
+        c.beta * bytes_per_gpu / self.pcie_bw_per_gpu() + c.node.pcie.latency
+    }
+
+    /// Effective host link bandwidth one GPU sees (testbed: two GPUs share
+    /// each PCIe connection).
+    pub fn pcie_bw_per_gpu(&self) -> f64 {
+        let c = &self.cfg;
+        let sharing = c.node.pcie.gpus_per_link.min(c.tp.max(1)) as f64;
+        c.node.pcie.bandwidth / sharing
+    }
+
+    /// §3.1.1: minimum layers that must stay resident so offloading the
+    /// other L-x fully hides under the prefill (T_offload <= T_prefill).
+    /// Long prompts push x to 0; short prompts keep x near L.
+    pub fn min_resident_layers(&self, seqlen: usize) -> usize {
+        let l = self.cfg.model.n_layers;
+        let t_prefill = self.prefill_compute_time(seqlen);
+        // offload_time is linear in `layers`; solve for the largest
+        // offloadable count, then x = L - offloadable.
+        let per_layer = self.offload_time(seqlen, 1);
+        if per_layer <= 0.0 {
+            return 0;
+        }
+        let offloadable = (t_prefill / per_layer).floor() as usize;
+        l.saturating_sub(offloadable)
+    }
+
+    /// One iteration of batched decode. Memory-bound: stream the weight
+    /// shard once plus every running request's resident KV; compute rides
+    /// under that. `ctx_lens` are the current context lengths.
+    pub fn decode_step_time(&self, ctx_lens: &[usize]) -> f64 {
+        if ctx_lens.is_empty() {
+            return 0.0;
+        }
+        let c = &self.cfg;
+        let weights = c.weight_bytes_per_gpu() as f64 / c.node.gpu.mem_bw;
+        let kv_bytes: f64 = ctx_lens
+            .iter()
+            .map(|&s| s as f64 * c.model.kv_bytes_per_token() as f64 / c.tp as f64)
+            .sum();
+        let kv = kv_bytes / c.node.gpu.mem_bw;
+        let flops = 2.0 * c.model.n_params as f64 * ctx_lens.len() as f64;
+        let compute = flops / (c.node.gpu.peak_flops * c.tp as f64);
+        (weights + kv).max(compute) + self.allreduce_time(ctx_lens.len()) + STEP_OVERHEAD_S
+    }
+
+    /// Per-forward-pass all-reduce cost under TP: two all-reduces per layer
+    /// over `tokens` activations (§3.1.3). On NVLink this is fast and off
+    /// the PCIe; on PCIe-fabric nodes it shares the link with KV swaps.
+    pub fn allreduce_time(&self, tokens: usize) -> f64 {
+        let c = &self.cfg;
+        if c.tp <= 1 {
+            return 0.0;
+        }
+        let bytes = tokens as f64 * c.model.hidden as f64 * c.model.dtype_bytes as f64;
+        // ring all-reduce moves 2*(tp-1)/tp of the data per rank
+        let ring = 2.0 * (c.tp as f64 - 1.0) / c.tp as f64;
+        let (bw, lat) = match c.node.fabric {
+            Fabric::NvLink => (c.node.nvlink_bw, 3.0e-6),
+            Fabric::Pcie => (self.pcie_bw_per_gpu(), c.node.pcie.latency),
+        };
+        let per_allreduce = ring * bytes / bw + lat;
+        2.0 * c.model.n_layers as f64 * per_allreduce
+    }
+
+    /// Time to fetch `layers` layers of a `seqlen` KV shard host->device
+    /// (decode-phase streaming of offloaded layers). Same link as offload.
+    pub fn onload_time(&self, seqlen: usize, layers: usize) -> f64 {
+        self.offload_time(seqlen, layers)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{NodeSpec, Policy, ServingConfig};
+
+    fn cm() -> CostModel {
+        CostModel::new(ServingConfig::llama2_7b_tp1())
+    }
+
+    #[test]
+    fn prefill_superlinear() {
+        let m = cm();
+        let t1 = m.prefill_compute_time(1024);
+        let t16 = m.prefill_compute_time(16 * 1024);
+        // 16x tokens must cost MORE than 16x time (quadratic attention term)
+        assert!(t16 > 16.0 * t1, "t1={t1} t16={t16}");
+    }
+
+    #[test]
+    fn prefill_regime_matches_paper_fig1() {
+        // Fig. 1b: prefill latency ~ O(0.1s) at 1-2k, ~seconds at 16k.
+        let m = cm();
+        assert!(m.prefill_time(128) < 0.1);
+        let t16k = m.prefill_time(16 * 1024);
+        assert!((1.0..10.0).contains(&t16k), "t16k={t16k}");
+    }
+
+    #[test]
+    fn offload_linear_in_layers_and_tokens() {
+        let m = cm();
+        let t1 = m.offload_time(1024, 8) - m.cfg.node.pcie.latency;
+        let t2 = m.offload_time(2048, 8) - m.cfg.node.pcie.latency;
+        let t3 = m.offload_time(1024, 16) - m.cfg.node.pcie.latency;
+        assert!((t2 / t1 - 2.0).abs() < 1e-9);
+        assert!((t3 / t1 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn long_prompts_need_zero_resident_layers() {
+        let m = cm();
+        // Paper §3.1.1: "When the prompt is long, x can be zero". On the
+        // L20 (fast PCIe relative to 7B prefill FLOPs) x reaches 0 early.
+        assert_eq!(m.min_resident_layers(16 * 1024), 0);
+        // monotone non-increasing in seqlen
+        let xs: Vec<usize> =
+            [32, 128, 512, 2048, 8192].iter().map(|&s| m.min_resident_layers(s)).collect();
+        assert!(xs.windows(2).all(|w| w[1] <= w[0]), "{xs:?}");
+    }
+
+    #[test]
+    fn short_prompts_retain_layers_when_link_is_slow() {
+        // Paper §3.1.1: "when the prompt is short, x is greater than zero,
+        // requiring at least x KV cache layers to remain in GPU memory".
+        // The crossover depends on link speed vs compute; on a constrained
+        // link (e.g. the per-GPU share of a contended gen3 x8) it shows up
+        // at realistic prompt lengths.
+        let mut cfg = ServingConfig::llama2_7b_tp1();
+        cfg.node.pcie.bandwidth = 1.0e9; // ~1 GB/s effective share
+        let m = CostModel::new(cfg);
+        let x_short = m.min_resident_layers(64);
+        let x_long = m.min_resident_layers(16 * 1024);
+        assert!(x_short > 0, "x_short={x_short}");
+        // Eqs. 3-4 are both ~linear in s until the quadratic attention
+        // term bites (s ~ n_param/hidden), so x is only *weakly* monotone
+        // across realistic prompt lengths — see DESIGN.md §7.
+        assert!(x_long <= x_short, "x_long={x_long} x_short={x_short}");
+    }
+
+    #[test]
+    fn offload_hides_under_prefill_at_solved_x() {
+        let m = cm();
+        for s in [64usize, 256, 1024, 4096, 16384] {
+            let x = m.min_resident_layers(s);
+            let l = m.cfg.model.n_layers;
+            assert!(
+                m.offload_time(s, l - x) <= m.prefill_time(s) + 1e-9,
+                "s={s} x={x}"
+            );
+        }
+    }
+
+    #[test]
+    fn decode_step_in_tpot_regime() {
+        // L20 + 7B: weights stream = 13.5GB/864GB/s ~ 15.6ms; with batch
+        // KV this lands in the paper's 20-60ms TPOT band.
+        let m = cm();
+        let t = m.decode_step_time(&[1024; 8]);
+        assert!((0.015..0.1).contains(&t), "t={t}");
+        // larger contexts stream more KV
+        assert!(m.decode_step_time(&[8192; 8]) > t);
+    }
+
+    #[test]
+    fn tp_speeds_up_prefill_but_adds_allreduce() {
+        let c2 = ServingConfig::yi_34b_tp2().with_policy(Policy::Vllm);
+        let mut c4 = ServingConfig::yi_34b_tp2();
+        c4.tp = 4;
+        let m2 = CostModel::new(c2);
+        let m4 = CostModel::new(c4);
+        assert!(m4.prefill_time(4096) < m2.prefill_time(4096));
+        assert!(m4.allreduce_time(4096) > 0.0);
+    }
+
+    #[test]
+    fn nvlink_allreduce_cheaper_than_pcie() {
+        let mut pcie = ServingConfig::yi_34b_tp2();
+        pcie.node = NodeSpec::l20_node();
+        let mut nv = ServingConfig::yi_34b_tp2();
+        nv.node = NodeSpec::l20_node_nvlink();
+        assert!(
+            CostModel::new(nv).allreduce_time(2048) < CostModel::new(pcie).allreduce_time(2048)
+        );
+    }
+}

@@ -1,0 +1,13 @@
+//! The discrete-event substrate that stands in for the paper's L20
+//! testbed: analytical cost models (Eqs. 3-4 + roofline decode) and a PCIe
+//! link occupancy model with the §3.1.3 contention mechanism.
+//!
+//! The *policies* under study (schedulers, allocators, offload planning)
+//! live in `coordinator/` and are shared between this simulated executor
+//! and the real PJRT executor — the simulator only supplies time.
+
+pub mod costmodel;
+pub mod pcie;
+
+pub use costmodel::CostModel;
+pub use pcie::{BusyWindow, PcieLink, SwapOutcome};

@@ -1,0 +1,11 @@
+//! In-tree substrates replacing crates unavailable in the offline build
+//! (DESIGN.md §2): PRNG/distributions, JSON, statistics, property testing.
+
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+pub use json::Json;
+pub use rng::Rng;
+pub use stats::{Histogram, Series};

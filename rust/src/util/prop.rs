@@ -1,0 +1,75 @@
+//! Tiny property-testing harness (in-tree substitute for `proptest`,
+//! unavailable offline — DESIGN.md §2).
+//!
+//! Runs a property over N seeded random cases; on failure it reports the
+//! failing seed so the case replays deterministically:
+//!
+//! ```ignore
+//! prop(1000, |rng| {
+//!     let len = rng.range_usize(1, 100);
+//!     // ... build inputs, assert invariants ...
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Number of cases can be overridden with LAYERKV_PROP_CASES.
+pub fn default_cases(requested: usize) -> usize {
+    std::env::var("LAYERKV_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(requested)
+}
+
+/// Run `body` for `cases` seeded cases. Panics (with the seed) on the first
+/// failing case. `body` panicking is the failure signal, so plain `assert!`
+/// works inside.
+pub fn prop<F: Fn(&mut Rng) + std::panic::RefUnwindSafe>(cases: usize, body: F) {
+    let cases = default_cases(cases);
+    let base = std::env::var("LAYERKV_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEEu64);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Rng::new(seed);
+            body(&mut rng);
+        });
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property failed on case {case} (replay with LAYERKV_PROP_SEED={base} \
+                 LAYERKV_PROP_CASES={n}): {msg}",
+                n = case + 1,
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let count = std::sync::atomic::AtomicUsize::new(0);
+        prop(50, |_rng| {
+            count.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+        });
+        assert_eq!(count.load(std::sync::atomic::Ordering::SeqCst), 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_reports_seed() {
+        prop(50, |rng| {
+            let x = rng.range(0, 10);
+            assert!(x < 5, "x={x}");
+        });
+    }
+}

@@ -1,0 +1,194 @@
+//! Summary statistics for latency series: mean, percentiles, histograms.
+
+/// Accumulates samples and answers mean/percentile queries.
+#[derive(Debug, Default, Clone)]
+pub struct Series {
+    samples: Vec<f64>,
+    sorted: bool,
+}
+
+impl Series {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.samples.push(x);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn std(&self) -> f64 {
+        if self.samples.len() < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.samples.iter().map(|x| (x - m).powi(2)).sum::<f64>()
+            / (self.samples.len() - 1) as f64)
+            .sqrt()
+    }
+
+    /// Linear-interpolated percentile, q in [0, 100].
+    pub fn percentile(&mut self, q: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        if !self.sorted {
+            self.samples
+                .sort_by(|a, b| a.partial_cmp(b).expect("NaN sample"));
+            self.sorted = true;
+        }
+        let n = self.samples.len();
+        if n == 1 {
+            return self.samples[0];
+        }
+        let rank = q / 100.0 * (n - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        let frac = rank - lo as f64;
+        self.samples[lo] * (1.0 - frac) + self.samples[hi.min(n - 1)] * frac
+    }
+
+    pub fn p50(&mut self) -> f64 {
+        self.percentile(50.0)
+    }
+    pub fn p99(&mut self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    /// Fraction of samples strictly above a threshold.
+    pub fn frac_above(&self, threshold: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().filter(|&&x| x > threshold).count() as f64
+            / self.samples.len() as f64
+    }
+
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+}
+
+/// Fixed-bucket histogram (for reports / ASCII plots).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub counts: Vec<u64>,
+    pub underflow: u64,
+    pub overflow: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, buckets: usize) -> Self {
+        assert!(hi > lo && buckets > 0);
+        Histogram { lo, hi, counts: vec![0; buckets], underflow: 0, overflow: 0 }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        if x < self.lo {
+            self.underflow += 1;
+        } else if x >= self.hi {
+            self.overflow += 1;
+        } else {
+            let n = self.counts.len();
+            let b = ((x - self.lo) / (self.hi - self.lo) * n as f64) as usize;
+            self.counts[b.min(n - 1)] += 1;
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum::<u64>() + self.underflow + self.overflow
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_percentiles() {
+        let mut s = Series::new();
+        for i in 1..=100 {
+            s.push(i as f64);
+        }
+        assert!((s.mean() - 50.5).abs() < 1e-9);
+        assert!((s.percentile(0.0) - 1.0).abs() < 1e-9);
+        assert!((s.percentile(100.0) - 100.0).abs() < 1e-9);
+        assert!((s.p50() - 50.5).abs() < 1e-9);
+        assert!((s.p99() - 99.01).abs() < 0.02);
+    }
+
+    #[test]
+    fn empty_series_is_zero() {
+        let mut s = Series::new();
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.percentile(99.0), 0.0);
+    }
+
+    #[test]
+    fn frac_above() {
+        let mut s = Series::new();
+        for i in 0..10 {
+            s.push(i as f64);
+        }
+        assert!((s.frac_above(6.5) - 0.3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_after_push_resorts() {
+        let mut s = Series::new();
+        s.push(5.0);
+        assert_eq!(s.p50(), 5.0);
+        s.push(1.0);
+        s.push(9.0);
+        assert_eq!(s.p50(), 5.0);
+        assert_eq!(s.percentile(0.0), 1.0);
+    }
+
+    #[test]
+    fn histogram_buckets() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for i in 0..10 {
+            h.add(i as f64 + 0.5);
+        }
+        h.add(-1.0);
+        h.add(100.0);
+        assert_eq!(h.counts, vec![1; 10]);
+        assert_eq!(h.underflow, 1);
+        assert_eq!(h.overflow, 1);
+        assert_eq!(h.total(), 12);
+    }
+
+    #[test]
+    fn std_of_constant_is_zero() {
+        let mut s = Series::new();
+        s.push(3.0);
+        s.push(3.0);
+        s.push(3.0);
+        assert_eq!(s.std(), 0.0);
+    }
+}

@@ -1,0 +1,69 @@
+//! Arrival processes.
+
+use crate::util::Rng;
+
+/// Arrival time generator.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Arrivals {
+    /// Poisson process with the given rate (req/s) — what the paper uses.
+    Poisson { rate: f64 },
+    /// Deterministic: one request every 1/rate seconds.
+    Uniform { rate: f64 },
+    /// Everything arrives at t=0 (offline/batch setting).
+    Burst,
+}
+
+impl Arrivals {
+    /// Generate `n` arrival timestamps (sorted, starting at ~0).
+    pub fn generate(&self, n: usize, rng: &mut Rng) -> Vec<f64> {
+        let mut out = Vec::with_capacity(n);
+        let mut t = 0.0;
+        for _ in 0..n {
+            match self {
+                Arrivals::Poisson { rate } => {
+                    t += rng.exponential(*rate);
+                }
+                Arrivals::Uniform { rate } => {
+                    t += 1.0 / rate;
+                }
+                Arrivals::Burst => {}
+            }
+            out.push(t);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_mean_interarrival() {
+        let mut rng = Rng::new(1);
+        let ts = Arrivals::Poisson { rate: 4.0 }.generate(20_000, &mut rng);
+        let mean = ts.last().unwrap() / 20_000.0;
+        assert!((mean - 0.25).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn uniform_is_even() {
+        let mut rng = Rng::new(1);
+        let ts = Arrivals::Uniform { rate: 2.0 }.generate(4, &mut rng);
+        assert_eq!(ts, vec![0.5, 1.0, 1.5, 2.0]);
+    }
+
+    #[test]
+    fn burst_is_zero() {
+        let mut rng = Rng::new(1);
+        let ts = Arrivals::Burst.generate(3, &mut rng);
+        assert_eq!(ts, vec![0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn sorted_nondecreasing() {
+        let mut rng = Rng::new(9);
+        let ts = Arrivals::Poisson { rate: 1.0 }.generate(1000, &mut rng);
+        assert!(ts.windows(2).all(|w| w[1] >= w[0]));
+    }
+}

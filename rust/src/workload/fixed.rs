@@ -1,0 +1,55 @@
+//! Fixed-length workloads (Figs. 1, 4, 5): prompt length swept 128 -> 16k,
+//! output pinned to 512, arrival rate 1 req/s, 100 requests.
+
+use super::arrivals::Arrivals;
+use super::{Trace, TraceRequest};
+use crate::util::Rng;
+
+#[derive(Debug, Clone)]
+pub struct FixedWorkload {
+    pub prompt_len: usize,
+    pub output_len: usize,
+    pub n_requests: usize,
+    pub arrivals: Arrivals,
+}
+
+impl FixedWorkload {
+    /// The paper's Fig. 1/4 configuration at a given context length.
+    pub fn paper(prompt_len: usize) -> Self {
+        FixedWorkload {
+            prompt_len,
+            output_len: 512,
+            n_requests: 100,
+            arrivals: Arrivals::Poisson { rate: 1.0 },
+        }
+    }
+
+    pub fn generate(&self, rng: &mut Rng) -> Trace {
+        let times = self.arrivals.generate(self.n_requests, rng);
+        let requests = times
+            .into_iter()
+            .enumerate()
+            .map(|(id, arrival)| TraceRequest {
+                id,
+                arrival,
+                prompt_len: self.prompt_len,
+                output_len: self.output_len,
+            })
+            .collect();
+        Trace { requests }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_shape() {
+        let mut rng = Rng::new(0);
+        let t = FixedWorkload::paper(2048).generate(&mut rng);
+        t.validate().unwrap();
+        assert_eq!(t.len(), 100);
+        assert!(t.requests.iter().all(|r| r.prompt_len == 2048 && r.output_len == 512));
+    }
+}

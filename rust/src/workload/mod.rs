@@ -1,0 +1,95 @@
+//! Workload generation: the request traces the paper evaluates on.
+//!
+//! * fixed-length sweeps (Figs. 1, 4, 5): every prompt the same length,
+//!   output fixed at 512 tokens, Poisson arrivals at 1 req/s;
+//! * ShareGPT-like traces (Figs. 6-8): a synthetic mixture fitted to the
+//!   reported ShareGPT range (4 - 2.3K tokens), Poisson arrivals swept
+//!   over rates.
+
+pub mod arrivals;
+pub mod fixed;
+pub mod sharegpt;
+pub mod trace;
+
+pub use arrivals::Arrivals;
+
+/// One request as the workload layer hands it to the engine.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceRequest {
+    pub id: usize,
+    /// Seconds since trace start.
+    pub arrival: f64,
+    pub prompt_len: usize,
+    /// True output length (the engine stops there; the predictor only sees
+    /// a noisy bucket of it).
+    pub output_len: usize,
+}
+
+/// A full trace, sorted by arrival time.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub requests: Vec<TraceRequest>,
+}
+
+impl Trace {
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+
+    /// Sanity: arrivals sorted, ids unique and dense.
+    pub fn validate(&self) -> Result<(), String> {
+        for w in self.requests.windows(2) {
+            if w[1].arrival < w[0].arrival {
+                return Err(format!(
+                    "arrivals out of order: {} after {}",
+                    w[1].arrival, w[0].arrival
+                ));
+            }
+        }
+        for (i, r) in self.requests.iter().enumerate() {
+            if r.id != i {
+                return Err(format!("non-dense id {} at index {i}", r.id));
+            }
+            if r.prompt_len == 0 || r.output_len == 0 {
+                return Err(format!("degenerate request {}", r.id));
+            }
+        }
+        Ok(())
+    }
+
+    pub fn total_tokens(&self) -> usize {
+        self.requests.iter().map(|r| r.prompt_len + r.output_len).sum()
+    }
+
+    pub fn max_prompt_len(&self) -> usize {
+        self.requests.iter().map(|r| r.prompt_len).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validate_catches_disorder() {
+        let t = Trace {
+            requests: vec![
+                TraceRequest { id: 0, arrival: 1.0, prompt_len: 8, output_len: 8 },
+                TraceRequest { id: 1, arrival: 0.5, prompt_len: 8, output_len: 8 },
+            ],
+        };
+        assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn validate_catches_bad_ids() {
+        let t = Trace {
+            requests: vec![TraceRequest { id: 3, arrival: 0.0, prompt_len: 8, output_len: 8 }],
+        };
+        assert!(t.validate().is_err());
+    }
+}

@@ -1,0 +1,92 @@
+//! Trace import/export: save generated workloads and replay recorded ones
+//! (JSON lines — one request per line), so experiments are reproducible
+//! across machines and real request logs can be fed to the engine.
+
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::{Trace, TraceRequest};
+use crate::util::Json;
+
+/// Write a trace as JSON-lines: {"id":0,"arrival":0.13,"prompt_len":...}.
+pub fn save(trace: &Trace, path: &Path) -> Result<()> {
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    for r in &trace.requests {
+        writeln!(
+            f,
+            r#"{{"id":{},"arrival":{},"prompt_len":{},"output_len":{}}}"#,
+            r.id, r.arrival, r.prompt_len, r.output_len
+        )?;
+    }
+    Ok(())
+}
+
+/// Load a JSON-lines trace; validates ordering/ids.
+pub fn load(path: &Path) -> Result<Trace> {
+    let f = std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?;
+    let mut requests = Vec::new();
+    for (lineno, line) in BufReader::new(f).lines().enumerate() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = Json::parse(&line)
+            .map_err(|e| anyhow::anyhow!("{}:{}: {e}", path.display(), lineno + 1))?;
+        requests.push(TraceRequest {
+            id: j.req("id")?.as_usize().context("id")?,
+            arrival: j.req("arrival")?.as_f64().context("arrival")?,
+            prompt_len: j.req("prompt_len")?.as_usize().context("prompt_len")?,
+            output_len: j.req("output_len")?.as_usize().context("output_len")?,
+        });
+    }
+    let trace = Trace { requests };
+    trace.validate().map_err(|e| anyhow::anyhow!("invalid trace: {e}"))?;
+    Ok(trace)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+    use crate::workload::sharegpt::ShareGptWorkload;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join(format!("layerkv-trace-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.jsonl");
+        let t = ShareGptWorkload::paper(2.0, 50).generate(&mut Rng::new(3));
+        save(&t, &path).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(t.requests, back.requests);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_corrupt_lines() {
+        let dir = std::env::temp_dir().join(format!("layerkv-trace-bad-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.jsonl");
+        std::fs::write(&path, "{\"id\":0}\n").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::write(&path, "not json\n").unwrap();
+        assert!(load(&path).is_err());
+        // out-of-order arrivals rejected by validation
+        std::fs::write(
+            &path,
+            "{\"id\":0,\"arrival\":5.0,\"prompt_len\":8,\"output_len\":8}\n\
+             {\"id\":1,\"arrival\":1.0,\"prompt_len\":8,\"output_len\":8}\n",
+        )
+        .unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_file_is_error() {
+        assert!(load(Path::new("/nonexistent/trace.jsonl")).is_err());
+    }
+}
