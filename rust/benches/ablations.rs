@@ -17,25 +17,30 @@ fn main() {
     let n = if exp::quick() { 30 } else { 100 };
 
     // --- 1. retained-layer policy -----------------------------------
+    // §Perf: independent cells fan across cores (exp::par_map), rows stay
+    // in sweep order.
     let mut t = Table::new(
         "Ablation: retained layers x at admission (7B, ctx 8192, 1 req/s)",
         &["x policy", "TTFT mean(s)", "TPOT mean(s)", "tput tok/s"],
     );
-    for (name, x_override) in [
+    let cells = [
         ("solve Eq.3/4", None),
         ("x = 0 (offload all)", Some(0)),
         ("x = L/2", Some(16)),
         ("x = L (no offload)", Some(32)),
-    ] {
+    ];
+    for row in exp::par_map(&cells, |&(name, x_override)| {
         let mut cfg = exp::setup("7b").with_policy(Policy::LayerKv { slo_aware: true });
         cfg.x_override = x_override;
         let rep = exp::run_fixed(cfg, 8192, n, 23);
-        t.row(&[
+        [
             name.to_string(),
             format!("{:.2}", rep.ttft().mean()),
             format!("{:.4}", rep.tpot().mean()),
             format!("{:.1}", rep.throughput_tok_s()),
-        ]);
+        ]
+    }) {
+        t.row(&row);
     }
     t.print();
 
@@ -44,18 +49,20 @@ fn main() {
         "Ablation: output-length predictor accuracy (7B, ShareGPT-like, 7 req/s)",
         &["bucket accuracy", "TTFT mean(s)", "violations %"],
     );
-    for acc in [1.0, 0.8, 0.5, 0.2] {
+    for row in exp::par_map(&[1.0, 0.8, 0.5, 0.2], |&acc| {
         let cfg = exp::setup("7b").with_policy(Policy::LayerKv { slo_aware: true });
         // rate past the saturation knee so the forecast/slack paths that
         // consume the prediction actually bind
         let trace = layerkv::workload::sharegpt::ShareGptWorkload::paper(7.0, n * 5)
             .generate(&mut Rng::new(29));
         let (rep, _) = run_trace(cfg.clone(), &trace, acc);
-        t.row(&[
+        [
             format!("{acc:.1}"),
             format!("{:.2}", rep.ttft().mean()),
             format!("{:.1}", 100.0 * rep.slo_violation_rate(&cfg.slo)),
-        ]);
+        ]
+    }) {
+        t.row(&row);
     }
     t.print();
 
@@ -83,17 +90,19 @@ fn main() {
         "Ablation: Eq. 5 proactive-offload threshold (7B, ctx 4096, 1 req/s)",
         &["threshold frac", "TTFT mean(s)", "TPOT mean(s)"],
     );
-    for thresh in [0.0, 0.05, 0.10, 0.25] {
+    for row in exp::par_map(&[0.0, 0.05, 0.10, 0.25], |&thresh| {
         let mut cfg = exp::setup("7b").with_policy(Policy::LayerKv { slo_aware: true });
         cfg.avail_threshold_frac = thresh;
         let trace = FixedWorkload::paper(4096).generate(&mut Rng::new(31));
         let trace = layerkv::workload::Trace { requests: trace.requests[..n].to_vec() };
         let (rep, _) = run_trace(cfg, &trace, exp::PREDICTOR_ACC);
-        t.row(&[
+        [
             format!("{thresh:.2}"),
             format!("{:.2}", rep.ttft().mean()),
             format!("{:.4}", rep.tpot().mean()),
-        ]);
+        ]
+    }) {
+        t.row(&row);
     }
     t.print();
 
@@ -104,22 +113,25 @@ fn main() {
             "Extension (§8): offload-path KV quantization (7B, ctx 8192, 1 req/s)",
             &["offload precision", "TTFT mean(s)", "TPOT mean(s)", "offload GB"],
         );
-        for (name, q) in [
+        let cells = [
             ("fp16 (lossless)", OffloadQuant::None),
             ("fp8", OffloadQuant::Fp8),
             ("int4", OffloadQuant::Int4),
-        ] {
+        ];
+        for row in exp::par_map(&cells, |&(name, q)| {
             let mut cfg = exp::setup("7b").with_policy(Policy::LayerKv { slo_aware: true });
             cfg.offload_quant = q;
             let trace = FixedWorkload::paper(8192).generate(&mut Rng::new(37));
             let trace = layerkv::workload::Trace { requests: trace.requests[..n].to_vec() };
             let (rep, stats) = run_trace(cfg, &trace, exp::PREDICTOR_ACC);
-            t.row(&[
+            [
                 name.to_string(),
                 format!("{:.2}", rep.ttft().mean()),
                 format!("{:.4}", rep.tpot().mean()),
                 format!("{:.2}", stats.offload_bytes / 1e9),
-            ]);
+            ]
+        }) {
+            t.row(&row);
         }
         t.print();
     }

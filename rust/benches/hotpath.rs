@@ -5,18 +5,115 @@
 //! * one simulated engine decode step;
 //! * PcieLink chunked-swap scheduling;
 //! * real PJRT prefill/decode latency (skipped if artifacts are absent).
+//!
+//! Results also land in `BENCH_hotpath.json` (name, ns/iter, iters) so the
+//! perf trajectory is comparable across PRs.
 
-use layerkv::benchutil::{bench, black_box};
+use layerkv::benchutil::{bench, black_box, write_results_json};
 use layerkv::config::{Policy, ServingConfig};
 use layerkv::coordinator::block::KvManager;
 use layerkv::coordinator::predict::LengthPredictor;
+use layerkv::coordinator::request::{Phase, Request};
 use layerkv::coordinator::run_trace;
-use layerkv::sim::{BusyWindow, PcieLink};
+use layerkv::coordinator::scheduler::{
+    LayerKvScheduler, SchedContext, Scheduler, VllmScheduler,
+};
+use layerkv::sim::{BusyWindow, CostModel, PcieLink};
 use layerkv::util::Rng;
 use layerkv::workload::fixed::FixedWorkload;
 use layerkv::workload::arrivals::Arrivals;
+use layerkv::workload::TraceRequest;
+
+/// Deep-queue scheduler fixture: 64 decoding requests holding most of the
+/// pool, 512 waiting long prompts behind them.
+struct SchedFixture {
+    cfg: ServingConfig,
+    cost: CostModel,
+    kv: KvManager,
+    requests: Vec<Request>,
+    waiting: Vec<usize>,
+    running: Vec<usize>,
+}
+
+impl SchedFixture {
+    fn new(policy: Policy) -> Self {
+        Self::with_pool(policy, 200_000)
+    }
+
+    fn with_pool(policy: Policy, gpu_layer_blocks: usize) -> Self {
+        let cfg = ServingConfig::llama2_7b_tp1().with_policy(policy);
+        let cost = CostModel::new(cfg.clone());
+        let mut kv =
+            KvManager::new(gpu_layer_blocks, 1_000_000, cfg.block_size, cfg.model.n_layers);
+        let mut requests = Vec::new();
+        let mut running = Vec::new();
+        for i in 0..64usize {
+            let id = requests.len();
+            let mut r = Request::from_trace(
+                &TraceRequest { id, arrival: 0.0, prompt_len: 1024, output_len: 512 },
+                (256, 512),
+            );
+            r.phase = Phase::Decoding;
+            r.generated = 32;
+            r.prefill_start = Some(0.1 + i as f64 * 0.05);
+            r.first_token = Some(0.2 + i as f64 * 0.05);
+            requests.push(r);
+            kv.allocate_full(id, 1024 + 32).expect("fixture decode alloc");
+            running.push(id);
+        }
+        let mut waiting = Vec::new();
+        for _ in 0..512usize {
+            let id = requests.len();
+            requests.push(Request::from_trace(
+                &TraceRequest { id, arrival: 1.0, prompt_len: 8192, output_len: 512 },
+                (256, 512),
+            ));
+            waiting.push(id);
+        }
+        SchedFixture { cfg, cost, kv, requests, waiting, running }
+    }
+
+    fn ctx(&self, now: f64) -> SchedContext<'_> {
+        SchedContext {
+            now,
+            waiting: &self.waiting,
+            running: &self.running,
+            requests: &self.requests,
+            kv: &self.kv,
+            cost: &self.cost,
+            cfg: &self.cfg,
+        }
+    }
+}
 
 fn main() {
+    // --- scheduler decision latency -----------------------------------
+    {
+        let f = SchedFixture::new(Policy::Vllm);
+        let mut s = VllmScheduler::new();
+        bench("scheduler/vllm_decide_deep_queue", 2.0, || {
+            black_box(s.decide(&f.ctx(5.0)));
+        });
+    }
+    {
+        let f = SchedFixture::new(Policy::LayerKv { slo_aware: true });
+        let mut s = LayerKvScheduler::new(true);
+        s.observe_decode_step(0.15);
+        bench("scheduler/layerkv_decide_deep_queue", 2.0, || {
+            black_box(s.decide(&f.ctx(5.0)));
+        });
+        // tight pool so the Eq. 5 forecast actually runs (the 25%-free
+        // fast-path gate would skip it on the roomy fixture); fresh
+        // scheduler because the threshold cache is per-pool, as in
+        // production where make_scheduler is per-engine
+        let tight = SchedFixture::with_pool(Policy::LayerKv { slo_aware: true }, 150_000);
+        let mut st = LayerKvScheduler::new(true);
+        st.observe_decode_step(0.15);
+        bench("scheduler/layerkv_proactive_offload_check", 2.0, || {
+            black_box(st.proactive_offloads(&tight.ctx(5.0)));
+        });
+    }
+
     // --- allocator ----------------------------------------------------
     bench("kv_manager/alloc_release_64_layerwise", 2.0, || {
         let mut m = KvManager::new(100_000, 500_000, 16, 32);
@@ -112,4 +209,7 @@ fn main() {
     } else {
         println!("pjrt benches skipped: run `make artifacts` first");
     }
+
+    // machine-readable perf trajectory, tracked across PRs
+    write_results_json("BENCH_hotpath.json").expect("writing bench json");
 }

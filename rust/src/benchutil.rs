@@ -5,8 +5,17 @@
 //! report mean / stddev / min like criterion's summary line, and print the
 //! experiment tables the paper's figures correspond to. `cargo bench`
 //! runs them all.
+//!
+//! Every `bench()` result is also recorded in-process; a bench binary
+//! calls `write_results_json` before exiting to dump the machine-readable
+//! series (name, ns/iter, iters) — `hotpath.rs` writes `BENCH_hotpath.json`
+//! so the perf trajectory is tracked across PRs.
 
+use std::sync::Mutex;
 use std::time::Instant;
+
+/// Results recorded by `bench()` in program order.
+static RESULTS: Mutex<Vec<BenchResult>> = Mutex::new(Vec::new());
 
 /// Timing summary for one benchmark.
 #[derive(Debug, Clone)]
@@ -81,7 +90,55 @@ pub fn bench<F: FnMut()>(name: &str, budget_s: f64, mut f: F) -> BenchResult {
         min_s: min,
     };
     r.print();
+    RESULTS.lock().unwrap().push(r.clone());
     r
+}
+
+/// Minimal JSON string escaping (names are plain identifiers, but stay
+/// strict anyway).
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// All results recorded so far, rendered as a JSON array of
+/// `{name, ns_per_iter, std_ns, min_ns, iters}` objects.
+pub fn results_json() -> String {
+    let results = RESULTS.lock().unwrap();
+    let mut out = String::from("[\n");
+    for (i, r) in results.iter().enumerate() {
+        out.push_str(&format!(
+            "  {{\"name\": \"{}\", \"ns_per_iter\": {:.1}, \"std_ns\": {:.1}, \"min_ns\": {:.1}, \"iters\": {}}}{}\n",
+            json_escape(&r.name),
+            r.mean_s * 1e9,
+            r.std_s * 1e9,
+            r.min_s * 1e9,
+            r.iters,
+            if i + 1 < results.len() { "," } else { "" },
+        ));
+    }
+    out.push_str("]\n");
+    out
+}
+
+/// Dump every recorded result to `path` (bench binaries call this last;
+/// `hotpath.rs` uses `BENCH_hotpath.json`). `LAYERKV_BENCH_JSON` overrides
+/// the destination.
+pub fn write_results_json(path: &str) -> std::io::Result<()> {
+    let path = std::env::var("LAYERKV_BENCH_JSON").unwrap_or_else(|_| path.to_string());
+    std::fs::write(&path, results_json())?;
+    println!("bench results written to {path}");
+    Ok(())
 }
 
 /// Black-box to keep the optimizer honest.
@@ -110,5 +167,24 @@ mod tests {
         assert!(fmt_time(2e-3).ends_with(" ms"));
         assert!(fmt_time(2e-6).contains("µs"));
         assert!(fmt_time(2e-9).ends_with(" ns"));
+    }
+
+    #[test]
+    fn results_json_records_benches() {
+        bench("json-probe", 0.01, || {
+            black_box(1 + 1);
+        });
+        let json = results_json();
+        assert!(json.starts_with('['));
+        assert!(json.trim_end().ends_with(']'));
+        assert!(json.contains("\"name\": \"json-probe\""));
+        assert!(json.contains("\"ns_per_iter\""));
+        assert!(json.contains("\"iters\""));
+    }
+
+    #[test]
+    fn json_escaping() {
+        assert_eq!(json_escape("plain/name_1"), "plain/name_1");
+        assert_eq!(json_escape("a\"b\\c"), "a\\\"b\\\\c");
     }
 }

@@ -39,21 +39,42 @@ impl BlockPool {
         self.total - self.free.len()
     }
 
-    /// Allocate exactly `n` blocks or nothing.
-    pub fn alloc(&mut self, n: usize) -> Option<Vec<BlockId>> {
+    /// Allocate exactly `n` blocks or nothing, appending them to `out`.
+    /// The hot-path entry point: reuses the caller's buffer, so steady-state
+    /// allocation churn is zero. Returns false (and leaves `out` untouched)
+    /// when fewer than `n` blocks are free.
+    pub fn alloc_into(&mut self, n: usize, out: &mut Vec<BlockId>) -> bool {
         if self.free.len() < n {
-            return None;
+            return false;
         }
-        let blocks: Vec<BlockId> = self.free.split_off(self.free.len() - n);
+        let start = self.free.len() - n;
         #[cfg(debug_assertions)]
-        for &b in &blocks {
+        for &b in &self.free[start..] {
             assert!(self.allocated.insert(b), "double allocation of block {b}");
         }
-        Some(blocks)
+        out.extend_from_slice(&self.free[start..]);
+        self.free.truncate(start);
+        true
     }
 
+    /// Allocate exactly `n` blocks or nothing (fresh-Vec convenience; cold
+    /// paths and tests — hot paths use `alloc_into`).
+    pub fn alloc(&mut self, n: usize) -> Option<Vec<BlockId>> {
+        let mut out = Vec::with_capacity(n);
+        if self.alloc_into(n, &mut out) {
+            Some(out)
+        } else {
+            None
+        }
+    }
+
+    /// Pop one block straight off the free list — no intermediate Vec
+    /// (`append_token` calls this once per layer per block boundary).
     pub fn alloc_one(&mut self) -> Option<BlockId> {
-        self.alloc(1).map(|v| v[0])
+        let b = self.free.pop()?;
+        #[cfg(debug_assertions)]
+        assert!(self.allocated.insert(b), "double allocation of block {b}");
+        Some(b)
     }
 
     pub fn release(&mut self, blocks: &[BlockId]) {
@@ -101,6 +122,33 @@ mod tests {
         let a = p.alloc(1).unwrap();
         p.release(&a);
         p.release(&a);
+    }
+
+    #[test]
+    fn alloc_into_reuses_buffer_and_is_all_or_nothing() {
+        let mut p = BlockPool::new(8);
+        let mut buf = Vec::new();
+        assert!(p.alloc_into(3, &mut buf));
+        assert_eq!(buf.len(), 3);
+        assert!(!p.alloc_into(6, &mut buf), "only 5 left");
+        assert_eq!(buf.len(), 3, "failed alloc must not touch the buffer");
+        p.release(&buf);
+        buf.clear();
+        let cap = buf.capacity();
+        assert!(p.alloc_into(3, &mut buf));
+        assert_eq!(buf.capacity(), cap, "buffer reused, not regrown");
+        p.release(&buf);
+    }
+
+    #[test]
+    fn alloc_one_pops_directly() {
+        let mut p = BlockPool::new(2);
+        let a = p.alloc_one().unwrap();
+        let b = p.alloc_one().unwrap();
+        assert_ne!(a, b);
+        assert!(p.alloc_one().is_none());
+        p.release(&[a, b]);
+        assert_eq!(p.available(), 2);
     }
 
     #[test]

@@ -21,6 +21,12 @@ pub enum KvError {
 
 /// Manages both pools (denominated in layer-blocks) and every live
 /// request's layer-wise block table.
+///
+/// §Perf: the steady-state request lifecycle is allocation-free. Released
+/// tables (with their per-layer block Vecs' capacity) are recycled through
+/// `spare_tables` for the next admission, block ids move through the
+/// reusable `scratch` buffer on offload/onload, and per-token growth pops
+/// straight off the pools' free lists.
 #[derive(Debug)]
 pub struct KvManager {
     pub gpu: BlockPool,
@@ -28,6 +34,10 @@ pub struct KvManager {
     pub block_size: usize,
     pub n_layers: usize,
     tables: HashMap<ReqId, LayerBlockTable>,
+    /// Released tables kept for reuse (bounded by peak live requests).
+    spare_tables: Vec<LayerBlockTable>,
+    /// Staging buffer for block ids in flight between pools.
+    scratch: Vec<BlockId>,
 }
 
 impl KvManager {
@@ -38,6 +48,8 @@ impl KvManager {
             block_size,
             n_layers,
             tables: HashMap::new(),
+            spare_tables: Vec::new(),
+            scratch: Vec::new(),
         }
     }
 
@@ -83,18 +95,36 @@ impl KvManager {
         if self.cpu.available() < need_cpu {
             return Err(KvError::CpuExhausted);
         }
-        let retained = LayerBlockTable::interleaved_retained(self.n_layers, x);
-        let mut t = LayerBlockTable::new(self.n_layers, self.block_size);
-        t.tokens = tokens;
-        for (i, entry) in t.layers.iter_mut().enumerate() {
-            if retained.contains(&i) {
-                entry.residency = Residency::Gpu;
-                entry.blocks = self.gpu.alloc(per_layer).expect("checked above");
-            } else {
-                entry.residency = Residency::Cpu;
-                entry.blocks = self.cpu.alloc(per_layer).expect("checked above");
+        let mut t = self
+            .spare_tables
+            .pop()
+            .unwrap_or_else(|| LayerBlockTable::new(self.n_layers, self.block_size));
+        t.reset(self.n_layers, self.block_size, tokens);
+        if self.n_layers <= 128 {
+            // §Perf: bitmask retained-set — O(1) membership, no Vec.
+            let mask = LayerBlockTable::interleaved_retained_mask(self.n_layers, x);
+            for (i, entry) in t.layers.iter_mut().enumerate() {
+                if mask >> i & 1 == 1 {
+                    entry.residency = Residency::Gpu;
+                    assert!(self.gpu.alloc_into(per_layer, &mut entry.blocks), "checked above");
+                } else {
+                    entry.residency = Residency::Cpu;
+                    assert!(self.cpu.alloc_into(per_layer, &mut entry.blocks), "checked above");
+                }
+            }
+        } else {
+            let retained = LayerBlockTable::interleaved_retained(self.n_layers, x);
+            for (i, entry) in t.layers.iter_mut().enumerate() {
+                if retained.contains(&i) {
+                    entry.residency = Residency::Gpu;
+                    assert!(self.gpu.alloc_into(per_layer, &mut entry.blocks), "checked above");
+                } else {
+                    entry.residency = Residency::Cpu;
+                    assert!(self.cpu.alloc_into(per_layer, &mut entry.blocks), "checked above");
+                }
             }
         }
+        t.recount();
         let prev = self.tables.insert(req, t);
         debug_assert!(prev.is_none(), "request {req} allocated twice");
         Ok(())
@@ -105,19 +135,21 @@ impl KvManager {
     /// layer currently resides in. On GPU exhaustion nothing is mutated
     /// (caller decides: preempt, or offload someone and retry).
     pub fn append_token(&mut self, req: ReqId) -> Result<(), KvError> {
-        let t = self.tables.get(&req).ok_or(KvError::UnknownRequest)?;
-        let old = self.blocks_per_layer(t.tokens);
-        let new = self.blocks_per_layer(t.tokens + 1);
+        // §Perf: single map lookup per call (the per-token hot path), O(1)
+        // residency aggregates, and block ids popped straight off the free
+        // lists — no intermediate Vec per layer.
+        let t = self.tables.get_mut(&req).ok_or(KvError::UnknownRequest)?;
+        let old = t.blocks_per_layer(t.tokens);
+        let new = t.blocks_per_layer(t.tokens + 1);
         if new > old {
             let gpu_layers = t.n_gpu_layers();
-            let cpu_layers = self.n_layers - gpu_layers;
+            let cpu_layers = t.n_cpu_layers();
             if self.gpu.available() < gpu_layers {
                 return Err(KvError::GpuExhausted);
             }
             if self.cpu.available() < cpu_layers {
                 return Err(KvError::CpuExhausted);
             }
-            let t = self.tables.get_mut(&req).unwrap();
             for entry in &mut t.layers {
                 let b = match entry.residency {
                     Residency::Gpu => self.gpu.alloc_one().expect("checked"),
@@ -125,13 +157,16 @@ impl KvManager {
                 };
                 entry.blocks.push(b);
             }
+            t.note_block_growth();
         }
-        self.tables.get_mut(&req).unwrap().tokens += 1;
+        t.tokens += 1;
         Ok(())
     }
 
     /// Move one layer GPU -> host (§3.1.1 proactive offload / OOM relief).
-    /// Returns the number of GPU layer-blocks freed.
+    /// Returns the number of GPU layer-blocks freed. Allocation-free: the
+    /// departing ids stage through `scratch` and the layer's Vec is
+    /// refilled in place.
     pub fn offload_layer(&mut self, req: ReqId, layer: usize) -> Result<usize, KvError> {
         let t = self.tables.get(&req).ok_or(KvError::UnknownRequest)?;
         let entry = &t.layers[layer];
@@ -142,11 +177,14 @@ impl KvManager {
         if self.cpu.available() < n {
             return Err(KvError::CpuExhausted);
         }
-        let cpu_blocks = self.cpu.alloc(n).expect("checked");
         let t = self.tables.get_mut(&req).unwrap();
-        let gpu_blocks = std::mem::replace(&mut t.layers[layer].blocks, cpu_blocks);
-        t.layers[layer].residency = Residency::Cpu;
-        self.gpu.release(&gpu_blocks);
+        let entry = &mut t.layers[layer];
+        self.scratch.clear();
+        std::mem::swap(&mut self.scratch, &mut entry.blocks); // scratch := GPU ids
+        assert!(self.cpu.alloc_into(n, &mut entry.blocks), "checked");
+        entry.residency = Residency::Cpu;
+        t.note_offloaded(n);
+        self.gpu.release(&self.scratch);
         Ok(n)
     }
 
@@ -161,24 +199,31 @@ impl KvManager {
         if self.gpu.available() < n {
             return Err(KvError::GpuExhausted);
         }
-        let gpu_blocks = self.gpu.alloc(n).expect("checked");
         let t = self.tables.get_mut(&req).unwrap();
-        let cpu_blocks = std::mem::replace(&mut t.layers[layer].blocks, gpu_blocks);
-        t.layers[layer].residency = Residency::Gpu;
-        self.cpu.release(&cpu_blocks);
+        let entry = &mut t.layers[layer];
+        self.scratch.clear();
+        std::mem::swap(&mut self.scratch, &mut entry.blocks); // scratch := CPU ids
+        assert!(self.gpu.alloc_into(n, &mut entry.blocks), "checked");
+        entry.residency = Residency::Gpu;
+        t.note_onloaded(n);
+        self.cpu.release(&self.scratch);
         Ok(n)
     }
 
     /// Release everything a request holds (completion or recompute
     /// preemption — serving systems are stateless across requests, §2.2).
+    /// The table (and its per-layer Vec capacity) is recycled for the next
+    /// admission.
     pub fn release(&mut self, req: ReqId) -> Result<(), KvError> {
-        let t = self.tables.remove(&req).ok_or(KvError::UnknownRequest)?;
-        for entry in &t.layers {
+        let mut t = self.tables.remove(&req).ok_or(KvError::UnknownRequest)?;
+        for entry in &mut t.layers {
             match entry.residency {
                 Residency::Gpu => self.gpu.release(&entry.blocks),
                 Residency::Cpu => self.cpu.release(&entry.blocks),
             }
+            entry.blocks.clear();
         }
+        self.spare_tables.push(t);
         Ok(())
     }
 

@@ -4,6 +4,12 @@
 //! "we add layer-wise information to each block, indicating the indices of
 //! the layers where the KV cache is retained on the GPU and the indices of
 //! the layers stored on the CPU."
+//!
+//! §Perf: the table carries cached residency aggregates (resident-layer
+//! count, blocks held per pool) so the scheduler's per-step queries —
+//! `n_gpu_layers`, `gpu_blocks_held`, `fully_resident` — are O(1) reads
+//! instead of O(L) scans that allocate. `KvManager` keeps them in sync via
+//! the `note_*` hooks; `check()` cross-validates them against the layers.
 
 use super::allocator::BlockId;
 
@@ -30,6 +36,11 @@ pub struct LayerBlockTable {
     /// Tokens currently stored (same for every layer).
     pub tokens: usize,
     pub block_size: usize,
+    /// Cached aggregates (see module docs). Private so only the mutation
+    /// hooks and `recount` touch them.
+    gpu_layer_count: usize,
+    gpu_blocks: usize,
+    cpu_blocks: usize,
 }
 
 impl LayerBlockTable {
@@ -40,7 +51,31 @@ impl LayerBlockTable {
                 .collect(),
             tokens: 0,
             block_size,
+            gpu_layer_count: n_layers,
+            gpu_blocks: 0,
+            cpu_blocks: 0,
         }
+    }
+
+    /// Re-arm a recycled table for a fresh request: every layer back to
+    /// GPU residency with its block list cleared *but capacity kept* —
+    /// the whole point of `KvManager`'s table recycling.
+    pub(crate) fn reset(&mut self, n_layers: usize, block_size: usize, tokens: usize) {
+        if self.layers.len() != n_layers {
+            self.layers = (0..n_layers)
+                .map(|_| LayerEntry { residency: Residency::Gpu, blocks: Vec::new() })
+                .collect();
+        } else {
+            for e in &mut self.layers {
+                e.residency = Residency::Gpu;
+                e.blocks.clear();
+            }
+        }
+        self.block_size = block_size;
+        self.tokens = tokens;
+        self.gpu_layer_count = n_layers;
+        self.gpu_blocks = 0;
+        self.cpu_blocks = 0;
     }
 
     pub fn n_layers(&self) -> usize {
@@ -52,7 +87,8 @@ impl LayerBlockTable {
         tokens.div_ceil(self.block_size)
     }
 
-    /// Layers currently resident on GPU.
+    /// Layers currently resident on GPU (allocates; cold paths/tests only —
+    /// hot paths iterate `layers` or use the O(1) aggregates).
     pub fn gpu_layers(&self) -> Vec<usize> {
         (0..self.layers.len())
             .filter(|&i| self.layers[i].residency == Residency::Gpu)
@@ -65,46 +101,127 @@ impl LayerBlockTable {
             .collect()
     }
 
+    /// O(1): layers resident on GPU.
     pub fn n_gpu_layers(&self) -> usize {
-        self.layers.iter().filter(|l| l.residency == Residency::Gpu).count()
+        self.gpu_layer_count
     }
 
-    /// Total GPU layer-blocks held.
+    /// O(1): layers parked on the host.
+    pub fn n_cpu_layers(&self) -> usize {
+        self.layers.len() - self.gpu_layer_count
+    }
+
+    /// O(1): true when every layer's KV is on the GPU (the decode-batch
+    /// membership test the scheduler runs per request per step).
+    pub fn fully_resident(&self) -> bool {
+        self.gpu_layer_count == self.layers.len()
+    }
+
+    /// O(1): total GPU layer-blocks held.
     pub fn gpu_blocks_held(&self) -> usize {
-        self.layers
-            .iter()
-            .filter(|l| l.residency == Residency::Gpu)
-            .map(|l| l.blocks.len())
-            .sum()
+        self.gpu_blocks
     }
 
+    /// O(1): total host layer-blocks held.
     pub fn cpu_blocks_held(&self) -> usize {
-        self.layers
-            .iter()
-            .filter(|l| l.residency == Residency::Cpu)
-            .map(|l| l.blocks.len())
-            .sum()
+        self.cpu_blocks
     }
 
-    /// §3.1.2 interleaving: which layer indices to *retain on GPU* when
-    /// keeping `x` of `l` layers. The retained set is spread evenly so each
-    /// offloaded layer's h2d can overlap the compute of the retained layer
-    /// before it (the paper's 8-layer example keeps 1,3,5,7 and offloads
-    /// 0,2,4,6).
+    // --- aggregate maintenance hooks (KvManager only) -------------------
+
+    /// One block was appended to every layer (a block-boundary grow).
+    pub(crate) fn note_block_growth(&mut self) {
+        self.gpu_blocks += self.gpu_layer_count;
+        self.cpu_blocks += self.layers.len() - self.gpu_layer_count;
+    }
+
+    /// Layer moved GPU -> host, `n` blocks.
+    pub(crate) fn note_offloaded(&mut self, n: usize) {
+        self.gpu_layer_count -= 1;
+        self.gpu_blocks -= n;
+        self.cpu_blocks += n;
+    }
+
+    /// Layer moved host -> GPU, `n` blocks.
+    pub(crate) fn note_onloaded(&mut self, n: usize) {
+        self.gpu_layer_count += 1;
+        self.cpu_blocks -= n;
+        self.gpu_blocks += n;
+    }
+
+    /// Rebuild the cached aggregates from the layers (after bulk edits —
+    /// admission fills, or tests that poke `layers` directly).
+    pub fn recount(&mut self) {
+        self.gpu_layer_count = 0;
+        self.gpu_blocks = 0;
+        self.cpu_blocks = 0;
+        for e in &self.layers {
+            match e.residency {
+                Residency::Gpu => {
+                    self.gpu_layer_count += 1;
+                    self.gpu_blocks += e.blocks.len();
+                }
+                Residency::Cpu => self.cpu_blocks += e.blocks.len(),
+            }
+        }
+    }
+
+    /// §3.1.2 interleaving as a bitmask: bit i set means layer i is
+    /// *retained on GPU* when keeping `x` of `l` layers. The retained set
+    /// is spread evenly so each offloaded layer's h2d can overlap the
+    /// compute of the retained layer before it (the paper's 8-layer
+    /// example keeps 1,3,5,7 and offloads 0,2,4,6). Branch-free to query
+    /// and allocation-free to build — the admission hot path.
+    pub fn interleaved_retained_mask(l: usize, x: usize) -> u128 {
+        assert!(l <= 128, "mask form supports up to 128 layers (got {l})");
+        if x == 0 || l == 0 {
+            return 0;
+        }
+        let all = if l == 128 { u128::MAX } else { (1u128 << l) - 1 };
+        if x >= l {
+            return all;
+        }
+        // Evenly spaced, biased to the *later* congruence class like the
+        // paper's example (offload even indices, retain odd).
+        let mut mask = 0u128;
+        let mut count = 0usize;
+        for i in 0..x {
+            let idx = ((2 * i + 1) * l / (2 * x)).min(l - 1);
+            if mask >> idx & 1 == 0 {
+                mask |= 1u128 << idx;
+                count += 1;
+            }
+        }
+        // rare collisions at tiny l: fill greedily from the bottom
+        let mut next = 0usize;
+        while count < x {
+            if mask >> next & 1 == 0 {
+                mask |= 1u128 << next;
+                count += 1;
+            }
+            next += 1;
+        }
+        mask
+    }
+
+    /// §3.1.2 interleaving as a sorted index list (Vec-returning
+    /// convenience over the mask form; `l > 128` falls back to the direct
+    /// construction).
     pub fn interleaved_retained(l: usize, x: usize) -> Vec<usize> {
+        if l <= 128 {
+            let mask = Self::interleaved_retained_mask(l, x);
+            return (0..l).filter(|&i| mask >> i & 1 == 1).collect();
+        }
         if x == 0 {
             return Vec::new();
         }
         if x >= l {
             return (0..l).collect();
         }
-        // Evenly spaced, biased to the *later* congruence class like the
-        // paper's example (offload even indices, retain odd).
         let mut out: Vec<usize> = (0..x)
             .map(|i| ((2 * i + 1) * l / (2 * x)).min(l - 1))
             .collect();
         out.dedup();
-        // rare collisions at tiny l: fill greedily
         let mut next = 0;
         while out.len() < x {
             if !out.contains(&next) {
@@ -116,7 +233,9 @@ impl LayerBlockTable {
         out
     }
 
-    /// Validate internal consistency (used by property tests).
+    /// Validate internal consistency (used by property tests): per-layer
+    /// block counts match the token count, and the cached aggregates match
+    /// a from-scratch recount.
     pub fn check(&self) -> Result<(), String> {
         let want = self.blocks_per_layer(self.tokens);
         for (i, l) in self.layers.iter().enumerate() {
@@ -127,6 +246,24 @@ impl LayerBlockTable {
                     self.tokens
                 ));
             }
+        }
+        let (mut gpu_layers, mut gpu_blocks, mut cpu_blocks) = (0usize, 0usize, 0usize);
+        for e in &self.layers {
+            match e.residency {
+                Residency::Gpu => {
+                    gpu_layers += 1;
+                    gpu_blocks += e.blocks.len();
+                }
+                Residency::Cpu => cpu_blocks += e.blocks.len(),
+            }
+        }
+        if (gpu_layers, gpu_blocks, cpu_blocks)
+            != (self.gpu_layer_count, self.gpu_blocks, self.cpu_blocks)
+        {
+            return Err(format!(
+                "stale aggregates: cached ({}, {}, {}) vs actual ({gpu_layers}, {gpu_blocks}, {cpu_blocks})",
+                self.gpu_layer_count, self.gpu_blocks, self.cpu_blocks
+            ));
         }
         Ok(())
     }
@@ -140,6 +277,10 @@ mod tests {
     fn paper_example_8_layers_keep_4() {
         // §3.1.2: 8-layer model keeping 4 on GPU retains 1,3,5,7
         assert_eq!(LayerBlockTable::interleaved_retained(8, 4), vec![1, 3, 5, 7]);
+        assert_eq!(
+            LayerBlockTable::interleaved_retained_mask(8, 4),
+            0b1010_1010u128
+        );
     }
 
     #[test]
@@ -157,6 +298,49 @@ mod tests {
         }
     }
 
+    /// The original (pre-mask) list construction, kept here as the
+    /// independent reference the bitmask form is checked against.
+    fn reference_retained(l: usize, x: usize) -> Vec<usize> {
+        if x == 0 {
+            return Vec::new();
+        }
+        if x >= l {
+            return (0..l).collect();
+        }
+        let mut out: Vec<usize> =
+            (0..x).map(|i| ((2 * i + 1) * l / (2 * x)).min(l - 1)).collect();
+        out.dedup();
+        let mut next = 0;
+        while out.len() < x {
+            if !out.contains(&next) {
+                out.push(next);
+            }
+            next += 1;
+        }
+        out.sort_unstable();
+        out
+    }
+
+    #[test]
+    fn mask_matches_reference_construction() {
+        for l in [1usize, 2, 3, 7, 8, 31, 32, 33, 80, 127, 128] {
+            for x in 0..=l {
+                let mask = LayerBlockTable::interleaved_retained_mask(l, x);
+                let list = LayerBlockTable::interleaved_retained(l, x);
+                let reference = reference_retained(l, x);
+                assert_eq!(mask.count_ones() as usize, x, "l={l} x={x}");
+                assert_eq!(list, reference, "l={l} x={x}: list form drifted");
+                for i in 0..l {
+                    assert_eq!(
+                        mask >> i & 1 == 1,
+                        reference.contains(&i),
+                        "l={l} x={x} layer {i}"
+                    );
+                }
+            }
+        }
+    }
+
     #[test]
     fn residency_bookkeeping() {
         let mut t = LayerBlockTable::new(4, 16);
@@ -166,9 +350,12 @@ mod tests {
         }
         t.layers[1].residency = Residency::Cpu;
         t.layers[3].residency = Residency::Cpu;
+        t.recount(); // hand-edited layers -> rebuild aggregates
         assert_eq!(t.gpu_layers(), vec![0, 2]);
         assert_eq!(t.cpu_layers(), vec![1, 3]);
         assert_eq!(t.n_gpu_layers(), 2);
+        assert_eq!(t.n_cpu_layers(), 2);
+        assert!(!t.fully_resident());
         assert_eq!(t.gpu_blocks_held(), 6);
         assert_eq!(t.cpu_blocks_held(), 6);
         t.check().unwrap();
@@ -180,6 +367,32 @@ mod tests {
         t.tokens = 40; // needs 3 blocks/layer
         t.layers[0].blocks = vec![0, 1, 2];
         t.layers[1].blocks = vec![3];
+        t.recount();
         assert!(t.check().is_err());
+    }
+
+    #[test]
+    fn check_catches_stale_aggregates() {
+        let mut t = LayerBlockTable::new(2, 16);
+        t.tokens = 16;
+        t.layers[0].blocks = vec![0];
+        t.layers[1].blocks = vec![1];
+        // no recount: cached counts still say zero blocks held
+        assert!(t.check().unwrap_err().contains("stale aggregates"));
+    }
+
+    #[test]
+    fn reset_keeps_capacity_and_rearms() {
+        let mut t = LayerBlockTable::new(2, 16);
+        t.layers[0].blocks = vec![5, 6, 7];
+        t.layers[0].residency = Residency::Cpu;
+        t.recount();
+        let cap = t.layers[0].blocks.capacity();
+        t.reset(2, 16, 40);
+        assert_eq!(t.tokens, 40);
+        assert!(t.fully_resident());
+        assert_eq!(t.gpu_blocks_held(), 0);
+        assert!(t.layers[0].blocks.is_empty());
+        assert_eq!(t.layers[0].blocks.capacity(), cap, "capacity recycled");
     }
 }

@@ -8,11 +8,29 @@
 //! Virtual time: the engine advances `now` by each step's modeled
 //! duration; all latency metrics fall out of the same clock the paper
 //! measures with wall time.
+//!
+//! §Perf architecture: the per-step hot loop does zero steady-state heap
+//! allocation and no from-scratch scans —
+//!
+//! * `running` is kept **sorted by `prefill_start`** (oldest admitted
+//!   first) via insertion at admit time, so "oldest" is `first()` and
+//!   "most recently prefilled" is reverse iteration; no per-step sorts.
+//! * `RunningAggregates` caches the decode batch's size and total context
+//!   tokens, updated on admit/append/offload/onload/finish events; the
+//!   decode step duration comes from `decode_step_time_sum` on those
+//!   cached totals instead of a per-request `Vec<usize>` each step.
+//! * `active_buf`/`finished_buf` are reusable per-step buffers.
+//! * The scheduler returns the retained-layer count `x` with each
+//!   admission, so prefill steps no longer rebuild a `SchedContext`.
+//!
+//! `use_recompute_oracle()` switches every cached quantity back to
+//! from-scratch recomputation each step; `rust/tests/prop_invariants.rs`
+//! asserts both modes produce bit-identical reports.
 
 use std::collections::VecDeque;
 
 use crate::config::{Fabric, Policy, ServingConfig};
-use crate::coordinator::block::{KvError, KvManager};
+use crate::coordinator::block::{KvError, KvManager, Residency};
 use crate::coordinator::predict::LengthPredictor;
 use crate::coordinator::request::{Phase, ReqId, Request};
 use crate::coordinator::scheduler::{make_scheduler, Action, SchedContext, Scheduler};
@@ -39,6 +57,29 @@ pub struct EngineStats {
     pub contention_s: f64,
 }
 
+/// Incrementally-maintained totals over the running set: the membership
+/// and token count of the decode batch (the fully-GPU-resident subset).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+struct RunningAggregates {
+    /// Running requests whose KV is entirely on the GPU.
+    resident_count: usize,
+    /// Σ context_len over those — what one decode iteration streams.
+    resident_tokens: usize,
+}
+
+impl RunningAggregates {
+    fn recompute(running: &[ReqId], requests: &[Request], kv: &KvManager) -> Self {
+        let mut a = RunningAggregates::default();
+        for &rid in running {
+            if kv.table(rid).map(|t| t.fully_resident()).unwrap_or(false) {
+                a.resident_count += 1;
+                a.resident_tokens += requests[rid].context_len();
+            }
+        }
+        a
+    }
+}
+
 /// Simulation engine. One instance runs one trace to completion.
 pub struct Engine {
     pub cfg: ServingConfig,
@@ -48,10 +89,19 @@ pub struct Engine {
     predictor: LengthPredictor,
     requests: Vec<Request>,
     waiting: VecDeque<ReqId>,
+    /// §Perf invariant: sorted by `prefill_start` ascending.
     running: Vec<ReqId>,
     now: f64,
     stats: EngineStats,
     records: Vec<RequestRecord>,
+    agg: RunningAggregates,
+    /// false = recompute-from-scratch oracle mode (property-test reference).
+    incremental: bool,
+    /// Eq. 5 restore watermark in blocks (fixed pool ⇒ computed once).
+    restore_threshold: usize,
+    /// Reusable per-step buffers (decode batch, finished list).
+    active_buf: Vec<ReqId>,
+    finished_buf: Vec<ReqId>,
 }
 
 impl Engine {
@@ -64,6 +114,8 @@ impl Engine {
             cfg.model.n_layers,
         );
         let scheduler = make_scheduler(&cfg);
+        let restore_threshold =
+            (cfg.avail_threshold_frac * kv.gpu.total() as f64) as usize;
         Engine {
             cfg,
             cost,
@@ -76,11 +128,23 @@ impl Engine {
             now: 0.0,
             stats: EngineStats::default(),
             records: Vec::new(),
+            agg: RunningAggregates::default(),
+            incremental: true,
+            restore_threshold,
+            active_buf: Vec::new(),
+            finished_buf: Vec::new(),
         }
     }
 
     pub fn stats(&self) -> &EngineStats {
         &self.stats
+    }
+
+    /// Switch to recomputing every cached aggregate from scratch each step
+    /// (and re-sorting `running`). Slower, straightforward, and the
+    /// reference the incremental path must match bit-for-bit.
+    pub fn use_recompute_oracle(&mut self) {
+        self.incremental = false;
     }
 
     /// Run a trace to completion; returns the latency report.
@@ -90,6 +154,7 @@ impl Engine {
             .iter()
             .map(|t| Request::from_trace(t, self.predictor.predict(t.id, t.output_len)))
             .collect();
+        self.agg = RunningAggregates::default();
         let mut next_arrival = 0usize;
         // generous step bound: every token plus scheduling slack
         let max_steps = 1000 + 4 * trace.total_tokens() as u64;
@@ -102,6 +167,8 @@ impl Engine {
                 self.waiting.push_back(next_arrival);
                 next_arrival += 1;
             }
+
+            self.oracle_refresh();
 
             let action = {
                 // §Perf: make_contiguous avoids a per-step Vec allocation
@@ -176,26 +243,85 @@ impl Engine {
         }
     }
 
+    // --- incremental-state upkeep --------------------------------------
+
+    /// Oracle mode: re-derive everything the incremental path maintains.
+    fn oracle_refresh(&mut self) {
+        if self.incremental {
+            return;
+        }
+        let reqs = &self.requests;
+        self.running.sort_by(|&a, &b| {
+            let ta = reqs[a].prefill_start.unwrap_or(0.0);
+            let tb = reqs[b].prefill_start.unwrap_or(0.0);
+            ta.partial_cmp(&tb).unwrap()
+        });
+        self.agg = RunningAggregates::recompute(&self.running, &self.requests, &self.kv);
+    }
+
+    /// A request joined `running` (post-allocation).
+    fn agg_admit(&mut self, rid: ReqId) {
+        if self.incremental
+            && self.kv.table(rid).map(|t| t.fully_resident()).unwrap_or(false)
+        {
+            self.agg.resident_count += 1;
+            self.agg.resident_tokens += self.requests[rid].context_len();
+        }
+    }
+
+    /// A request is about to leave `running` (finish or preemption); must
+    /// run while its KV table still exists.
+    fn agg_remove(&mut self, rid: ReqId) {
+        if self.incremental
+            && self.kv.table(rid).map(|t| t.fully_resident()).unwrap_or(false)
+        {
+            self.agg.resident_count -= 1;
+            self.agg.resident_tokens -= self.requests[rid].context_len();
+        }
+    }
+
+    /// Offload with aggregate upkeep: a formerly fully-resident request
+    /// drops out of the decode batch.
+    fn kv_offload(&mut self, rid: ReqId, layer: usize) -> Result<usize, KvError> {
+        let was_resident =
+            self.kv.table(rid).map(|t| t.fully_resident()).unwrap_or(false);
+        let out = self.kv.offload_layer(rid, layer);
+        if self.incremental {
+            if let Ok(n) = out {
+                if n > 0 && was_resident {
+                    self.agg.resident_count -= 1;
+                    self.agg.resident_tokens -= self.requests[rid].context_len();
+                }
+            }
+        }
+        out
+    }
+
+    /// Onload with aggregate upkeep: a request whose last parked layer
+    /// returns becomes decode-batch eligible again.
+    fn kv_onload(&mut self, rid: ReqId, layer: usize) -> Result<usize, KvError> {
+        let out = self.kv.onload_layer(rid, layer);
+        if self.incremental {
+            if let Ok(n) = out {
+                if n > 0
+                    && self.kv.table(rid).map(|t| t.fully_resident()).unwrap_or(false)
+                {
+                    self.agg.resident_count += 1;
+                    self.agg.resident_tokens += self.requests[rid].context_len();
+                }
+            }
+        }
+        out
+    }
+
     // --- prefill -------------------------------------------------------
 
-    fn step_prefill(&mut self, reqs: &[ReqId]) {
+    fn step_prefill(&mut self, reqs: &[(ReqId, usize)]) {
         let mut duration = 0.0;
         let mut offload_bytes = 0.0;
-        for &rid in reqs {
+        let l = self.cfg.model.n_layers;
+        for &(rid, x) in reqs {
             let len = self.requests[rid].prefill_len();
-            let x = {
-                let waiting = self.waiting.make_contiguous();
-                let ctx = SchedContext {
-                    now: self.now,
-                    waiting,
-                    running: &self.running,
-                    requests: &self.requests,
-                    kv: &self.kv,
-                    cost: &self.cost,
-                    cfg: &self.cfg,
-                };
-                self.scheduler.retained_layers(&ctx, len)
-            };
             let alloc = match self.cfg.policy {
                 Policy::Vllm => self.kv.allocate_full(rid, len),
                 Policy::LayerKv { .. } => self.kv.allocate_layerwise(rid, len, x),
@@ -207,13 +333,17 @@ impl Engine {
             }
             // d2h of the L-x offloaded layers rides under the prefill
             // (§3.1.1 chose x so T_offload <= T_prefill)
-            let l = self.cfg.model.n_layers;
             offload_bytes += len as f64
                 * (l - x.min(l)) as f64
                 * self.cfg.offload_bytes_per_token_layer()
                 / self.cfg.tp as f64;
 
-            self.waiting.retain(|&w| w != rid);
+            // admissions are a queue prefix -> O(1) pop in the common case
+            if self.waiting.front() == Some(&rid) {
+                self.waiting.pop_front();
+            } else if let Some(pos) = self.waiting.iter().position(|&w| w == rid) {
+                self.waiting.remove(pos);
+            }
             let r = &mut self.requests[rid];
             if r.prefill_start.is_none() {
                 r.prefill_start = Some(self.now);
@@ -221,19 +351,34 @@ impl Engine {
             duration += self.cost.prefill_time(len);
             r.preemptions += matches!(r.phase, Phase::Preempted) as usize;
             r.phase = Phase::Decoding;
-            self.running.push(rid);
+            // §Perf invariant: insert in prefill_start order. Fresh
+            // admissions land at the tail (time is monotone); only
+            // preempt re-admissions (older prefill_start) move inward.
+            let ps = self.requests[rid].prefill_start.unwrap();
+            let reqs_ref = &self.requests;
+            let pos = self
+                .running
+                .partition_point(|&o| reqs_ref[o].prefill_start.unwrap_or(0.0) <= ps);
+            self.running.insert(pos, rid);
+            self.agg_admit(rid);
         }
         self.stats.offload_bytes += offload_bytes;
         self.now += duration;
         self.stats.prefill_steps += 1;
 
         // first token emitted at prefill end
-        for &rid in reqs {
-            let r = &mut self.requests[rid];
-            if r.phase == Phase::Decoding && r.first_token.is_none() {
-                r.first_token = Some(self.now);
-                r.generated = 1;
-                if r.done() {
+        for &(rid, _) in reqs {
+            if self.requests[rid].phase == Phase::Decoding
+                && self.requests[rid].first_token.is_none()
+            {
+                self.requests[rid].first_token = Some(self.now);
+                self.requests[rid].generated = 1;
+                if self.incremental
+                    && self.kv.table(rid).map(|t| t.fully_resident()).unwrap_or(false)
+                {
+                    self.agg.resident_tokens += 1; // context grew with token 1
+                }
+                if self.requests[rid].done() {
                     self.complete(rid);
                 }
             }
@@ -251,6 +396,10 @@ impl Engine {
         if matches!(self.cfg.policy, Policy::LayerKv { .. }) {
             self.restore_layers();
         }
+        if !self.incremental {
+            self.agg =
+                RunningAggregates::recompute(&self.running, &self.requests, &self.kv);
+        }
 
         // The decode batch is the GPU-resident subset. Requests whose KV
         // is still (partly) on the host are *parked*: they already got
@@ -258,36 +407,28 @@ impl Engine {
         // blocks free up. If nothing is fully resident, force-run the
         // oldest parked request with layer-by-layer host streaming (§4's
         // decode-phase h2d path) so progress is guaranteed.
-        let mut active: Vec<ReqId> = self
-            .running
-            .iter()
-            .copied()
-            .filter(|&r| self.kv.table(r).map(|t| t.cpu_layers().is_empty()).unwrap_or(false))
-            .collect();
+        let mut active = std::mem::take(&mut self.active_buf);
+        active.clear();
         let mut stream_bytes = 0.0;
-        if active.is_empty() {
-            let oldest = self
-                .running
-                .iter()
-                .copied()
-                .min_by(|&a, &b| {
-                    let ta = self.requests[a].prefill_start.unwrap_or(0.0);
-                    let tb = self.requests[b].prefill_start.unwrap_or(0.0);
-                    ta.partial_cmp(&tb).unwrap()
-                })
-                .expect("running nonempty");
+        let (batch, total_ctx) = if self.agg.resident_count > 0 {
+            active.extend(self.running.iter().copied().filter(|&r| {
+                self.kv.table(r).map(|t| t.fully_resident()).unwrap_or(false)
+            }));
+            debug_assert_eq!(active.len(), self.agg.resident_count);
+            (self.agg.resident_count, self.agg.resident_tokens)
+        } else {
+            let oldest = *self.running.first().expect("running nonempty");
             if let Some(t) = self.kv.table(oldest) {
-                stream_bytes = t.cpu_layers().len() as f64
+                stream_bytes = t.n_cpu_layers() as f64
                     * t.tokens as f64
                     * self.cfg.offload_bytes_per_token_layer()
                     / self.cfg.tp as f64;
             }
             active.push(oldest);
-        }
+            (1, self.requests[oldest].context_len())
+        };
 
-        let ctx_lens: Vec<usize> =
-            active.iter().map(|&r| self.requests[r].context_len()).collect();
-        let compute = self.cost.decode_step_time(&ctx_lens);
+        let compute = self.cost.decode_step_time_sum(total_ctx, batch);
         let stream_time = if stream_bytes > 0.0 {
             stream_bytes / self.cost.pcie_bw_per_gpu() + self.cfg.node.pcie.latency
         } else {
@@ -301,7 +442,7 @@ impl Engine {
         // all-reduce and KV streams. The check+chunk mechanism confines the
         // penalty to chunk tails; without it the overlap serializes.
         if self.cfg.tp > 1 && self.cfg.node.fabric == Fabric::Pcie && stream_bytes > 0.0 {
-            let ar = self.cost.allreduce_time(active.len());
+            let ar = self.cost.allreduce_time(batch);
             let penalty = if self.cfg.pcie_chunking { 0.05 * ar } else { ar.min(stream_time) };
             step += penalty;
             self.stats.contention_s += penalty;
@@ -312,8 +453,9 @@ impl Engine {
         self.scheduler.observe_decode_step(step);
 
         // advance the active batch by one token
-        let mut finished = Vec::new();
-        for rid in active {
+        let mut finished = std::mem::take(&mut self.finished_buf);
+        finished.clear();
+        for &rid in &active {
             match self.kv.append_token(rid) {
                 Ok(()) => {}
                 Err(KvError::GpuExhausted) => {
@@ -327,18 +469,26 @@ impl Engine {
                 Err(KvError::CpuExhausted) => continue,
                 Err(KvError::UnknownRequest) => continue,
             }
-            let r = &mut self.requests[rid];
-            if r.phase != Phase::Decoding {
+            if self.requests[rid].phase != Phase::Decoding {
                 continue;
             }
-            r.generated += 1;
-            if r.done() {
+            self.requests[rid].generated += 1;
+            if self.incremental
+                && self.kv.table(rid).map(|t| t.fully_resident()).unwrap_or(false)
+            {
+                self.agg.resident_tokens += 1;
+            }
+            if self.requests[rid].done() {
                 finished.push(rid);
             }
         }
-        for rid in finished {
+        for &rid in &finished {
             self.complete(rid);
         }
+        finished.clear();
+        self.finished_buf = finished;
+        active.clear();
+        self.active_buf = active;
 
         // Eq. 5 proactive offload check
         let plan = {
@@ -355,7 +505,7 @@ impl Engine {
             self.scheduler.proactive_offloads(&ctx)
         };
         for (rid, layer) in plan {
-            if let Ok(n) = self.kv.offload_layer(rid, layer) {
+            if let Ok(n) = self.kv_offload(rid, layer) {
                 if n > 0 {
                     self.stats.proactive_offload_layers += 1;
                     self.stats.offload_bytes += n as f64
@@ -373,29 +523,33 @@ impl Engine {
     fn relieve_gpu_pressure(&mut self, needy: ReqId) -> bool {
         match self.cfg.policy {
             Policy::LayerKv { .. } => {
-                let mut victims: Vec<ReqId> = self
-                    .running
-                    .iter()
-                    .copied()
-                    .filter(|&r| self.kv.table(r).map(|t| t.n_gpu_layers() > 0).unwrap_or(false))
-                    .collect();
-                victims.sort_by(|&a, &b| {
-                    let ta = self.requests[a].prefill_start.unwrap_or(0.0);
-                    let tb = self.requests[b].prefill_start.unwrap_or(0.0);
-                    tb.partial_cmp(&ta).unwrap()
-                });
                 let need = self.requests[needy].context_len() / self.cfg.block_size + 1;
+                let n_layers = self.cfg.model.n_layers;
                 let mut freed = 0usize;
                 for pass in 0..2 {
-                    for &v in &victims {
+                    // most recently prefilled first: reverse sorted order
+                    for vi in (0..self.running.len()).rev() {
+                        let v = self.running[vi];
                         let Some(t) = self.kv.table(v) else { continue };
-                        let gpu_layers = t.gpu_layers();
-                        let take = if pass == 0 { gpu_layers.len() / 2 } else { gpu_layers.len() };
-                        for layer in gpu_layers.into_iter().take(take) {
+                        let resident = t.n_gpu_layers();
+                        if resident == 0 {
+                            continue;
+                        }
+                        let take = if pass == 0 { resident / 2 } else { resident };
+                        let mut taken = 0usize;
+                        for layer in 0..n_layers {
+                            if taken >= take {
+                                break;
+                            }
+                            let Some(t) = self.kv.table(v) else { break };
+                            if t.layers[layer].residency != Residency::Gpu {
+                                continue;
+                            }
                             if freed >= need {
                                 return true;
                             }
-                            if let Ok(n) = self.kv.offload_layer(v, layer) {
+                            taken += 1;
+                            if let Ok(n) = self.kv_offload(v, layer) {
                                 freed += n;
                                 self.stats.oom_forced_offload_layers += 1;
                             }
@@ -409,17 +563,13 @@ impl Engine {
             }
             Policy::Vllm => {
                 // preempt the most recently admitted running request
-                // (not the needy one if possible)
+                // (not the needy one if possible): last in sorted order
                 let victim = self
                     .running
                     .iter()
+                    .rev()
                     .copied()
-                    .filter(|&r| r != needy)
-                    .max_by(|&a, &b| {
-                        let ta = self.requests[a].prefill_start.unwrap_or(0.0);
-                        let tb = self.requests[b].prefill_start.unwrap_or(0.0);
-                        ta.partial_cmp(&tb).unwrap()
-                    })
+                    .find(|&r| r != needy)
                     .or(Some(needy));
                 match victim {
                     Some(v) => {
@@ -434,6 +584,7 @@ impl Engine {
 
     /// vLLM recompute preemption: drop all KV, requeue at the FRONT.
     fn preempt_recompute(&mut self, rid: ReqId) {
+        self.agg_remove(rid);
         let _ = self.kv.release(rid);
         self.running.retain(|&r| r != rid);
         self.requests[rid].phase = Phase::Preempted;
@@ -442,29 +593,28 @@ impl Engine {
     }
 
     /// Move CPU-resident layers back to GPU while free blocks last
-    /// (oldest running requests first — they'll finish soonest). Restores
-    /// stop at the Eq. 5 threshold so restore and proactive offload don't
-    /// thrash against each other (hysteresis).
+    /// (oldest running requests first — they'll finish soonest; `running`
+    /// is already in that order). Restores stop at the Eq. 5 threshold so
+    /// restore and proactive offload don't thrash against each other
+    /// (hysteresis).
     fn restore_layers(&mut self) {
         if self.kv.cpu.used() == 0 {
-            return; // §Perf: nothing parked — skip the sort entirely
+            return; // §Perf: nothing parked — skip entirely
         }
-        let threshold =
-            (self.cfg.avail_threshold_frac * self.kv.gpu.total() as f64) as usize;
-        let mut order: Vec<ReqId> = self.running.clone();
-        order.sort_by(|&a, &b| {
-            let ta = self.requests[a].prefill_start.unwrap_or(0.0);
-            let tb = self.requests[b].prefill_start.unwrap_or(0.0);
-            ta.partial_cmp(&tb).unwrap()
-        });
-        for rid in order {
-            let Some(t) = self.kv.table(rid) else { continue };
-            let per_layer = t.blocks_per_layer(t.tokens).max(1);
-            for layer in t.cpu_layers() {
+        let threshold = self.restore_threshold;
+        let n_layers = self.cfg.model.n_layers;
+        for i in 0..self.running.len() {
+            let rid = self.running[i];
+            for layer in 0..n_layers {
+                let Some(t) = self.kv.table(rid) else { break };
+                if t.layers[layer].residency != Residency::Cpu {
+                    continue;
+                }
+                let per_layer = t.blocks_per_layer(t.tokens).max(1);
                 if self.kv.gpu.available() < threshold + per_layer {
                     return; // stay above the proactive-offload watermark
                 }
-                match self.kv.onload_layer(rid, layer) {
+                match self.kv_onload(rid, layer) {
                     Ok(n) if n > 0 => self.stats.onloaded_layers += 1,
                     _ => return, // pool full: stop restoring entirely
                 }
@@ -473,6 +623,7 @@ impl Engine {
     }
 
     fn complete(&mut self, rid: ReqId) {
+        self.agg_remove(rid);
         let _ = self.kv.release(rid);
         self.running.retain(|&r| r != rid);
         let r = &mut self.requests[rid];
@@ -491,17 +642,37 @@ impl Engine {
 
 }
 
-/// Convenience: run one (config, trace) pair with the standard predictor.
-pub fn run_trace(cfg: ServingConfig, trace: &Trace, predictor_accuracy: f64) -> (Report, EngineStats) {
+fn run_trace_with(
+    cfg: ServingConfig,
+    trace: &Trace,
+    predictor_accuracy: f64,
+    oracle: bool,
+) -> (Report, EngineStats) {
     let predictor = LengthPredictor::new(
         trace.requests.iter().map(|r| r.output_len).max().unwrap_or(1024).max(2),
         predictor_accuracy,
         42,
     );
     let mut engine = Engine::new(cfg, predictor);
+    if oracle {
+        engine.use_recompute_oracle();
+    }
     let report = engine.run(trace);
     let stats = engine.stats().clone();
     (report, stats)
+}
+
+/// Convenience: run one (config, trace) pair with the standard predictor.
+pub fn run_trace(cfg: ServingConfig, trace: &Trace, predictor_accuracy: f64) -> (Report, EngineStats) {
+    run_trace_with(cfg, trace, predictor_accuracy, false)
+}
+
+/// As `run_trace`, but on the recompute-from-scratch oracle — the
+/// reference the incremental engine is property-tested against. Shares
+/// `run_trace`'s setup exactly, so the two runs differ only in aggregate
+/// maintenance.
+pub fn run_trace_oracle(cfg: ServingConfig, trace: &Trace, predictor_accuracy: f64) -> (Report, EngineStats) {
+    run_trace_with(cfg, trace, predictor_accuracy, true)
 }
 
 #[cfg(test)]
@@ -602,6 +773,22 @@ mod tests {
         let (rep, _) = run_trace(cfg, &trace, 0.8);
         for r in &rep.records {
             assert!(r.finish <= rep.makespan + 1e-9);
+        }
+    }
+
+    #[test]
+    fn incremental_matches_oracle_smoke() {
+        // full randomized coverage lives in tests/prop_invariants.rs; this
+        // is the fast in-tree guard
+        for policy in [Policy::Vllm, Policy::LayerKv { slo_aware: true }] {
+            let cfg = ServingConfig::llama2_7b_tp1().with_policy(policy);
+            let trace = small_trace(2048, 15, 2.0);
+            let (a, sa) = run_trace(cfg.clone(), &trace, 0.8);
+            let (b, sb) = run_trace_oracle(cfg, &trace, 0.8);
+            assert_eq!(a.records, b.records, "policy {policy:?}");
+            assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+            assert_eq!(sa.steps, sb.steps);
+            assert_eq!(sa.preemptions, sb.preemptions);
         }
     }
 }

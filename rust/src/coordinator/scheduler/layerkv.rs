@@ -16,6 +16,7 @@
 //!    disables this gate (the Fig. 8 ablation).
 
 use super::{Action, OffloadPlan, SchedContext, Scheduler};
+use crate::coordinator::block::Residency;
 use crate::coordinator::request::{Phase, ReqId};
 
 /// Forecast horizon for Eq. 5, in scheduling stages. One stage approximates
@@ -29,11 +30,14 @@ pub struct LayerKvScheduler {
     /// Fallback TPOT estimate until a request has its own history (EMA of
     /// observed decode-step times, seeded from the cost model lazily).
     tpot_ema: Option<f64>,
+    /// §Perf: Eq. 5 threshold in blocks — depends only on the fixed pool
+    /// size and config, so it is computed once on first use.
+    threshold_blocks: Option<i64>,
 }
 
 impl LayerKvScheduler {
     pub fn new(slo_aware: bool) -> Self {
-        LayerKvScheduler { slo_aware, tpot_ema: None }
+        LayerKvScheduler { slo_aware, tpot_ema: None, threshold_blocks: None }
     }
 
     /// Feed back a measured decode-step duration (engine calls this via
@@ -62,12 +66,13 @@ impl LayerKvScheduler {
     /// min_i T_allow_prefill over the *actively decoding* set (Eq. 2's
     /// bound). Requests whose KV is (partly) parked on the host are
     /// swapped out of the decode batch — they are not "currently in the
-    /// decoding phase" that an inserted prefill would stall.
+    /// decoding phase" that an inserted prefill would stall. §Perf: the
+    /// residency test reads the table's cached aggregate (O(1), no Vec).
     fn min_slack(&self, ctx: &SchedContext) -> f64 {
         ctx.running
             .iter()
             .filter(|&&rid| {
-                ctx.kv.table(rid).map(|t| t.cpu_layers().is_empty()).unwrap_or(false)
+                ctx.kv.table(rid).map(|t| t.fully_resident()).unwrap_or(false)
             })
             .map(|&rid| self.t_allow_prefill(ctx, rid))
             .fold(f64::INFINITY, f64::min)
@@ -155,7 +160,7 @@ impl Scheduler for LayerKvScheduler {
                 free_cpu -= need_cpu;
                 batched_tokens += len;
                 seqs += 1;
-                admitted.push(rid);
+                admitted.push((rid, x)); // x already solved: engine reuses it
             }
         }
 
@@ -175,6 +180,10 @@ impl Scheduler for LayerKvScheduler {
     /// §3.1.1 last paragraph: when the forecast dips below the threshold,
     /// offload retained layers of the *most recently prefilled* decoding
     /// requests — first half their resident layers (x/2), then all.
+    ///
+    /// §Perf: the engine keeps `ctx.running` sorted oldest-first, so
+    /// "most recent first" is a reverse iteration — no per-call sort, and
+    /// resident layers are walked in place instead of materialised.
     fn proactive_offloads(&mut self, ctx: &SchedContext) -> OffloadPlan {
         // §Perf: the stage-by-stage forecast only matters near pressure;
         // with >25% of the pool free it cannot dip below the (10%)
@@ -182,38 +191,38 @@ impl Scheduler for LayerKvScheduler {
         if ctx.kv.gpu.available() * 4 > ctx.kv.gpu.total() {
             return Vec::new();
         }
-        let threshold =
-            (ctx.cfg.avail_threshold_frac * ctx.kv.gpu.total() as f64) as i64;
+        let threshold = *self.threshold_blocks.get_or_insert_with(|| {
+            (ctx.cfg.avail_threshold_frac * ctx.kv.gpu.total() as f64) as i64
+        });
         let mut shortfall = threshold - self.forecast_min_avail(ctx);
         if shortfall <= 0 {
             return Vec::new();
         }
 
-        // most recently prefilled first
-        let mut candidates: Vec<ReqId> = ctx
-            .running
-            .iter()
-            .copied()
-            .filter(|&rid| ctx.requests[rid].phase == Phase::Decoding)
-            .collect();
-        candidates.sort_by(|&a, &b| {
-            let ta = ctx.requests[a].prefill_start.unwrap_or(0.0);
-            let tb = ctx.requests[b].prefill_start.unwrap_or(0.0);
-            tb.partial_cmp(&ta).unwrap()
-        });
-
         let mut plan = Vec::new();
         // pass 1: x/2 layers each; pass 2: the rest
         for pass in 0..2 {
-            for &rid in &candidates {
+            // most recently prefilled first = reverse of the engine order
+            for &rid in ctx.running.iter().rev() {
+                if ctx.requests[rid].phase != Phase::Decoding {
+                    continue;
+                }
                 if shortfall <= 0 {
                     return plan;
                 }
                 let Some(table) = ctx.kv.table(rid) else { continue };
-                let gpu_layers = table.gpu_layers();
-                let take = if pass == 0 { gpu_layers.len() / 2 } else { gpu_layers.len() };
+                let resident = table.n_gpu_layers();
+                let take = if pass == 0 { resident / 2 } else { resident };
                 let per_layer = table.blocks_per_layer(table.tokens).max(1);
-                for &layer in gpu_layers.iter().take(take) {
+                let mut taken = 0usize;
+                for (layer, entry) in table.layers.iter().enumerate() {
+                    if taken >= take {
+                        break;
+                    }
+                    if entry.residency != Residency::Gpu {
+                        continue;
+                    }
+                    taken += 1;
                     if plan.contains(&(rid, layer)) {
                         continue;
                     }
@@ -309,7 +318,7 @@ mod tests {
         let rid = f.add_waiting(16 * 1024);
         let mut s = LayerKvScheduler::new(true);
         assert_eq!(s.retained_layers(&f.ctx(0.0), 16 * 1024), 0);
-        assert_eq!(s.decide(&f.ctx(0.0)), Action::Prefill(vec![rid]));
+        assert_eq!(s.decide(&f.ctx(0.0)), Action::Prefill(vec![(rid, 0)]));
     }
 
     #[test]
@@ -346,7 +355,8 @@ mod tests {
         f.add_decoding(1024, 50, now - 50.0 * 0.02); // 20ms/token << 200ms SLO
         let mut s = LayerKvScheduler::new(true);
         s.observe_decode_step(0.02);
-        assert_eq!(s.decide(&f.ctx(now)), Action::Prefill(vec![w]));
+        let x = s.retained_layers(&f.ctx(now), 128);
+        assert_eq!(s.decide(&f.ctx(now)), Action::Prefill(vec![(w, x)]));
     }
 
     #[test]
@@ -358,7 +368,8 @@ mod tests {
         let mut s = LayerKvScheduler::new(false);
         s.observe_decode_step(f.cfg.slo.tpot_s);
         // ablation admits regardless — this is what trades TPOT for TTFT
-        assert_eq!(s.decide(&f.ctx(now)), Action::Prefill(vec![w]));
+        let x = s.retained_layers(&f.ctx(now), 8192);
+        assert_eq!(s.decide(&f.ctx(now)), Action::Prefill(vec![(w, x)]));
     }
 
     #[test]

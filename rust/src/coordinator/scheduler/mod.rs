@@ -20,7 +20,10 @@ pub struct SchedContext<'a> {
     pub now: f64,
     /// FCFS queue (front first). Includes recompute-preempted requests.
     pub waiting: &'a [ReqId],
-    /// Requests currently in the decode phase.
+    /// Requests currently in the decode phase. §Perf invariant: the engine
+    /// keeps this sorted by `prefill_start` ascending (oldest admitted
+    /// first), so policies that need recency ordering iterate instead of
+    /// sorting a copy each step.
     pub running: &'a [ReqId],
     /// All requests, indexed by id.
     pub requests: &'a [Request],
@@ -32,8 +35,11 @@ pub struct SchedContext<'a> {
 /// What the engine should do this step.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum Action {
-    /// Run the prefill of these queued requests (one batched step).
-    Prefill(Vec<ReqId>),
+    /// Run the prefill of these queued requests (one batched step). Each
+    /// entry carries the retained-layer count `x` the scheduler already
+    /// solved during admission (§3.1.1), so the engine allocates without
+    /// rebuilding a scheduling context.
+    Prefill(Vec<(ReqId, usize)>),
     /// Run one decode iteration over the running set.
     Decode,
     /// Nothing runnable: idle until the next arrival.

@@ -17,11 +17,15 @@ use super::{Action, SchedContext, Scheduler};
 const WATERMARK: f64 = 0.01;
 
 #[derive(Debug, Default)]
-pub struct VllmScheduler;
+pub struct VllmScheduler {
+    /// §Perf: the watermark depends only on the (fixed) pool size, so it
+    /// is computed once on first `decide` instead of every step.
+    watermark_blocks: Option<usize>,
+}
 
 impl VllmScheduler {
     pub fn new() -> Self {
-        VllmScheduler
+        VllmScheduler::default()
     }
 }
 
@@ -31,7 +35,9 @@ impl Scheduler for VllmScheduler {
     }
 
     fn decide(&mut self, ctx: &SchedContext) -> Action {
-        let watermark = (ctx.kv.gpu.total() as f64 * WATERMARK) as usize;
+        let watermark = *self
+            .watermark_blocks
+            .get_or_insert_with(|| (ctx.kv.gpu.total() as f64 * WATERMARK) as usize);
         let mut admitted = Vec::new();
         let mut free = ctx.kv.gpu.available();
         let mut batched_tokens = 0usize;
@@ -50,7 +56,7 @@ impl Scheduler for VllmScheduler {
             free -= need;
             batched_tokens += len;
             seqs += 1;
-            admitted.push(rid);
+            admitted.push((rid, ctx.cfg.model.n_layers)); // all layers resident
         }
 
         if !admitted.is_empty() {
@@ -105,7 +111,7 @@ mod tests {
             cost: &cost,
             cfg: &cfg,
         });
-        assert_eq!(action, Action::Prefill(vec![0, 1]));
+        assert_eq!(action, Action::Prefill(vec![(0, 32), (1, 32)]));
     }
 
     #[test]
@@ -180,7 +186,7 @@ mod tests {
             cost: &cost,
             cfg: &cfg,
         });
-        assert_eq!(action, Action::Prefill(vec![0]));
+        assert_eq!(action, Action::Prefill(vec![(0, 32)]));
     }
 
     #[test]
@@ -200,6 +206,6 @@ mod tests {
             cost: &cost,
             cfg: &cfg,
         });
-        assert_eq!(action, Action::Prefill(vec![0]));
+        assert_eq!(action, Action::Prefill(vec![(0, 32)]));
     }
 }

@@ -3,7 +3,13 @@
 //! paper's parameters through the simulation engine and returns the rows
 //! the paper plots; `print_*` helpers render them as aligned text so
 //! `cargo bench`/`cargo run -- experiment <id>` regenerate the series.
+//!
+//! §Perf: every sweep's (config, seed) cells are independent, so the
+//! runners fan them across cores via `parallel::par_map` — deterministic
+//! per-cell seeds, row order preserved, identical output to serial mode
+//! (`LAYERKV_SERIAL=1` / `LAYERKV_THREADS=n` to control).
 
+pub mod parallel;
 pub mod plot;
 pub mod report;
 
@@ -15,6 +21,7 @@ use crate::workload::fixed::FixedWorkload;
 use crate::workload::sharegpt::ShareGptWorkload;
 use crate::workload::arrivals::Arrivals;
 
+pub use parallel::{par_map, par_map_threads};
 pub use plot::{render, PlotSeries};
 pub use report::{print_table, Table};
 
@@ -77,21 +84,18 @@ pub struct Fig1Row {
 
 pub fn fig1() -> Vec<Fig1Row> {
     let n = n_requests(100);
-    CONTEXTS_7B
-        .iter()
-        .map(|&ctx| {
-            let max_len = ctx.max(2048);
-            let cfg = setup("7b").with_max_model_len(max_len.max(16384));
-            let rep = run_fixed(cfg, ctx, n, 7);
-            Fig1Row {
-                ctx,
-                ttft_mean: rep.ttft().mean(),
-                tpot_mean: rep.tpot().mean(),
-                queueing_mean: rep.queueing().mean(),
-                prefill_mean: rep.prefill().mean(),
-            }
-        })
-        .collect()
+    par_map(CONTEXTS_7B, |&ctx| {
+        let max_len = ctx.max(2048);
+        let cfg = setup("7b").with_max_model_len(max_len.max(16384));
+        let rep = run_fixed(cfg, ctx, n, 7);
+        Fig1Row {
+            ctx,
+            ttft_mean: rep.ttft().mean(),
+            tpot_mean: rep.tpot().mean(),
+            queueing_mean: rep.queueing().mean(),
+            prefill_mean: rep.prefill().mean(),
+        }
+    })
 }
 
 pub const CONTEXTS_7B: &[usize] = &[128, 512, 1024, 2048, 4096, 8192, 16384];
@@ -130,36 +134,46 @@ pub struct Fig4Row {
     pub tput_layerkv: f64,
 }
 
+/// One Fig. 4 cell: both policies on one (model, ctx) point.
+fn fig4_cell(model: &'static str, ctx: usize, n: usize) -> Fig4Row {
+    let base = setup(model).with_max_model_len(16384.min(setup(model).model.max_context));
+    let v = run_fixed(base.clone().with_policy(Policy::Vllm), ctx, n, 11);
+    let l = run_fixed(
+        base.with_policy(Policy::LayerKv { slo_aware: true }),
+        ctx,
+        n,
+        11,
+    );
+    Fig4Row {
+        model,
+        ctx,
+        ttft_vllm: v.ttft().mean(),
+        ttft_layerkv: l.ttft().mean(),
+        tput_vllm: v.throughput_tok_s(),
+        tput_layerkv: l.throughput_tok_s(),
+    }
+}
+
 pub fn fig4_for(model: &'static str, contexts: &[usize]) -> Vec<Fig4Row> {
     let n = n_requests(100);
-    contexts
-        .iter()
-        .map(|&ctx| {
-            let base = setup(model).with_max_model_len(16384.min(setup(model).model.max_context));
-            let v = run_fixed(base.clone().with_policy(Policy::Vllm), ctx, n, 11);
-            let l = run_fixed(
-                base.with_policy(Policy::LayerKv { slo_aware: true }),
-                ctx,
-                n,
-                11,
-            );
-            Fig4Row {
-                model,
-                ctx,
-                ttft_vllm: v.ttft().mean(),
-                ttft_layerkv: l.ttft().mean(),
-                tput_vllm: v.throughput_tok_s(),
-                tput_layerkv: l.throughput_tok_s(),
-            }
-        })
-        .collect()
+    par_map(contexts, |&ctx| fig4_cell(model, ctx, n))
 }
 
 pub fn fig4() -> Vec<Fig4Row> {
-    let mut rows = fig4_for("7b", CONTEXTS_7B);
-    rows.extend(fig4_for("34b", CONTEXTS_34B));
-    rows.extend(fig4_for("70b", CONTEXTS_70B));
-    rows
+    // one flat cell list across all three models: better core utilisation
+    // than three sequential per-model sweeps
+    let n = n_requests(100);
+    let mut cells: Vec<(&'static str, usize)> = Vec::new();
+    for &ctx in CONTEXTS_7B {
+        cells.push(("7b", ctx));
+    }
+    for &ctx in CONTEXTS_34B {
+        cells.push(("34b", ctx));
+    }
+    for &ctx in CONTEXTS_70B {
+        cells.push(("70b", ctx));
+    }
+    par_map(&cells, |&(model, ctx)| fig4_cell(model, ctx, n))
 }
 
 pub fn print_fig4(rows: &[Fig4Row]) {
@@ -210,29 +224,31 @@ pub struct Fig5Row {
 
 pub fn fig5() -> Vec<Fig5Row> {
     let n = n_requests(100);
-    let mut rows = Vec::new();
+    let mut cells: Vec<(usize, usize)> = Vec::new();
     for &tp in &[2usize, 4, 8] {
         for &ctx in CONTEXTS_34B {
-            let mut base = setup("34b");
-            base.tp = tp;
-            let v = run_fixed(base.clone().with_policy(Policy::Vllm), ctx, n, 13);
-            let l = run_fixed(
-                base.clone().with_policy(Policy::LayerKv { slo_aware: true }),
-                ctx,
-                n,
-                13,
-            );
-            rows.push(Fig5Row {
-                tp,
-                ctx,
-                ttft_vllm: v.ttft().mean(),
-                ttft_layerkv: l.ttft().mean(),
-                tput_vllm: v.throughput_tok_s(),
-                tput_layerkv: l.throughput_tok_s(),
-            });
+            cells.push((tp, ctx));
         }
     }
-    rows
+    par_map(&cells, |&(tp, ctx)| {
+        let mut base = setup("34b");
+        base.tp = tp;
+        let v = run_fixed(base.clone().with_policy(Policy::Vllm), ctx, n, 13);
+        let l = run_fixed(
+            base.clone().with_policy(Policy::LayerKv { slo_aware: true }),
+            ctx,
+            n,
+            13,
+        );
+        Fig5Row {
+            tp,
+            ctx,
+            ttft_vllm: v.ttft().mean(),
+            ttft_layerkv: l.ttft().mean(),
+            tput_vllm: v.throughput_tok_s(),
+            tput_layerkv: l.throughput_tok_s(),
+        }
+    })
 }
 
 pub fn print_fig5(rows: &[Fig5Row]) {
@@ -271,29 +287,26 @@ pub struct Fig67Row {
 
 pub fn fig6_7() -> Vec<Fig67Row> {
     let n = n_requests(500);
-    RATES
-        .iter()
-        .map(|&rate| {
-            let base = setup("7b");
-            let v = run_sharegpt(base.clone().with_policy(Policy::Vllm), rate, n, 17);
-            let l = run_sharegpt(
-                base.with_policy(Policy::LayerKv { slo_aware: true }),
-                rate,
-                n,
-                17,
-            );
-            let (mut vt, mut lt) = (v.ttft(), l.ttft());
-            Fig67Row {
-                rate,
-                ttft_mean_vllm: vt.mean(),
-                ttft_mean_layerkv: lt.mean(),
-                ttft_p99_vllm: vt.p99(),
-                ttft_p99_layerkv: lt.p99(),
-                tput_vllm: v.throughput_tok_s(),
-                tput_layerkv: l.throughput_tok_s(),
-            }
-        })
-        .collect()
+    par_map(RATES, |&rate| {
+        let base = setup("7b");
+        let v = run_sharegpt(base.clone().with_policy(Policy::Vllm), rate, n, 17);
+        let l = run_sharegpt(
+            base.with_policy(Policy::LayerKv { slo_aware: true }),
+            rate,
+            n,
+            17,
+        );
+        let (mut vt, mut lt) = (v.ttft(), l.ttft());
+        Fig67Row {
+            rate,
+            ttft_mean_vllm: vt.mean(),
+            ttft_mean_layerkv: lt.mean(),
+            ttft_p99_vllm: vt.p99(),
+            ttft_p99_layerkv: lt.p99(),
+            tput_vllm: v.throughput_tok_s(),
+            tput_layerkv: l.throughput_tok_s(),
+        }
+    })
 }
 
 pub fn print_fig6(rows: &[Fig67Row]) {
@@ -358,32 +371,29 @@ pub struct Fig8Row {
 pub fn fig8() -> Vec<Fig8Row> {
     let n = n_requests(500);
     let slo = SloTargets { ttft_s: 3.0, tpot_s: 0.2 };
-    [4.0, 4.5, 5.0, 5.5, 6.0, 6.5, 7.0, 7.5, 8.0]
-        .iter()
-        .map(|&rate| {
-            let mut base = setup("7b");
-            base.slo = slo;
-            let v = run_sharegpt(base.clone().with_policy(Policy::Vllm), rate, n, 19);
-            let l = run_sharegpt(
-                base.clone().with_policy(Policy::LayerKv { slo_aware: true }),
-                rate,
-                n,
-                19,
-            );
-            let ln = run_sharegpt(
-                base.with_policy(Policy::LayerKv { slo_aware: false }),
-                rate,
-                n,
-                19,
-            );
-            Fig8Row {
-                rate,
-                viol_vllm: v.slo_violation_rate(&slo),
-                viol_layerkv: l.slo_violation_rate(&slo),
-                viol_layerkv_noslo: ln.slo_violation_rate(&slo),
-            }
-        })
-        .collect()
+    par_map(&[4.0, 4.5, 5.0, 5.5, 6.0, 6.5, 7.0, 7.5, 8.0], |&rate| {
+        let mut base = setup("7b");
+        base.slo = slo;
+        let v = run_sharegpt(base.clone().with_policy(Policy::Vllm), rate, n, 19);
+        let l = run_sharegpt(
+            base.clone().with_policy(Policy::LayerKv { slo_aware: true }),
+            rate,
+            n,
+            19,
+        );
+        let ln = run_sharegpt(
+            base.with_policy(Policy::LayerKv { slo_aware: false }),
+            rate,
+            n,
+            19,
+        );
+        Fig8Row {
+            rate,
+            viol_vllm: v.slo_violation_rate(&slo),
+            viol_layerkv: l.slo_violation_rate(&slo),
+            viol_layerkv_noslo: ln.slo_violation_rate(&slo),
+        }
+    })
 }
 
 pub fn print_fig8(rows: &[Fig8Row]) {

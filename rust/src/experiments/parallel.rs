@@ -1,0 +1,127 @@
+//! Scoped-thread job pool (std-only) for the experiment harness.
+//!
+//! Every figure sweep is a list of independent (config, seed) cells; this
+//! module fans them across cores with `std::thread::scope` while keeping
+//! the output **deterministic and order-preserving**: each cell seeds its
+//! own `Rng`, workers pull cells from a shared atomic cursor, and results
+//! are stitched back by index — so `par_map` returns exactly what the
+//! serial `items.iter().map(f).collect()` would, just faster.
+//! `rust/tests/prop_invariants.rs` asserts that equivalence.
+//!
+//! Knobs: `LAYERKV_THREADS=<n>` pins the worker count; `LAYERKV_SERIAL=1`
+//! forces in-place serial execution (useful when bisecting).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+
+/// Worker count: `LAYERKV_THREADS` override, else all available cores.
+pub fn default_threads() -> usize {
+    if std::env::var("LAYERKV_SERIAL").map(|v| v != "0").unwrap_or(false) {
+        return 1;
+    }
+    std::env::var("LAYERKV_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        })
+}
+
+/// Map `f` over `items` on up to `default_threads()` workers, preserving
+/// input order in the output.
+pub fn par_map<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    par_map_threads(items, default_threads(), f)
+}
+
+/// As `par_map` with an explicit worker count (1 = serial in-place).
+pub fn par_map_threads<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let threads = threads.max(1).min(items.len());
+    if threads <= 1 {
+        return items.iter().map(&f).collect();
+    }
+
+    let cursor = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel::<(usize, R)>();
+    std::thread::scope(|scope| {
+        let mut workers = Vec::with_capacity(threads);
+        for _ in 0..threads {
+            let tx = tx.clone();
+            let cursor = &cursor;
+            let f = &f;
+            workers.push(scope.spawn(move || loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                let r = f(&items[i]);
+                if tx.send((i, r)).is_err() {
+                    break;
+                }
+            }));
+        }
+        drop(tx); // workers hold the remaining senders
+
+        let mut slots: Vec<Option<R>> = (0..items.len()).map(|_| None).collect();
+        for (i, r) in rx {
+            debug_assert!(slots[i].is_none(), "cell {i} produced twice");
+            slots[i] = Some(r);
+        }
+        // the rx loop ends once every worker exited; re-raise a panicking
+        // cell's own payload (e.g. an engine livelock diagnostic) instead
+        // of masking it with a generic missing-slot error
+        for w in workers {
+            if let Err(panic) = w.join() {
+                std::panic::resume_unwind(panic);
+            }
+        }
+        slots.into_iter().map(|s| s.expect("cell lost")).collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order_and_values() {
+        let items: Vec<usize> = (0..100).collect();
+        let serial: Vec<usize> = items.iter().map(|&x| x * x).collect();
+        for threads in [1, 2, 4, 9] {
+            let par = par_map_threads(&items, threads, |&x| x * x);
+            assert_eq!(par, serial, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn handles_empty_and_single() {
+        let empty: Vec<u32> = Vec::new();
+        assert!(par_map(&empty, |&x| x).is_empty());
+        assert_eq!(par_map(&[7u32], |&x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn threads_cap_never_zero() {
+        assert!(default_threads() >= 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn worker_panics_propagate() {
+        let items: Vec<usize> = (0..8).collect();
+        let _ = par_map_threads(&items, 4, |&x| {
+            assert!(x != 5, "boom");
+            x
+        });
+    }
+}

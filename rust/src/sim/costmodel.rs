@@ -84,19 +84,25 @@ impl CostModel {
     /// shard once plus every running request's resident KV; compute rides
     /// under that. `ctx_lens` are the current context lengths.
     pub fn decode_step_time(&self, ctx_lens: &[usize]) -> f64 {
-        if ctx_lens.is_empty() {
+        self.decode_step_time_sum(ctx_lens.iter().sum(), ctx_lens.len())
+    }
+
+    /// Sum form of `decode_step_time`: the formula only consumes the batch
+    /// size and the *total* context length, so the engine feeds it the
+    /// incrementally-maintained running-token aggregate instead of
+    /// materialising a per-request Vec every step (§Perf).
+    pub fn decode_step_time_sum(&self, total_ctx: usize, batch: usize) -> f64 {
+        if batch == 0 {
             return 0.0;
         }
         let c = &self.cfg;
         let weights = c.weight_bytes_per_gpu() as f64 / c.node.gpu.mem_bw;
-        let kv_bytes: f64 = ctx_lens
-            .iter()
-            .map(|&s| s as f64 * c.model.kv_bytes_per_token() as f64 / c.tp as f64)
-            .sum();
+        let kv_bytes =
+            total_ctx as f64 * c.model.kv_bytes_per_token() as f64 / c.tp as f64;
         let kv = kv_bytes / c.node.gpu.mem_bw;
-        let flops = 2.0 * c.model.n_params as f64 * ctx_lens.len() as f64;
+        let flops = 2.0 * c.model.n_params as f64 * batch as f64;
         let compute = flops / (c.node.gpu.peak_flops * c.tp as f64);
-        (weights + kv).max(compute) + self.allreduce_time(ctx_lens.len()) + STEP_OVERHEAD_S
+        (weights + kv).max(compute) + self.allreduce_time(batch) + STEP_OVERHEAD_S
     }
 
     /// Per-forward-pass all-reduce cost under TP: two all-reduces per layer

@@ -3,14 +3,17 @@
 
 use layerkv::config::{Policy, ServingConfig};
 use layerkv::coordinator::block::{KvManager, LayerBlockTable};
+use layerkv::coordinator::engine::run_trace_oracle;
 use layerkv::coordinator::predict::LengthPredictor;
 use layerkv::coordinator::run_trace;
+use layerkv::experiments::par_map_threads;
 use layerkv::sim::{BusyWindow, CostModel, PcieLink};
 use layerkv::util::prop::prop;
 use layerkv::util::{Rng, Series};
 use layerkv::workload::arrivals::Arrivals;
 use layerkv::workload::fixed::FixedWorkload;
 use layerkv::workload::sharegpt::ShareGptWorkload;
+use layerkv::workload::Trace;
 
 #[test]
 fn prop_engine_no_request_lost_any_policy_any_workload() {
@@ -42,6 +45,81 @@ fn prop_engine_no_request_lost_any_policy_any_workload() {
             assert!(r.first_token <= r.finish);
         }
     });
+}
+
+/// The §Perf refactor's safety net: the incremental-state engine (cached
+/// running aggregates, sorted running set, event-driven updates) must be
+/// *bit-identical* to the recompute-from-scratch oracle on any trace,
+/// under every policy.
+#[test]
+fn prop_incremental_engine_matches_recompute_oracle() {
+    prop(8, |rng| {
+        let n = rng.range_usize(5, 30);
+        let trace: Trace = if rng.chance(0.5) {
+            ShareGptWorkload::paper(rng.f64() * 5.0 + 0.5, n).generate(rng)
+        } else {
+            FixedWorkload {
+                prompt_len: rng.range_usize(16, 4096),
+                output_len: rng.range_usize(4, 128),
+                n_requests: n,
+                arrivals: Arrivals::Poisson { rate: rng.f64() * 3.0 + 0.2 },
+            }
+            .generate(rng)
+        };
+        for policy in [
+            Policy::Vllm,
+            Policy::LayerKv { slo_aware: true },
+            Policy::LayerKv { slo_aware: false },
+        ] {
+            let cfg = ServingConfig::llama2_7b_tp1().with_policy(policy);
+            let (inc, inc_stats) = run_trace(cfg.clone(), &trace, 0.8);
+            let (ora, ora_stats) = run_trace_oracle(cfg, &trace, 0.8);
+            assert_eq!(inc.records, ora.records, "{policy:?}: records diverge");
+            assert_eq!(
+                inc.makespan.to_bits(),
+                ora.makespan.to_bits(),
+                "{policy:?}: makespan diverges"
+            );
+            assert_eq!(
+                (inc_stats.steps, inc_stats.prefill_steps, inc_stats.decode_steps),
+                (ora_stats.steps, ora_stats.prefill_steps, ora_stats.decode_steps),
+                "{policy:?}: step counts diverge"
+            );
+            assert_eq!(inc_stats.preemptions, ora_stats.preemptions);
+            assert_eq!(inc_stats.dropped, ora_stats.dropped);
+        }
+    });
+}
+
+/// The parallel experiment harness must produce exactly the rows serial
+/// execution produces — same values, same order — for any worker count.
+#[test]
+fn prop_parallel_harness_rows_match_serial() {
+    let cells: Vec<(usize, u64)> =
+        (0..6usize).map(|i| (128 + 256 * i, 100 + i as u64)).collect();
+    let run_cell = |&(ctx, seed): &(usize, u64)| {
+        let cfg =
+            ServingConfig::llama2_7b_tp1().with_policy(Policy::LayerKv { slo_aware: true });
+        let trace = FixedWorkload {
+            prompt_len: ctx,
+            output_len: 32,
+            n_requests: 8,
+            arrivals: Arrivals::Poisson { rate: 2.0 },
+        }
+        .generate(&mut Rng::new(seed));
+        let (rep, stats) = run_trace(cfg, &trace, 0.8);
+        (
+            rep.ttft().mean().to_bits(),
+            rep.makespan.to_bits(),
+            rep.records.len(),
+            stats.steps,
+        )
+    };
+    let serial = par_map_threads(&cells, 1, run_cell);
+    for threads in [2usize, 4, 8] {
+        let par = par_map_threads(&cells, threads, run_cell);
+        assert_eq!(par, serial, "threads={threads}");
+    }
 }
 
 #[test]

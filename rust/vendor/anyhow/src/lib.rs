@@ -1,0 +1,239 @@
+//! Offline stand-in for the `anyhow` crate, covering exactly the API
+//! surface this workspace uses: `Error`, `Result`, the `anyhow!`/`bail!`/
+//! `ensure!` macros, and the `Context` extension trait on `Result` and
+//! `Option`. Error values carry an optional chain of context strings that
+//! `{:#}` formatting renders `outer: inner` like the real crate.
+
+use std::fmt;
+
+/// Boxed dynamic error with prepended context layers.
+pub struct Error {
+    context: Vec<String>,
+    source: Box<dyn std::error::Error + Send + Sync + 'static>,
+}
+
+impl Error {
+    /// Build from any error type (what `?` conversions go through).
+    pub fn new<E>(source: E) -> Self
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        Error { context: Vec::new(), source: Box::new(source) }
+    }
+
+    /// Build from a displayable message (`anyhow!("...")`).
+    pub fn msg<M>(message: M) -> Self
+    where
+        M: fmt::Display + Send + Sync + 'static,
+    {
+        Error { context: Vec::new(), source: Box::new(Message(message.to_string())) }
+    }
+
+    /// Prepend a context layer (outermost first in display).
+    pub fn context<C>(mut self, context: C) -> Self
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.context.insert(0, context.to_string());
+        self
+    }
+
+    /// The outermost description (context if any, else the source).
+    fn headline(&self) -> String {
+        match self.context.first() {
+            Some(c) => c.clone(),
+            None => self.source.to_string(),
+        }
+    }
+
+    /// Every layer, outermost first: contexts, then the error chain.
+    fn layers(&self) -> Vec<String> {
+        let mut out = self.context.clone();
+        out.push(self.source.to_string());
+        let mut cause = self.source.source();
+        while let Some(c) = cause {
+            out.push(c.to_string());
+            cause = c.source();
+        }
+        out
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: the whole chain, colon-joined (anyhow's format)
+            write!(f, "{}", self.layers().join(": "))
+        } else {
+            write!(f, "{}", self.headline())
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let layers = self.layers();
+        write!(f, "{}", layers[0])?;
+        if layers.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for l in &layers[1..] {
+                write!(f, "\n    {l}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        Error::new(e)
+    }
+}
+
+/// Message-only error payload for `anyhow!`/`bail!`.
+#[derive(Debug)]
+struct Message(String);
+
+impl fmt::Display for Message {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Message {}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to the error/none arm of a `Result` or `Option`.
+pub trait Context<T> {
+    fn context<C>(self, context: C) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T> for std::result::Result<T, E>
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn context<C>(self, context: C) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| Error::new(e).context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::new(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// `anyhow!("fmt", args..)` or `anyhow!(displayable_value)`.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Early-return with an `anyhow!` error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Assert-or-bail.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: `{}`", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert_eq!(format!("{e}"), "missing");
+    }
+
+    #[test]
+    fn context_layers_render_outermost_first() {
+        let e: Error = Err::<(), _>(io_err())
+            .with_context(|| "opening config".to_string())
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "opening config");
+        assert_eq!(format!("{e:#}"), "opening config: missing");
+        assert!(format!("{e:?}").contains("Caused by:"));
+    }
+
+    #[test]
+    fn option_context_and_macros() {
+        let e = None::<u32>.context("nothing here").unwrap_err();
+        assert_eq!(format!("{e}"), "nothing here");
+        let e = anyhow!("x = {}", 7);
+        assert_eq!(format!("{e}"), "x = 7");
+        let e = anyhow!(String::from("owned message"));
+        assert_eq!(format!("{e}"), "owned message");
+        fn f() -> Result<()> {
+            ensure!(1 + 1 == 2);
+            ensure!(false, "bad {}", "news");
+            Ok(())
+        }
+        assert_eq!(format!("{}", f().unwrap_err()), "bad news");
+    }
+}
