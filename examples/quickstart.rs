@@ -44,8 +44,12 @@ fn main() -> anyhow::Result<()> {
         })
         .collect();
 
-    let (results, report) = engine.serve(jobs)?;
-    for r in &results {
+    let out = engine.serve(jobs)?;
+    for (id, why) in &out.dropped {
+        println!("req {id}: rejected — {why}");
+    }
+    let report = &out.report;
+    for r in &out.results {
         println!(
             "req {}: prompt {:2} tokens -> {:2} new tokens {:?}  (TTFT {:.1} ms, TPOT {:.2} ms)",
             r.id,

@@ -39,7 +39,8 @@ fn run(policy: Policy, budget: usize, jobs: Vec<ServeRequest>) -> anyhow::Result
         &dir,
         RealEngineConfig { device_kv_budget: budget, policy, max_batch: 8 },
     )?;
-    let (_results, report) = engine.serve(jobs)?;
+    let out = engine.serve(jobs)?;
+    let report = out.report;
     let mut ttft = report.ttft();
     let mut tpot = report.tpot();
     Ok((

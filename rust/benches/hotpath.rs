@@ -14,7 +14,7 @@ use layerkv::config::{Policy, ServingConfig};
 use layerkv::coordinator::block::KvManager;
 use layerkv::coordinator::predict::LengthPredictor;
 use layerkv::coordinator::request::{Phase, Request};
-use layerkv::coordinator::run_trace;
+use layerkv::coordinator::{run_trace, Engine};
 use layerkv::coordinator::scheduler::{
     LayerKvScheduler, SchedContext, Scheduler, VllmScheduler,
 };
@@ -158,6 +158,29 @@ fn main() {
             .generate(&mut Rng::new(5));
             black_box(run_trace(cfg, &trace, 0.8));
         });
+    }
+
+    // --- unified coordinator (ExecutionBackend seam overhead) -----------
+    // One iteration = one full Engine::<SimBackend> run of a FIXED mini
+    // trace (same seed, same config every PR), so the series tracks the
+    // per-step cost of the backend seam across PRs. Dispatch is
+    // monomorphised — this should sit at the pre-refactor engine level.
+    {
+        let trace = FixedWorkload {
+            prompt_len: 512,
+            output_len: 32,
+            n_requests: 8,
+            arrivals: Arrivals::Poisson { rate: 4.0 },
+        }
+        .generate(&mut Rng::new(9));
+        for policy in [Policy::Vllm, Policy::LayerKv { slo_aware: true }] {
+            let name = format!("engine/unified_step_{}", policy.name());
+            bench(&name, 2.0, || {
+                let cfg = ServingConfig::llama2_7b_tp1().with_policy(policy);
+                let mut e = Engine::new(cfg, LengthPredictor::new(64, 0.8, 42));
+                black_box(e.run(&trace));
+            });
+        }
     }
 
     // --- predictor ------------------------------------------------------

@@ -97,6 +97,31 @@ impl NodeSpec {
     pub fn l20_node_nvlink() -> Self {
         NodeSpec { fabric: Fabric::NvLink, nvlink_bw: 300.0e9, ..Self::l20_node() }
     }
+
+    /// The PJRT-CPU testbed the real tiny-model path runs on: the
+    /// "device" pool is host RAM and pool-to-pool transfers are memcpys.
+    /// Orders of magnitude rather than datasheet numbers — on this path
+    /// the cost model only steers the scheduler's heuristics (the §3.1.1
+    /// x-solve, TPOT slack, Eq. 5 forecasts), never the measured
+    /// latencies, which come from the wall clock. A slow "link" relative
+    /// to "compute" keeps the x-solve in the long-prompt regime (x -> 0,
+    /// admit layer-wise), which is the behaviour a host-offload serving
+    /// path wants.
+    pub fn cpu_pjrt_testbed() -> Self {
+        NodeSpec {
+            gpu: GpuSpec {
+                name: "cpu-pjrt",
+                memory_bytes: 8 * (1 << 30),
+                peak_flops: 5.0e10,
+                mem_bw: 2.0e10,
+            },
+            n_gpus: 1,
+            pcie: PcieSpec { bandwidth: 1.0e10, latency: 1.0e-6, gpus_per_link: 1 },
+            fabric: Fabric::Pcie,
+            host_memory_bytes: 16 * (1u64 << 30),
+            nvlink_bw: 0.0,
+        }
+    }
 }
 
 #[cfg(test)]

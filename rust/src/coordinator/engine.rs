@@ -1,13 +1,17 @@
-//! The continuous-batching execution engine (simulated executor).
+//! The continuous-batching coordinator, generic over its executor.
 //!
-//! Drives the full request lifecycle against the analytical cost models:
+//! `Engine<B: ExecutionBackend>` drives the full request lifecycle —
 //! iteration-level scheduling (one prefill batch or one decode iteration
 //! per step), layer-wise KV allocation/offloading per the active policy,
-//! recompute preemption, and the decode-phase host-KV streaming penalty.
+//! recompute preemption, and the decode-phase host-KV streaming penalty —
+//! while the backend decides what a step physically does and how long it
+//! takes (see `coordinator/backend.rs`):
 //!
-//! Virtual time: the engine advances `now` by each step's modeled
-//! duration; all latency metrics fall out of the same clock the paper
-//! measures with wall time.
+//! * `Engine<SimBackend>` is the discrete-event simulator: virtual time,
+//!   analytical cost models. `run_trace` builds it.
+//! * `Engine<PjrtBackend>` (`runtime/realengine.rs`) serves real tokens
+//!   through the compiled HLO on wall time — same scheduler policies,
+//!   same `KvManager` layer-table accounting.
 //!
 //! §Perf architecture: the per-step hot loop does zero steady-state heap
 //! allocation and no from-scratch scans —
@@ -22,14 +26,20 @@
 //! * `active_buf`/`finished_buf` are reusable per-step buffers.
 //! * The scheduler returns the retained-layer count `x` with each
 //!   admission, so prefill steps no longer rebuild a `SchedContext`.
+//! * Backend dispatch is static (monomorphised), so the seam costs
+//!   nothing on the hot path (`engine/unified_step` in the hotpath
+//!   bench tracks this).
 //!
 //! `use_recompute_oracle()` switches every cached quantity back to
 //! from-scratch recomputation each step; `rust/tests/prop_invariants.rs`
-//! asserts both modes produce bit-identical reports.
+//! asserts both modes produce bit-identical reports, and additionally
+//! that `Engine<SimBackend>` matches the pre-refactor monolithic engine
+//! (`tests/support/reference_engine.rs`) bit-for-bit.
 
 use std::collections::VecDeque;
 
-use crate::config::{Fabric, Policy, ServingConfig};
+use crate::config::{Policy, ServingConfig};
+use crate::coordinator::backend::{Clock, ExecutionBackend, SimBackend};
 use crate::coordinator::block::{KvError, KvManager, Residency};
 use crate::coordinator::predict::LengthPredictor;
 use crate::coordinator::request::{Phase, ReqId, Request};
@@ -39,7 +49,7 @@ use crate::sim::CostModel;
 use crate::workload::Trace;
 
 /// Counters the experiments report alongside latency.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct EngineStats {
     pub steps: u64,
     pub prefill_steps: u64,
@@ -80,18 +90,19 @@ impl RunningAggregates {
     }
 }
 
-/// Simulation engine. One instance runs one trace to completion.
-pub struct Engine {
+/// The coordinator. One instance runs one trace to completion against its
+/// execution backend.
+pub struct Engine<B: ExecutionBackend = SimBackend> {
     pub cfg: ServingConfig,
     pub cost: CostModel,
     pub kv: KvManager,
+    pub backend: B,
     scheduler: Box<dyn Scheduler>,
     predictor: LengthPredictor,
     requests: Vec<Request>,
     waiting: VecDeque<ReqId>,
     /// §Perf invariant: sorted by `prefill_start` ascending.
     running: Vec<ReqId>,
-    now: f64,
     stats: EngineStats,
     records: Vec<RequestRecord>,
     agg: RunningAggregates,
@@ -104,15 +115,32 @@ pub struct Engine {
     finished_buf: Vec<ReqId>,
 }
 
-impl Engine {
+impl Engine<SimBackend> {
+    /// The simulation engine: pools sized by the config's memory
+    /// profiling pass, steps costed by the analytical models.
     pub fn new(cfg: ServingConfig, predictor: LengthPredictor) -> Self {
-        let cost = CostModel::new(cfg.clone());
         let kv = KvManager::new(
             cfg.num_gpu_layer_blocks(),
             cfg.num_cpu_layer_blocks(),
             cfg.block_size,
             cfg.model.n_layers,
         );
+        let backend = SimBackend::new(&cfg);
+        Engine::with_parts(cfg, kv, backend, predictor)
+    }
+}
+
+impl<B: ExecutionBackend> Engine<B> {
+    /// Assemble a coordinator from explicit parts: any backend, any pool
+    /// sizing. The real serving path uses this with pools derived from
+    /// its device byte budget.
+    pub fn with_parts(
+        cfg: ServingConfig,
+        kv: KvManager,
+        backend: B,
+        predictor: LengthPredictor,
+    ) -> Self {
+        let cost = CostModel::new(cfg.clone());
         let scheduler = make_scheduler(&cfg);
         let restore_threshold =
             (cfg.avail_threshold_frac * kv.gpu.total() as f64) as usize;
@@ -120,12 +148,12 @@ impl Engine {
             cfg,
             cost,
             kv,
+            backend,
             scheduler,
             predictor,
             requests: Vec::new(),
             waiting: VecDeque::new(),
             running: Vec::new(),
-            now: 0.0,
             stats: EngineStats::default(),
             records: Vec::new(),
             agg: RunningAggregates::default(),
@@ -147,8 +175,15 @@ impl Engine {
         self.incremental = false;
     }
 
-    /// Run a trace to completion; returns the latency report.
+    /// Run a trace to completion; returns the latency report. Panics if
+    /// the backend fails (the simulated backend never does); fallible
+    /// backends drive `try_run`.
     pub fn run(&mut self, trace: &Trace) -> Report {
+        self.try_run(trace).expect("execution backend failed")
+    }
+
+    /// Run a trace to completion; returns the latency report.
+    pub fn try_run(&mut self, trace: &Trace) -> anyhow::Result<Report> {
         self.requests = trace
             .requests
             .iter()
@@ -162,10 +197,20 @@ impl Engine {
         loop {
             // admit arrivals up to `now`
             while next_arrival < self.requests.len()
-                && self.requests[next_arrival].arrival <= self.now + 1e-12
+                && self.requests[next_arrival].arrival
+                    <= self.backend.clock().now() + 1e-12
             {
-                self.waiting.push_back(next_arrival);
+                let rid = next_arrival;
                 next_arrival += 1;
+                if self.backend.supports_prompt(self.requests[rid].prompt_len) {
+                    self.waiting.push_back(rid);
+                } else {
+                    // the executor can never run this prompt (e.g. exceeds
+                    // every compiled prefill bucket): reject it instead of
+                    // emitting a zero-length record that skews TTFT/TPOT
+                    self.stats.dropped.push(rid);
+                    self.requests[rid].phase = Phase::Finished;
+                }
             }
 
             self.oracle_refresh();
@@ -174,7 +219,7 @@ impl Engine {
                 // §Perf: make_contiguous avoids a per-step Vec allocation
                 let waiting = self.waiting.make_contiguous();
                 let ctx = SchedContext {
-                    now: self.now,
+                    now: self.backend.clock().now(),
                     waiting,
                     running: &self.running,
                     requests: &self.requests,
@@ -186,8 +231,8 @@ impl Engine {
             };
 
             match action {
-                Action::Prefill(reqs) => self.step_prefill(&reqs),
-                Action::Decode => self.step_decode(),
+                Action::Prefill(reqs) => self.step_prefill(&reqs)?,
+                Action::Decode => self.step_decode()?,
                 Action::Wait => {
                     if let Some(&r) = self.waiting.front() {
                         // a request that can never fit (prompt KV exceeds the
@@ -201,7 +246,8 @@ impl Engine {
                         }
                     }
                     if next_arrival < self.requests.len() {
-                        self.now = self.requests[next_arrival].arrival.max(self.now);
+                        let t = self.requests[next_arrival].arrival;
+                        self.backend.clock_mut().wait_until(t);
                         continue;
                     }
                     if self.running.is_empty() && self.waiting.is_empty() {
@@ -218,7 +264,7 @@ impl Engine {
             }
 
             self.stats.steps += 1;
-            if self.stats.steps > max_steps {
+            if self.backend.bounded_steps() && self.stats.steps > max_steps {
                 panic!(
                     "engine exceeded {max_steps} steps ({} waiting, {} running) — livelock",
                     self.waiting.len(),
@@ -226,7 +272,7 @@ impl Engine {
                 );
             }
         }
-        Report::new(std::mem::take(&mut self.records))
+        Ok(Report::new(std::mem::take(&mut self.records)))
     }
 
     /// Could `r` EVER be admitted on an empty machine under this policy?
@@ -280,15 +326,17 @@ impl Engine {
         }
     }
 
-    /// Offload with aggregate upkeep: a formerly fully-resident request
-    /// drops out of the decode batch.
+    /// Offload with aggregate upkeep and backend mirroring: a formerly
+    /// fully-resident request drops out of the decode batch, and a real
+    /// backend moves the layer's tensor to the host pool.
     fn kv_offload(&mut self, rid: ReqId, layer: usize) -> Result<usize, KvError> {
         let was_resident =
             self.kv.table(rid).map(|t| t.fully_resident()).unwrap_or(false);
         let out = self.kv.offload_layer(rid, layer);
-        if self.incremental {
-            if let Ok(n) = out {
-                if n > 0 && was_resident {
+        if let Ok(n) = out {
+            if n > 0 {
+                self.backend.offload_layer(rid, layer);
+                if self.incremental && was_resident {
                     self.agg.resident_count -= 1;
                     self.agg.resident_tokens -= self.requests[rid].context_len();
                 }
@@ -297,13 +345,14 @@ impl Engine {
         out
     }
 
-    /// Onload with aggregate upkeep: a request whose last parked layer
-    /// returns becomes decode-batch eligible again.
+    /// Onload with aggregate upkeep and backend mirroring: a request whose
+    /// last parked layer returns becomes decode-batch eligible again.
     fn kv_onload(&mut self, rid: ReqId, layer: usize) -> Result<usize, KvError> {
         let out = self.kv.onload_layer(rid, layer);
-        if self.incremental {
-            if let Ok(n) = out {
-                if n > 0
+        if let Ok(n) = out {
+            if n > 0 {
+                self.backend.onload_layer(rid, layer);
+                if self.incremental
                     && self.kv.table(rid).map(|t| t.fully_resident()).unwrap_or(false)
                 {
                     self.agg.resident_count += 1;
@@ -316,10 +365,9 @@ impl Engine {
 
     // --- prefill -------------------------------------------------------
 
-    fn step_prefill(&mut self, reqs: &[(ReqId, usize)]) {
+    fn step_prefill(&mut self, reqs: &[(ReqId, usize)]) -> anyhow::Result<()> {
         let mut duration = 0.0;
         let mut offload_bytes = 0.0;
-        let l = self.cfg.model.n_layers;
         for &(rid, x) in reqs {
             let len = self.requests[rid].prefill_len();
             let alloc = match self.cfg.policy {
@@ -331,24 +379,29 @@ impl Engine {
                 // leave in queue for the next round
                 continue;
             }
-            // d2h of the L-x offloaded layers rides under the prefill
-            // (§3.1.1 chose x so T_offload <= T_prefill)
-            offload_bytes += len as f64
-                * (l - x.min(l)) as f64
-                * self.cfg.offload_bytes_per_token_layer()
-                / self.cfg.tp as f64;
-
             // admissions are a queue prefix -> O(1) pop in the common case
             if self.waiting.front() == Some(&rid) {
                 self.waiting.pop_front();
             } else if let Some(pos) = self.waiting.iter().position(|&w| w == rid) {
                 self.waiting.remove(pos);
             }
-            let r = &mut self.requests[rid];
-            if r.prefill_start.is_none() {
-                r.prefill_start = Some(self.now);
+            if self.requests[rid].prefill_start.is_none() {
+                self.requests[rid].prefill_start = Some(self.backend.clock().now());
             }
-            duration += self.cost.prefill_time(len);
+            // execute: modeled duration (sim) or the real forward pass
+            let out = self.backend.prefill(&self.requests[rid], &self.kv)?;
+            duration += out.duration;
+            offload_bytes += out.offload_bytes;
+            // wall-clock backends report the actual first-token instant so
+            // a batched admission doesn't charge later requests' prefill
+            // time to earlier requests' TTFT
+            if let Some(t) = out.first_token_at {
+                if self.requests[rid].first_token.is_none() {
+                    self.requests[rid].first_token = Some(t);
+                }
+            }
+
+            let r = &mut self.requests[rid];
             r.preemptions += matches!(r.phase, Phase::Preempted) as usize;
             r.phase = Phase::Decoding;
             // §Perf invariant: insert in prefill_start order. Fresh
@@ -363,15 +416,19 @@ impl Engine {
             self.agg_admit(rid);
         }
         self.stats.offload_bytes += offload_bytes;
-        self.now += duration;
+        self.backend.clock_mut().advance(duration);
         self.stats.prefill_steps += 1;
 
-        // first token emitted at prefill end
+        // first token emitted at prefill end (fresh admissions only:
+        // `generated == 0` — preempt re-admissions keep their history)
+        let now = self.backend.clock().now();
         for &(rid, _) in reqs {
             if self.requests[rid].phase == Phase::Decoding
-                && self.requests[rid].first_token.is_none()
+                && self.requests[rid].generated == 0
             {
-                self.requests[rid].first_token = Some(self.now);
+                if self.requests[rid].first_token.is_none() {
+                    self.requests[rid].first_token = Some(now);
+                }
                 self.requests[rid].generated = 1;
                 if self.incremental
                     && self.kv.table(rid).map(|t| t.fully_resident()).unwrap_or(false)
@@ -383,11 +440,12 @@ impl Engine {
                 }
             }
         }
+        Ok(())
     }
 
     // --- decode ----------------------------------------------------------
 
-    fn step_decode(&mut self) {
+    fn step_decode(&mut self) -> anyhow::Result<()> {
         debug_assert!(!self.running.is_empty());
 
         // Restore parked KV first: LayerKV "maximizes the number of layers
@@ -401,21 +459,28 @@ impl Engine {
                 RunningAggregates::recompute(&self.running, &self.requests, &self.kv);
         }
 
-        // The decode batch is the GPU-resident subset. Requests whose KV
-        // is still (partly) on the host are *parked*: they already got
-        // their first token at prefill end (the TTFT win) and rejoin once
-        // blocks free up. If nothing is fully resident, force-run the
-        // oldest parked request with layer-by-layer host streaming (§4's
-        // decode-phase h2d path) so progress is guaranteed.
+        // The decode batch is the GPU-resident subset, capped at what the
+        // executor can batch in one step (unbounded in simulation).
+        // Requests whose KV is still (partly) on the host are *parked*:
+        // they already got their first token at prefill end (the TTFT win)
+        // and rejoin once blocks free up. If nothing is fully resident,
+        // force-run the oldest parked request with layer-by-layer host
+        // streaming (§4's decode-phase h2d path) so progress is guaranteed.
         let mut active = std::mem::take(&mut self.active_buf);
         active.clear();
         let mut stream_bytes = 0.0;
-        let (batch, total_ctx) = if self.agg.resident_count > 0 {
+        let cap = self.backend.max_decode_lanes();
+        let total_ctx = if self.agg.resident_count > 0 {
             active.extend(self.running.iter().copied().filter(|&r| {
                 self.kv.table(r).map(|t| t.fully_resident()).unwrap_or(false)
             }));
             debug_assert_eq!(active.len(), self.agg.resident_count);
-            (self.agg.resident_count, self.agg.resident_tokens)
+            if active.len() > cap {
+                active.truncate(cap);
+                active.iter().map(|&r| self.requests[r].context_len()).sum()
+            } else {
+                self.agg.resident_tokens
+            }
         } else {
             let oldest = *self.running.first().expect("running nonempty");
             if let Some(t) = self.kv.table(oldest) {
@@ -425,32 +490,17 @@ impl Engine {
                     / self.cfg.tp as f64;
             }
             active.push(oldest);
-            (1, self.requests[oldest].context_len())
+            self.requests[oldest].context_len()
         };
 
-        let compute = self.cost.decode_step_time_sum(total_ctx, batch);
-        let stream_time = if stream_bytes > 0.0 {
-            stream_bytes / self.cost.pcie_bw_per_gpu() + self.cfg.node.pcie.latency
-        } else {
-            0.0
-        };
-        let mut step = compute.max(stream_time);
-        self.stats.stream_stall_s += (stream_time - compute).max(0.0);
+        let out =
+            self.backend.decode(&active, &self.requests, &self.kv, total_ctx, stream_bytes)?;
+        self.stats.stream_stall_s += out.stream_stall_s;
         self.stats.onload_stream_bytes += stream_bytes;
-
-        // §3.1.3 PCIe contention: TP over PCIe shares the link between
-        // all-reduce and KV streams. The check+chunk mechanism confines the
-        // penalty to chunk tails; without it the overlap serializes.
-        if self.cfg.tp > 1 && self.cfg.node.fabric == Fabric::Pcie && stream_bytes > 0.0 {
-            let ar = self.cost.allreduce_time(batch);
-            let penalty = if self.cfg.pcie_chunking { 0.05 * ar } else { ar.min(stream_time) };
-            step += penalty;
-            self.stats.contention_s += penalty;
-        }
-
-        self.now += step;
+        self.stats.contention_s += out.contention_s;
+        self.backend.clock_mut().advance(out.duration);
         self.stats.decode_steps += 1;
-        self.scheduler.observe_decode_step(step);
+        self.scheduler.observe_decode_step(out.duration);
 
         // advance the active batch by one token
         let mut finished = std::mem::take(&mut self.finished_buf);
@@ -472,6 +522,7 @@ impl Engine {
             if self.requests[rid].phase != Phase::Decoding {
                 continue;
             }
+            self.backend.commit_token(rid);
             self.requests[rid].generated += 1;
             if self.incremental
                 && self.kv.table(rid).map(|t| t.fully_resident()).unwrap_or(false)
@@ -494,7 +545,7 @@ impl Engine {
         let plan = {
             let waiting = self.waiting.make_contiguous();
             let ctx = SchedContext {
-                now: self.now,
+                now: self.backend.clock().now(),
                 waiting,
                 running: &self.running,
                 requests: &self.requests,
@@ -515,6 +566,7 @@ impl Engine {
                 }
             }
         }
+        Ok(())
     }
 
     /// GPU pool exhausted mid-decode. LayerKV: force-offload resident
@@ -563,13 +615,18 @@ impl Engine {
             }
             Policy::Vllm => {
                 // preempt the most recently admitted running request
-                // (not the needy one if possible): last in sorted order
+                // (not the needy one if possible): last in sorted order.
+                // Skip requests that already emitted their final token
+                // this step (still in `running` until the deferred
+                // complete()): preempting one would requeue a finished
+                // request and serve it twice.
+                let reqs = &self.requests;
                 let victim = self
                     .running
                     .iter()
                     .rev()
                     .copied()
-                    .find(|&r| r != needy)
+                    .find(|&r| r != needy && !reqs[r].done())
                     .or(Some(needy));
                 match victim {
                     Some(v) => {
@@ -586,6 +643,7 @@ impl Engine {
     fn preempt_recompute(&mut self, rid: ReqId) {
         self.agg_remove(rid);
         let _ = self.kv.release(rid);
+        self.backend.evict(rid);
         self.running.retain(|&r| r != rid);
         self.requests[rid].phase = Phase::Preempted;
         self.waiting.push_front(rid);
@@ -625,21 +683,22 @@ impl Engine {
     fn complete(&mut self, rid: ReqId) {
         self.agg_remove(rid);
         let _ = self.kv.release(rid);
+        self.backend.release(rid);
         self.running.retain(|&r| r != rid);
+        let now = self.backend.clock().now();
         let r = &mut self.requests[rid];
         r.phase = Phase::Finished;
-        r.finish = Some(self.now);
+        r.finish = Some(now);
         self.records.push(RequestRecord {
             id: r.id,
             arrival: r.arrival,
             prefill_start: r.prefill_start.unwrap_or(r.arrival),
-            first_token: r.first_token.unwrap_or(self.now),
-            finish: self.now,
+            first_token: r.first_token.unwrap_or(now),
+            finish: now,
             prompt_len: r.prompt_len,
             output_len: r.output_len,
         });
     }
-
 }
 
 fn run_trace_with(

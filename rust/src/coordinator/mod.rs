@@ -4,15 +4,21 @@
 //! * `block`     — physical pools + layer-wise block tables (§3.1.1-3.1.2)
 //! * `scheduler` — vLLM baseline + LayerKV SLO-aware policies (Alg. 1)
 //! * `predict`   — output-length bucket predictor (§3.1)
-//! * `engine`    — continuous-batching loop over the simulated executor
+//! * `backend`   — the `ExecutionBackend` seam: simulated vs real executor
+//! * `engine`    — the backend-generic continuous-batching coordinator
 //! * `request`   — request lifecycle + Eq. 1 timing state
 
+pub mod backend;
 pub mod block;
 pub mod engine;
 pub mod predict;
 pub mod request;
 pub mod scheduler;
 
+pub use backend::{
+    Clock, DecodeOutcome, ExecutionBackend, PrefillOutcome, SimBackend, VirtualClock,
+    WallClock,
+};
 pub use block::{KvError, KvManager};
 pub use engine::{run_trace, Engine, EngineStats};
 pub use predict::LengthPredictor;

@@ -20,6 +20,13 @@
 //! See DESIGN.md for the system inventory and EXPERIMENTS.md for
 //! paper-vs-measured results.
 
+// The §Perf hot loops iterate layer indices against multiple parallel
+// structures (block tables + pools + the backend mirror), where index
+// loops are the clearest form; keep this style lint off so the CI
+// `clippy -D warnings` gate guards correctness lints without fighting
+// the idiom.
+#![allow(clippy::needless_range_loop)]
+
 pub mod benchutil;
 pub mod config;
 pub mod runtime;

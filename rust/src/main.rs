@@ -5,8 +5,15 @@
 //! layerkv sim --model <7b|34b|70b> --policy <vllm|layerkv|layerkv-no-slo>
 //!             --ctx <tokens> --rate <req/s> --requests <n> [--sharegpt]
 //! layerkv serve [--addr 127.0.0.1:7181] [--artifacts DIR] [--budget BYTES]
+//!               [--policy <vllm|layerkv|layerkv-no-slo>] [--max-batch N]
+//!               [--ref-model]
 //! layerkv selftest [--artifacts DIR]
 //! ```
+//!
+//! `serve --policy` exercises every scheduler against real tokens —
+//! the same `make_scheduler` policies the simulator runs. `--ref-model`
+//! serves the deterministic in-process executor instead of PJRT
+//! artifacts (works offline).
 //!
 //! Argument parsing is hand-rolled (clap is unavailable offline).
 
@@ -56,6 +63,7 @@ fn print_help() {
          \x20 layerkv experiment <fig1|fig4|fig5|fig6|fig7|fig8|table1|all> [--quick]\n\
          \x20 layerkv sim --model 7b --policy layerkv --ctx 4096 --rate 1.0 --requests 100 [--sharegpt]\n\
          \x20 layerkv serve [--addr 127.0.0.1:7181] [--artifacts DIR] [--budget BYTES]\n\
+         \x20               [--policy vllm|layerkv|layerkv-no-slo] [--max-batch N] [--ref-model]\n\
          \x20 layerkv selftest [--artifacts DIR]"
     );
 }
@@ -97,14 +105,18 @@ fn cmd_experiment(args: &[String]) -> anyhow::Result<()> {
     }
 }
 
+fn parse_policy(name: &str) -> anyhow::Result<Policy> {
+    match name {
+        "vllm" => Ok(Policy::Vllm),
+        "layerkv" => Ok(Policy::LayerKv { slo_aware: true }),
+        "layerkv-no-slo" => Ok(Policy::LayerKv { slo_aware: false }),
+        other => anyhow::bail!("unknown policy '{other}'"),
+    }
+}
+
 fn cmd_sim(args: &[String]) -> anyhow::Result<()> {
     let model = opt(args, "--model").unwrap_or_else(|| "7b".into());
-    let policy = match opt(args, "--policy").as_deref().unwrap_or("layerkv") {
-        "vllm" => Policy::Vllm,
-        "layerkv" => Policy::LayerKv { slo_aware: true },
-        "layerkv-no-slo" => Policy::LayerKv { slo_aware: false },
-        other => anyhow::bail!("unknown policy '{other}'"),
-    };
+    let policy = parse_policy(opt(args, "--policy").as_deref().unwrap_or("layerkv"))?;
     let ctx: usize = opt(args, "--ctx").unwrap_or_else(|| "2048".into()).parse()?;
     let rate: f64 = opt(args, "--rate").unwrap_or_else(|| "1.0".into()).parse()?;
     let n: usize = opt(args, "--requests").unwrap_or_else(|| "100".into()).parse()?;
@@ -172,7 +184,15 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
         .map(std::path::PathBuf::from)
         .unwrap_or_else(layerkv::runtime::artifacts::default_dir);
     let budget: usize = opt(args, "--budget").unwrap_or_else(|| "2097152".into()).parse()?;
-    layerkv::server::serve(&addr, &dir, budget)
+    let policy = parse_policy(opt(args, "--policy").as_deref().unwrap_or("layerkv"))?;
+    let max_batch: usize = opt(args, "--max-batch").unwrap_or_else(|| "8".into()).parse()?;
+    let cfg = layerkv::runtime::RealEngineConfig {
+        device_kv_budget: budget,
+        policy,
+        max_batch,
+    };
+    let artifacts = (!flag(args, "--ref-model")).then_some(dir.as_path());
+    layerkv::server::serve(&addr, artifacts, cfg)
 }
 
 fn cmd_selftest(args: &[String]) -> anyhow::Result<()> {

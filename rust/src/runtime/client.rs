@@ -245,6 +245,68 @@ impl TinyModel {
     }
 }
 
+/// What `PjrtBackend` needs from an executor: bucketed prefill and
+/// batched decode over dense per-layer KV tensors. Implemented by
+/// [`TinyModel`] (the compiled-HLO PJRT path) and by
+/// `runtime::RefModel` (a deterministic in-process stand-in that lets
+/// the real serving path run — and be tested — without PJRT artifacts).
+pub trait TokenModel {
+    /// Model geometry (layer count, heads, max sequence, vocab).
+    fn spec(&self) -> &super::artifacts::TinyModelConfig;
+
+    /// Smallest compiled prefill bucket that fits `len` tokens.
+    fn prefill_bucket_for(&self, len: usize) -> Option<usize>;
+
+    /// Smallest compiled decode batch that fits `lanes` lanes.
+    fn decode_bucket_for(&self, lanes: usize) -> Option<usize>;
+
+    /// Largest prompt any compiled prefill bucket can run. A recompute
+    /// re-prefill replays prompt + generated-so-far, so the serving
+    /// wrapper caps generation lengths against this too.
+    fn max_prefill_len(&self) -> usize;
+
+    /// Largest decode batch available.
+    fn max_decode_batch(&self) -> usize;
+
+    /// Run a prefill; returns last-position logits + trimmed per-layer KV.
+    fn prefill(&self, tokens: &[i32]) -> Result<PrefillOut>;
+
+    /// One batched decode step over caller-owned `[B, 2, KH, Smax, D]`
+    /// scratch; the new token's KV row is written back at each lane's
+    /// current length.
+    fn decode(&self, tokens: &[i32], lens: &[i32], kvs: &mut [Vec<f32>]) -> Result<DecodeOut>;
+}
+
+impl TokenModel for TinyModel {
+    fn spec(&self) -> &super::artifacts::TinyModelConfig {
+        &self.art.model
+    }
+
+    fn prefill_bucket_for(&self, len: usize) -> Option<usize> {
+        self.art.prefill_bucket_for(len)
+    }
+
+    fn decode_bucket_for(&self, lanes: usize) -> Option<usize> {
+        self.art.decode_bucket_for(lanes)
+    }
+
+    fn max_prefill_len(&self) -> usize {
+        self.art.prefill_buckets().last().copied().unwrap_or(0)
+    }
+
+    fn max_decode_batch(&self) -> usize {
+        self.art.decode_batches().last().copied().unwrap_or(1)
+    }
+
+    fn prefill(&self, tokens: &[i32]) -> Result<PrefillOut> {
+        TinyModel::prefill(self, tokens)
+    }
+
+    fn decode(&self, tokens: &[i32], lens: &[i32], kvs: &mut [Vec<f32>]) -> Result<DecodeOut> {
+        TinyModel::decode(self, tokens, lens, kvs)
+    }
+}
+
 /// Greedy (argmax) sampling over one logits row.
 pub fn argmax(logits: &[f32]) -> i32 {
     let mut best = 0usize;

@@ -56,10 +56,6 @@ impl KvStore {
         self.host_used
     }
 
-    pub fn device_free(&self) -> usize {
-        self.device_budget.saturating_sub(self.device_used)
-    }
-
     pub fn contains(&self, req: ReqId) -> bool {
         self.entries.contains_key(&req)
     }
@@ -100,14 +96,6 @@ impl KvStore {
         self.entries.get(&req).map(|ls| ls.iter().all(|l| l.on_device)).unwrap_or(false)
     }
 
-    /// Bytes of one request's KV on the host.
-    pub fn host_bytes(&self, req: ReqId) -> usize {
-        self.entries
-            .get(&req)
-            .map(|ls| ls.iter().filter(|l| !l.on_device).map(|l| l.kv.bytes()).sum())
-            .unwrap_or(0)
-    }
-
     /// Move one layer device -> host. Returns bytes moved.
     pub fn offload_layer(&mut self, req: ReqId, layer: usize) -> usize {
         let Some(ls) = self.entries.get_mut(&req) else { return 0 };
@@ -143,42 +131,27 @@ impl KvStore {
         bytes
     }
 
-    /// Restore as many host layers of `req` as the budget allows.
-    pub fn try_restore(&mut self, req: ReqId) -> usize {
-        let layers = self.host_layers(req);
-        let mut moved = 0;
-        for l in layers {
-            moved += self.onload_layer(req, l);
-        }
-        moved
-    }
-
-    /// Copy lane `lane` of a dense decode scratch back as the appended
-    /// token's KV. `scratch[layer]` is `[B, 2, KH, Smax, D]`; the new row
-    /// sits at position `pos` of the sequence axis.
-    pub fn append_from_scratch(
-        &mut self,
-        req: ReqId,
-        scratch: &[Vec<f32>],
-        lane: usize,
-        _b: usize,
-        smax: usize,
-        pos: usize,
-    ) {
+    /// Append one committed token's KV to every layer of `req`.
+    /// `rows[layer]` is the `[2, KH, D]` row (c-major, then head, then
+    /// dim) the decode step produced for the tail position. This is the
+    /// engine-confirmed half of the decode step: rows for tokens the
+    /// coordinator rejected (block-pool OOM) are simply never appended
+    /// and get recomputed next step.
+    pub fn append_row(&mut self, req: ReqId, rows: &[Vec<f32>]) {
         let Some(ls) = self.entries.get_mut(&req) else { return };
-        for (layer, s) in ls.iter_mut().zip(scratch.iter()) {
+        debug_assert_eq!(ls.len(), rows.len(), "row per layer");
+        for (layer, row) in ls.iter_mut().zip(rows.iter()) {
             let kv = &mut layer.kv;
             let (kh, d) = (kv.kh, kv.d);
-            debug_assert_eq!(s.len(), _b * 2 * kh * smax * d);
-            debug_assert_eq!(pos, kv.t, "append must be at the current tail");
+            debug_assert_eq!(row.len(), 2 * kh * d);
             // grow [2, KH, T, D] -> [2, KH, T+1, D]
             let mut out = Vec::with_capacity(2 * kh * (kv.t + 1) * d);
             for c in 0..2 {
                 for h in 0..kh {
                     let old = (c * kh + h) * kv.t * d;
                     out.extend_from_slice(&kv.data[old..old + kv.t * d]);
-                    let src = (((lane * 2 + c) * kh + h) * smax + pos) * d;
-                    out.extend_from_slice(&s[src..src + d]);
+                    let src = (c * kh + h) * d;
+                    out.extend_from_slice(&row[src..src + d]);
                 }
             }
             let grown = (out.len() - kv.data.len()) as u64; // 2*KH*D floats
@@ -289,43 +262,42 @@ mod tests {
     }
 
     #[test]
-    fn try_restore_partial_under_budget() {
-        let layer_bytes = kv(8).bytes();
-        let mut s = KvStore::new(3 * layer_bytes);
-        s.insert(0, four_layers(8), &[]);
-        assert_eq!(s.host_layers(0).len(), 4);
-        let moved = s.try_restore(0);
-        assert_eq!(moved, 3 * layer_bytes);
-        assert_eq!(s.host_layers(0).len(), 1);
-    }
-
-    #[test]
     fn scratch_roundtrip_appends() {
-        let (b, smax, kh, d) = (2, 16, 2, 4);
+        let (b, smax, kh, d) = (2usize, 16usize, 2usize, 4usize);
         let mut s = KvStore::new(usize::MAX);
         s.insert(7, four_layers(3), &[0, 1, 2, 3]);
         let mut scratch: Vec<Vec<f32>> = (0..4).map(|_| vec![0.0; b * 2 * kh * smax * d]).collect();
         let streamed = s.fill_scratch(7, &mut scratch, 1, b, smax);
         assert_eq!(streamed, 0); // resident
-        // pretend the model wrote a new row at pos 3 of lane 1
-        for sc in &mut scratch {
-            for c in 0..2 {
-                for h in 0..kh {
-                    let base = (((1 * 2 + c) * kh + h) * smax + 3) * d;
-                    for x in 0..d {
-                        sc[base + x] = 9.0;
-                    }
-                }
-            }
-        }
-        s.append_from_scratch(7, &scratch, 1, b, smax, 3);
+        // append the row the model would have written at pos 3 of lane 1
+        let rows: Vec<Vec<f32>> = (0..4).map(|_| vec![9.0f32; 2 * kh * d]).collect();
+        s.append_row(7, &rows);
         assert_eq!(s.tokens(7), 4);
         // re-fill and check the appended row is there
         let mut scratch2: Vec<Vec<f32>> =
             (0..4).map(|_| vec![0.0; b * 2 * kh * smax * d]).collect();
         s.fill_scratch(7, &mut scratch2, 0, b, smax);
-        let base = ((0 * kh + 0) * smax + 3) * d;
+        let base = 3 * d; // lane 0, c 0, head 0, pos 3
         assert_eq!(scratch2[0][base], 9.0);
+    }
+
+    #[test]
+    fn append_row_grows_every_layer_and_accounts_bytes() {
+        let mut s = KvStore::new(kv(8).bytes() * 3); // room for 3 of 4 layers
+        s.insert(0, four_layers(8), &[0, 1, 2, 3]);
+        let (dev0, host0) = (s.device_used(), s.host_used());
+        let rows: Vec<Vec<f32>> = (0..4).map(|_| vec![2.5f32; 2 * 2 * 4]).collect();
+        s.append_row(0, &rows);
+        assert_eq!(s.tokens(0), 9);
+        let row_bytes = 2 * 2 * 4 * 4; // 2 planes * KH * D * f32
+        assert_eq!(s.device_used(), dev0 + 3 * row_bytes);
+        assert_eq!(s.host_used(), host0 + row_bytes);
+        // the appended value is readable back at the tail position
+        let (b, smax) = (1, 16);
+        let mut scratch: Vec<Vec<f32>> =
+            (0..4).map(|_| vec![0.0; b * 2 * 2 * smax * 4]).collect();
+        s.fill_scratch(0, &mut scratch, 0, b, smax);
+        assert_eq!(scratch[0][8 * 4], 2.5); // head 0, pos 8, dim 0
     }
 
     #[test]

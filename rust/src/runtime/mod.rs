@@ -1,13 +1,24 @@
 //! Runtime: the rust side of the AOT bridge. Loads `artifacts/*.hlo.txt`
 //! via the xla crate's PJRT CPU client, keeps weights resident, and serves
 //! the tiny model end-to-end with layer-wise KV residency management.
+//!
+//! Since the `ExecutionBackend` refactor, execution lives behind two
+//! seams: `TokenModel` (what runs a forward pass — the PJRT `TinyModel`
+//! or the deterministic `RefModel`) and `PjrtBackend` (the
+//! `ExecutionBackend` the shared coordinator drives). All scheduling and
+//! retention policy lives in `coordinator/`.
 
 pub mod artifacts;
 pub mod client;
 pub mod kvstore;
 pub mod realengine;
+pub mod refmodel;
 
 pub use artifacts::{Artifacts, ExecutableKind, TinyModelConfig};
-pub use client::{argmax, DecodeOut, LayerKv, PrefillOut, TinyModel};
+pub use client::{argmax, DecodeOut, LayerKv, PrefillOut, TinyModel, TokenModel};
 pub use kvstore::{KvStore, KvStoreStats};
-pub use realengine::{RealEngine, RealEngineConfig, ServeRequest, ServeResult};
+pub use realengine::{
+    tiny_serving_config, PjrtBackend, RealEngine, RealEngineConfig, ServeOutcome,
+    ServeRequest, ServeResult,
+};
+pub use refmodel::RefModel;

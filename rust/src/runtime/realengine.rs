@@ -1,23 +1,43 @@
-//! Real serving engine: continuous batching over the PJRT-compiled tiny
-//! model with LayerKV-style layer-wise KV residency. This is the
-//! end-to-end proof that all three layers compose — actual tokens flow
-//! through the Pallas-kernel HLO, and the coordinator moves real per-layer
-//! KV tensors between the bounded device pool and the host pool.
+//! Real serving path: the `PjrtBackend` executor + a thin serving
+//! wrapper. This is the end-to-end proof that all three layers compose —
+//! actual tokens flow through the Pallas-kernel HLO, and the coordinator
+//! moves real per-layer KV tensors between the bounded device pool and
+//! the host pool.
+//!
+//! Since the `ExecutionBackend` refactor this file contains **no
+//! scheduling or retention policy**: admission, the §3.1.1 retained-layer
+//! x-solve, TPOT-slack gating, restore/offload hysteresis, and recompute
+//! preemption all live in `Engine<B>` + `make_scheduler` + `KvManager` —
+//! the *same* code the simulator runs. The backend only executes:
+//! `TokenModel` forward passes (PJRT `TinyModel`, or the deterministic
+//! `RefModel` stand-in), a `KvStore` holding the actual tensors whose
+//! residency mirrors the `KvManager` layer tables, and a wall clock.
 //!
 //! Timings are wall-clock; the serving loop is Python-free.
 
-use std::collections::VecDeque;
+use std::collections::HashMap;
 use std::path::Path;
-use std::time::Instant;
+use std::rc::Rc;
 
 use anyhow::{Context, Result};
 
-use crate::config::Policy;
-use crate::coordinator::request::ReqId;
-use crate::metrics::{Report, RequestRecord};
+use crate::config::{ModelSpec, NodeSpec, Policy, ServingConfig};
+use crate::coordinator::backend::{
+    Clock, DecodeOutcome, ExecutionBackend, PrefillOutcome, WallClock,
+};
+use crate::coordinator::block::KvManager;
+use crate::coordinator::engine::Engine;
+use crate::coordinator::predict::LengthPredictor;
+use crate::coordinator::request::{ReqId, Request};
+use crate::metrics::Report;
+use crate::workload::{Trace, TraceRequest};
 
-use super::client::{argmax, TinyModel};
+use super::artifacts::TinyModelConfig;
+use super::client::{argmax, TinyModel, TokenModel};
 use super::kvstore::{KvStore, KvStoreStats};
+
+/// Host pool capacity in layer-blocks: effectively unbounded (host RAM).
+const HOST_LAYER_BLOCKS: usize = 1 << 20;
 
 /// One inference job for the real engine.
 #[derive(Debug, Clone)]
@@ -34,7 +54,23 @@ pub struct ServeRequest {
 pub struct ServeResult {
     pub id: ReqId,
     pub output: Vec<i32>,
-    pub record: RequestRecord,
+    pub record: crate::metrics::RequestRecord,
+}
+
+/// Everything one `serve` call produced.
+#[derive(Debug)]
+pub struct ServeOutcome {
+    /// Completed requests, sorted by the caller's ids.
+    pub results: Vec<ServeResult>,
+    /// Rejected requests (caller id, reason): oversized prompts and
+    /// requests that can never fit the KV pools. They get no
+    /// `RequestRecord` — a zero-length record would skew the TTFT/TPOT
+    /// percentiles — and surface as an explicit error in the server
+    /// response instead.
+    pub dropped: Vec<(ReqId, String)>,
+    /// Latency report over the completed requests (engine-internal ids,
+    /// i.e. positions in arrival order).
+    pub report: Report,
 }
 
 #[derive(Debug, Clone)]
@@ -57,234 +93,366 @@ impl Default for RealEngineConfig {
     }
 }
 
-struct Live {
-    id: ReqId,
-    tokens_generated: Vec<i32>,
-    max_new: usize,
-    arrival: f64,
-    prefill_start: f64,
-    first_token: f64,
-    prompt_len: usize,
+/// `ServingConfig` describing the tiny executor to the policy layer:
+/// real model geometry, CPU-testbed hardware magnitudes. On this path
+/// the cost model only steers the scheduler's heuristics — measured
+/// latencies come from the wall clock.
+pub fn tiny_serving_config(
+    spec: &TinyModelConfig,
+    policy: Policy,
+    max_batch: usize,
+) -> ServingConfig {
+    let mut model = ModelSpec::tiny();
+    model.n_layers = spec.n_layers;
+    model.n_heads = spec.n_heads;
+    model.n_kv_heads = spec.n_kv_heads;
+    model.head_dim = spec.head_dim;
+    model.hidden = spec.d_model;
+    model.ffn_hidden = spec.ffn_hidden;
+    model.vocab = spec.vocab;
+    model.max_context = spec.max_seq;
+    let mut cfg = ServingConfig::new(model, NodeSpec::cpu_pjrt_testbed(), 1)
+        .with_policy(policy)
+        .with_max_model_len(spec.max_seq);
+    cfg.block_size = 16;
+    cfg.max_num_seqs = max_batch.max(1);
+    cfg
 }
 
-/// Synchronous continuous-batching loop over the PJRT model.
-pub struct RealEngine {
-    pub model: TinyModel,
-    pub cfg: RealEngineConfig,
+/// Device layer-blocks a byte budget buys for this model geometry (f32).
+fn device_layer_blocks(spec: &TinyModelConfig, block_size: usize, budget_bytes: usize) -> usize {
+    let layer_block_bytes = block_size * 2 * spec.n_kv_heads * spec.head_dim * 4;
+    budget_bytes / layer_block_bytes.max(1)
+}
+
+/// Per-request token state the executor owns (the coordinator only sees
+/// lengths).
+#[derive(Debug, Default, Clone)]
+struct Gen {
+    prompt: Vec<i32>,
+    out: Vec<i32>,
+}
+
+/// A decoded-but-unconfirmed token: committed (KV row appended, token
+/// recorded) only once the coordinator's block accounting accepted the
+/// growth; otherwise discarded and recomputed next step.
+#[derive(Debug)]
+struct PendingTok {
+    token: i32,
+    /// Per layer, the `[2, KH, D]` row for the tail position.
+    rows: Vec<Vec<f32>>,
+}
+
+/// The real executor: `TokenModel` forward passes on wall time, tensors
+/// in a two-pool `KvStore` whose residency mirrors the coordinator's
+/// `KvManager` layer tables (the `KvManager` is the budget authority;
+/// the store holds the bytes).
+pub struct PjrtBackend<M: TokenModel = TinyModel> {
+    model: Rc<M>,
     store: KvStore,
+    clock: WallClock,
+    max_batch: usize,
+    gens: Vec<Gen>,
+    pending: HashMap<ReqId, PendingTok>,
 }
 
-impl RealEngine {
-    pub fn load(artifacts_dir: &Path, cfg: RealEngineConfig) -> Result<Self> {
-        let model = TinyModel::load(artifacts_dir)?;
-        let store = KvStore::new(cfg.device_kv_budget);
-        Ok(RealEngine { model, cfg, store })
+impl<M: TokenModel> PjrtBackend<M> {
+    pub fn new(model: Rc<M>, max_batch: usize) -> Self {
+        PjrtBackend {
+            model,
+            store: KvStore::new(usize::MAX),
+            clock: WallClock::new(),
+            max_batch,
+            gens: Vec::new(),
+            pending: HashMap::new(),
+        }
+    }
+
+    /// Register each job's prompt tokens, indexed by engine `ReqId`
+    /// (position in the trace).
+    fn load_jobs(&mut self, jobs: &[ServeRequest]) {
+        self.gens = jobs
+            .iter()
+            .map(|j| Gen { prompt: j.prompt.clone(), out: Vec::new() })
+            .collect();
     }
 
     pub fn kv_stats(&self) -> &KvStoreStats {
         &self.store.stats
     }
 
-    /// Retained-layer choice at admission: LayerKV keeps a fraction that
-    /// fits the device budget (long prompts -> fewer layers, mirroring the
-    /// x-solve); the vLLM baseline wants everything resident.
-    fn retained_for(&self, prompt_len: usize) -> Vec<usize> {
-        let l = self.model.n_layers();
-        match self.cfg.policy {
-            Policy::Vllm => (0..l).collect(),
-            Policy::LayerKv { .. } => {
-                let m = &self.model.art.model;
-                let layer_bytes = 2 * m.n_kv_heads * prompt_len * m.head_dim * 4;
-                let fit = if layer_bytes == 0 {
-                    l
-                } else {
-                    (self.store.device_free() / layer_bytes).min(l)
-                };
-                crate::coordinator::block::LayerBlockTable::interleaved_retained(l, fit)
+    fn take_output(&mut self, rid: ReqId) -> Vec<i32> {
+        std::mem::take(&mut self.gens[rid].out)
+    }
+}
+
+impl<M: TokenModel> ExecutionBackend for PjrtBackend<M> {
+    type Clk = WallClock;
+
+    fn clock(&self) -> &WallClock {
+        &self.clock
+    }
+
+    fn clock_mut(&mut self) -> &mut WallClock {
+        &mut self.clock
+    }
+
+    fn max_decode_lanes(&self) -> usize {
+        self.max_batch.min(self.model.max_decode_batch()).max(1)
+    }
+
+    fn supports_prompt(&self, prompt_len: usize) -> bool {
+        self.model.prefill_bucket_for(prompt_len).is_some()
+    }
+
+    fn bounded_steps(&self) -> bool {
+        false // wall-clock engines idle-spin between arrivals
+    }
+
+    fn prefill(&mut self, req: &Request, kv: &KvManager) -> Result<PrefillOutcome> {
+        let t0 = self.clock.now();
+        let rid = req.id;
+        let fresh = req.first_token.is_none();
+        let toks: Vec<i32> = if fresh {
+            self.gens[rid].prompt.clone()
+        } else {
+            // recompute re-prefill after a preemption: prompt ++ tokens
+            // generated so far, minus the trailing one — it becomes the
+            // next decode's input, exactly like a fresh first token.
+            // The KvManager allocated for prefill_len() = prompt+generated
+            // (the sim's recompute-cost convention), so for re-admitted
+            // requests the block accounting stays one token conservative
+            // vs the store's actual cache — deliberate: the budget
+            // authority may under-promise, never over-promise.
+            let g = &self.gens[rid];
+            let keep = g.out.len().saturating_sub(1);
+            let mut t = Vec::with_capacity(g.prompt.len() + keep);
+            t.extend_from_slice(&g.prompt);
+            t.extend_from_slice(&g.out[..keep]);
+            t
+        };
+        let out = self.model.clone().prefill(&toks)?;
+        // the KvManager table's residency is the retained set the
+        // scheduler solved; non-retained layers go straight to the host
+        // pool (the offload traffic a GPU build overlaps with the prefill)
+        let retained = kv.table(rid).map(|t| t.gpu_layers()).unwrap_or_default();
+        let before = self.store.stats.offload_bytes;
+        if self.store.contains(rid) {
+            self.store.release(rid); // defensive: stale entry
+        }
+        self.store.insert(rid, out.kv, &retained);
+        let spilled = (self.store.stats.offload_bytes - before) as f64;
+        if fresh {
+            self.gens[rid].out.push(argmax(&out.logits));
+        }
+        let done = self.clock.now();
+        Ok(PrefillOutcome {
+            duration: done - t0,
+            offload_bytes: spilled,
+            // stamp TTFT at THIS request's prefill end, not the batch's
+            first_token_at: fresh.then_some(done),
+        })
+    }
+
+    fn decode(
+        &mut self,
+        lanes: &[ReqId],
+        _requests: &[Request],
+        _kv: &KvManager,
+        _total_ctx: usize,
+        _stream_bytes: f64,
+    ) -> Result<DecodeOutcome> {
+        let t0 = self.clock.now();
+        self.pending.clear();
+        let model = self.model.clone();
+        let spec = model.spec().clone();
+        let b = model
+            .decode_bucket_for(lanes.len())
+            .with_context(|| format!("no decode bucket for {} lanes", lanes.len()))?;
+        let (kh, d, smax) = (spec.n_kv_heads, spec.head_dim, spec.max_seq);
+        let per_layer = b * 2 * kh * smax * d;
+        let mut scratch: Vec<Vec<f32>> =
+            (0..spec.n_layers).map(|_| vec![0.0f32; per_layer]).collect();
+        let mut tokens = vec![0i32; b];
+        let mut lens = vec![0i32; b];
+        for (lane, &rid) in lanes.iter().enumerate() {
+            self.store.fill_scratch(rid, &mut scratch, lane, b, smax);
+            tokens[lane] = *self.gens[rid].out.last().expect("running lane has tokens");
+            lens[lane] = self.store.tokens(rid) as i32;
+        }
+
+        let out = model.decode(&tokens, &lens, &mut scratch)?;
+
+        for (lane, &rid) in lanes.iter().enumerate() {
+            let next = argmax(&out.logits[lane * spec.vocab..(lane + 1) * spec.vocab]);
+            let pos = lens[lane] as usize;
+            // stage the new KV row; committed per lane once the block
+            // accounting accepts the growth
+            let mut rows = Vec::with_capacity(spec.n_layers);
+            for s in &scratch {
+                let mut row = Vec::with_capacity(2 * kh * d);
+                for c in 0..2 {
+                    for h in 0..kh {
+                        let src = (((lane * 2 + c) * kh + h) * smax + pos) * d;
+                        row.extend_from_slice(&s[src..src + d]);
+                    }
+                }
+                rows.push(row);
             }
+            self.pending.insert(rid, PendingTok { token: next, rows });
+        }
+        Ok(DecodeOutcome {
+            duration: self.clock.now() - t0,
+            stream_stall_s: 0.0,
+            contention_s: 0.0,
+        })
+    }
+
+    fn commit_token(&mut self, rid: ReqId) {
+        if let Some(p) = self.pending.remove(&rid) {
+            self.store.append_row(rid, &p.rows);
+            self.gens[rid].out.push(p.token);
         }
     }
 
+    fn offload_layer(&mut self, rid: ReqId, layer: usize) {
+        self.store.offload_layer(rid, layer);
+    }
+
+    fn onload_layer(&mut self, rid: ReqId, layer: usize) {
+        self.store.onload_layer(rid, layer);
+    }
+
+    fn evict(&mut self, rid: ReqId) {
+        self.pending.remove(&rid);
+        self.store.release(rid); // generated tokens survive for re-prefill
+    }
+
+    fn release(&mut self, rid: ReqId) {
+        self.pending.remove(&rid);
+        self.store.release(rid);
+    }
+}
+
+/// The serving wrapper: keeps the (expensive to load) model across calls
+/// and runs each batch through a fresh `Engine<PjrtBackend>` — same
+/// `make_scheduler` policies and `KvManager` accounting as the simulator.
+pub struct RealEngine<M: TokenModel = TinyModel> {
+    model: Rc<M>,
+    pub cfg: RealEngineConfig,
+    kv_stats: KvStoreStats,
+}
+
+impl RealEngine<TinyModel> {
+    /// Load the compiled PJRT artifacts.
+    pub fn load(artifacts_dir: &Path, cfg: RealEngineConfig) -> Result<Self> {
+        Ok(Self::with_model(Rc::new(TinyModel::load(artifacts_dir)?), cfg))
+    }
+}
+
+impl<M: TokenModel> RealEngine<M> {
+    /// Wrap any executor (e.g. `RefModel` for PJRT-free runs).
+    pub fn with_model(model: Rc<M>, cfg: RealEngineConfig) -> Self {
+        RealEngine { model, cfg, kv_stats: KvStoreStats::default() }
+    }
+
+    /// Cumulative KV-store traffic across all `serve` calls.
+    pub fn kv_stats(&self) -> &KvStoreStats {
+        &self.kv_stats
+    }
+
     /// Serve a whole batch of requests to completion (arrivals honoured by
-    /// wall-clock). Returns per-request results + a latency report.
-    pub fn serve(&mut self, mut jobs: Vec<ServeRequest>) -> Result<(Vec<ServeResult>, Report)> {
+    /// wall-clock). Returns per-request results, rejections, and a latency
+    /// report.
+    pub fn serve(&mut self, mut jobs: Vec<ServeRequest>) -> Result<ServeOutcome> {
         jobs.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
-        let t0 = Instant::now();
-        let now = || t0.elapsed().as_secs_f64();
+        let spec = self.model.spec().clone();
+        let smax = spec.max_seq;
+        // a recompute re-prefill replays prompt + generated-so-far minus
+        // one, so generation is capped to keep that inside the largest
+        // compiled prefill bucket (and the cache inside max_seq) — like
+        // any context-window-bound server
+        let max_prefill = self.model.max_prefill_len();
+        let orig_ids: Vec<usize> = jobs.iter().map(|j| j.id).collect();
+        let trace = Trace {
+            requests: jobs
+                .iter()
+                .enumerate()
+                .map(|(i, j)| TraceRequest {
+                    id: i,
+                    arrival: j.arrival_s.max(0.0),
+                    prompt_len: j.prompt.len(),
+                    output_len: j
+                        .max_new_tokens
+                        .min(smax.saturating_sub(j.prompt.len()))
+                        .min((max_prefill + 1).saturating_sub(j.prompt.len()))
+                        .max(1),
+                })
+                .collect(),
+        };
 
-        let mut pending: VecDeque<ServeRequest> = jobs.into();
-        let mut waiting: VecDeque<ServeRequest> = VecDeque::new();
-        let mut running: Vec<Live> = Vec::new();
-        let mut results: Vec<ServeResult> = Vec::new();
+        let scfg = tiny_serving_config(&spec, self.cfg.policy, self.cfg.max_batch);
+        let kv = KvManager::new(
+            device_layer_blocks(&spec, scfg.block_size, self.cfg.device_kv_budget),
+            HOST_LAYER_BLOCKS,
+            scfg.block_size,
+            spec.n_layers,
+        );
+        let mut backend = PjrtBackend::new(self.model.clone(), self.cfg.max_batch);
+        backend.load_jobs(&jobs);
+        let predictor = LengthPredictor::new(smax.max(2), 1.0, 42);
+        let mut engine = Engine::with_parts(scfg, kv, backend, predictor);
 
-        let m = self.model.art.model.clone();
-        let smax = m.max_seq;
+        let report = engine.try_run(&trace)?;
+        let stats = engine.stats().clone();
+        let s = engine.backend.kv_stats();
+        self.kv_stats.offloads += s.offloads;
+        self.kv_stats.onloads += s.onloads;
+        self.kv_stats.offload_bytes += s.offload_bytes;
+        self.kv_stats.onload_bytes += s.onload_bytes;
 
-        while !(pending.is_empty() && waiting.is_empty() && running.is_empty()) {
-            // arrivals
-            while pending.front().map(|j| j.arrival_s <= now()).unwrap_or(false) {
-                waiting.push_back(pending.pop_front().unwrap());
-            }
-
-            // admission: prefill everything that fits a bucket (layer-wise
-            // residency makes admission cheap; vLLM mode only admits when
-            // the full KV fits the device budget)
-            while let Some(job) = waiting.front() {
-                let plen = job.prompt.len();
-                let Some(_bucket) = self.model.art.prefill_bucket_for(plen) else {
-                    // oversized prompt: reject
-                    let job = waiting.pop_front().unwrap();
-                    results.push(ServeResult {
-                        id: job.id,
-                        output: Vec::new(),
-                        record: RequestRecord {
-                            id: job.id,
-                            arrival: job.arrival_s,
-                            prefill_start: now(),
-                            first_token: now(),
-                            finish: now(),
-                            prompt_len: plen,
-                            output_len: 0,
-                        },
-                    });
-                    continue;
-                };
-                let full_bytes = m.n_layers * 2 * m.n_kv_heads * plen * m.head_dim * 4;
-                if matches!(self.cfg.policy, Policy::Vllm)
-                    && self.store.device_free() < full_bytes
-                    // degraded-admission escape: a prompt larger than the
-                    // whole budget would head-of-line block forever; admit
-                    // it alone on an empty pool and let it spill
-                    && !(self.store.device_used() == 0 && running.is_empty())
-                {
-                    break; // vLLM: head-of-line blocked on device KV space
+        let mut results: Vec<ServeResult> = report
+            .records
+            .iter()
+            .map(|rec| {
+                let mut record = rec.clone();
+                record.id = orig_ids[rec.id];
+                ServeResult {
+                    id: record.id,
+                    output: engine.backend.take_output(rec.id),
+                    record,
                 }
-                if running.len() >= self.cfg.max_batch {
-                    break;
-                }
-                let job = waiting.pop_front().unwrap();
-                let prefill_start = now();
-                let out = self.model.prefill(&job.prompt)?;
-                let first = argmax(&out.logits);
-                let retained = self.retained_for(plen);
-                self.store.insert(job.id, out.kv, &retained);
-                let first_token = now();
-                running.push(Live {
-                    id: job.id,
-                    tokens_generated: vec![first],
-                    max_new: job.max_new_tokens,
-                    arrival: job.arrival_s,
-                    prefill_start,
-                    first_token,
-                    prompt_len: plen,
-                });
-            }
-
-            // decode step over the resident subset
-            if !running.is_empty() {
-                // restore parked KV while budget allows (oldest first)
-                for live in &running {
-                    self.store.try_restore(live.id);
-                }
-                let mut lanes: Vec<usize> = (0..running.len())
-                    .filter(|&i| self.store.fully_resident(running[i].id))
-                    .take(self.cfg.max_batch)
-                    .collect();
-                if lanes.is_empty() {
-                    lanes.push(0); // force progress with host streaming
-                }
-                let b = self
-                    .model
-                    .art
-                    .decode_bucket_for(lanes.len())
-                    .context("no decode bucket")?;
-
-                let per_layer = b * 2 * m.n_kv_heads * smax * m.head_dim;
-                let mut scratch: Vec<Vec<f32>> =
-                    (0..m.n_layers).map(|_| vec![0.0; per_layer]).collect();
-                let mut tokens = vec![0i32; b];
-                let mut lens = vec![0i32; b];
-                for (lane, &ri) in lanes.iter().enumerate() {
-                    let live = &running[ri];
-                    self.store.fill_scratch(live.id, &mut scratch, lane, b, smax);
-                    tokens[lane] = *live.tokens_generated.last().unwrap();
-                    lens[lane] = (live.prompt_len + live.tokens_generated.len() - 1) as i32;
-                }
-
-                let out = self.model.decode(&tokens, &lens, &mut scratch)?;
-                let tnow = now();
-                let mut finished: Vec<usize> = Vec::new();
-                for (lane, &ri) in lanes.iter().enumerate() {
-                    let live = &mut running[ri];
-                    let next =
-                        argmax(&out.logits[lane * m.vocab..(lane + 1) * m.vocab]);
-                    self.store.append_from_scratch(
-                        live.id,
-                        &scratch,
-                        lane,
-                        b,
-                        smax,
-                        lens[lane] as usize,
-                    );
-                    live.tokens_generated.push(next);
-                    let ctx = live.prompt_len + live.tokens_generated.len();
-                    if live.tokens_generated.len() >= live.max_new || ctx >= smax {
-                        finished.push(ri);
-                    }
-                }
-                let _ = tnow;
-                finished.sort_unstable_by(|a, b| b.cmp(a));
-                for ri in finished {
-                    let live = running.swap_remove(ri);
-                    self.store.release(live.id);
-                    let fin = now();
-                    results.push(ServeResult {
-                        id: live.id,
-                        record: RequestRecord {
-                            id: live.id,
-                            arrival: live.arrival,
-                            prefill_start: live.prefill_start,
-                            first_token: live.first_token,
-                            finish: fin,
-                            prompt_len: live.prompt_len,
-                            output_len: live.tokens_generated.len(),
-                        },
-                        output: live.tokens_generated,
-                    });
-                }
-            } else if waiting.is_empty() {
-                // idle: spin-wait for the next arrival (coarse sleep)
-                if let Some(j) = pending.front() {
-                    let dt = j.arrival_s - now();
-                    if dt > 0.0 {
-                        std::thread::sleep(std::time::Duration::from_secs_f64(dt.min(0.005)));
-                    }
-                }
-            }
-        }
-
+            })
+            .collect();
         results.sort_by_key(|r| r.id);
-        let report = Report::new(results.iter().map(|r| r.record.clone()).collect());
-        Ok((results, report))
+        let dropped = stats
+            .dropped
+            .iter()
+            .map(|&rid| {
+                (
+                    orig_ids[rid],
+                    format!(
+                        "prompt of {} tokens cannot be served (exceeds every \
+                         prefill bucket or the KV pools)",
+                        trace.requests[rid].prompt_len
+                    ),
+                )
+            })
+            .collect();
+        Ok(ServeOutcome { results, dropped, report })
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::runtime::artifacts::default_dir;
+    use crate::runtime::RefModel;
 
-    fn engine(policy: Policy, budget: usize) -> Option<RealEngine> {
-        let dir = default_dir();
-        if !dir.join("manifest.json").exists() {
-            eprintln!("skipping: run `make artifacts` first");
-            return None;
-        }
-        RealEngine::load(
-            &dir,
+    fn engine(policy: Policy, budget: usize) -> RealEngine<RefModel> {
+        RealEngine::with_model(
+            Rc::new(RefModel::new()),
             RealEngineConfig { device_kv_budget: budget, policy, max_batch: 8 },
         )
-        .ok()
     }
 
     fn jobs(n: usize, prompt_len: usize, out: usize) -> Vec<ServeRequest> {
@@ -300,23 +468,25 @@ mod tests {
 
     #[test]
     fn serves_batch_end_to_end() {
-        let Some(mut e) = engine(Policy::LayerKv { slo_aware: true }, 2 << 20) else { return };
-        let (results, report) = e.serve(jobs(4, 24, 8)).unwrap();
-        assert_eq!(results.len(), 4);
-        for r in &results {
+        let mut e = engine(Policy::LayerKv { slo_aware: true }, 2 << 20);
+        let out = e.serve(jobs(4, 24, 8)).unwrap();
+        assert_eq!(out.results.len(), 4);
+        assert!(out.dropped.is_empty());
+        for r in &out.results {
             assert_eq!(r.output.len(), 8);
             assert!(r.output.iter().all(|&t| (0..256).contains(&t)));
+            assert!(r.record.finish >= r.record.first_token);
         }
-        assert!(report.throughput_tok_s() > 0.0);
+        assert!(out.report.throughput_tok_s() > 0.0);
     }
 
     #[test]
     fn deterministic_outputs_across_runs() {
-        let Some(mut a) = engine(Policy::LayerKv { slo_aware: true }, 2 << 20) else { return };
-        let Some(mut b) = engine(Policy::LayerKv { slo_aware: true }, 2 << 20) else { return };
-        let (ra, _) = a.serve(jobs(2, 16, 6)).unwrap();
-        let (rb, _) = b.serve(jobs(2, 16, 6)).unwrap();
-        for (x, y) in ra.iter().zip(&rb) {
+        let mut a = engine(Policy::LayerKv { slo_aware: true }, 2 << 20);
+        let mut b = engine(Policy::LayerKv { slo_aware: true }, 2 << 20);
+        let ra = a.serve(jobs(2, 16, 6)).unwrap();
+        let rb = b.serve(jobs(2, 16, 6)).unwrap();
+        for (x, y) in ra.results.iter().zip(&rb.results) {
             assert_eq!(x.output, y.output);
         }
     }
@@ -324,14 +494,47 @@ mod tests {
     #[test]
     fn offloading_engaged_under_tiny_budget_same_tokens() {
         // Ground truth with an ample budget...
-        let Some(mut big) = engine(Policy::LayerKv { slo_aware: true }, 64 << 20) else { return };
-        let (rb, _) = big.serve(jobs(3, 32, 6)).unwrap();
+        let mut big = engine(Policy::LayerKv { slo_aware: true }, 64 << 20);
+        let rb = big.serve(jobs(3, 32, 6)).unwrap();
         // ...must match a budget so small most layers live on the host.
-        let Some(mut tiny) = engine(Policy::LayerKv { slo_aware: true }, 16 << 10) else { return };
-        let (rt, _) = tiny.serve(jobs(3, 32, 6)).unwrap();
+        let mut tiny = engine(Policy::LayerKv { slo_aware: true }, 4 << 10);
+        let rt = tiny.serve(jobs(3, 32, 6)).unwrap();
         assert!(tiny.kv_stats().offload_bytes > 0, "tiny budget must offload");
-        for (x, y) in rb.iter().zip(&rt) {
+        assert_eq!(rb.results.len(), rt.results.len());
+        for (x, y) in rb.results.iter().zip(&rt.results) {
             assert_eq!(x.output, y.output, "offloading must not change tokens");
         }
+    }
+
+    #[test]
+    fn oversized_prompt_is_dropped_with_reason_not_recorded() {
+        let mut e = engine(Policy::LayerKv { slo_aware: true }, 2 << 20);
+        let mut js = jobs(2, 16, 4);
+        js.push(ServeRequest {
+            id: 2,
+            prompt: vec![1; 600], // > every prefill bucket (max 512)
+            max_new_tokens: 4,
+            arrival_s: 0.0,
+        });
+        let out = e.serve(js).unwrap();
+        assert_eq!(out.results.len(), 2);
+        assert_eq!(out.dropped.len(), 1);
+        assert_eq!(out.dropped[0].0, 2);
+        assert!(out.dropped[0].1.contains("600"));
+        // no zero-length record skews the report
+        assert_eq!(out.report.records.len(), 2);
+        assert!(out.report.records.iter().all(|r| r.output_len > 0));
+    }
+
+    #[test]
+    fn tiny_config_pools_scale_with_budget() {
+        let spec = RefModel::new().spec().clone();
+        let one_block = 16 * 2 * spec.n_kv_heads * spec.head_dim * 4;
+        assert_eq!(device_layer_blocks(&spec, 16, one_block), 1);
+        assert_eq!(device_layer_blocks(&spec, 16, 10 * one_block), 10);
+        let cfg = tiny_serving_config(&spec, Policy::Vllm, 4);
+        assert_eq!(cfg.model.n_layers, spec.n_layers);
+        assert_eq!(cfg.max_num_seqs, 4);
+        assert_eq!(cfg.max_model_len, spec.max_seq);
     }
 }

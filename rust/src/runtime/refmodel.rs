@@ -1,0 +1,283 @@
+//! A deterministic in-process `TokenModel`: the reference executor.
+//!
+//! The PJRT path needs compiled artifacts (`make artifacts`) and the real
+//! `xla` bindings, neither of which exists in offline builds. `RefModel`
+//! stands in with pure-Rust arithmetic that keeps the two properties the
+//! serving stack's tests rely on:
+//!
+//! 1. **Prefill/decode consistency** — decoding token `n` on the cache of
+//!    `prefill(prompt[..n])` produces exactly `prefill(prompt[..n+1])`'s
+//!    next token, so recompute preemption and re-prefill are lossless.
+//! 2. **Cache sensitivity** — the next token is a function of the *entire
+//!    cache contents* (an exact dyadic-rational sum over every stored KV
+//!    value), so any residency bug that corrupts or drops a KV row
+//!    changes the output stream. Offload/onload that preserves bytes is
+//!    numerically invisible, exactly like the real model.
+//!
+//! Every KV value is a multiple of 1/64 and every context sum stays below
+//! 2^19/64, so f32 accumulation is exact and order-independent — outputs
+//! are bit-deterministic across batch sizes and residency histories.
+
+use anyhow::{ensure, Context, Result};
+
+use super::artifacts::TinyModelConfig;
+use super::client::{DecodeOut, LayerKv, PrefillOut, TokenModel};
+
+/// One KV element: a deterministic function of (token, position, layer,
+/// k/v plane, head, dim) in {0/64, ..., 63/64}.
+fn kv_elem(token: i32, pos: usize, layer: usize, c: usize, h: usize, x: usize) -> f32 {
+    let t = token.max(0) as u64;
+    let v = t * 7
+        + pos as u64 * 13
+        + layer as u64 * 3
+        + c as u64 * 17
+        + h as u64 * 5
+        + x as u64;
+    (v % 64) as f32 / 64.0
+}
+
+/// Deterministic stand-in executor (see module docs).
+#[derive(Debug, Clone)]
+pub struct RefModel {
+    cfg: TinyModelConfig,
+    prefill_buckets: Vec<usize>,
+    decode_batches: Vec<usize>,
+}
+
+impl RefModel {
+    pub fn new() -> Self {
+        RefModel {
+            cfg: TinyModelConfig {
+                vocab: 256,
+                d_model: 128,
+                n_layers: 4,
+                n_heads: 4,
+                n_kv_heads: 2,
+                head_dim: 8,
+                ffn_hidden: 256,
+                max_seq: 512,
+            },
+            prefill_buckets: vec![16, 32, 64, 128, 256, 512],
+            decode_batches: vec![1, 2, 4, 8],
+        }
+    }
+
+    /// Contribution of one cache row (layer 0, K plane) to the context sum.
+    fn row_sum(&self, token: i32, pos: usize) -> f32 {
+        let (kh, d) = (self.cfg.n_kv_heads, self.cfg.head_dim);
+        let mut s = 0.0f32;
+        for h in 0..kh {
+            for x in 0..d {
+                s += kv_elem(token, pos, 0, 0, h, x);
+            }
+        }
+        s
+    }
+
+    /// Greedy next token from (last input token, context rows incl. it,
+    /// exact context sum).
+    fn token_from(&self, token: i32, ctx_rows: usize, s: f32) -> i32 {
+        let si = (s * 64.0).round() as u64; // exact: s is a multiple of 1/64
+        let t = token.max(0) as u64;
+        ((t * 31 + ctx_rows as u64 * 17 + si * 11) % self.cfg.vocab as u64) as i32
+    }
+}
+
+impl Default for RefModel {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TokenModel for RefModel {
+    fn spec(&self) -> &TinyModelConfig {
+        &self.cfg
+    }
+
+    fn prefill_bucket_for(&self, len: usize) -> Option<usize> {
+        self.prefill_buckets.iter().copied().find(|&b| b >= len)
+    }
+
+    fn decode_bucket_for(&self, lanes: usize) -> Option<usize> {
+        self.decode_batches.iter().copied().find(|&b| b >= lanes)
+    }
+
+    fn max_prefill_len(&self) -> usize {
+        self.prefill_buckets.last().copied().unwrap_or(0)
+    }
+
+    fn max_decode_batch(&self) -> usize {
+        self.decode_batches.last().copied().unwrap_or(1)
+    }
+
+    fn prefill(&self, tokens: &[i32]) -> Result<PrefillOut> {
+        let t = tokens.len();
+        ensure!(t > 0, "empty prompt");
+        let bucket = self
+            .prefill_bucket_for(t)
+            .with_context(|| format!("prompt of {t} tokens exceeds all buckets"))?;
+        let (kh, d, l) = (self.cfg.n_kv_heads, self.cfg.head_dim, self.cfg.n_layers);
+        let mut kv = Vec::with_capacity(l);
+        for layer in 0..l {
+            // [2, KH, T, D] row-major, trimmed to the true prompt length
+            let mut data = Vec::with_capacity(2 * kh * t * d);
+            for c in 0..2 {
+                for h in 0..kh {
+                    for (p, &tok) in tokens.iter().enumerate() {
+                        for x in 0..d {
+                            data.push(kv_elem(tok, p, layer, c, h, x));
+                        }
+                    }
+                }
+            }
+            kv.push(LayerKv { data, kh, t, d });
+        }
+        let mut s = 0.0f32;
+        for (p, &tok) in tokens.iter().enumerate() {
+            s += self.row_sum(tok, p);
+        }
+        let next = self.token_from(tokens[t - 1], t, s);
+        let mut logits = vec![0.0f32; self.cfg.vocab];
+        logits[next as usize] = 1.0;
+        Ok(PrefillOut { logits, kv, bucket })
+    }
+
+    fn decode(&self, tokens: &[i32], lens: &[i32], kvs: &mut [Vec<f32>]) -> Result<DecodeOut> {
+        let b = tokens.len();
+        ensure!(lens.len() == b, "tokens/lens length mismatch");
+        ensure!(
+            self.decode_batches.contains(&b),
+            "no decode executable for batch {b} (buckets: {:?})",
+            self.decode_batches
+        );
+        let (kh, d, l, smax) =
+            (self.cfg.n_kv_heads, self.cfg.head_dim, self.cfg.n_layers, self.cfg.max_seq);
+        let per_layer = b * 2 * kh * smax * d;
+        ensure!(kvs.len() == l, "kv layer count");
+        for kv in kvs.iter() {
+            ensure!(kv.len() == per_layer, "kv lane size");
+        }
+
+        let mut logits = vec![0.0f32; b * self.cfg.vocab];
+        for lane in 0..b {
+            let tok = tokens[lane];
+            let t = lens[lane] as usize;
+            ensure!(t < smax, "lane {lane} cache full ({t} >= {smax})");
+            // context sum over the stored rows (layer 0, K plane) ...
+            let mut s = 0.0f32;
+            for h in 0..kh {
+                let base = ((lane * 2 * kh + h) * smax) * d;
+                for v in &kvs[0][base..base + t * d] {
+                    s += *v;
+                }
+            }
+            // ... plus the new row this step appends at position t
+            s += self.row_sum(tok, t);
+            // write the new token's KV row back into every layer's scratch
+            for (layer, kv) in kvs.iter_mut().enumerate() {
+                for c in 0..2 {
+                    for h in 0..kh {
+                        let base = (((lane * 2 + c) * kh + h) * smax + t) * d;
+                        for x in 0..d {
+                            kv[base + x] = kv_elem(tok, t, layer, c, h, x);
+                        }
+                    }
+                }
+            }
+            let next = self.token_from(tok, t + 1, s);
+            logits[lane * self.cfg.vocab + next as usize] = 1.0;
+        }
+        Ok(DecodeOut { logits, batch: b })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::argmax;
+
+    fn scratch_for(m: &RefModel, b: usize) -> Vec<Vec<f32>> {
+        let c = m.spec().clone();
+        (0..c.n_layers)
+            .map(|_| vec![0.0f32; b * 2 * c.n_kv_heads * c.max_seq * c.head_dim])
+            .collect()
+    }
+
+    fn fill_lane(m: &RefModel, kv: &LayerKv, buf: &mut [f32], lane: usize) {
+        let c = m.spec();
+        for plane in 0..2 {
+            for h in 0..c.n_kv_heads {
+                let src = (plane * c.n_kv_heads + h) * kv.t * kv.d;
+                let dst = (((lane * 2 + plane) * c.n_kv_heads + h) * c.max_seq) * kv.d;
+                buf[dst..dst + kv.t * kv.d].copy_from_slice(&kv.data[src..src + kv.t * kv.d]);
+            }
+        }
+    }
+
+    #[test]
+    fn prefill_decode_consistency() {
+        // decode on prefill(p[..n-1])'s cache must equal prefill(p[..n])
+        let m = RefModel::new();
+        let prompt: Vec<i32> = (0..16).map(|i| (i * 13 + 5) % 256).collect();
+        let full = m.prefill(&prompt).unwrap();
+        let part = m.prefill(&prompt[..15]).unwrap();
+        let mut kvs = scratch_for(&m, 1);
+        for (layer, kv) in part.kv.iter().enumerate() {
+            fill_lane(&m, kv, &mut kvs[layer], 0);
+        }
+        let out = m.decode(&[prompt[15]], &[15], &mut kvs).unwrap();
+        assert_eq!(argmax(&full.logits), argmax(&out.logits));
+    }
+
+    #[test]
+    fn decode_is_batch_invariant() {
+        let m = RefModel::new();
+        let p1: Vec<i32> = (0..12).map(|i| (i * 3 + 1) % 256).collect();
+        let p2: Vec<i32> = (0..20).map(|i| (i * 11 + 2) % 256).collect();
+        let o1 = m.prefill(&p1).unwrap();
+        let o2 = m.prefill(&p2).unwrap();
+
+        let mut both = scratch_for(&m, 2);
+        for (layer, (a, c)) in o1.kv.iter().zip(&o2.kv).enumerate() {
+            fill_lane(&m, a, &mut both[layer], 0);
+            fill_lane(&m, c, &mut both[layer], 1);
+        }
+        let b2 = m.decode(&[7, 9], &[12, 20], &mut both).unwrap();
+
+        let mut solo = scratch_for(&m, 1);
+        for (layer, a) in o1.kv.iter().enumerate() {
+            fill_lane(&m, a, &mut solo[layer], 0);
+        }
+        let b1 = m.decode(&[7], &[12], &mut solo).unwrap();
+        let v = m.spec().vocab;
+        assert_eq!(argmax(&b2.logits[..v]), argmax(&b1.logits[..v]));
+    }
+
+    #[test]
+    fn output_depends_on_cache_contents() {
+        // corrupt one stored KV value -> the next token changes
+        let m = RefModel::new();
+        let prompt: Vec<i32> = (0..24).map(|i| (i * 7) % 256).collect();
+        let o = m.prefill(&prompt).unwrap();
+        let mut clean = scratch_for(&m, 1);
+        let mut dirty = scratch_for(&m, 1);
+        for (layer, kv) in o.kv.iter().enumerate() {
+            fill_lane(&m, kv, &mut clean[layer], 0);
+            fill_lane(&m, kv, &mut dirty[layer], 0);
+        }
+        dirty[0][3] += 21.0 / 64.0; // layer 0, K plane, inside the context sum
+        let a = m.decode(&[5], &[24], &mut clean).unwrap();
+        let b = m.decode(&[5], &[24], &mut dirty).unwrap();
+        assert_ne!(argmax(&a.logits), argmax(&b.logits));
+    }
+
+    #[test]
+    fn bucket_lookup() {
+        let m = RefModel::new();
+        assert_eq!(m.prefill_bucket_for(1), Some(16));
+        assert_eq!(m.prefill_bucket_for(17), Some(32));
+        assert_eq!(m.prefill_bucket_for(513), None);
+        assert_eq!(m.decode_bucket_for(3), Some(4));
+        assert_eq!(m.max_decode_batch(), 8);
+    }
+}

@@ -1,11 +1,21 @@
-//! Serving front-end: a line-delimited TCP protocol over the real PJRT
-//! engine (S18). Thread-per-connection with a shared single engine worker
-//! — std::thread + mpsc stand in for tokio, which is unavailable offline
+//! Serving front-end: a line-delimited TCP protocol over the real engine
+//! (S18). Thread-per-connection with a shared single engine worker —
+//! std::thread + mpsc stand in for tokio, which is unavailable offline
 //! (DESIGN.md §2).
 //!
 //! Protocol (one JSON object per line):
 //!   request:  {"id": 1, "prompt": [12, 7, ...], "max_new_tokens": 16}
 //!   response: {"id": 1, "output": [...], "ttft_ms": 1.2, "tpot_ms": 0.4}
+//!   rejected: {"id": 1, "error": "prompt of 600 tokens cannot be served ..."}
+//!
+//! Malformed requests (non-JSON, missing fields, non-integer prompt
+//! tokens) get `{"error": ...}` back; rejected-but-well-formed requests
+//! (e.g. oversized prompts) get `{"id": ..., "error": ...}` — they are
+//! never silently coerced into the token stream or the latency records.
+//!
+//! The engine behind the socket is `Engine<PjrtBackend>` under whichever
+//! scheduler `--policy` selects (vLLM baseline, LayerKV, LayerKV without
+//! the SLO gate) — the same `make_scheduler` policies the simulator runs.
 //!
 //! Example session: `cargo run --release -- serve` then
 //! `printf '{"id":1,"prompt":[1,2,3],"max_new_tokens":4}\n' | nc 127.0.0.1 7181`
@@ -14,13 +24,13 @@ use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::path::Path;
+use std::rc::Rc;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 
 use anyhow::{Context, Result};
 
-use crate::config::Policy;
-use crate::runtime::{RealEngine, RealEngineConfig, ServeRequest};
+use crate::runtime::{RealEngine, RealEngineConfig, RefModel, ServeRequest, TokenModel};
 use crate::util::Json;
 
 /// A queued inference job plus its reply channel.
@@ -33,13 +43,17 @@ struct Job {
 fn parse_request(line: &str) -> Result<ServeRequest> {
     let j = Json::parse(line).map_err(|e| anyhow::anyhow!("{e}"))?;
     let id = j.req("id")?.as_usize().context("id")?;
-    let prompt: Vec<i32> = j
-        .req("prompt")?
-        .as_arr()
-        .context("prompt")?
-        .iter()
-        .map(|x| x.as_f64().unwrap_or(0.0) as i32)
-        .collect();
+    let arr = j.req("prompt")?.as_arr().context("prompt")?;
+    let mut prompt = Vec::with_capacity(arr.len());
+    for x in arr {
+        // strict: a malformed token must produce a JSON error response,
+        // never a silently-coerced 0 corrupting the token stream
+        let v = x
+            .as_f64()
+            .filter(|v| v.fract() == 0.0 && (0.0..=i32::MAX as f64).contains(v))
+            .context("prompt must be an array of non-negative integer token ids")?;
+        prompt.push(v as i32);
+    }
     anyhow::ensure!(!prompt.is_empty(), "empty prompt");
     let max_new = j.get("max_new_tokens").and_then(|x| x.as_usize()).unwrap_or(16);
     Ok(ServeRequest { id, prompt, max_new_tokens: max_new, arrival_s: 0.0 })
@@ -57,8 +71,19 @@ fn render_response(id: usize, output: &[i32], ttft_s: f64, tpot_s: f64) -> Strin
     Json::Obj(obj).dump()
 }
 
+/// `{"id": .., "error": ..}` (or just `{"error": ..}` when the id is
+/// unknown), with proper JSON string escaping.
+fn render_error(id: Option<usize>, msg: &str) -> String {
+    let mut obj = BTreeMap::new();
+    if let Some(id) = id {
+        obj.insert("id".to_string(), Json::Num(id as f64));
+    }
+    obj.insert("error".to_string(), Json::Str(msg.to_string()));
+    Json::Obj(obj).dump()
+}
+
 /// Engine worker: drains the job queue, batching whatever is pending.
-fn engine_worker(mut engine: RealEngine, rx: mpsc::Receiver<Job>) {
+fn engine_worker<M: TokenModel>(mut engine: RealEngine<M>, rx: mpsc::Receiver<Job>) {
     while let Ok(first) = rx.recv() {
         // micro-batch: grab everything already queued
         let mut jobs = vec![first];
@@ -71,8 +96,8 @@ fn engine_worker(mut engine: RealEngine, rx: mpsc::Receiver<Job>) {
             .map(|(i, j)| ServeRequest { id: i, ..j.req.clone() })
             .collect();
         match engine.serve(reqs) {
-            Ok((results, _report)) => {
-                for r in results {
+            Ok(out) => {
+                for r in out.results {
                     let job = &jobs[r.id];
                     let line = render_response(
                         job.req.id,
@@ -82,10 +107,15 @@ fn engine_worker(mut engine: RealEngine, rx: mpsc::Receiver<Job>) {
                     );
                     let _ = job.reply.send(line);
                 }
+                // rejections come back as explicit errors, not fake records
+                for (rid, why) in out.dropped {
+                    let job = &jobs[rid];
+                    let _ = job.reply.send(render_error(Some(job.req.id), &why));
+                }
             }
             Err(e) => {
                 for job in &jobs {
-                    let _ = job.reply.send(format!("{{\"id\":{},\"error\":\"{e}\"}}", job.req.id));
+                    let _ = job.reply.send(render_error(Some(job.req.id), &format!("{e:#}")));
                 }
             }
         }
@@ -113,9 +143,9 @@ fn handle_conn(stream: TcpStream, tx: Arc<Mutex<mpsc::Sender<Job>>>) {
                         break;
                     }
                 }
-                rrx.recv().unwrap_or_else(|_| "{\"error\":\"engine gone\"}".into())
+                rrx.recv().unwrap_or_else(|_| render_error(None, "engine gone"))
             }
-            Err(e) => format!("{{\"error\":\"{e}\"}}"),
+            Err(e) => render_error(None, &format!("{e:#}")),
         };
         if writeln!(writer, "{reply}").is_err() {
             break;
@@ -124,37 +154,41 @@ fn handle_conn(stream: TcpStream, tx: Arc<Mutex<mpsc::Sender<Job>>>) {
     let _ = peer;
 }
 
-/// Run the server (blocks forever).
-pub fn serve(addr: &str, artifacts_dir: &Path, device_budget: usize) -> Result<()> {
+/// Run the server (blocks forever). `artifacts_dir = None` serves the
+/// deterministic in-process `RefModel` instead of the PJRT artifacts —
+/// every `Policy` variant works on either executor.
+pub fn serve(addr: &str, artifacts_dir: Option<&Path>, cfg: RealEngineConfig) -> Result<()> {
     let (tx, rx) = mpsc::channel::<Job>();
     // PJRT handles are not Send: the engine lives entirely on the worker
     // thread; load errors come back over a one-shot channel.
-    let dir = artifacts_dir.to_path_buf();
-    let (init_tx, init_rx) = mpsc::channel::<Result<(), String>>();
-    std::thread::spawn(move || {
-        match RealEngine::load(
-            &dir,
-            RealEngineConfig {
-                device_kv_budget: device_budget,
-                policy: Policy::LayerKv { slo_aware: true },
-                max_batch: 8,
-            },
-        ) {
-            Ok(engine) => {
+    let (init_tx, init_rx) = mpsc::channel::<std::result::Result<(), String>>();
+    match artifacts_dir {
+        Some(dir) => {
+            let dir = dir.to_path_buf();
+            std::thread::spawn(move || match RealEngine::load(&dir, cfg) {
+                Ok(engine) => {
+                    let _ = init_tx.send(Ok(()));
+                    engine_worker(engine, rx);
+                }
+                Err(e) => {
+                    let _ = init_tx.send(Err(format!("{e:#}")));
+                }
+            });
+        }
+        None => {
+            std::thread::spawn(move || {
+                let engine = RealEngine::with_model(Rc::new(RefModel::new()), cfg);
                 let _ = init_tx.send(Ok(()));
                 engine_worker(engine, rx);
-            }
-            Err(e) => {
-                let _ = init_tx.send(Err(format!("{e:#}")));
-            }
+            });
         }
-    });
+    }
     init_rx
         .recv()
         .context("engine thread died during init")?
         .map_err(|e| anyhow::anyhow!(e))?;
     let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
-    println!("layerkv serving on {addr} (artifacts: {})", artifacts_dir.display());
+    println!("layerkv serving on {addr}");
     let tx = Arc::new(Mutex::new(tx));
     for stream in listener.incoming().flatten() {
         let tx = Arc::clone(&tx);
@@ -189,11 +223,37 @@ mod tests {
     }
 
     #[test]
+    fn rejects_malformed_prompt_tokens_instead_of_coercing() {
+        // these all used to silently become token 0
+        for bad in [
+            r#"{"id": 1, "prompt": ["seven"]}"#,
+            r#"{"id": 1, "prompt": [1, null, 3]}"#,
+            r#"{"id": 1, "prompt": [1.5]}"#,
+            r#"{"id": 1, "prompt": [-2]}"#,
+            r#"{"id": 1, "prompt": [true]}"#,
+        ] {
+            assert!(parse_request(bad).is_err(), "must reject {bad}");
+        }
+        // integral floats are fine (JSON has no integer type)
+        assert_eq!(parse_request(r#"{"id": 1, "prompt": [2.0]}"#).unwrap().prompt, vec![2]);
+    }
+
+    #[test]
     fn response_roundtrips_as_json() {
         let line = render_response(7, &[1, 2], 0.0123, 0.004);
         let j = Json::parse(&line).unwrap();
         assert_eq!(j.req("id").unwrap().as_usize(), Some(7));
         assert_eq!(j.req("output").unwrap().as_arr().unwrap().len(), 2);
         assert!(j.req("ttft_ms").unwrap().as_f64().unwrap() > 12.0);
+    }
+
+    #[test]
+    fn error_responses_are_json_with_escaping() {
+        let line = render_error(Some(4), "bad \"quote\" and \\slash");
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.req("id").unwrap().as_usize(), Some(4));
+        assert_eq!(j.req("error").unwrap().as_str().unwrap(), "bad \"quote\" and \\slash");
+        let anon = render_error(None, "nope");
+        assert!(Json::parse(&anon).unwrap().get("id").is_none());
     }
 }

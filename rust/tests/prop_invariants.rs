@@ -1,7 +1,11 @@
 //! Cross-module property tests (randomized, seeded, replayable via
 //! LAYERKV_PROP_SEED / LAYERKV_PROP_CASES — see util::prop).
 
+#[path = "support/reference_engine.rs"]
+mod reference_engine;
+
 use layerkv::config::{Policy, ServingConfig};
+use layerkv::coordinator::EngineStats;
 use layerkv::coordinator::block::{KvManager, LayerBlockTable};
 use layerkv::coordinator::engine::run_trace_oracle;
 use layerkv::coordinator::predict::LengthPredictor;
@@ -87,6 +91,88 @@ fn prop_incremental_engine_matches_recompute_oracle() {
             );
             assert_eq!(inc_stats.preemptions, ora_stats.preemptions);
             assert_eq!(inc_stats.dropped, ora_stats.dropped);
+        }
+    });
+}
+
+/// Bit-level stats equality: every counter identical, every f64
+/// accumulator identical to the bit.
+fn assert_stats_bit_identical(a: &EngineStats, b: &EngineStats, what: &str) {
+    assert_eq!(
+        (a.steps, a.prefill_steps, a.decode_steps, a.preemptions),
+        (b.steps, b.prefill_steps, b.decode_steps, b.preemptions),
+        "{what}: step counters diverge"
+    );
+    assert_eq!(
+        (a.proactive_offload_layers, a.oom_forced_offload_layers, a.onloaded_layers),
+        (b.proactive_offload_layers, b.oom_forced_offload_layers, b.onloaded_layers),
+        "{what}: residency counters diverge"
+    );
+    assert_eq!(a.dropped, b.dropped, "{what}: dropped lists diverge");
+    assert_eq!(
+        a.offload_bytes.to_bits(),
+        b.offload_bytes.to_bits(),
+        "{what}: offload_bytes diverges"
+    );
+    assert_eq!(
+        a.onload_stream_bytes.to_bits(),
+        b.onload_stream_bytes.to_bits(),
+        "{what}: onload_stream_bytes diverges"
+    );
+    assert_eq!(
+        a.stream_stall_s.to_bits(),
+        b.stream_stall_s.to_bits(),
+        "{what}: stream_stall_s diverges"
+    );
+    assert_eq!(
+        a.contention_s.to_bits(),
+        b.contention_s.to_bits(),
+        "{what}: contention_s diverges"
+    );
+}
+
+/// The `ExecutionBackend` refactor's contract: `Engine<SimBackend>` must
+/// reproduce the pre-refactor monolithic engine (preserved verbatim in
+/// tests/support/reference_engine.rs) bit-for-bit — records, makespan,
+/// and every stat — across randomized traces, under every policy, in
+/// both incremental and recompute-oracle mode.
+#[test]
+fn prop_unified_engine_matches_pre_refactor_reference() {
+    prop(8, |rng| {
+        let n = rng.range_usize(5, 30);
+        let trace: Trace = if rng.chance(0.5) {
+            ShareGptWorkload::paper(rng.f64() * 5.0 + 0.5, n).generate(rng)
+        } else {
+            FixedWorkload {
+                prompt_len: rng.range_usize(16, 4096),
+                output_len: rng.range_usize(4, 128),
+                n_requests: n,
+                arrivals: Arrivals::Poisson { rate: rng.f64() * 3.0 + 0.2 },
+            }
+            .generate(rng)
+        };
+        for policy in [
+            Policy::Vllm,
+            Policy::LayerKv { slo_aware: true },
+            Policy::LayerKv { slo_aware: false },
+        ] {
+            let cfg = ServingConfig::llama2_7b_tp1().with_policy(policy);
+            let (new_rep, new_stats) = run_trace(cfg.clone(), &trace, 0.8);
+            let (ref_rep, ref_stats) =
+                reference_engine::run_trace_reference(cfg.clone(), &trace, 0.8);
+            assert_eq!(new_rep.records, ref_rep.records, "{policy:?}: records diverge");
+            assert_eq!(
+                new_rep.makespan.to_bits(),
+                ref_rep.makespan.to_bits(),
+                "{policy:?}: makespan diverges"
+            );
+            assert_stats_bit_identical(&new_stats, &ref_stats, &format!("{policy:?}"));
+
+            let (new_o, new_os) = run_trace_oracle(cfg.clone(), &trace, 0.8);
+            let (ref_o, ref_os) =
+                reference_engine::run_trace_reference_oracle(cfg, &trace, 0.8);
+            assert_eq!(new_o.records, ref_o.records, "{policy:?}: oracle records diverge");
+            assert_stats_bit_identical(&new_os, &ref_os, &format!("{policy:?} oracle"));
         }
     });
 }

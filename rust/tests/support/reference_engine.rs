@@ -1,0 +1,582 @@
+//! The PRE-REFACTOR simulation engine, preserved verbatim as the
+//! reference for the `ExecutionBackend` refactor: a monolithic
+//! continuous-batching loop with the cost-model arithmetic inlined,
+//! exactly as `coordinator/engine.rs` stood before the engine went
+//! generic over its executor.
+//!
+//! `prop_unified_engine_matches_pre_refactor_reference` asserts
+//! `Engine<SimBackend>` reproduces this engine's reports and stats
+//! bit-for-bit across randomized traces under every policy. Do not
+//! "improve" this file — its value is that it does not change.
+
+#![allow(dead_code, clippy::needless_range_loop)]
+
+use std::collections::VecDeque;
+
+use layerkv::config::{Fabric, Policy, ServingConfig};
+use layerkv::coordinator::block::{KvError, KvManager, Residency};
+use layerkv::coordinator::predict::LengthPredictor;
+use layerkv::coordinator::request::{Phase, ReqId, Request};
+use layerkv::coordinator::scheduler::{make_scheduler, Action, SchedContext, Scheduler};
+use layerkv::coordinator::EngineStats;
+use layerkv::metrics::{Report, RequestRecord};
+use layerkv::sim::CostModel;
+use layerkv::workload::Trace;
+
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+struct RunningAggregates {
+    resident_count: usize,
+    resident_tokens: usize,
+}
+
+impl RunningAggregates {
+    fn recompute(running: &[ReqId], requests: &[Request], kv: &KvManager) -> Self {
+        let mut a = RunningAggregates::default();
+        for &rid in running {
+            if kv.table(rid).map(|t| t.fully_resident()).unwrap_or(false) {
+                a.resident_count += 1;
+                a.resident_tokens += requests[rid].context_len();
+            }
+        }
+        a
+    }
+}
+
+/// The pre-refactor engine, field for field.
+pub struct ReferenceEngine {
+    pub cfg: ServingConfig,
+    pub cost: CostModel,
+    pub kv: KvManager,
+    scheduler: Box<dyn Scheduler>,
+    predictor: LengthPredictor,
+    requests: Vec<Request>,
+    waiting: VecDeque<ReqId>,
+    running: Vec<ReqId>,
+    now: f64,
+    stats: EngineStats,
+    records: Vec<RequestRecord>,
+    agg: RunningAggregates,
+    incremental: bool,
+    restore_threshold: usize,
+    active_buf: Vec<ReqId>,
+    finished_buf: Vec<ReqId>,
+}
+
+impl ReferenceEngine {
+    pub fn new(cfg: ServingConfig, predictor: LengthPredictor) -> Self {
+        let cost = CostModel::new(cfg.clone());
+        let kv = KvManager::new(
+            cfg.num_gpu_layer_blocks(),
+            cfg.num_cpu_layer_blocks(),
+            cfg.block_size,
+            cfg.model.n_layers,
+        );
+        let scheduler = make_scheduler(&cfg);
+        let restore_threshold =
+            (cfg.avail_threshold_frac * kv.gpu.total() as f64) as usize;
+        ReferenceEngine {
+            cfg,
+            cost,
+            kv,
+            scheduler,
+            predictor,
+            requests: Vec::new(),
+            waiting: VecDeque::new(),
+            running: Vec::new(),
+            now: 0.0,
+            stats: EngineStats::default(),
+            records: Vec::new(),
+            agg: RunningAggregates::default(),
+            incremental: true,
+            restore_threshold,
+            active_buf: Vec::new(),
+            finished_buf: Vec::new(),
+        }
+    }
+
+    pub fn stats(&self) -> &EngineStats {
+        &self.stats
+    }
+
+    pub fn use_recompute_oracle(&mut self) {
+        self.incremental = false;
+    }
+
+    pub fn run(&mut self, trace: &Trace) -> Report {
+        self.requests = trace
+            .requests
+            .iter()
+            .map(|t| Request::from_trace(t, self.predictor.predict(t.id, t.output_len)))
+            .collect();
+        self.agg = RunningAggregates::default();
+        let mut next_arrival = 0usize;
+        let max_steps = 1000 + 4 * trace.total_tokens() as u64;
+
+        loop {
+            while next_arrival < self.requests.len()
+                && self.requests[next_arrival].arrival <= self.now + 1e-12
+            {
+                self.waiting.push_back(next_arrival);
+                next_arrival += 1;
+            }
+
+            self.oracle_refresh();
+
+            let action = {
+                let waiting = self.waiting.make_contiguous();
+                let ctx = SchedContext {
+                    now: self.now,
+                    waiting,
+                    running: &self.running,
+                    requests: &self.requests,
+                    kv: &self.kv,
+                    cost: &self.cost,
+                    cfg: &self.cfg,
+                };
+                self.scheduler.decide(&ctx)
+            };
+
+            match action {
+                Action::Prefill(reqs) => self.step_prefill(&reqs),
+                Action::Decode => self.step_decode(),
+                Action::Wait => {
+                    if let Some(&r) = self.waiting.front() {
+                        if self.never_fits(r) {
+                            self.waiting.pop_front();
+                            self.stats.dropped.push(r);
+                            self.requests[r].phase = Phase::Finished;
+                            continue;
+                        }
+                    }
+                    if next_arrival < self.requests.len() {
+                        self.now = self.requests[next_arrival].arrival.max(self.now);
+                        continue;
+                    }
+                    if self.running.is_empty() && self.waiting.is_empty() {
+                        break;
+                    }
+                    if self.running.is_empty() && next_arrival >= self.requests.len() {
+                        let r = self.waiting.pop_front().unwrap();
+                        self.stats.dropped.push(r);
+                        self.requests[r].phase = Phase::Finished;
+                    }
+                }
+            }
+
+            self.stats.steps += 1;
+            if self.stats.steps > max_steps {
+                panic!(
+                    "engine exceeded {max_steps} steps ({} waiting, {} running) — livelock",
+                    self.waiting.len(),
+                    self.running.len()
+                );
+            }
+        }
+        Report::new(std::mem::take(&mut self.records))
+    }
+
+    fn never_fits(&self, r: ReqId) -> bool {
+        let len = self.requests[r].prefill_len();
+        let per_layer = len.div_ceil(self.cfg.block_size);
+        match self.cfg.policy {
+            Policy::Vllm => per_layer * self.cfg.model.n_layers > self.kv.gpu.total(),
+            Policy::LayerKv { .. } => {
+                let x = self.cost.min_resident_layers(len);
+                per_layer * x > self.kv.gpu.total()
+                    || per_layer * (self.cfg.model.n_layers - x) > self.kv.cpu.total()
+            }
+        }
+    }
+
+    fn oracle_refresh(&mut self) {
+        if self.incremental {
+            return;
+        }
+        let reqs = &self.requests;
+        self.running.sort_by(|&a, &b| {
+            let ta = reqs[a].prefill_start.unwrap_or(0.0);
+            let tb = reqs[b].prefill_start.unwrap_or(0.0);
+            ta.partial_cmp(&tb).unwrap()
+        });
+        self.agg = RunningAggregates::recompute(&self.running, &self.requests, &self.kv);
+    }
+
+    fn agg_admit(&mut self, rid: ReqId) {
+        if self.incremental
+            && self.kv.table(rid).map(|t| t.fully_resident()).unwrap_or(false)
+        {
+            self.agg.resident_count += 1;
+            self.agg.resident_tokens += self.requests[rid].context_len();
+        }
+    }
+
+    fn agg_remove(&mut self, rid: ReqId) {
+        if self.incremental
+            && self.kv.table(rid).map(|t| t.fully_resident()).unwrap_or(false)
+        {
+            self.agg.resident_count -= 1;
+            self.agg.resident_tokens -= self.requests[rid].context_len();
+        }
+    }
+
+    fn kv_offload(&mut self, rid: ReqId, layer: usize) -> Result<usize, KvError> {
+        let was_resident =
+            self.kv.table(rid).map(|t| t.fully_resident()).unwrap_or(false);
+        let out = self.kv.offload_layer(rid, layer);
+        if self.incremental {
+            if let Ok(n) = out {
+                if n > 0 && was_resident {
+                    self.agg.resident_count -= 1;
+                    self.agg.resident_tokens -= self.requests[rid].context_len();
+                }
+            }
+        }
+        out
+    }
+
+    fn kv_onload(&mut self, rid: ReqId, layer: usize) -> Result<usize, KvError> {
+        let out = self.kv.onload_layer(rid, layer);
+        if self.incremental {
+            if let Ok(n) = out {
+                if n > 0
+                    && self.kv.table(rid).map(|t| t.fully_resident()).unwrap_or(false)
+                {
+                    self.agg.resident_count += 1;
+                    self.agg.resident_tokens += self.requests[rid].context_len();
+                }
+            }
+        }
+        out
+    }
+
+    fn step_prefill(&mut self, reqs: &[(ReqId, usize)]) {
+        let mut duration = 0.0;
+        let mut offload_bytes = 0.0;
+        let l = self.cfg.model.n_layers;
+        for &(rid, x) in reqs {
+            let len = self.requests[rid].prefill_len();
+            let alloc = match self.cfg.policy {
+                Policy::Vllm => self.kv.allocate_full(rid, len),
+                Policy::LayerKv { .. } => self.kv.allocate_layerwise(rid, len, x),
+            };
+            if alloc.is_err() {
+                continue;
+            }
+            offload_bytes += len as f64
+                * (l - x.min(l)) as f64
+                * self.cfg.offload_bytes_per_token_layer()
+                / self.cfg.tp as f64;
+
+            if self.waiting.front() == Some(&rid) {
+                self.waiting.pop_front();
+            } else if let Some(pos) = self.waiting.iter().position(|&w| w == rid) {
+                self.waiting.remove(pos);
+            }
+            let r = &mut self.requests[rid];
+            if r.prefill_start.is_none() {
+                r.prefill_start = Some(self.now);
+            }
+            duration += self.cost.prefill_time(len);
+            r.preemptions += matches!(r.phase, Phase::Preempted) as usize;
+            r.phase = Phase::Decoding;
+            let ps = self.requests[rid].prefill_start.unwrap();
+            let reqs_ref = &self.requests;
+            let pos = self
+                .running
+                .partition_point(|&o| reqs_ref[o].prefill_start.unwrap_or(0.0) <= ps);
+            self.running.insert(pos, rid);
+            self.agg_admit(rid);
+        }
+        self.stats.offload_bytes += offload_bytes;
+        self.now += duration;
+        self.stats.prefill_steps += 1;
+
+        for &(rid, _) in reqs {
+            if self.requests[rid].phase == Phase::Decoding
+                && self.requests[rid].first_token.is_none()
+            {
+                self.requests[rid].first_token = Some(self.now);
+                self.requests[rid].generated = 1;
+                if self.incremental
+                    && self.kv.table(rid).map(|t| t.fully_resident()).unwrap_or(false)
+                {
+                    self.agg.resident_tokens += 1;
+                }
+                if self.requests[rid].done() {
+                    self.complete(rid);
+                }
+            }
+        }
+    }
+
+    fn step_decode(&mut self) {
+        debug_assert!(!self.running.is_empty());
+
+        if matches!(self.cfg.policy, Policy::LayerKv { .. }) {
+            self.restore_layers();
+        }
+        if !self.incremental {
+            self.agg =
+                RunningAggregates::recompute(&self.running, &self.requests, &self.kv);
+        }
+
+        let mut active = std::mem::take(&mut self.active_buf);
+        active.clear();
+        let mut stream_bytes = 0.0;
+        let (batch, total_ctx) = if self.agg.resident_count > 0 {
+            active.extend(self.running.iter().copied().filter(|&r| {
+                self.kv.table(r).map(|t| t.fully_resident()).unwrap_or(false)
+            }));
+            debug_assert_eq!(active.len(), self.agg.resident_count);
+            (self.agg.resident_count, self.agg.resident_tokens)
+        } else {
+            let oldest = *self.running.first().expect("running nonempty");
+            if let Some(t) = self.kv.table(oldest) {
+                stream_bytes = t.n_cpu_layers() as f64
+                    * t.tokens as f64
+                    * self.cfg.offload_bytes_per_token_layer()
+                    / self.cfg.tp as f64;
+            }
+            active.push(oldest);
+            (1, self.requests[oldest].context_len())
+        };
+
+        let compute = self.cost.decode_step_time_sum(total_ctx, batch);
+        let stream_time = if stream_bytes > 0.0 {
+            stream_bytes / self.cost.pcie_bw_per_gpu() + self.cfg.node.pcie.latency
+        } else {
+            0.0
+        };
+        let mut step = compute.max(stream_time);
+        self.stats.stream_stall_s += (stream_time - compute).max(0.0);
+        self.stats.onload_stream_bytes += stream_bytes;
+
+        if self.cfg.tp > 1 && self.cfg.node.fabric == Fabric::Pcie && stream_bytes > 0.0 {
+            let ar = self.cost.allreduce_time(batch);
+            let penalty = if self.cfg.pcie_chunking { 0.05 * ar } else { ar.min(stream_time) };
+            step += penalty;
+            self.stats.contention_s += penalty;
+        }
+
+        self.now += step;
+        self.stats.decode_steps += 1;
+        self.scheduler.observe_decode_step(step);
+
+        let mut finished = std::mem::take(&mut self.finished_buf);
+        finished.clear();
+        for &rid in &active {
+            match self.kv.append_token(rid) {
+                Ok(()) => {}
+                Err(KvError::GpuExhausted) => {
+                    if !self.relieve_gpu_pressure(rid) {
+                        continue;
+                    }
+                    if self.kv.append_token(rid).is_err() {
+                        continue;
+                    }
+                }
+                Err(KvError::CpuExhausted) => continue,
+                Err(KvError::UnknownRequest) => continue,
+            }
+            if self.requests[rid].phase != Phase::Decoding {
+                continue;
+            }
+            self.requests[rid].generated += 1;
+            if self.incremental
+                && self.kv.table(rid).map(|t| t.fully_resident()).unwrap_or(false)
+            {
+                self.agg.resident_tokens += 1;
+            }
+            if self.requests[rid].done() {
+                finished.push(rid);
+            }
+        }
+        for &rid in &finished {
+            self.complete(rid);
+        }
+        finished.clear();
+        self.finished_buf = finished;
+        active.clear();
+        self.active_buf = active;
+
+        let plan = {
+            let waiting = self.waiting.make_contiguous();
+            let ctx = SchedContext {
+                now: self.now,
+                waiting,
+                running: &self.running,
+                requests: &self.requests,
+                kv: &self.kv,
+                cost: &self.cost,
+                cfg: &self.cfg,
+            };
+            self.scheduler.proactive_offloads(&ctx)
+        };
+        for (rid, layer) in plan {
+            if let Ok(n) = self.kv_offload(rid, layer) {
+                if n > 0 {
+                    self.stats.proactive_offload_layers += 1;
+                    self.stats.offload_bytes += n as f64
+                        * self.cfg.block_size as f64
+                        * self.cfg.offload_bytes_per_token_layer()
+                        / self.cfg.tp as f64;
+                }
+            }
+        }
+    }
+
+    fn relieve_gpu_pressure(&mut self, needy: ReqId) -> bool {
+        match self.cfg.policy {
+            Policy::LayerKv { .. } => {
+                let need = self.requests[needy].context_len() / self.cfg.block_size + 1;
+                let n_layers = self.cfg.model.n_layers;
+                let mut freed = 0usize;
+                for pass in 0..2 {
+                    for vi in (0..self.running.len()).rev() {
+                        let v = self.running[vi];
+                        let Some(t) = self.kv.table(v) else { continue };
+                        let resident = t.n_gpu_layers();
+                        if resident == 0 {
+                            continue;
+                        }
+                        let take = if pass == 0 { resident / 2 } else { resident };
+                        let mut taken = 0usize;
+                        for layer in 0..n_layers {
+                            if taken >= take {
+                                break;
+                            }
+                            let Some(t) = self.kv.table(v) else { break };
+                            if t.layers[layer].residency != Residency::Gpu {
+                                continue;
+                            }
+                            if freed >= need {
+                                return true;
+                            }
+                            taken += 1;
+                            if let Ok(n) = self.kv_offload(v, layer) {
+                                freed += n;
+                                self.stats.oom_forced_offload_layers += 1;
+                            }
+                        }
+                    }
+                    if freed >= need {
+                        return true;
+                    }
+                }
+                freed > 0
+            }
+            Policy::Vllm => {
+                // One deliberate backport (the sole divergence from the
+                // pre-refactor file): skip victims that already finished
+                // this step, mirroring the double-serve fix in
+                // coordinator/engine.rs so the bit-identity property
+                // keeps comparing like with like.
+                let reqs = &self.requests;
+                let victim = self
+                    .running
+                    .iter()
+                    .rev()
+                    .copied()
+                    .find(|&r| r != needy && !reqs[r].done())
+                    .or(Some(needy));
+                match victim {
+                    Some(v) => {
+                        self.preempt_recompute(v);
+                        true
+                    }
+                    None => false,
+                }
+            }
+        }
+    }
+
+    fn preempt_recompute(&mut self, rid: ReqId) {
+        self.agg_remove(rid);
+        let _ = self.kv.release(rid);
+        self.running.retain(|&r| r != rid);
+        self.requests[rid].phase = Phase::Preempted;
+        self.waiting.push_front(rid);
+        self.stats.preemptions += 1;
+    }
+
+    fn restore_layers(&mut self) {
+        if self.kv.cpu.used() == 0 {
+            return;
+        }
+        let threshold = self.restore_threshold;
+        let n_layers = self.cfg.model.n_layers;
+        for i in 0..self.running.len() {
+            let rid = self.running[i];
+            for layer in 0..n_layers {
+                let Some(t) = self.kv.table(rid) else { break };
+                if t.layers[layer].residency != Residency::Cpu {
+                    continue;
+                }
+                let per_layer = t.blocks_per_layer(t.tokens).max(1);
+                if self.kv.gpu.available() < threshold + per_layer {
+                    return;
+                }
+                match self.kv_onload(rid, layer) {
+                    Ok(n) if n > 0 => self.stats.onloaded_layers += 1,
+                    _ => return,
+                }
+            }
+        }
+    }
+
+    fn complete(&mut self, rid: ReqId) {
+        self.agg_remove(rid);
+        let _ = self.kv.release(rid);
+        self.running.retain(|&r| r != rid);
+        let r = &mut self.requests[rid];
+        r.phase = Phase::Finished;
+        r.finish = Some(self.now);
+        self.records.push(RequestRecord {
+            id: r.id,
+            arrival: r.arrival,
+            prefill_start: r.prefill_start.unwrap_or(r.arrival),
+            first_token: r.first_token.unwrap_or(self.now),
+            finish: self.now,
+            prompt_len: r.prompt_len,
+            output_len: r.output_len,
+        });
+    }
+}
+
+fn run_reference_with(
+    cfg: ServingConfig,
+    trace: &Trace,
+    predictor_accuracy: f64,
+    oracle: bool,
+) -> (Report, EngineStats) {
+    let predictor = LengthPredictor::new(
+        trace.requests.iter().map(|r| r.output_len).max().unwrap_or(1024).max(2),
+        predictor_accuracy,
+        42,
+    );
+    let mut engine = ReferenceEngine::new(cfg, predictor);
+    if oracle {
+        engine.use_recompute_oracle();
+    }
+    let report = engine.run(trace);
+    let stats = engine.stats().clone();
+    (report, stats)
+}
+
+/// `run_trace`, pre-refactor edition — identical predictor setup.
+pub fn run_trace_reference(
+    cfg: ServingConfig,
+    trace: &Trace,
+    predictor_accuracy: f64,
+) -> (Report, EngineStats) {
+    run_reference_with(cfg, trace, predictor_accuracy, false)
+}
+
+/// `run_trace_oracle`, pre-refactor edition.
+pub fn run_trace_reference_oracle(
+    cfg: ServingConfig,
+    trace: &Trace,
+    predictor_accuracy: f64,
+) -> (Report, EngineStats) {
+    run_reference_with(cfg, trace, predictor_accuracy, true)
+}
