@@ -25,6 +25,7 @@ fn main() -> anyhow::Result<()> {
             device_kv_budget: 256 << 10, // 256 KiB: tight, so offloading engages
             policy: Policy::LayerKv { slo_aware: true },
             max_batch: 8,
+            ..Default::default()
         },
     )?;
 

@@ -37,7 +37,7 @@ fn run(policy: Policy, budget: usize, jobs: Vec<ServeRequest>) -> anyhow::Result
     let dir = artifacts::default_dir();
     let mut engine = RealEngine::load(
         &dir,
-        RealEngineConfig { device_kv_budget: budget, policy, max_batch: 8 },
+        RealEngineConfig { device_kv_budget: budget, policy, max_batch: 8, ..Default::default() },
     )?;
     let out = engine.serve(jobs)?;
     let report = out.report;

@@ -135,6 +135,36 @@ fn main() {
         m.release(0).unwrap();
     });
 
+    // §Perf guard for the tier-query fix: the per-step residency queries
+    // are O(1) aggregate reads and the per-tier index walks are
+    // allocation-free iterators (formerly Vec-returning).
+    {
+        let mut m = KvManager::new_tiered(100_000, 100_000, 100_000, 16, 32);
+        for i in 0..64 {
+            m.allocate_layerwise(i, 2048, 8).unwrap();
+        }
+        for i in 0..64 {
+            for layer in 0..8usize {
+                let _ = m.spill_layer(i, layer);
+            }
+        }
+        bench("kv_manager/tier_query", 2.0, || {
+            let mut acc = 0usize;
+            for i in 0..64 {
+                let t = m.table(i).unwrap();
+                acc += t.n_gpu_layers() + t.n_cpu_layers() + t.n_disk_layers();
+                acc += usize::from(t.fully_resident());
+                acc += t.gpu_layers().sum::<usize>();
+                acc += t.cpu_layers().sum::<usize>();
+                acc += t.disk_layers().sum::<usize>();
+            }
+            black_box(acc);
+        });
+        for i in 0..64 {
+            m.release(i).unwrap();
+        }
+    }
+
     // --- pcie link ------------------------------------------------------
     let busy: Vec<BusyWindow> = (0..100)
         .map(|i| BusyWindow { start: i as f64 * 0.01, end: i as f64 * 0.01 + 0.004 })

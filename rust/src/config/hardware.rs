@@ -56,6 +56,43 @@ impl PcieSpec {
     }
 }
 
+/// The disk tier backing the GPU -> host -> disk hierarchy: a slow,
+/// high-capacity "link + pool" below host RAM. Modeled exactly like the
+/// PCIe link (bandwidth + fixed latency), just with storage numbers.
+/// `capacity_bytes = 0` disables the tier — the two-tier configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DiskSpec {
+    /// Sustained sequential bandwidth in bytes/s (reads ~ writes for the
+    /// NVMe class this models).
+    pub bandwidth: f64,
+    /// Per-transfer fixed latency (submission + seek/flash overhead), s.
+    pub latency: f64,
+    /// Bytes of spill space available to KV (0 = tier disabled).
+    pub capacity_bytes: u64,
+}
+
+impl DiskSpec {
+    /// No disk tier (the default on every preset: seed semantics).
+    pub fn none() -> Self {
+        DiskSpec { bandwidth: 0.0, latency: 0.0, capacity_bytes: 0 }
+    }
+
+    /// A datacenter NVMe drive (~6 GB/s sustained, ~80 us per op) with
+    /// the given spill capacity.
+    pub fn nvme(capacity_bytes: u64) -> Self {
+        DiskSpec { bandwidth: 6.0e9, latency: 80e-6, capacity_bytes }
+    }
+
+    /// The 4 TB instance the tiered presets use.
+    pub fn nvme_4tb() -> Self {
+        Self::nvme(4096 * (1u64 << 30))
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.capacity_bytes > 0
+    }
+}
+
 /// Inter-GPU fabric for tensor parallelism.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Fabric {
@@ -77,6 +114,8 @@ pub struct NodeSpec {
     pub host_memory_bytes: u64,
     /// NVLink bandwidth if fabric == NvLink (bytes/s per direction).
     pub nvlink_bw: f64,
+    /// The disk tier below host RAM (capacity 0 = two-tier node).
+    pub disk: DiskSpec,
 }
 
 impl NodeSpec {
@@ -90,12 +129,19 @@ impl NodeSpec {
             fabric: Fabric::Pcie,
             host_memory_bytes: 2048 * (1u64 << 30),
             nvlink_bw: 0.0,
+            disk: DiskSpec::none(),
         }
     }
 
     /// NVLink variant (for the §3.1.3 contention ablation).
     pub fn l20_node_nvlink() -> Self {
         NodeSpec { fabric: Fabric::NvLink, nvlink_bw: 300.0e9, ..Self::l20_node() }
+    }
+
+    /// The testbed with an NVMe spill tier below host RAM (the tier-sweep
+    /// experiments' three-tier configuration).
+    pub fn l20_node_nvme() -> Self {
+        NodeSpec { disk: DiskSpec::nvme_4tb(), ..Self::l20_node() }
     }
 
     /// The PJRT-CPU testbed the real tiny-model path runs on: the
@@ -120,6 +166,7 @@ impl NodeSpec {
             fabric: Fabric::Pcie,
             host_memory_bytes: 16 * (1u64 << 30),
             nvlink_bw: 0.0,
+            disk: DiskSpec::none(),
         }
     }
 }
@@ -142,5 +189,16 @@ mod tests {
         assert_eq!(n.fabric, Fabric::Pcie);
         assert_eq!(n.pcie.gpus_per_link, 2);
         assert_eq!(n.host_memory_bytes, 2048 * (1u64 << 30));
+        // the paper's testbed has no disk tier: two-tier semantics
+        assert!(!n.disk.enabled());
+    }
+
+    #[test]
+    fn nvme_tier_is_slower_and_bigger_than_host_link() {
+        let n = NodeSpec::l20_node_nvme();
+        assert!(n.disk.enabled());
+        assert!(n.disk.bandwidth < n.pcie.bandwidth);
+        assert!(n.disk.latency > n.pcie.latency);
+        assert!(n.disk.capacity_bytes > n.host_memory_bytes);
     }
 }

@@ -4,6 +4,6 @@ pub mod hardware;
 pub mod model;
 pub mod serving;
 
-pub use hardware::{Fabric, GpuSpec, NodeSpec, PcieSpec};
+pub use hardware::{DiskSpec, Fabric, GpuSpec, NodeSpec, PcieSpec};
 pub use model::ModelSpec;
 pub use serving::{OffloadQuant, Policy, ServingConfig, SloTargets};

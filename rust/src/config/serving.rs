@@ -198,6 +198,22 @@ impl ServingConfig {
         (self.cpu_swap_bytes / layer_block_bytes) as usize
     }
 
+    /// Capacity of the disk spill tier in layer-blocks (0 when the node
+    /// has no disk tier — the two-tier configuration).
+    pub fn num_disk_layer_blocks(&self) -> usize {
+        let layer_block_bytes = self.block_bytes_per_gpu() / self.model.n_layers as u64;
+        if layer_block_bytes == 0 {
+            return 0;
+        }
+        (self.node.disk.capacity_bytes / layer_block_bytes) as usize
+    }
+
+    /// Attach (or replace) the node's disk tier.
+    pub fn with_disk(mut self, disk: crate::config::DiskSpec) -> Self {
+        self.node.disk = disk;
+        self
+    }
+
     /// Blocks a prompt of `len` tokens needs under request-wise accounting.
     pub fn blocks_for_tokens(&self, len: usize) -> usize {
         len.div_ceil(self.block_size)
@@ -246,6 +262,16 @@ mod tests {
         assert_eq!(Policy::Vllm.name(), "vllm");
         assert_eq!(Policy::LayerKv { slo_aware: true }.name(), "layerkv");
         assert_eq!(Policy::LayerKv { slo_aware: false }.name(), "layerkv-no-slo");
+    }
+
+    #[test]
+    fn disk_pool_sizing() {
+        let two_tier = ServingConfig::llama2_7b_tp1();
+        assert_eq!(two_tier.num_disk_layer_blocks(), 0);
+        let three_tier =
+            ServingConfig::llama2_7b_tp1().with_disk(crate::config::DiskSpec::nvme_4tb());
+        // 4 TB of spill space dwarfs the 256 GB host swap pool
+        assert!(three_tier.num_disk_layer_blocks() > three_tier.num_cpu_layer_blocks());
     }
 
     #[test]

@@ -112,6 +112,9 @@ pub struct PrefillOutcome {
     pub duration: f64,
     /// d2h bytes of the non-retained layers' KV moved under the prefill.
     pub offload_bytes: f64,
+    /// Bytes that continued past host RAM onto the disk tier (the subset
+    /// of `offload_bytes` whose layers were admitted straight to disk).
+    pub spill_bytes: f64,
     /// When this request's first token actually materialised. Wall-clock
     /// backends report it so batched admissions don't inflate earlier
     /// requests' TTFT with later requests' prefill time; `None` (the
@@ -129,6 +132,9 @@ pub struct DecodeOutcome {
     pub stream_stall_s: f64,
     /// Seconds lost to PCIe contention (TP all-reduce vs KV streams).
     pub contention_s: f64,
+    /// Seconds of the stall attributable to the disk tier's link (0 in
+    /// the two-tier configuration).
+    pub disk_stall_s: f64,
 }
 
 /// What turns scheduler decisions into executed steps.
@@ -171,7 +177,9 @@ pub trait ExecutionBackend {
 
     /// Execute one decode iteration over `lanes`. `stream_bytes` > 0 when
     /// the batch includes host-resident KV that must stream in (the
-    /// forced-progress path). A real backend stages each lane's next
+    /// forced-progress path); `disk_stream_bytes` is the portion that must
+    /// additionally traverse the disk tier's link first (always 0 in the
+    /// two-tier configuration). A real backend stages each lane's next
     /// token internally; the engine confirms per lane via `commit_token`
     /// once the block accounting accepted the growth.
     fn decode(
@@ -181,6 +189,7 @@ pub trait ExecutionBackend {
         kv: &KvManager,
         total_ctx: usize,
         stream_bytes: f64,
+        disk_stream_bytes: f64,
     ) -> anyhow::Result<DecodeOutcome>;
 
     /// The engine accepted this lane's token from the last `decode` call
@@ -200,6 +209,24 @@ pub trait ExecutionBackend {
         let _ = (rid, layer);
     }
 
+    /// Mirror of a granted `KvManager::spill_layer` (host -> disk). A real
+    /// backend writes the layer's tensor to a spill file and frees the
+    /// host copy.
+    fn spill_layer(&mut self, rid: ReqId, layer: usize) {
+        let _ = (rid, layer);
+    }
+
+    /// Mirror of a granted `KvManager::unspill_layer` (disk -> host).
+    fn unspill_layer(&mut self, rid: ReqId, layer: usize) {
+        let _ = (rid, layer);
+    }
+
+    /// Mirror of a granted `KvManager::promote_disk_layer` (disk -> GPU):
+    /// a disk read followed by the h2d copy.
+    fn promote_disk_layer(&mut self, rid: ReqId, layer: usize) {
+        let _ = (rid, layer);
+    }
+
     /// Recompute preemption: the request's KV is dropped everywhere; its
     /// generated-so-far tokens survive for the re-prefill.
     fn evict(&mut self, rid: ReqId) {
@@ -214,12 +241,14 @@ pub trait ExecutionBackend {
 
 /// The analytical executor: steps cost what the `CostModel` says, KV
 /// "moves" are pure accounting. Wraps the cost model (Eqs. 3–4, the
-/// roofline decode step, and the shared-PCIe-link bandwidth model) and a
-/// virtual clock.
+/// roofline decode step, and the shared-PCIe-link bandwidth model), the
+/// disk tier's `TransferLink`, and a virtual clock.
 #[derive(Debug)]
 pub struct SimBackend {
     cfg: ServingConfig,
     cost: CostModel,
+    /// The host<->disk link (a slow, high-latency PCIe-like link).
+    disk_link: crate::sim::TransferLink,
     clock: VirtualClock,
 }
 
@@ -228,6 +257,7 @@ impl SimBackend {
         SimBackend {
             cfg: cfg.clone(),
             cost: CostModel::new(cfg.clone()),
+            disk_link: crate::sim::TransferLink::disk(&cfg.node.disk),
             clock: VirtualClock::new(),
         }
     }
@@ -250,14 +280,22 @@ impl ExecutionBackend for SimBackend {
         // the table's residency is the retained set the scheduler solved
         let x = kv.table(req.id).map(|t| t.n_gpu_layers()).unwrap_or(l);
         // d2h of the L-x offloaded layers rides under the prefill
-        // (§3.1.1 chose x so T_offload <= T_prefill)
+        // (§3.1.1 chose x so T_offload <= T_prefill); layers the host
+        // pool could not hold continue over the disk link — the tiered
+        // x-solve already sized x so that leg hides too
+        let disk_layers = kv.table(req.id).map(|t| t.n_disk_layers()).unwrap_or(0);
         let offload_bytes = len as f64
             * (l - x) as f64
+            * self.cfg.offload_bytes_per_token_layer()
+            / self.cfg.tp as f64;
+        let spill_bytes = len as f64
+            * disk_layers as f64
             * self.cfg.offload_bytes_per_token_layer()
             / self.cfg.tp as f64;
         Ok(PrefillOutcome {
             duration: self.cost.prefill_time(len),
             offload_bytes,
+            spill_bytes,
             first_token_at: None, // virtual time: first token at batch end
         })
     }
@@ -269,6 +307,7 @@ impl ExecutionBackend for SimBackend {
         kv: &KvManager,
         total_ctx: usize,
         stream_bytes: f64,
+        disk_stream_bytes: f64,
     ) -> anyhow::Result<DecodeOutcome> {
         let _ = (requests, kv);
         let batch = lanes.len();
@@ -278,8 +317,18 @@ impl ExecutionBackend for SimBackend {
         } else {
             0.0
         };
-        let mut step = compute.max(stream_time);
-        let stream_stall_s = (stream_time - compute).max(0.0);
+        // Disk-resident layers stream serially through both links:
+        // disk -> host first, then the shared h2d path. transfer_time is
+        // 0 for 0 bytes (the two-tier configuration, keeping
+        // `total_stream == stream_time` bit-for-bit) and INFINITY for a
+        // capacity>0/bandwidth=0 misconfiguration — loud, not free.
+        let disk_time = self.disk_link.transfer_time(disk_stream_bytes);
+        let total_stream = stream_time + disk_time;
+        let mut step = compute.max(total_stream);
+        let stream_stall_s = (total_stream - compute).max(0.0);
+        // only the portion that actually inflated the step counts as a
+        // disk stall (compute can hide part or all of the disk leg)
+        let disk_stall_s = disk_time.min(stream_stall_s);
 
         // §3.1.3 PCIe contention: TP over PCIe shares the link between
         // all-reduce and KV streams. The check+chunk mechanism confines the
@@ -292,7 +341,7 @@ impl ExecutionBackend for SimBackend {
             step += penalty;
             contention_s = penalty;
         }
-        Ok(DecodeOutcome { duration: step, stream_stall_s, contention_s })
+        Ok(DecodeOutcome { duration: step, stream_stall_s, contention_s, disk_stall_s })
     }
 }
 
@@ -329,9 +378,27 @@ mod tests {
         let kv = KvManager::new(16, 16, cfg.block_size, cfg.model.n_layers);
         let mut b = SimBackend::new(&cfg);
         let reqs: Vec<Request> = Vec::new();
-        let out = b.decode(&[0, 1], &reqs, &kv, 2048, 0.0).unwrap();
+        let out = b.decode(&[0, 1], &reqs, &kv, 2048, 0.0, 0.0).unwrap();
         assert_eq!(out.duration, cost.decode_step_time_sum(2048, 2));
         assert_eq!(out.stream_stall_s, 0.0);
         assert_eq!(out.contention_s, 0.0);
+        assert_eq!(out.disk_stall_s, 0.0);
+    }
+
+    #[test]
+    fn sim_backend_disk_stream_serializes_both_links() {
+        use crate::config::DiskSpec;
+        let mut cfg = ServingConfig::llama2_7b_tp1();
+        cfg.node.disk = DiskSpec::nvme_4tb();
+        let kv = KvManager::new(16, 16, cfg.block_size, cfg.model.n_layers);
+        let reqs: Vec<Request> = Vec::new();
+        let mut b = SimBackend::new(&cfg);
+        let host_only = b.decode(&[0], &reqs, &kv, 8192, 1.0e9, 0.0).unwrap();
+        let with_disk = b.decode(&[0], &reqs, &kv, 8192, 1.0e9, 1.0e9).unwrap();
+        assert!(with_disk.duration > host_only.duration);
+        assert!(with_disk.disk_stall_s > 0.0);
+        // the disk leg is the NVMe transfer time of those bytes
+        let want = 1.0e9 / cfg.node.disk.bandwidth + cfg.node.disk.latency;
+        assert!((with_disk.disk_stall_s - want).abs() < 1e-12);
     }
 }

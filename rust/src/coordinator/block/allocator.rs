@@ -86,6 +86,32 @@ impl BlockPool {
         self.free.extend_from_slice(blocks);
         debug_assert!(self.free.len() <= self.total);
     }
+
+    /// Validate free-list integrity (property tests): every free id is in
+    /// range and unique, and free + allocated never exceeds the capacity.
+    /// The per-tier conservation suite runs this against every pool in
+    /// the hierarchy after each step.
+    pub fn check(&self) -> Result<(), String> {
+        if self.free.len() > self.total {
+            return Err(format!(
+                "free list overflow: {} free of {} total",
+                self.free.len(),
+                self.total
+            ));
+        }
+        let mut seen = vec![false; self.total];
+        for &b in &self.free {
+            let i = b as usize;
+            if i >= self.total {
+                return Err(format!("foreign block {b} on the free list"));
+            }
+            if seen[i] {
+                return Err(format!("block {b} on the free list twice"));
+            }
+            seen[i] = true;
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -160,6 +186,17 @@ mod tests {
         all.sort();
         all.dedup();
         assert_eq!(all.len(), 100);
+    }
+
+    #[test]
+    fn check_validates_free_list() {
+        let mut p = BlockPool::new(8);
+        p.check().unwrap();
+        let a = p.alloc(3).unwrap();
+        p.check().unwrap();
+        p.release(&a);
+        p.check().unwrap();
+        assert!(BlockPool::new(0).check().is_ok());
     }
 
     #[test]

@@ -1,5 +1,7 @@
-//! KV cache manager: physical pools + layer-wise block tables + the
-//! residency moves (offload/onload) the LayerKV execution engine performs.
+//! KV cache manager: the physical tier pools + layer-wise block tables +
+//! the residency moves the LayerKV execution engine performs across the
+//! GPU -> host -> disk hierarchy (offload/onload at the GPU boundary,
+//! spill/unspill at the host boundary, promote for deep restores).
 
 pub mod allocator;
 pub mod table;
@@ -11,7 +13,11 @@ use std::collections::HashMap;
 
 use crate::coordinator::request::ReqId;
 
-/// Why an allocation failed.
+/// Why an allocation failed. `CpuExhausted` covers the whole host-side
+/// hierarchy: the host pool is full AND the disk tier (if configured)
+/// cannot absorb the overflow. (No separate disk variant: the two-tier
+/// configuration's error surface is frozen by the pre-refactor reference
+/// engine, which matches this enum exhaustively.)
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum KvError {
     GpuExhausted,
@@ -19,18 +25,22 @@ pub enum KvError {
     UnknownRequest,
 }
 
-/// Manages both pools (denominated in layer-blocks) and every live
-/// request's layer-wise block table.
+/// Manages the tier pools (denominated in layer-blocks) and every live
+/// request's layer-wise block table. `disk` has capacity 0 in the
+/// two-tier configuration, which makes every disk path unreachable and
+/// preserves the pre-hierarchy semantics bit-for-bit.
 ///
 /// §Perf: the steady-state request lifecycle is allocation-free. Released
 /// tables (with their per-layer block Vecs' capacity) are recycled through
 /// `spare_tables` for the next admission, block ids move through the
-/// reusable `scratch` buffer on offload/onload, and per-token growth pops
-/// straight off the pools' free lists.
+/// reusable `scratch` buffer on offload/onload/spill, and per-token growth
+/// pops straight off the pools' free lists.
 #[derive(Debug)]
 pub struct KvManager {
     pub gpu: BlockPool,
     pub cpu: BlockPool,
+    /// The deepest tier (spill files / NVMe). Capacity 0 = disabled.
+    pub disk: BlockPool,
     pub block_size: usize,
     pub n_layers: usize,
     tables: HashMap<ReqId, LayerBlockTable>,
@@ -41,10 +51,24 @@ pub struct KvManager {
 }
 
 impl KvManager {
+    /// Two-tier manager (GPU + host), the pre-hierarchy constructor.
     pub fn new(gpu_layer_blocks: usize, cpu_layer_blocks: usize, block_size: usize, n_layers: usize) -> Self {
+        Self::new_tiered(gpu_layer_blocks, cpu_layer_blocks, 0, block_size, n_layers)
+    }
+
+    /// Full GPU -> host -> disk hierarchy. `disk_layer_blocks = 0` is the
+    /// two-tier configuration.
+    pub fn new_tiered(
+        gpu_layer_blocks: usize,
+        cpu_layer_blocks: usize,
+        disk_layer_blocks: usize,
+        block_size: usize,
+        n_layers: usize,
+    ) -> Self {
         KvManager {
             gpu: BlockPool::new(gpu_layer_blocks),
             cpu: BlockPool::new(cpu_layer_blocks),
+            disk: BlockPool::new(disk_layer_blocks),
             block_size,
             n_layers,
             tables: HashMap::new(),
@@ -82,17 +106,37 @@ impl KvManager {
         self.allocate_layerwise(req, tokens, self.n_layers)
     }
 
+    /// Non-retained layers the host pool can hold right now (whole layers
+    /// of `per_layer` blocks, filled in layer order; the rest overflow to
+    /// the disk tier). `CostModel::tiered_admission` computes the same
+    /// `min(avail / per_layer, non_retained)` split from the scheduler's
+    /// tracked availability, so admission feasibility and the allocator's
+    /// actual placement can never diverge.
+    pub fn host_fit_layers(&self, per_layer: usize, non_retained: usize) -> usize {
+        if per_layer == 0 {
+            non_retained
+        } else {
+            (self.cpu.available() / per_layer).min(non_retained)
+        }
+    }
+
     /// LayerKV admission (§3.1.1): retain `x` interleaved layers on GPU,
-    /// place the other L-x on the host. All-or-nothing.
+    /// place the other L-x on the host — spilling whatever the host pool
+    /// cannot hold straight to the disk tier. All-or-nothing: when even
+    /// host + disk cannot take the non-retained layers, nothing mutates
+    /// and the host-side error is returned (with a 0-capacity disk pool
+    /// this is exactly the pre-hierarchy behaviour).
     pub fn allocate_layerwise(&mut self, req: ReqId, tokens: usize, x: usize) -> Result<(), KvError> {
         let x = x.min(self.n_layers);
         let per_layer = self.blocks_per_layer(tokens);
+        let non_retained = self.n_layers - x;
         let need_gpu = per_layer * x;
-        let need_cpu = per_layer * (self.n_layers - x);
+        let cpu_layers = self.host_fit_layers(per_layer, non_retained);
+        let need_disk = per_layer * (non_retained - cpu_layers);
         if self.gpu.available() < need_gpu {
             return Err(KvError::GpuExhausted);
         }
-        if self.cpu.available() < need_cpu {
+        if need_disk > 0 && self.disk.available() < need_disk {
             return Err(KvError::CpuExhausted);
         }
         let mut t = self
@@ -100,6 +144,7 @@ impl KvManager {
             .pop()
             .unwrap_or_else(|| LayerBlockTable::new(self.n_layers, self.block_size));
         t.reset(self.n_layers, self.block_size, tokens);
+        let mut hosted = 0usize;
         if self.n_layers <= 128 {
             // §Perf: bitmask retained-set — O(1) membership, no Vec.
             let mask = LayerBlockTable::interleaved_retained_mask(self.n_layers, x);
@@ -107,9 +152,13 @@ impl KvManager {
                 if mask >> i & 1 == 1 {
                     entry.residency = Residency::Gpu;
                     assert!(self.gpu.alloc_into(per_layer, &mut entry.blocks), "checked above");
-                } else {
+                } else if hosted < cpu_layers {
+                    hosted += 1;
                     entry.residency = Residency::Cpu;
                     assert!(self.cpu.alloc_into(per_layer, &mut entry.blocks), "checked above");
+                } else {
+                    entry.residency = Residency::Disk;
+                    assert!(self.disk.alloc_into(per_layer, &mut entry.blocks), "checked above");
                 }
             }
         } else {
@@ -118,9 +167,13 @@ impl KvManager {
                 if retained.contains(&i) {
                     entry.residency = Residency::Gpu;
                     assert!(self.gpu.alloc_into(per_layer, &mut entry.blocks), "checked above");
-                } else {
+                } else if hosted < cpu_layers {
+                    hosted += 1;
                     entry.residency = Residency::Cpu;
                     assert!(self.cpu.alloc_into(per_layer, &mut entry.blocks), "checked above");
+                } else {
+                    entry.residency = Residency::Disk;
+                    assert!(self.disk.alloc_into(per_layer, &mut entry.blocks), "checked above");
                 }
             }
         }
@@ -144,16 +197,21 @@ impl KvManager {
         if new > old {
             let gpu_layers = t.n_gpu_layers();
             let cpu_layers = t.n_cpu_layers();
+            let disk_layers = t.n_disk_layers();
             if self.gpu.available() < gpu_layers {
                 return Err(KvError::GpuExhausted);
             }
             if self.cpu.available() < cpu_layers {
                 return Err(KvError::CpuExhausted);
             }
+            if self.disk.available() < disk_layers {
+                return Err(KvError::CpuExhausted);
+            }
             for entry in &mut t.layers {
                 let b = match entry.residency {
                     Residency::Gpu => self.gpu.alloc_one().expect("checked"),
                     Residency::Cpu => self.cpu.alloc_one().expect("checked"),
+                    Residency::Disk => self.disk.alloc_one().expect("checked"),
                 };
                 entry.blocks.push(b);
             }
@@ -170,7 +228,7 @@ impl KvManager {
     pub fn offload_layer(&mut self, req: ReqId, layer: usize) -> Result<usize, KvError> {
         let t = self.tables.get(&req).ok_or(KvError::UnknownRequest)?;
         let entry = &t.layers[layer];
-        if entry.residency == Residency::Cpu {
+        if entry.residency != Residency::Gpu {
             return Ok(0);
         }
         let n = entry.blocks.len();
@@ -188,11 +246,14 @@ impl KvManager {
         Ok(n)
     }
 
-    /// Move one layer host -> GPU (decode-phase restore).
+    /// Move one layer host -> GPU (decode-phase restore). Disk-resident
+    /// layers are not touched — they restore via `promote_disk_layer` (or
+    /// `unspill_layer` + `onload_layer`), so the caller can charge the
+    /// deeper tier's transfer cost explicitly.
     pub fn onload_layer(&mut self, req: ReqId, layer: usize) -> Result<usize, KvError> {
         let t = self.tables.get(&req).ok_or(KvError::UnknownRequest)?;
         let entry = &t.layers[layer];
-        if entry.residency == Residency::Gpu {
+        if entry.residency != Residency::Cpu {
             return Ok(0);
         }
         let n = entry.blocks.len();
@@ -210,6 +271,76 @@ impl KvManager {
         Ok(n)
     }
 
+    /// Move one layer host -> disk (spill under host pressure). Returns
+    /// the host layer-blocks freed; `Ok(0)` when the layer is not on the
+    /// host. `CpuExhausted` (the host-side hierarchy error) when the disk
+    /// tier cannot take it.
+    pub fn spill_layer(&mut self, req: ReqId, layer: usize) -> Result<usize, KvError> {
+        let t = self.tables.get(&req).ok_or(KvError::UnknownRequest)?;
+        let entry = &t.layers[layer];
+        if entry.residency != Residency::Cpu {
+            return Ok(0);
+        }
+        let n = entry.blocks.len();
+        if self.disk.available() < n {
+            return Err(KvError::CpuExhausted);
+        }
+        let t = self.tables.get_mut(&req).unwrap();
+        let entry = &mut t.layers[layer];
+        self.scratch.clear();
+        std::mem::swap(&mut self.scratch, &mut entry.blocks); // scratch := CPU ids
+        assert!(self.disk.alloc_into(n, &mut entry.blocks), "checked");
+        entry.residency = Residency::Disk;
+        t.note_spilled(n);
+        self.cpu.release(&self.scratch);
+        Ok(n)
+    }
+
+    /// Move one layer disk -> host (shallow restore).
+    pub fn unspill_layer(&mut self, req: ReqId, layer: usize) -> Result<usize, KvError> {
+        let t = self.tables.get(&req).ok_or(KvError::UnknownRequest)?;
+        let entry = &t.layers[layer];
+        if entry.residency != Residency::Disk {
+            return Ok(0);
+        }
+        let n = entry.blocks.len();
+        if self.cpu.available() < n {
+            return Err(KvError::CpuExhausted);
+        }
+        let t = self.tables.get_mut(&req).unwrap();
+        let entry = &mut t.layers[layer];
+        self.scratch.clear();
+        std::mem::swap(&mut self.scratch, &mut entry.blocks); // scratch := disk ids
+        assert!(self.cpu.alloc_into(n, &mut entry.blocks), "checked");
+        entry.residency = Residency::Cpu;
+        t.note_unspilled(n);
+        self.disk.release(&self.scratch);
+        Ok(n)
+    }
+
+    /// Move one layer disk -> GPU directly (deep restore; physically a
+    /// disk read + h2d copy — the caller charges both links' costs).
+    pub fn promote_disk_layer(&mut self, req: ReqId, layer: usize) -> Result<usize, KvError> {
+        let t = self.tables.get(&req).ok_or(KvError::UnknownRequest)?;
+        let entry = &t.layers[layer];
+        if entry.residency != Residency::Disk {
+            return Ok(0);
+        }
+        let n = entry.blocks.len();
+        if self.gpu.available() < n {
+            return Err(KvError::GpuExhausted);
+        }
+        let t = self.tables.get_mut(&req).unwrap();
+        let entry = &mut t.layers[layer];
+        self.scratch.clear();
+        std::mem::swap(&mut self.scratch, &mut entry.blocks); // scratch := disk ids
+        assert!(self.gpu.alloc_into(n, &mut entry.blocks), "checked");
+        entry.residency = Residency::Gpu;
+        t.note_promoted(n);
+        self.disk.release(&self.scratch);
+        Ok(n)
+    }
+
     /// Release everything a request holds (completion or recompute
     /// preemption — serving systems are stateless across requests, §2.2).
     /// The table (and its per-layer Vec capacity) is recycled for the next
@@ -220,6 +351,7 @@ impl KvManager {
             match entry.residency {
                 Residency::Gpu => self.gpu.release(&entry.blocks),
                 Residency::Cpu => self.cpu.release(&entry.blocks),
+                Residency::Disk => self.disk.release(&entry.blocks),
             }
             entry.blocks.clear();
         }
@@ -311,7 +443,7 @@ mod tests {
         assert_eq!(freed, 3);
         assert_eq!(m.gpu.used(), 9);
         assert_eq!(m.cpu.used(), 3);
-        assert_eq!(m.table(0).unwrap().cpu_layers(), vec![2]);
+        assert_eq!(m.table(0).unwrap().cpu_layers().collect::<Vec<_>>(), vec![2]);
         // idempotent
         assert_eq!(m.offload_layer(0, 2).unwrap(), 0);
         let back = m.onload_layer(0, 2).unwrap();
@@ -333,15 +465,85 @@ mod tests {
     }
 
     #[test]
+    fn spill_unspill_promote_roundtrip() {
+        let mut m = KvManager::new_tiered(64, 64, 64, 16, 4);
+        m.allocate_full(0, 33).unwrap();
+        m.offload_layer(0, 1).unwrap();
+        // host -> disk
+        assert_eq!(m.spill_layer(0, 1).unwrap(), 3);
+        assert_eq!((m.cpu.used(), m.disk.used()), (0, 3));
+        assert_eq!(m.table(0).unwrap().disk_layers().collect::<Vec<_>>(), vec![1]);
+        m.table(0).unwrap().check().unwrap();
+        // idempotent / wrong-tier calls are no-ops
+        assert_eq!(m.spill_layer(0, 1).unwrap(), 0);
+        assert_eq!(m.spill_layer(0, 0).unwrap(), 0); // GPU layer: not spillable
+        assert_eq!(m.onload_layer(0, 1).unwrap(), 0); // disk layer: not onloadable
+        // disk -> host -> disk -> GPU
+        assert_eq!(m.unspill_layer(0, 1).unwrap(), 3);
+        assert_eq!((m.cpu.used(), m.disk.used()), (3, 0));
+        assert_eq!(m.spill_layer(0, 1).unwrap(), 3);
+        assert_eq!(m.promote_disk_layer(0, 1).unwrap(), 3);
+        assert!(m.table(0).unwrap().fully_resident());
+        assert_eq!((m.gpu.used(), m.cpu.used(), m.disk.used()), (12, 0, 0));
+        m.table(0).unwrap().check().unwrap();
+        m.release(0).unwrap();
+        assert_eq!((m.gpu.used(), m.cpu.used(), m.disk.used()), (0, 0, 0));
+    }
+
+    #[test]
+    fn spill_fails_cleanly_without_disk_tier() {
+        let mut m = mgr(64, 64); // two-tier: disk capacity 0
+        m.allocate_layerwise(0, 33, 2).unwrap();
+        let parked = m.table(0).unwrap().cpu_layers().next().unwrap();
+        assert_eq!(m.spill_layer(0, parked), Err(KvError::CpuExhausted));
+        m.table(0).unwrap().check().unwrap();
+        assert_eq!(m.disk.used(), 0);
+    }
+
+    #[test]
+    fn admission_overflows_host_to_disk() {
+        // host holds 5 blocks; x=1 leaves 3 non-retained layers needing
+        // 9 blocks -> 1 layer on host (3 blocks), 2 layers on disk.
+        let mut m = KvManager::new_tiered(64, 5, 64, 16, 4);
+        m.allocate_layerwise(0, 33, 1).unwrap();
+        let t = m.table(0).unwrap();
+        assert_eq!((t.n_gpu_layers(), t.n_cpu_layers(), t.n_disk_layers()), (1, 1, 2));
+        assert_eq!(m.gpu.used(), 3);
+        assert_eq!(m.cpu.used(), 3);
+        assert_eq!(m.disk.used(), 6);
+        t.check().unwrap();
+        // without the disk tier the same admission is the two-tier error
+        let mut two = mgr(64, 5);
+        assert_eq!(two.allocate_layerwise(0, 33, 1), Err(KvError::CpuExhausted));
+        assert_eq!((two.gpu.used(), two.cpu.used()), (0, 0));
+    }
+
+    #[test]
+    fn append_token_grows_disk_resident_layers() {
+        // no host pool at all: every non-retained layer lands on disk
+        let mut m = KvManager::new_tiered(64, 0, 64, 16, 4);
+        m.allocate_layerwise(0, 16, 1).unwrap();
+        assert_eq!(m.table(0).unwrap().n_disk_layers(), 3);
+        m.append_token(0).unwrap(); // token 17: block boundary, all tiers grow
+        assert_eq!(m.gpu.used(), 2);
+        assert_eq!(m.cpu.used(), 0);
+        assert_eq!(m.disk.used(), 6);
+        m.table(0).unwrap().check().unwrap();
+    }
+
+    #[test]
     fn prop_no_leaks_under_random_lifecycle() {
         prop(100, |rng| {
             let gpu_total = rng.range_usize(8, 128);
             let cpu_total = rng.range_usize(8, 128);
-            let mut m = KvManager::new(gpu_total, cpu_total, 16, 4);
+            // half the cases run the two-tier configuration (disk 0)
+            let disk_total =
+                if rng.chance(0.5) { 0 } else { rng.range_usize(8, 128) };
+            let mut m = KvManager::new_tiered(gpu_total, cpu_total, disk_total, 16, 4);
             let mut live: Vec<ReqId> = Vec::new();
             let mut next_id = 0;
             for _ in 0..200 {
-                match rng.range(0, 5) {
+                match rng.range(0, 8) {
                     0 => {
                         let tokens = rng.range_usize(1, 100);
                         let x = rng.range_usize(0, 5);
@@ -368,6 +570,24 @@ mod tests {
                             let _ = m.onload_layer(r, rng.range_usize(0, 4));
                         }
                     }
+                    4 => {
+                        if !live.is_empty() {
+                            let r = live[rng.range_usize(0, live.len())];
+                            let _ = m.spill_layer(r, rng.range_usize(0, 4));
+                        }
+                    }
+                    5 => {
+                        if !live.is_empty() {
+                            let r = live[rng.range_usize(0, live.len())];
+                            let _ = m.unspill_layer(r, rng.range_usize(0, 4));
+                        }
+                    }
+                    6 => {
+                        if !live.is_empty() {
+                            let r = live[rng.range_usize(0, live.len())];
+                            let _ = m.promote_disk_layer(r, rng.range_usize(0, 4));
+                        }
+                    }
                     _ => {
                         if !live.is_empty() {
                             let i = rng.range_usize(0, live.len());
@@ -376,15 +596,31 @@ mod tests {
                         }
                     }
                 }
-                // conservation: pool accounting matches the sum of tables
+                // conservation after every step: each tier's pool
+                // accounting matches the sum over live tables, and
+                // held + free == capacity per tier
                 let gpu_held: usize =
                     live.iter().map(|&r| m.table(r).unwrap().gpu_blocks_held()).sum();
                 let cpu_held: usize =
                     live.iter().map(|&r| m.table(r).unwrap().cpu_blocks_held()).sum();
+                let disk_held: usize =
+                    live.iter().map(|&r| m.table(r).unwrap().disk_blocks_held()).sum();
                 assert_eq!(m.gpu.used(), gpu_held);
                 assert_eq!(m.cpu.used(), cpu_held);
+                assert_eq!(m.disk.used(), disk_held);
+                assert_eq!(m.gpu.available() + gpu_held, gpu_total);
+                assert_eq!(m.cpu.available() + cpu_held, cpu_total);
+                assert_eq!(m.disk.available() + disk_held, disk_total);
+                m.gpu.check().unwrap();
+                m.cpu.check().unwrap();
+                m.disk.check().unwrap();
                 for &r in &live {
                     m.table(r).unwrap().check().unwrap();
+                }
+                if disk_total == 0 {
+                    assert!(live
+                        .iter()
+                        .all(|&r| m.table(r).unwrap().n_disk_layers() == 0));
                 }
             }
             // drain
@@ -393,6 +629,7 @@ mod tests {
             }
             assert_eq!(m.gpu.used(), 0);
             assert_eq!(m.cpu.used(), 0);
+            assert_eq!(m.disk.used(), 0);
         });
     }
 }

@@ -1,23 +1,45 @@
 //! Layer-wise block tables (§3.1.2): per request, per layer, the ordered
 //! list of physical blocks holding its KV and *where each layer lives*
-//! (GPU or host). This is the paper's extension of vLLM's block table —
-//! "we add layer-wise information to each block, indicating the indices of
-//! the layers where the KV cache is retained on the GPU and the indices of
-//! the layers stored on the CPU."
+//! in the tier hierarchy (GPU, host RAM, or disk). This is the paper's
+//! extension of vLLM's block table — "we add layer-wise information to
+//! each block, indicating the indices of the layers where the KV cache is
+//! retained on the GPU and the indices of the layers stored on the CPU" —
+//! generalized to N tiers: once host RAM fills, cold layers spill one
+//! level further down, to a slow high-capacity disk tier.
 //!
 //! §Perf: the table carries cached residency aggregates (resident-layer
 //! count, blocks held per pool) so the scheduler's per-step queries —
 //! `n_gpu_layers`, `gpu_blocks_held`, `fully_resident` — are O(1) reads
 //! instead of O(L) scans that allocate. `KvManager` keeps them in sync via
 //! the `note_*` hooks; `check()` cross-validates them against the layers.
+//!
+//! A layer lives in exactly ONE tier by construction: `Residency` is a
+//! single enum per layer, so "no layer resident in two tiers" is a
+//! structural invariant; `check()` additionally re-derives every cached
+//! per-tier aggregate from the layers and rejects any drift.
 
 use super::allocator::BlockId;
 
-/// Which memory holds a layer's blocks.
+/// Which memory tier holds a layer's blocks (GPU > host > disk, fastest
+/// to slowest).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Residency {
     Gpu,
     Cpu,
+    /// The deepest tier: spill files / NVMe, reached only when the host
+    /// pool is under pressure and a disk pool is configured.
+    Disk,
+}
+
+impl Residency {
+    /// Stable tier index for logs/metrics: GPU=0, host=1, disk=2.
+    pub fn tier_index(self) -> u8 {
+        match self {
+            Residency::Gpu => 0,
+            Residency::Cpu => 1,
+            Residency::Disk => 2,
+        }
+    }
 }
 
 /// One layer's slice of a request's KV cache.
@@ -39,8 +61,10 @@ pub struct LayerBlockTable {
     /// Cached aggregates (see module docs). Private so only the mutation
     /// hooks and `recount` touch them.
     gpu_layer_count: usize,
+    disk_layer_count: usize,
     gpu_blocks: usize,
     cpu_blocks: usize,
+    disk_blocks: usize,
 }
 
 impl LayerBlockTable {
@@ -52,8 +76,10 @@ impl LayerBlockTable {
             tokens: 0,
             block_size,
             gpu_layer_count: n_layers,
+            disk_layer_count: 0,
             gpu_blocks: 0,
             cpu_blocks: 0,
+            disk_blocks: 0,
         }
     }
 
@@ -74,8 +100,10 @@ impl LayerBlockTable {
         self.block_size = block_size;
         self.tokens = tokens;
         self.gpu_layer_count = n_layers;
+        self.disk_layer_count = 0;
         self.gpu_blocks = 0;
         self.cpu_blocks = 0;
+        self.disk_blocks = 0;
     }
 
     pub fn n_layers(&self) -> usize {
@@ -87,18 +115,30 @@ impl LayerBlockTable {
         tokens.div_ceil(self.block_size)
     }
 
-    /// Layers currently resident on GPU (allocates; cold paths/tests only —
-    /// hot paths iterate `layers` or use the O(1) aggregates).
-    pub fn gpu_layers(&self) -> Vec<usize> {
-        (0..self.layers.len())
-            .filter(|&i| self.layers[i].residency == Residency::Gpu)
-            .collect()
+    /// Layer indices currently in `tier`, in layer order. Allocation-free:
+    /// hot paths fold the iterator directly (the PR 1 scratch-buffer
+    /// idiom's sibling — callers that need a `Vec` collect explicitly).
+    pub fn layers_in(&self, tier: Residency) -> impl Iterator<Item = usize> + '_ {
+        self.layers
+            .iter()
+            .enumerate()
+            .filter(move |(_, e)| e.residency == tier)
+            .map(|(i, _)| i)
     }
 
-    pub fn cpu_layers(&self) -> Vec<usize> {
-        (0..self.layers.len())
-            .filter(|&i| self.layers[i].residency == Residency::Cpu)
-            .collect()
+    /// Layers currently resident on GPU (allocation-free iterator).
+    pub fn gpu_layers(&self) -> impl Iterator<Item = usize> + '_ {
+        self.layers_in(Residency::Gpu)
+    }
+
+    /// Layers currently parked on the host (allocation-free iterator).
+    pub fn cpu_layers(&self) -> impl Iterator<Item = usize> + '_ {
+        self.layers_in(Residency::Cpu)
+    }
+
+    /// Layers currently spilled to the disk tier (allocation-free iterator).
+    pub fn disk_layers(&self) -> impl Iterator<Item = usize> + '_ {
+        self.layers_in(Residency::Disk)
     }
 
     /// O(1): layers resident on GPU.
@@ -108,7 +148,12 @@ impl LayerBlockTable {
 
     /// O(1): layers parked on the host.
     pub fn n_cpu_layers(&self) -> usize {
-        self.layers.len() - self.gpu_layer_count
+        self.layers.len() - self.gpu_layer_count - self.disk_layer_count
+    }
+
+    /// O(1): layers spilled to the disk tier.
+    pub fn n_disk_layers(&self) -> usize {
+        self.disk_layer_count
     }
 
     /// O(1): true when every layer's KV is on the GPU (the decode-batch
@@ -127,12 +172,18 @@ impl LayerBlockTable {
         self.cpu_blocks
     }
 
+    /// O(1): total disk layer-blocks held.
+    pub fn disk_blocks_held(&self) -> usize {
+        self.disk_blocks
+    }
+
     // --- aggregate maintenance hooks (KvManager only) -------------------
 
     /// One block was appended to every layer (a block-boundary grow).
     pub(crate) fn note_block_growth(&mut self) {
         self.gpu_blocks += self.gpu_layer_count;
-        self.cpu_blocks += self.layers.len() - self.gpu_layer_count;
+        self.cpu_blocks += self.layers.len() - self.gpu_layer_count - self.disk_layer_count;
+        self.disk_blocks += self.disk_layer_count;
     }
 
     /// Layer moved GPU -> host, `n` blocks.
@@ -149,12 +200,37 @@ impl LayerBlockTable {
         self.gpu_blocks += n;
     }
 
+    /// Layer moved host -> disk, `n` blocks (spill under host pressure).
+    pub(crate) fn note_spilled(&mut self, n: usize) {
+        self.disk_layer_count += 1;
+        self.cpu_blocks -= n;
+        self.disk_blocks += n;
+    }
+
+    /// Layer moved disk -> host, `n` blocks.
+    pub(crate) fn note_unspilled(&mut self, n: usize) {
+        self.disk_layer_count -= 1;
+        self.disk_blocks -= n;
+        self.cpu_blocks += n;
+    }
+
+    /// Layer moved disk -> GPU directly, `n` blocks (restore from the
+    /// deepest tier).
+    pub(crate) fn note_promoted(&mut self, n: usize) {
+        self.disk_layer_count -= 1;
+        self.gpu_layer_count += 1;
+        self.disk_blocks -= n;
+        self.gpu_blocks += n;
+    }
+
     /// Rebuild the cached aggregates from the layers (after bulk edits —
     /// admission fills, or tests that poke `layers` directly).
     pub fn recount(&mut self) {
         self.gpu_layer_count = 0;
+        self.disk_layer_count = 0;
         self.gpu_blocks = 0;
         self.cpu_blocks = 0;
+        self.disk_blocks = 0;
         for e in &self.layers {
             match e.residency {
                 Residency::Gpu => {
@@ -162,6 +238,10 @@ impl LayerBlockTable {
                     self.gpu_blocks += e.blocks.len();
                 }
                 Residency::Cpu => self.cpu_blocks += e.blocks.len(),
+                Residency::Disk => {
+                    self.disk_layer_count += 1;
+                    self.disk_blocks += e.blocks.len();
+                }
             }
         }
     }
@@ -234,8 +314,11 @@ impl LayerBlockTable {
     }
 
     /// Validate internal consistency (used by property tests): per-layer
-    /// block counts match the token count, and the cached aggregates match
-    /// a from-scratch recount.
+    /// block counts match the token count, and every cached per-tier
+    /// aggregate matches a from-scratch recount. A layer lives in exactly
+    /// one tier by construction (`Residency` is a single enum per layer),
+    /// so the recount below is also a proof that no layer is counted in
+    /// two tiers: the per-tier sums partition the layers.
     pub fn check(&self) -> Result<(), String> {
         let want = self.blocks_per_layer(self.tokens);
         for (i, l) in self.layers.iter().enumerate() {
@@ -247,7 +330,8 @@ impl LayerBlockTable {
                 ));
             }
         }
-        let (mut gpu_layers, mut gpu_blocks, mut cpu_blocks) = (0usize, 0usize, 0usize);
+        let (mut gpu_layers, mut disk_layers) = (0usize, 0usize);
+        let (mut gpu_blocks, mut cpu_blocks, mut disk_blocks) = (0usize, 0usize, 0usize);
         for e in &self.layers {
             match e.residency {
                 Residency::Gpu => {
@@ -255,6 +339,10 @@ impl LayerBlockTable {
                     gpu_blocks += e.blocks.len();
                 }
                 Residency::Cpu => cpu_blocks += e.blocks.len(),
+                Residency::Disk => {
+                    disk_layers += 1;
+                    disk_blocks += e.blocks.len();
+                }
             }
         }
         if (gpu_layers, gpu_blocks, cpu_blocks)
@@ -263,6 +351,12 @@ impl LayerBlockTable {
             return Err(format!(
                 "stale aggregates: cached ({}, {}, {}) vs actual ({gpu_layers}, {gpu_blocks}, {cpu_blocks})",
                 self.gpu_layer_count, self.gpu_blocks, self.cpu_blocks
+            ));
+        }
+        if (disk_layers, disk_blocks) != (self.disk_layer_count, self.disk_blocks) {
+            return Err(format!(
+                "stale disk-tier aggregates: cached ({}, {}) vs actual ({disk_layers}, {disk_blocks})",
+                self.disk_layer_count, self.disk_blocks
             ));
         }
         Ok(())
@@ -351,14 +445,69 @@ mod tests {
         t.layers[1].residency = Residency::Cpu;
         t.layers[3].residency = Residency::Cpu;
         t.recount(); // hand-edited layers -> rebuild aggregates
-        assert_eq!(t.gpu_layers(), vec![0, 2]);
-        assert_eq!(t.cpu_layers(), vec![1, 3]);
+        assert_eq!(t.gpu_layers().collect::<Vec<_>>(), vec![0, 2]);
+        assert_eq!(t.cpu_layers().collect::<Vec<_>>(), vec![1, 3]);
+        assert_eq!(t.disk_layers().count(), 0);
         assert_eq!(t.n_gpu_layers(), 2);
         assert_eq!(t.n_cpu_layers(), 2);
+        assert_eq!(t.n_disk_layers(), 0);
         assert!(!t.fully_resident());
         assert_eq!(t.gpu_blocks_held(), 6);
         assert_eq!(t.cpu_blocks_held(), 6);
+        assert_eq!(t.disk_blocks_held(), 0);
         t.check().unwrap();
+    }
+
+    #[test]
+    fn three_tier_bookkeeping() {
+        let mut t = LayerBlockTable::new(4, 16);
+        t.tokens = 33;
+        for l in &mut t.layers {
+            l.blocks = vec![0, 1, 2];
+        }
+        t.layers[1].residency = Residency::Cpu;
+        t.layers[3].residency = Residency::Disk;
+        t.recount();
+        assert_eq!(t.gpu_layers().collect::<Vec<_>>(), vec![0, 2]);
+        assert_eq!(t.cpu_layers().collect::<Vec<_>>(), vec![1]);
+        assert_eq!(t.disk_layers().collect::<Vec<_>>(), vec![3]);
+        assert_eq!(
+            (t.n_gpu_layers(), t.n_cpu_layers(), t.n_disk_layers()),
+            (2, 1, 1)
+        );
+        assert_eq!(t.gpu_blocks_held(), 6);
+        assert_eq!(t.cpu_blocks_held(), 3);
+        assert_eq!(t.disk_blocks_held(), 3);
+        t.check().unwrap();
+        // note hooks keep the tier aggregates in lock-step with moves
+        t.note_spilled(3); // layer 1: host -> disk
+        t.layers[1].residency = Residency::Disk;
+        assert_eq!((t.n_cpu_layers(), t.n_disk_layers()), (0, 2));
+        assert_eq!((t.cpu_blocks_held(), t.disk_blocks_held()), (0, 6));
+        t.check().unwrap();
+        t.note_promoted(3); // layer 3: disk -> GPU
+        t.layers[3].residency = Residency::Gpu;
+        assert_eq!((t.n_gpu_layers(), t.n_disk_layers()), (3, 1));
+        assert_eq!(t.gpu_blocks_held(), 9);
+        t.check().unwrap();
+        t.note_unspilled(3); // layer 1: disk -> host
+        t.layers[1].residency = Residency::Cpu;
+        assert_eq!((t.n_cpu_layers(), t.n_disk_layers()), (1, 0));
+        t.check().unwrap();
+    }
+
+    #[test]
+    fn check_catches_stale_disk_aggregates() {
+        let mut t = LayerBlockTable::new(2, 16);
+        t.tokens = 16;
+        t.layers[0].blocks = vec![0];
+        t.layers[1].blocks = vec![1];
+        t.layers[1].residency = Residency::Disk;
+        t.recount();
+        t.check().unwrap();
+        // hand-move without a recount: disk aggregates go stale
+        t.layers[1].residency = Residency::Cpu;
+        assert!(t.check().is_err());
     }
 
     #[test]

@@ -44,11 +44,13 @@ use crate::coordinator::block::{KvError, KvManager, Residency};
 use crate::coordinator::predict::LengthPredictor;
 use crate::coordinator::request::{Phase, ReqId, Request};
 use crate::coordinator::scheduler::{make_scheduler, Action, SchedContext, Scheduler};
-use crate::metrics::{Report, RequestRecord};
+use crate::metrics::{Report, RequestRecord, TierTransition};
 use crate::sim::CostModel;
 use crate::workload::Trace;
 
-/// Counters the experiments report alongside latency.
+/// Counters the experiments report alongside latency. Every `disk_*` /
+/// `spill*` field stays exactly 0 in the two-tier configuration (disk
+/// pool capacity 0), by construction of the gating in `Engine`.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct EngineStats {
     pub steps: u64,
@@ -65,6 +67,19 @@ pub struct EngineStats {
     pub stream_stall_s: f64,
     /// Seconds lost to PCIe contention (TP over PCIe without chunking).
     pub contention_s: f64,
+    /// Layers spilled host -> disk under host pressure.
+    pub spilled_layers: u64,
+    /// Layers restored disk -> GPU (deep restores).
+    pub disk_promoted_layers: u64,
+    /// Bytes written to the disk tier (runtime spills + layers admitted
+    /// straight to disk when the host pool was full).
+    pub spill_bytes: f64,
+    /// Bytes read back from the disk tier by restores.
+    pub disk_restore_bytes: f64,
+    /// Bytes the forced-progress decode path streamed from disk.
+    pub disk_stream_bytes: f64,
+    /// Seconds decode steps were inflated by the disk link specifically.
+    pub disk_stall_s: f64,
 }
 
 /// Incrementally-maintained totals over the running set: the membership
@@ -110,6 +125,12 @@ pub struct Engine<B: ExecutionBackend = SimBackend> {
     incremental: bool,
     /// Eq. 5 restore watermark in blocks (fixed pool ⇒ computed once).
     restore_threshold: usize,
+    /// Host-pressure spill watermark in host blocks (the host-tier analog
+    /// of `restore_threshold`; only consulted when a disk tier exists).
+    host_spill_threshold: usize,
+    /// Tier-transition log (None = disabled, the default — zero overhead
+    /// on the hot path).
+    transitions: Option<Vec<TierTransition>>,
     /// Reusable per-step buffers (decode batch, finished list).
     active_buf: Vec<ReqId>,
     finished_buf: Vec<ReqId>,
@@ -117,11 +138,13 @@ pub struct Engine<B: ExecutionBackend = SimBackend> {
 
 impl Engine<SimBackend> {
     /// The simulation engine: pools sized by the config's memory
-    /// profiling pass, steps costed by the analytical models.
+    /// profiling pass (including the disk tier, capacity 0 on two-tier
+    /// nodes), steps costed by the analytical models.
     pub fn new(cfg: ServingConfig, predictor: LengthPredictor) -> Self {
-        let kv = KvManager::new(
+        let kv = KvManager::new_tiered(
             cfg.num_gpu_layer_blocks(),
             cfg.num_cpu_layer_blocks(),
+            cfg.num_disk_layer_blocks(),
             cfg.block_size,
             cfg.model.n_layers,
         );
@@ -144,6 +167,8 @@ impl<B: ExecutionBackend> Engine<B> {
         let scheduler = make_scheduler(&cfg);
         let restore_threshold =
             (cfg.avail_threshold_frac * kv.gpu.total() as f64) as usize;
+        let host_spill_threshold =
+            (cfg.avail_threshold_frac * kv.cpu.total() as f64) as usize;
         Engine {
             cfg,
             cost,
@@ -159,6 +184,8 @@ impl<B: ExecutionBackend> Engine<B> {
             agg: RunningAggregates::default(),
             incremental: true,
             restore_threshold,
+            host_spill_threshold,
+            transitions: None,
             active_buf: Vec::new(),
             finished_buf: Vec::new(),
         }
@@ -166,6 +193,37 @@ impl<B: ExecutionBackend> Engine<B> {
 
     pub fn stats(&self) -> &EngineStats {
         &self.stats
+    }
+
+    /// Record every layer residency move (GPU <-> host <-> disk) into a
+    /// tier-transition log. Off by default: the hot path pays nothing.
+    pub fn enable_transition_log(&mut self) {
+        self.transitions = Some(Vec::new());
+    }
+
+    /// Drain the transition log recorded since `enable_transition_log`.
+    pub fn take_transitions(&mut self) -> Vec<TierTransition> {
+        self.transitions.take().unwrap_or_default()
+    }
+
+    fn log_transition(
+        &mut self,
+        rid: ReqId,
+        layer: usize,
+        from: Residency,
+        to: Residency,
+        blocks: usize,
+    ) {
+        if let Some(log) = self.transitions.as_mut() {
+            log.push(TierTransition {
+                t: self.backend.clock().now(),
+                req: rid,
+                layer,
+                from: from.tier_index(),
+                to: to.tier_index(),
+                blocks,
+            });
+        }
     }
 
     /// Switch to recomputing every cached aggregate from scratch each step
@@ -279,12 +337,22 @@ impl<B: ExecutionBackend> Engine<B> {
     fn never_fits(&self, r: ReqId) -> bool {
         let len = self.requests[r].prefill_len();
         let per_layer = len.div_ceil(self.cfg.block_size);
+        let l = self.cfg.model.n_layers;
         match self.cfg.policy {
-            Policy::Vllm => per_layer * self.cfg.model.n_layers > self.kv.gpu.total(),
+            Policy::Vllm => per_layer * l > self.kv.gpu.total(),
+            Policy::LayerKv { .. } if self.kv.disk.total() > 0 => {
+                // tiered admission on an empty machine: the scheduler's
+                // shared feasibility solve, fed the whole host pool
+                let x0 = self.cost.min_resident_layers(len);
+                let (x, host_layers) =
+                    self.cost.tiered_admission(len, x0, per_layer, self.kv.cpu.total());
+                per_layer * x > self.kv.gpu.total()
+                    || per_layer * (l - x - host_layers) > self.kv.disk.total()
+            }
             Policy::LayerKv { .. } => {
                 let x = self.cost.min_resident_layers(len);
                 per_layer * x > self.kv.gpu.total()
-                    || per_layer * (self.cfg.model.n_layers - x) > self.kv.cpu.total()
+                    || per_layer * (l - x) > self.kv.cpu.total()
             }
         }
     }
@@ -328,14 +396,27 @@ impl<B: ExecutionBackend> Engine<B> {
 
     /// Offload with aggregate upkeep and backend mirroring: a formerly
     /// fully-resident request drops out of the decode batch, and a real
-    /// backend moves the layer's tensor to the host pool.
+    /// backend moves the layer's tensor to the host pool. When the host
+    /// pool itself is full and a disk tier exists, cold host layers spill
+    /// one level further down and the offload retries.
     fn kv_offload(&mut self, rid: ReqId, layer: usize) -> Result<usize, KvError> {
         let was_resident =
             self.kv.table(rid).map(|t| t.fully_resident()).unwrap_or(false);
-        let out = self.kv.offload_layer(rid, layer);
+        let mut out = self.kv.offload_layer(rid, layer);
+        if out == Err(KvError::CpuExhausted) && self.kv.disk.total() > 0 {
+            let need = self
+                .kv
+                .table(rid)
+                .map(|t| t.layers[layer].blocks.len())
+                .unwrap_or(0);
+            if need > 0 && self.relieve_host_pressure(need) {
+                out = self.kv.offload_layer(rid, layer);
+            }
+        }
         if let Ok(n) = out {
             if n > 0 {
                 self.backend.offload_layer(rid, layer);
+                self.log_transition(rid, layer, Residency::Gpu, Residency::Cpu, n);
                 if self.incremental && was_resident {
                     self.agg.resident_count -= 1;
                     self.agg.resident_tokens -= self.requests[rid].context_len();
@@ -352,6 +433,7 @@ impl<B: ExecutionBackend> Engine<B> {
         if let Ok(n) = out {
             if n > 0 {
                 self.backend.onload_layer(rid, layer);
+                self.log_transition(rid, layer, Residency::Cpu, Residency::Gpu, n);
                 if self.incremental
                     && self.kv.table(rid).map(|t| t.fully_resident()).unwrap_or(false)
                 {
@@ -363,11 +445,85 @@ impl<B: ExecutionBackend> Engine<B> {
         out
     }
 
+    /// Bytes one layer of `rid`'s KV occupies on the wire (token-exact,
+    /// matching the admission-path accounting — NOT block-rounded).
+    fn layer_wire_bytes(&self, rid: ReqId) -> f64 {
+        let tokens = self.kv.table(rid).map(|t| t.tokens).unwrap_or(0);
+        tokens as f64 * self.cfg.offload_bytes_per_token_layer() / self.cfg.tp as f64
+    }
+
+    /// Spill with backend mirroring and stats: host -> disk. Decode-batch
+    /// membership is unaffected — a host layer was already non-resident.
+    fn kv_spill(&mut self, rid: ReqId, layer: usize) -> Result<usize, KvError> {
+        let out = self.kv.spill_layer(rid, layer);
+        if let Ok(n) = out {
+            if n > 0 {
+                self.backend.spill_layer(rid, layer);
+                self.log_transition(rid, layer, Residency::Cpu, Residency::Disk, n);
+                self.stats.spilled_layers += 1;
+                self.stats.spill_bytes += self.layer_wire_bytes(rid);
+            }
+        }
+        out
+    }
+
+    /// Deep restore with aggregate upkeep: disk -> GPU directly (a disk
+    /// read plus the h2d copy; `disk_restore_bytes` tracks the deep leg).
+    fn kv_promote_disk(&mut self, rid: ReqId, layer: usize) -> Result<usize, KvError> {
+        let out = self.kv.promote_disk_layer(rid, layer);
+        if let Ok(n) = out {
+            if n > 0 {
+                self.backend.promote_disk_layer(rid, layer);
+                self.log_transition(rid, layer, Residency::Disk, Residency::Gpu, n);
+                self.stats.disk_promoted_layers += 1;
+                self.stats.disk_restore_bytes += self.layer_wire_bytes(rid);
+                if self.incremental
+                    && self.kv.table(rid).map(|t| t.fully_resident()).unwrap_or(false)
+                {
+                    self.agg.resident_count += 1;
+                    self.agg.resident_tokens += self.requests[rid].context_len();
+                }
+            }
+        }
+        out
+    }
+
+    /// Host pool under pressure: spill parked (host-resident) layers of
+    /// the most recently prefilled requests — the coldest tables, farthest
+    /// from completion — down to the disk tier until `need` host blocks
+    /// have been freed. Returns false without mutating anything in the
+    /// two-tier configuration (no disk pool).
+    fn relieve_host_pressure(&mut self, need: usize) -> bool {
+        if self.kv.disk.total() == 0 {
+            return false;
+        }
+        let n_layers = self.cfg.model.n_layers;
+        let mut freed = 0usize;
+        for vi in (0..self.running.len()).rev() {
+            let v = self.running[vi];
+            for layer in 0..n_layers {
+                if freed >= need {
+                    return true;
+                }
+                let Some(t) = self.kv.table(v) else { break };
+                if t.layers[layer].residency != Residency::Cpu {
+                    continue;
+                }
+                match self.kv_spill(v, layer) {
+                    Ok(n) if n > 0 => freed += n,
+                    _ => return freed >= need, // disk full: stop spilling
+                }
+            }
+        }
+        freed >= need
+    }
+
     // --- prefill -------------------------------------------------------
 
     fn step_prefill(&mut self, reqs: &[(ReqId, usize)]) -> anyhow::Result<()> {
         let mut duration = 0.0;
         let mut offload_bytes = 0.0;
+        let mut spill_bytes = 0.0;
         for &(rid, x) in reqs {
             let len = self.requests[rid].prefill_len();
             let alloc = match self.cfg.policy {
@@ -392,6 +548,7 @@ impl<B: ExecutionBackend> Engine<B> {
             let out = self.backend.prefill(&self.requests[rid], &self.kv)?;
             duration += out.duration;
             offload_bytes += out.offload_bytes;
+            spill_bytes += out.spill_bytes;
             // wall-clock backends report the actual first-token instant so
             // a batched admission doesn't charge later requests' prefill
             // time to earlier requests' TTFT
@@ -416,6 +573,7 @@ impl<B: ExecutionBackend> Engine<B> {
             self.agg_admit(rid);
         }
         self.stats.offload_bytes += offload_bytes;
+        self.stats.spill_bytes += spill_bytes;
         self.backend.clock_mut().advance(duration);
         self.stats.prefill_steps += 1;
 
@@ -469,6 +627,7 @@ impl<B: ExecutionBackend> Engine<B> {
         let mut active = std::mem::take(&mut self.active_buf);
         active.clear();
         let mut stream_bytes = 0.0;
+        let mut disk_stream_bytes = 0.0;
         let cap = self.backend.max_decode_lanes();
         let total_ctx = if self.agg.resident_count > 0 {
             active.extend(self.running.iter().copied().filter(|&r| {
@@ -484,7 +643,15 @@ impl<B: ExecutionBackend> Engine<B> {
         } else {
             let oldest = *self.running.first().expect("running nonempty");
             if let Some(t) = self.kv.table(oldest) {
-                stream_bytes = t.n_cpu_layers() as f64
+                // layers parked two tiers down stream through the disk
+                // link first AND then cross the PCIe h2d path like host
+                // layers, so they appear in both byte counts (both 0 in
+                // the two-tier configuration's disk half)
+                disk_stream_bytes = t.n_disk_layers() as f64
+                    * t.tokens as f64
+                    * self.cfg.offload_bytes_per_token_layer()
+                    / self.cfg.tp as f64;
+                stream_bytes = (t.n_cpu_layers() + t.n_disk_layers()) as f64
                     * t.tokens as f64
                     * self.cfg.offload_bytes_per_token_layer()
                     / self.cfg.tp as f64;
@@ -493,10 +660,18 @@ impl<B: ExecutionBackend> Engine<B> {
             self.requests[oldest].context_len()
         };
 
-        let out =
-            self.backend.decode(&active, &self.requests, &self.kv, total_ctx, stream_bytes)?;
+        let out = self.backend.decode(
+            &active,
+            &self.requests,
+            &self.kv,
+            total_ctx,
+            stream_bytes,
+            disk_stream_bytes,
+        )?;
         self.stats.stream_stall_s += out.stream_stall_s;
         self.stats.onload_stream_bytes += stream_bytes;
+        self.stats.disk_stream_bytes += disk_stream_bytes;
+        self.stats.disk_stall_s += out.disk_stall_s;
         self.stats.contention_s += out.contention_s;
         self.backend.clock_mut().advance(out.duration);
         self.stats.decode_steps += 1;
@@ -516,7 +691,25 @@ impl<B: ExecutionBackend> Engine<B> {
                         continue;
                     }
                 }
-                Err(KvError::CpuExhausted) => continue,
+                Err(KvError::CpuExhausted) => {
+                    // CpuExhausted covers the whole host-side hierarchy:
+                    // only spill-and-retry when the HOST pool is the
+                    // bottleneck — if the disk pool is what ran out,
+                    // spilling host layers into it would consume the very
+                    // blocks the append needs (no-op without a disk tier;
+                    // the token is simply retried next step, as before)
+                    let need =
+                        self.kv.table(rid).map(|t| t.n_cpu_layers()).unwrap_or(0);
+                    if need == 0
+                        || self.kv.cpu.available() >= need
+                        || !self.relieve_host_pressure(need)
+                    {
+                        continue;
+                    }
+                    if self.kv.append_token(rid).is_err() {
+                        continue;
+                    }
+                }
                 Err(KvError::UnknownRequest) => continue,
             }
             if self.requests[rid].phase != Phase::Decoding {
@@ -565,6 +758,17 @@ impl<B: ExecutionBackend> Engine<B> {
                         / self.cfg.tp as f64;
                 }
             }
+        }
+
+        // Tiered hierarchy: keep host headroom above the watermark by
+        // spilling cold layer tables down to disk — the host-tier analog
+        // of the Eq. 5 GPU watermark, so the next offload/admission wave
+        // doesn't stall on a saturated host pool. Unreachable without a
+        // disk tier.
+        if self.kv.disk.total() > 0 && self.kv.cpu.available() < self.host_spill_threshold
+        {
+            let need = self.host_spill_threshold - self.kv.cpu.available();
+            self.relieve_host_pressure(need);
         }
         Ok(())
     }
@@ -650,14 +854,16 @@ impl<B: ExecutionBackend> Engine<B> {
         self.stats.preemptions += 1;
     }
 
-    /// Move CPU-resident layers back to GPU while free blocks last
-    /// (oldest running requests first — they'll finish soonest; `running`
-    /// is already in that order). Restores stop at the Eq. 5 threshold so
-    /// restore and proactive offload don't thrash against each other
-    /// (hysteresis).
+    /// Move parked layers back to GPU while free blocks last (oldest
+    /// running requests first — they'll finish soonest; `running` is
+    /// already in that order). Host layers onload over PCIe; disk layers
+    /// take the deep restore (disk read + h2d), whose extra cost the
+    /// SLO-aware scheduler already priced into the admission-time x-solve.
+    /// Restores stop at the Eq. 5 threshold so restore and proactive
+    /// offload don't thrash against each other (hysteresis).
     fn restore_layers(&mut self) {
-        if self.kv.cpu.used() == 0 {
-            return; // §Perf: nothing parked — skip entirely
+        if self.kv.cpu.used() == 0 && self.kv.disk.used() == 0 {
+            return; // §Perf: nothing parked anywhere — skip entirely
         }
         let threshold = self.restore_threshold;
         let n_layers = self.cfg.model.n_layers;
@@ -665,15 +871,24 @@ impl<B: ExecutionBackend> Engine<B> {
             let rid = self.running[i];
             for layer in 0..n_layers {
                 let Some(t) = self.kv.table(rid) else { break };
-                if t.layers[layer].residency != Residency::Cpu {
+                let res = t.layers[layer].residency;
+                if res == Residency::Gpu {
                     continue;
                 }
                 let per_layer = t.blocks_per_layer(t.tokens).max(1);
                 if self.kv.gpu.available() < threshold + per_layer {
                     return; // stay above the proactive-offload watermark
                 }
-                match self.kv_onload(rid, layer) {
-                    Ok(n) if n > 0 => self.stats.onloaded_layers += 1,
+                let moved = match res {
+                    Residency::Cpu => self.kv_onload(rid, layer),
+                    _ => self.kv_promote_disk(rid, layer),
+                };
+                match moved {
+                    Ok(n) if n > 0 => {
+                        if res == Residency::Cpu {
+                            self.stats.onloaded_layers += 1;
+                        }
+                    }
                     _ => return, // pool full: stop restoring entirely
                 }
             }
@@ -701,17 +916,26 @@ impl<B: ExecutionBackend> Engine<B> {
     }
 }
 
+/// The predictor `run_trace` (and the reference engine's wrapper) builds:
+/// bucket ceiling from the trace's longest output, fixed seed. Public so
+/// tests that need a hand-assembled `Engine` (e.g. the golden trace
+/// replay, which reads the tier-transition log) reproduce `run_trace`'s
+/// behaviour bit-for-bit.
+pub fn standard_predictor(trace: &Trace, predictor_accuracy: f64) -> LengthPredictor {
+    LengthPredictor::new(
+        trace.requests.iter().map(|r| r.output_len).max().unwrap_or(1024).max(2),
+        predictor_accuracy,
+        42,
+    )
+}
+
 fn run_trace_with(
     cfg: ServingConfig,
     trace: &Trace,
     predictor_accuracy: f64,
     oracle: bool,
 ) -> (Report, EngineStats) {
-    let predictor = LengthPredictor::new(
-        trace.requests.iter().map(|r| r.output_len).max().unwrap_or(1024).max(2),
-        predictor_accuracy,
-        42,
-    );
+    let predictor = standard_predictor(trace, predictor_accuracy);
     let mut engine = Engine::new(cfg, predictor);
     if oracle {
         engine.use_recompute_oracle();
@@ -833,6 +1057,74 @@ mod tests {
         for r in &rep.records {
             assert!(r.finish <= rep.makespan + 1e-9);
         }
+    }
+
+    #[test]
+    fn two_tier_run_never_touches_disk_stats() {
+        let cfg = ServingConfig::llama2_7b_tp1()
+            .with_policy(Policy::LayerKv { slo_aware: true });
+        let (_, stats) = run_trace(cfg, &small_trace(2048, 20, 2.0), 0.8);
+        assert_eq!(stats.spilled_layers, 0);
+        assert_eq!(stats.disk_promoted_layers, 0);
+        assert_eq!(stats.spill_bytes, 0.0);
+        assert_eq!(stats.disk_restore_bytes, 0.0);
+        assert_eq!(stats.disk_stream_bytes, 0.0);
+        assert_eq!(stats.disk_stall_s, 0.0);
+    }
+
+    #[test]
+    fn disk_tier_absorbs_host_saturation() {
+        use crate::config::DiskSpec;
+        // shrink the host swap pool below one long prompt's non-retained
+        // demand: without a disk tier such requests can never fit and are
+        // rejected; with one they spill and complete
+        let mut starved = ServingConfig::llama2_7b_tp1()
+            .with_policy(Policy::LayerKv { slo_aware: true });
+        starved.cpu_swap_bytes = 1 << 28; // 256 MB host swap
+        let trace = small_trace(8192, 6, 1.0);
+
+        let (rep_two, stats_two) = run_trace(starved.clone(), &trace, 0.8);
+        assert!(
+            !stats_two.dropped.is_empty(),
+            "starved two-tier config must reject long prompts"
+        );
+
+        let tiered = starved.with_disk(DiskSpec::nvme_4tb());
+        let (rep_three, stats_three) = run_trace(tiered, &trace, 0.8);
+        assert_eq!(rep_three.records.len(), 6, "disk tier must serve everything");
+        assert!(stats_three.dropped.is_empty());
+        assert!(
+            stats_three.spill_bytes > 0.0,
+            "host saturation must engage the disk tier"
+        );
+        assert!(rep_three.records.len() > rep_two.records.len());
+    }
+
+    #[test]
+    fn enabled_transition_log_matches_counters() {
+        let cfg = ServingConfig::llama2_7b_tp1()
+            .with_policy(Policy::LayerKv { slo_aware: true });
+        let trace = small_trace(4096, 12, 2.0);
+        let predictor = standard_predictor(&trace, 0.8);
+        let mut e = Engine::new(cfg, predictor);
+        e.enable_transition_log();
+        let _ = e.run(&trace);
+        let stats = e.stats().clone();
+        let log = e.take_transitions();
+        use crate::metrics::{TIER_DISK, TIER_GPU, TIER_HOST};
+        let count = |from, to| log.iter().filter(|t| t.from == from && t.to == to).count() as u64;
+        assert_eq!(
+            count(TIER_GPU, TIER_HOST),
+            stats.proactive_offload_layers + stats.oom_forced_offload_layers,
+            "every offload must be logged"
+        );
+        assert_eq!(count(TIER_HOST, TIER_GPU), stats.onloaded_layers);
+        assert_eq!(count(TIER_HOST, TIER_DISK), stats.spilled_layers);
+        assert_eq!(count(TIER_DISK, TIER_GPU), stats.disk_promoted_layers);
+        // two-tier run: the log must contain no disk tier at all
+        assert_eq!(count(TIER_HOST, TIER_DISK), 0);
+        // time-ordered
+        assert!(log.windows(2).all(|w| w[0].t <= w[1].t));
     }
 
     #[test]

@@ -20,7 +20,7 @@ pub use backend::{
     WallClock,
 };
 pub use block::{KvError, KvManager};
-pub use engine::{run_trace, Engine, EngineStats};
+pub use engine::{run_trace, standard_predictor, Engine, EngineStats};
 pub use predict::LengthPredictor;
 pub use request::{Phase, ReqId, Request};
 pub use scheduler::{Action, Scheduler};

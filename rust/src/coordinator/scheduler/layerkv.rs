@@ -123,7 +123,13 @@ impl Scheduler for LayerKvScheduler {
         }
     }
 
-    /// Algorithm 1 + layer-wise block feasibility.
+    /// Algorithm 1 + layer-wise block feasibility, generalized to the
+    /// GPU -> host -> disk hierarchy: non-retained layers fill the host
+    /// pool first; overflow continues to the disk tier, and the retained
+    /// count x is re-solved against the slower disk link (its transfer —
+    /// and the symmetric restore — must still hide under the prefill
+    /// window, §3.1.1). With no disk pool this is exactly the two-tier
+    /// admission loop.
     fn decide(&mut self, ctx: &SchedContext) -> Action {
         let slack = if self.slo_aware { self.min_slack(ctx) } else { f64::INFINITY };
 
@@ -131,6 +137,9 @@ impl Scheduler for LayerKvScheduler {
         let mut sum_prefill = 0.0;
         let mut free_gpu = ctx.kv.gpu.available();
         let mut free_cpu = ctx.kv.cpu.available();
+        let mut free_disk = ctx.kv.disk.available();
+        let disk_enabled = ctx.kv.disk.total() > 0;
+        let l = ctx.cfg.model.n_layers;
         let mut batched_tokens = 0usize;
         let mut seqs = ctx.running.len();
 
@@ -138,14 +147,28 @@ impl Scheduler for LayerKvScheduler {
             for &rid in ctx.waiting {
                 let r = &ctx.requests[rid];
                 let len = r.prefill_len();
-                let x = self.retained_layers(ctx, len);
+                let mut x = self.retained_layers(ctx, len);
                 let per_layer = len.div_ceil(ctx.cfg.block_size);
-                let need_gpu = per_layer * x;
-                let need_cpu = per_layer * (ctx.cfg.model.n_layers - x);
+                let (need_gpu, need_cpu, need_disk) = if disk_enabled {
+                    // deeper tier in play: the shared feasibility solve
+                    // accounts the disk link's (restore) cost in x and
+                    // splits the non-retained layers host-first
+                    let (xt, host_layers) =
+                        ctx.cost.tiered_admission(len, x, per_layer, free_cpu);
+                    x = xt;
+                    (
+                        per_layer * x,
+                        per_layer * host_layers,
+                        per_layer * (l - x - host_layers),
+                    )
+                } else {
+                    (per_layer * x, per_layer * (l - x), 0)
+                };
                 if seqs + 1 > ctx.cfg.max_num_seqs
                     || batched_tokens + len > ctx.cfg.max_batched_tokens
                     || free_gpu < need_gpu
                     || free_cpu < need_cpu
+                    || free_disk < need_disk
                 {
                     break;
                 }
@@ -158,6 +181,7 @@ impl Scheduler for LayerKvScheduler {
                 sum_prefill += t_prefill;
                 free_gpu -= need_gpu;
                 free_cpu -= need_cpu;
+                free_disk -= need_disk;
                 batched_tokens += len;
                 seqs += 1;
                 admitted.push((rid, x)); // x already solved: engine reuses it
@@ -397,6 +421,54 @@ mod tests {
             }
             a => panic!("expected Prefill, got {a:?}"),
         }
+    }
+
+    #[test]
+    fn tiered_admission_overflows_host_to_disk() {
+        use crate::config::DiskSpec;
+        // host pool far too small for a 16k prompt's non-retained layers;
+        // a disk tier absorbs the overflow, with the retained count
+        // re-solved against the slower disk link (never smaller than the
+        // host-only solve)
+        let mut f = Fixture::new(1_000_000);
+        f.cfg.node.disk = DiskSpec::nvme_4tb();
+        f.cost = CostModel::new(f.cfg.clone());
+        let host_blocks = 2048; // 16k prompt needs 1024 blocks/layer
+        f.kv = KvManager::new_tiered(
+            1_000_000,
+            host_blocks,
+            1_000_000,
+            f.cfg.block_size,
+            f.cfg.model.n_layers,
+        );
+        let rid = f.add_waiting(16 * 1024);
+        let mut s = LayerKvScheduler::new(true);
+        let x_flat = s.retained_layers(&f.ctx(0.0), 16 * 1024);
+        match s.decide(&f.ctx(0.0)) {
+            Action::Prefill(reqs) => {
+                assert_eq!(reqs.len(), 1);
+                let (id, x) = reqs[0];
+                assert_eq!(id, rid);
+                let host_cap = host_blocks / 1024; // 2 layers fit the host
+                let x_tiered =
+                    f.cost.min_resident_layers_tiered(16 * 1024, host_cap);
+                assert_eq!(x, x_flat.max(x_tiered));
+                assert!(x >= x_flat);
+            }
+            a => panic!("expected Prefill, got {a:?}"),
+        }
+        // without the disk tier the same admission must wait
+        let mut two = Fixture::new(1_000_000);
+        two.kv = KvManager::new_tiered(
+            1_000_000,
+            host_blocks,
+            0,
+            two.cfg.block_size,
+            two.cfg.model.n_layers,
+        );
+        two.add_waiting(16 * 1024);
+        let mut s2 = LayerKvScheduler::new(true);
+        assert_eq!(s2.decide(&two.ctx(0.0)), Action::Wait);
     }
 
     #[test]

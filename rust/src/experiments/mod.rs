@@ -413,6 +413,83 @@ pub fn print_fig8(rows: &[Fig8Row]) {
 }
 
 // ---------------------------------------------------------------------
+// Tier sweep — the KV hierarchy experiment: a host-saturating long-prompt
+// workload swept over disk-tier capacities. Disk capacity 0 is the
+// two-tier baseline, which must reject (or queue) what the deeper
+// hierarchy serves; growing the disk tier converts rejections into
+// completions at bounded TTFT.
+// ---------------------------------------------------------------------
+
+pub struct TierSweepRow {
+    /// Disk tier capacity in GB (0 = host-only baseline).
+    pub disk_gb: u64,
+    pub completed: usize,
+    pub rejected: usize,
+    pub ttft_mean: f64,
+    pub queue_mean: f64,
+    /// MB written to the disk tier (admission overflow + runtime spills).
+    pub spill_mb: f64,
+    /// MB read back by deep restores.
+    pub restore_mb: f64,
+}
+
+/// The sweep at an explicit request count (tests use a small one).
+pub fn tier_sweep_with(n: usize) -> Vec<TierSweepRow> {
+    use crate::config::DiskSpec;
+    const DISK_GB: &[u64] = &[0, 8, 64, 512];
+    par_map(DISK_GB, |&gb| {
+        let mut cfg = setup("7b").with_policy(Policy::LayerKv { slo_aware: true });
+        // starve the host swap pool so long prompts overflow it: 1 GB of
+        // host KV vs ~0.5 GB of host demand per 4k prompt
+        cfg.cpu_swap_bytes = 1 << 30;
+        if gb > 0 {
+            cfg.node.disk = DiskSpec::nvme(gb * (1u64 << 30));
+        }
+        let trace = FixedWorkload {
+            prompt_len: 4096,
+            output_len: 64,
+            n_requests: n,
+            arrivals: Arrivals::Poisson { rate: 1.0 },
+        }
+        .generate(&mut Rng::new(23));
+        let (rep, stats) = run_trace(cfg, &trace, PREDICTOR_ACC);
+        TierSweepRow {
+            disk_gb: gb,
+            completed: rep.records.len(),
+            rejected: stats.dropped.len(),
+            ttft_mean: rep.ttft().mean(),
+            queue_mean: rep.queueing().mean(),
+            spill_mb: stats.spill_bytes / 1e6,
+            restore_mb: stats.disk_restore_bytes / 1e6,
+        }
+    })
+}
+
+pub fn tier_sweep() -> Vec<TierSweepRow> {
+    tier_sweep_with(n_requests(60))
+}
+
+pub fn print_tier_sweep(rows: &[TierSweepRow]) {
+    let mut t = Table::new(
+        "Tier sweep — GPU->host->disk hierarchy under host-saturating 4k prompts \
+         (1 GB host swap, 1 req/s)",
+        &["disk GB", "completed", "rejected", "TTFT(s)", "queue(s)", "spill MB", "restore MB"],
+    );
+    for r in rows {
+        t.row(&[
+            r.disk_gb.to_string(),
+            r.completed.to_string(),
+            r.rejected.to_string(),
+            format!("{:.3}", r.ttft_mean),
+            format!("{:.3}", r.queue_mean),
+            format!("{:.1}", r.spill_mb),
+            format!("{:.1}", r.restore_mb),
+        ]);
+    }
+    t.print();
+}
+
+// ---------------------------------------------------------------------
 // Table 1 is qualitative — rendered directly.
 // ---------------------------------------------------------------------
 

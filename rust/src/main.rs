@@ -1,7 +1,7 @@
 //! LayerKV command-line entry point.
 //!
 //! ```text
-//! layerkv experiment <fig1|fig4|fig5|fig6|fig7|fig8|table1|all> [--quick]
+//! layerkv experiment <fig1|fig4|fig5|fig6|fig7|fig8|tiers|table1|all> [--quick]
 //! layerkv sim --model <7b|34b|70b> --policy <vllm|layerkv|layerkv-no-slo>
 //!             --ctx <tokens> --rate <req/s> --requests <n> [--sharegpt]
 //! layerkv serve [--addr 127.0.0.1:7181] [--artifacts DIR] [--budget BYTES]
@@ -60,7 +60,7 @@ fn print_help() {
         "layerkv — layer-wise KV cache management for LLM serving (paper reproduction)\n\
          \n\
          USAGE:\n\
-         \x20 layerkv experiment <fig1|fig4|fig5|fig6|fig7|fig8|table1|all> [--quick]\n\
+         \x20 layerkv experiment <fig1|fig4|fig5|fig6|fig7|fig8|tiers|table1|all> [--quick]\n\
          \x20 layerkv sim --model 7b --policy layerkv --ctx 4096 --rate 1.0 --requests 100 [--sharegpt]\n\
          \x20 layerkv serve [--addr 127.0.0.1:7181] [--artifacts DIR] [--budget BYTES]\n\
          \x20               [--policy vllm|layerkv|layerkv-no-slo] [--max-batch N] [--ref-model]\n\
@@ -91,12 +91,13 @@ fn cmd_experiment(args: &[String]) -> anyhow::Result<()> {
             "fig7" => exp::print_fig7(&exp::fig6_7()),
             "table1" => exp::print_table1(),
             "fig8" => exp::print_fig8(&exp::fig8()),
+            "tiers" => exp::print_tier_sweep(&exp::tier_sweep()),
             other => anyhow::bail!("unknown experiment '{other}'"),
         }
         Ok(())
     };
     if which == "all" {
-        for id in ["table1", "fig1", "fig4", "fig5", "fig6", "fig7", "fig8"] {
+        for id in ["table1", "fig1", "fig4", "fig5", "fig6", "fig7", "fig8", "tiers"] {
             run(id)?;
         }
         Ok(())
@@ -190,6 +191,7 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
         device_kv_budget: budget,
         policy,
         max_batch,
+        ..Default::default()
     };
     let artifacts = (!flag(args, "--ref-model")).then_some(dir.as_path());
     layerkv::server::serve(&addr, artifacts, cfg)

@@ -1,9 +1,53 @@
 //! Serving metrics: per-request latency records, aggregated into the
 //! series the paper reports (mean/P99 TTFT, TPOT, queuing breakdown,
-//! throughput, SLO violation rate).
+//! throughput, SLO violation rate) — plus the tier-transition log the
+//! KV-hierarchy tests replay (every layer move GPU <-> host <-> disk).
 
 use crate::config::SloTargets;
 use crate::util::Series;
+
+/// Tier indices for [`TierTransition`] (kept as plain u8s so metrics stays
+/// dependency-free; `Residency::tier_index` produces them).
+pub const TIER_GPU: u8 = 0;
+pub const TIER_HOST: u8 = 1;
+pub const TIER_DISK: u8 = 2;
+
+/// One layer's residency move in the GPU -> host -> disk hierarchy, as
+/// recorded by the engine when its transition log is enabled. The golden
+/// trace-replay test asserts this log is reproducible and consistent with
+/// the engine's offload/onload/spill counters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TierTransition {
+    /// Engine time of the move (seconds).
+    pub t: f64,
+    /// Engine-internal request id.
+    pub req: usize,
+    /// Layer index within the request's table.
+    pub layer: usize,
+    /// Source tier (TIER_GPU / TIER_HOST / TIER_DISK).
+    pub from: u8,
+    /// Destination tier.
+    pub to: u8,
+    /// Layer-blocks moved.
+    pub blocks: usize,
+}
+
+impl TierTransition {
+    /// Compact one-line rendering (stable across runs for a fixed trace;
+    /// time is rendered to bits so the log doubles as a bit-identity
+    /// witness).
+    pub fn render(&self) -> String {
+        format!(
+            "t={:016x} req={} layer={} {}->{} blocks={}",
+            self.t.to_bits(),
+            self.req,
+            self.layer,
+            self.from,
+            self.to,
+            self.blocks
+        )
+    }
+}
 
 /// Per-request latency record (all timestamps in seconds of engine time).
 #[derive(Debug, Clone, PartialEq)]
@@ -148,6 +192,21 @@ mod tests {
         assert!(!rec(0, 0.0, 1.0, 2.0, 2.0 + 0.1 * 9.0, 10).violates(&slo));
         assert!(rec(0, 0.0, 3.0, 4.0, 5.0, 10).violates(&slo)); // ttft 4 > 3
         assert!(rec(0, 0.0, 0.0, 1.0, 1.0 + 0.3 * 9.0, 10).violates(&slo)); // tpot
+    }
+
+    #[test]
+    fn tier_transition_render_is_stable() {
+        let tr = TierTransition {
+            t: 1.5,
+            req: 3,
+            layer: 7,
+            from: TIER_HOST,
+            to: TIER_DISK,
+            blocks: 4,
+        };
+        assert_eq!(tr.render(), tr.clone().render());
+        assert!(tr.render().contains("1->2"));
+        assert!(tr.render().contains("req=3"));
     }
 
     #[test]

@@ -1,13 +1,16 @@
 //! Layer-wise KV store for the real PJRT serving path (S7 in DESIGN.md).
 //!
-//! Holds every live request's per-layer KV tensors and tracks which layers
-//! sit in the bounded "device" pool vs the host pool. On the CPU-only
-//! testbed both pools are host RAM, but the copies are real and the byte
-//! accounting mirrors what a CUDA/TPU build would push over the
-//! interconnect — the policy layer (what to offload, when to restore) is
-//! identical to the simulator's.
+//! Holds every live request's per-layer KV tensors and tracks which tier
+//! each layer sits in: the bounded "device" pool, the host pool, or —
+//! when a spill directory is configured — real spill files on disk. On
+//! the CPU-only testbed the first two pools are host RAM, but the copies
+//! (and the disk-tier file I/O) are real and the byte accounting mirrors
+//! what a CUDA build would push over the interconnect and NVMe — the
+//! policy layer (what to offload/spill, when to restore) is identical to
+//! the simulator's.
 
 use std::collections::HashMap;
+use std::path::PathBuf;
 
 use crate::coordinator::request::ReqId;
 
@@ -19,20 +22,36 @@ pub struct KvStoreStats {
     pub onloads: u64,
     pub offload_bytes: u64,
     pub onload_bytes: u64,
+    /// Host -> disk spill file writes.
+    pub spills: u64,
+    /// Disk -> host restores (file read + delete).
+    pub unspills: u64,
+    pub spill_bytes: u64,
+    pub unspill_bytes: u64,
+    /// Bytes read from spill files by decode-path streaming (the layer
+    /// stayed on disk).
+    pub disk_read_bytes: u64,
 }
 
 #[derive(Debug)]
 struct StoredLayer {
     kv: LayerKv,
     on_device: bool,
+    /// When Some, the layer's data lives in this spill file and
+    /// `kv.data` is empty (the kh/t/d metadata stays authoritative, so
+    /// `kv.bytes()` still reports the true tensor size).
+    spill_path: Option<PathBuf>,
 }
 
-/// Byte-budgeted two-pool KV store.
+/// Byte-budgeted tiered KV store (device / host / spill files).
 #[derive(Debug)]
 pub struct KvStore {
     device_budget: usize,
     device_used: usize,
     host_used: usize,
+    disk_used: usize,
+    /// Directory for spill files; None disables the disk tier.
+    spill_dir: Option<PathBuf>,
     entries: HashMap<ReqId, Vec<StoredLayer>>,
     pub stats: KvStoreStats,
 }
@@ -43,9 +62,20 @@ impl KvStore {
             device_budget: device_budget_bytes,
             device_used: 0,
             host_used: 0,
+            disk_used: 0,
+            spill_dir: None,
             entries: HashMap::new(),
             stats: KvStoreStats::default(),
         }
+    }
+
+    /// Enable the disk tier: spilled layers are written as files under
+    /// `dir`, created here once so the spill hot path is a single write.
+    pub fn with_spill_dir(device_budget_bytes: usize, dir: PathBuf) -> Self {
+        let mut s = Self::new(device_budget_bytes);
+        std::fs::create_dir_all(&dir).ok(); // spills fail gracefully if this did
+        s.spill_dir = Some(dir);
+        s
     }
 
     pub fn device_used(&self) -> usize {
@@ -56,6 +86,10 @@ impl KvStore {
         self.host_used
     }
 
+    pub fn disk_used(&self) -> usize {
+        self.disk_used
+    }
+
     pub fn contains(&self, req: ReqId) -> bool {
         self.entries.contains_key(&req)
     }
@@ -63,6 +97,8 @@ impl KvStore {
     /// Store a prefill's KV. Layers in `retained` go to the device pool
     /// (if the budget allows), the rest to the host pool — the offload
     /// traffic a GPU build would overlap with the prefill itself.
+    /// (Layers the coordinator admitted straight to the disk tier are
+    /// spilled right after via `spill_layer`.)
     pub fn insert(&mut self, req: ReqId, kv: Vec<LayerKv>, retained: &[usize]) {
         let mut layers = Vec::with_capacity(kv.len());
         for (i, layer) in kv.into_iter().enumerate() {
@@ -76,18 +112,36 @@ impl KvStore {
                 self.stats.offloads += 1;
                 self.stats.offload_bytes += bytes as u64;
             }
-            layers.push(StoredLayer { kv: layer, on_device });
+            layers.push(StoredLayer { kv: layer, on_device, spill_path: None });
         }
         let prev = self.entries.insert(req, layers);
         debug_assert!(prev.is_none(), "request {req} inserted twice");
     }
 
-    /// Layers of `req` currently on the host.
+    /// Layers of `req` currently on the host (not device, not spilled).
     pub fn host_layers(&self, req: ReqId) -> Vec<usize> {
         self.entries
             .get(&req)
             .map(|ls| {
-                ls.iter().enumerate().filter(|(_, l)| !l.on_device).map(|(i, _)| i).collect()
+                ls.iter()
+                    .enumerate()
+                    .filter(|(_, l)| !l.on_device && l.spill_path.is_none())
+                    .map(|(i, _)| i)
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+
+    /// Layers of `req` currently in spill files.
+    pub fn disk_layers(&self, req: ReqId) -> Vec<usize> {
+        self.entries
+            .get(&req)
+            .map(|ls| {
+                ls.iter()
+                    .enumerate()
+                    .filter(|(_, l)| l.spill_path.is_some())
+                    .map(|(i, _)| i)
+                    .collect()
             })
             .unwrap_or_default()
     }
@@ -113,10 +167,12 @@ impl KvStore {
     }
 
     /// Move one layer host -> device if the budget allows. Returns bytes.
+    /// Spilled layers do not onload directly — restore them with
+    /// `unspill_layer` first (or both at once via `promote_layer`).
     pub fn onload_layer(&mut self, req: ReqId, layer: usize) -> usize {
         let Some(ls) = self.entries.get_mut(&req) else { return 0 };
         let l = &mut ls[layer];
-        if l.on_device {
+        if l.on_device || l.spill_path.is_some() {
             return 0;
         }
         let bytes = l.kv.bytes();
@@ -131,6 +187,59 @@ impl KvStore {
         bytes
     }
 
+    /// Spill one host layer to a real file under the spill directory and
+    /// free its host copy. Returns bytes written (0 when the layer is on
+    /// the device, already spilled, the tier is disabled, or I/O failed).
+    pub fn spill_layer(&mut self, req: ReqId, layer: usize) -> usize {
+        let Some(dir) = self.spill_dir.as_ref() else { return 0 };
+        let path = dir.join(format!("kv_r{req}_l{layer}.bin"));
+        let Some(ls) = self.entries.get_mut(&req) else { return 0 };
+        let l = &mut ls[layer];
+        if l.on_device || l.spill_path.is_some() {
+            return 0;
+        }
+        if write_f32_file(&path, &l.kv.data).is_err() {
+            return 0;
+        }
+        let bytes = l.kv.bytes();
+        l.kv.data = Vec::new(); // host copy freed; metadata stays
+        l.spill_path = Some(path);
+        self.host_used -= bytes;
+        self.disk_used += bytes;
+        self.stats.spills += 1;
+        self.stats.spill_bytes += bytes as u64;
+        bytes
+    }
+
+    /// Restore one spilled layer back to the host pool (read + delete the
+    /// spill file). Returns bytes read.
+    pub fn unspill_layer(&mut self, req: ReqId, layer: usize) -> usize {
+        let Some(ls) = self.entries.get_mut(&req) else { return 0 };
+        let l = &mut ls[layer];
+        let Some(path) = l.spill_path.clone() else { return 0 };
+        let Some(data) = read_f32_file(&path, l.kv.numel()) else { return 0 };
+        std::fs::remove_file(&path).ok();
+        l.kv.data = data;
+        l.spill_path = None;
+        let bytes = l.kv.bytes();
+        self.disk_used -= bytes;
+        self.host_used += bytes;
+        self.stats.unspills += 1;
+        self.stats.unspill_bytes += bytes as u64;
+        bytes
+    }
+
+    /// Deep restore: disk -> host -> device in one call (mirrors the
+    /// coordinator's `promote_disk_layer`). Returns bytes moved to the
+    /// device (0 if any leg failed — the layer may legitimately end up
+    /// host-resident when the device budget is full).
+    pub fn promote_layer(&mut self, req: ReqId, layer: usize) -> usize {
+        if self.unspill_layer(req, layer) == 0 {
+            return 0;
+        }
+        self.onload_layer(req, layer)
+    }
+
     /// Append one committed token's KV to every layer of `req`.
     /// `rows[layer]` is the `[2, KH, D]` row (c-major, then head, then
     /// dim) the decode step produced for the tail position. This is the
@@ -140,30 +249,76 @@ impl KvStore {
     pub fn append_row(&mut self, req: ReqId, rows: &[Vec<f32>]) {
         let Some(ls) = self.entries.get_mut(&req) else { return };
         debug_assert_eq!(ls.len(), rows.len(), "row per layer");
+        let mut disk_read = 0u64;
+        let mut disk_grown = 0usize;
+        let mut disk_unspilled = 0usize;
+        let mut host_grown = 0usize;
         for (layer, row) in ls.iter_mut().zip(rows.iter()) {
             let kv = &mut layer.kv;
             let (kh, d) = (kv.kh, kv.d);
             debug_assert_eq!(row.len(), 2 * kh * d);
+            // spilled layers grow via read-modify-write of their spill
+            // file — slow by design, this is the disk tier's
+            // forced-progress path. A failed read means the file is gone
+            // or corrupt: the history is unrecoverable, so fall through
+            // with zeroed history rather than desynchronizing this
+            // layer's token count from its siblings (the token was
+            // already committed by the coordinator; fill_scratch would
+            // otherwise serve a truncated cache forever).
+            let data: Vec<f32> = match &layer.spill_path {
+                Some(path) => match read_f32_file(path, 2 * kh * kv.t * d) {
+                    Some(v) => {
+                        disk_read += (v.len() * 4) as u64;
+                        v
+                    }
+                    None => vec![0.0; 2 * kh * kv.t * d],
+                },
+                None => std::mem::take(&mut kv.data),
+            };
             // grow [2, KH, T, D] -> [2, KH, T+1, D]
             let mut out = Vec::with_capacity(2 * kh * (kv.t + 1) * d);
             for c in 0..2 {
                 for h in 0..kh {
                     let old = (c * kh + h) * kv.t * d;
-                    out.extend_from_slice(&kv.data[old..old + kv.t * d]);
+                    out.extend_from_slice(&data[old..old + kv.t * d]);
                     let src = (c * kh + h) * d;
                     out.extend_from_slice(&row[src..src + d]);
                 }
             }
-            let grown = (out.len() - kv.data.len()) as u64; // 2*KH*D floats
-            kv.data = out;
-            kv.t += 1;
-            let grown_bytes = grown * 4;
-            if layer.on_device {
-                self.device_used += grown_bytes as usize;
+            let grown = (out.len() - data.len()) as u64; // 2*KH*D floats
+            let grown_bytes = (grown * 4) as usize;
+            if let Some(path) = layer.spill_path.clone() {
+                if write_f32_file(&path, &out).is_ok() {
+                    kv.t += 1;
+                    disk_grown += grown_bytes;
+                } else {
+                    // the rewrite failed: keep the grown tensor as a host
+                    // copy instead of desynchronizing this layer's token
+                    // count from its siblings (the token was already
+                    // committed by the coordinator). The old spill file is
+                    // stale — remove it.
+                    std::fs::remove_file(&path).ok();
+                    let old_bytes = kv.bytes();
+                    kv.data = out;
+                    kv.t += 1;
+                    layer.spill_path = None;
+                    disk_unspilled += old_bytes;
+                    host_grown += old_bytes + grown_bytes;
+                }
             } else {
-                self.host_used += grown_bytes as usize;
+                kv.data = out;
+                kv.t += 1;
+                if layer.on_device {
+                    self.device_used += grown_bytes;
+                } else {
+                    self.host_used += grown_bytes;
+                }
             }
         }
+        self.disk_used += disk_grown;
+        self.disk_used -= disk_unspilled;
+        self.host_used += host_grown;
+        self.stats.disk_read_bytes += disk_read;
     }
 
     /// Fill lane `lane` of the dense scratch from the store (any residency;
@@ -178,14 +333,31 @@ impl KvStore {
     ) -> usize {
         let Some(ls) = self.entries.get(&req) else { return 0 };
         let mut streamed = 0usize;
+        let mut disk_read = 0u64;
         for (layer, s) in ls.iter().zip(scratch.iter_mut()) {
             let kv = &layer.kv;
             let (kh, d, t) = (kv.kh, kv.d, kv.t);
+            // spilled layers stream straight from their file (the layer
+            // stays on disk; this is the forced-progress read path). A
+            // failed read serves zeroed history — never the stale bytes
+            // of whatever occupied this scratch lane last step (the same
+            // policy append_row applies to the same fault).
+            let file_data: Option<Vec<f32>> = match &layer.spill_path {
+                Some(path) => match read_f32_file(path, 2 * kh * t * d) {
+                    Some(v) => {
+                        disk_read += (v.len() * 4) as u64;
+                        Some(v)
+                    }
+                    None => Some(vec![0.0; 2 * kh * t * d]),
+                },
+                None => None,
+            };
+            let data: &[f32] = file_data.as_deref().unwrap_or(&kv.data);
             for c in 0..2 {
                 for h in 0..kh {
                     let src = (c * kh + h) * t * d;
                     let dst = (((lane * 2 + c) * kh + h) * smax) * d;
-                    s[dst..dst + t * d].copy_from_slice(&kv.data[src..src + t * d]);
+                    s[dst..dst + t * d].copy_from_slice(&data[src..src + t * d]);
                 }
             }
             if !layer.on_device {
@@ -195,6 +367,7 @@ impl KvStore {
         if streamed > 0 {
             self.stats.onload_bytes += streamed as u64;
         }
+        self.stats.disk_read_bytes += disk_read;
         streamed
     }
 
@@ -205,7 +378,10 @@ impl KvStore {
     pub fn release(&mut self, req: ReqId) {
         if let Some(ls) = self.entries.remove(&req) {
             for l in ls {
-                if l.on_device {
+                if let Some(path) = &l.spill_path {
+                    std::fs::remove_file(path).ok();
+                    self.disk_used -= l.kv.bytes();
+                } else if l.on_device {
                     self.device_used -= l.kv.bytes();
                 } else {
                     self.host_used -= l.kv.bytes();
@@ -213,6 +389,29 @@ impl KvStore {
             }
         }
     }
+}
+
+/// Write f32s as LE bytes — the one producer of the spill-file format
+/// `read_f32_file` consumes.
+fn write_f32_file(path: &std::path::Path, data: &[f32]) -> std::io::Result<()> {
+    let mut buf = Vec::with_capacity(data.len() * 4);
+    for v in data {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    std::fs::write(path, &buf)
+}
+
+/// Read a spill file back as f32 LE; None on I/O error or size mismatch.
+fn read_f32_file(path: &std::path::Path, numel: usize) -> Option<Vec<f32>> {
+    let bytes = std::fs::read(path).ok()?;
+    if bytes.len() != numel * 4 {
+        return None;
+    }
+    let mut out = Vec::with_capacity(numel);
+    for chunk in bytes.chunks_exact(4) {
+        out.push(f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]));
+    }
+    Some(out)
 }
 
 #[cfg(test)]
@@ -308,5 +507,92 @@ mod tests {
         assert_eq!(s.device_used(), 0);
         assert_eq!(s.host_used(), 0);
         assert!(!s.contains(0));
+    }
+
+    fn spill_dir(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("layerkv-kvstore-{tag}-{}", std::process::id()))
+    }
+
+    #[test]
+    fn spill_writes_a_real_file_and_frees_host() {
+        let dir = spill_dir("roundtrip");
+        let layer_bytes = kv(8).bytes();
+        let mut s = KvStore::with_spill_dir(2 * layer_bytes, dir.clone());
+        s.insert(0, four_layers(8), &[1, 3]); // 0, 2 on host
+        let host0 = s.host_used();
+        assert_eq!(s.spill_layer(0, 0), layer_bytes);
+        assert_eq!(s.host_used(), host0 - layer_bytes);
+        assert_eq!(s.disk_used(), layer_bytes);
+        assert_eq!(s.disk_layers(0), vec![0]);
+        assert_eq!(s.host_layers(0), vec![2]);
+        assert!(dir.join("kv_r0_l0.bin").exists(), "spill must hit the filesystem");
+        // device-resident and already-spilled layers refuse to spill
+        assert_eq!(s.spill_layer(0, 1), 0);
+        assert_eq!(s.spill_layer(0, 0), 0);
+        // spilled layers do not onload directly
+        assert_eq!(s.onload_layer(0, 0), 0);
+        // restore reads the bytes back and deletes the file
+        assert_eq!(s.unspill_layer(0, 0), layer_bytes);
+        assert!(!dir.join("kv_r0_l0.bin").exists());
+        assert_eq!(s.disk_used(), 0);
+        assert_eq!(s.host_used(), host0);
+        assert_eq!(s.stats.spills, 1);
+        assert_eq!(s.stats.unspills, 1);
+        s.release(0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn spill_disabled_without_dir() {
+        let mut s = KvStore::new(usize::MAX);
+        s.insert(0, four_layers(8), &[]);
+        assert_eq!(s.spill_layer(0, 0), 0);
+        assert_eq!(s.disk_used(), 0);
+    }
+
+    #[test]
+    fn spilled_layer_streams_and_appends_through_the_file() {
+        let dir = spill_dir("append");
+        let (b, smax, kh, d) = (1usize, 16usize, 2usize, 4usize);
+        let mut s = KvStore::with_spill_dir(0, dir.clone()); // nothing fits the device
+        s.insert(7, four_layers(3), &[]);
+        assert!(s.spill_layer(7, 2) > 0);
+        // decode still reads the spilled layer's true bytes
+        let mut scratch: Vec<Vec<f32>> =
+            (0..4).map(|_| vec![0.0; b * 2 * kh * smax * d]).collect();
+        s.fill_scratch(7, &mut scratch, 0, b, smax);
+        assert_eq!(scratch[2][0], 1.0, "spilled layer must stream from its file");
+        assert!(s.stats.disk_read_bytes > 0);
+        // append grows the file-backed layer too
+        let rows: Vec<Vec<f32>> = (0..4).map(|_| vec![5.0f32; 2 * kh * d]).collect();
+        let disk0 = s.disk_used();
+        s.append_row(7, &rows);
+        assert_eq!(s.tokens(7), 4);
+        assert_eq!(s.disk_used(), disk0 + 2 * kh * d * 4);
+        let mut scratch2: Vec<Vec<f32>> =
+            (0..4).map(|_| vec![0.0; b * 2 * kh * smax * d]).collect();
+        s.fill_scratch(7, &mut scratch2, 0, b, smax);
+        assert_eq!(scratch2[2][3 * d], 5.0, "appended row readable from the file");
+        // promote: disk -> host (device budget 0 keeps it off-device)
+        assert_eq!(s.promote_layer(7, 2), 0);
+        assert!(s.disk_layers(7).is_empty(), "unspill leg must have run");
+        s.release(7);
+        assert_eq!((s.device_used(), s.host_used(), s.disk_used()), (0, 0, 0));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn release_deletes_spill_files() {
+        let dir = spill_dir("release");
+        let mut s = KvStore::with_spill_dir(0, dir.clone());
+        s.insert(3, four_layers(8), &[]);
+        assert!(s.spill_layer(3, 0) > 0);
+        assert!(s.spill_layer(3, 1) > 0);
+        let f0 = dir.join("kv_r3_l0.bin");
+        assert!(f0.exists());
+        s.release(3);
+        assert!(!f0.exists(), "release must clean spill files");
+        assert_eq!(s.disk_used(), 0);
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

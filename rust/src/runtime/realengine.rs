@@ -21,7 +21,7 @@ use std::rc::Rc;
 
 use anyhow::{Context, Result};
 
-use crate::config::{ModelSpec, NodeSpec, Policy, ServingConfig};
+use crate::config::{DiskSpec, ModelSpec, NodeSpec, Policy, ServingConfig};
 use crate::coordinator::backend::{
     Clock, DecodeOutcome, ExecutionBackend, PrefillOutcome, WallClock,
 };
@@ -81,6 +81,14 @@ pub struct RealEngineConfig {
     pub policy: Policy,
     /// Max decode lanes per step (must be <= largest decode bucket).
     pub max_batch: usize,
+    /// Host pool capacity in layer-blocks (defaults to effectively
+    /// unbounded, the pre-hierarchy behaviour).
+    pub host_layer_blocks: usize,
+    /// Disk tier capacity in layer-blocks (0 = two-tier, the default).
+    pub disk_layer_blocks: usize,
+    /// Where spilled layers' tensor files land; defaults to a per-process
+    /// directory under the system temp dir (an "artifacts" scratch area).
+    pub spill_dir: Option<std::path::PathBuf>,
 }
 
 impl Default for RealEngineConfig {
@@ -89,6 +97,9 @@ impl Default for RealEngineConfig {
             device_kv_budget: 2 << 20, // 2 MiB: a few requests' full KV
             policy: Policy::LayerKv { slo_aware: true },
             max_batch: 8,
+            host_layer_blocks: HOST_LAYER_BLOCKS,
+            disk_layer_blocks: 0,
+            spill_dir: None,
         }
     }
 }
@@ -154,6 +165,9 @@ pub struct PjrtBackend<M: TokenModel = TinyModel> {
     max_batch: usize,
     gens: Vec<Gen>,
     pending: HashMap<ReqId, PendingTok>,
+    /// Reusable buffer for the retained-layer indices of one admission
+    /// (the PR 1 scratch idiom — `gpu_layers()` is an iterator now).
+    retained_buf: Vec<usize>,
 }
 
 impl<M: TokenModel> PjrtBackend<M> {
@@ -165,7 +179,16 @@ impl<M: TokenModel> PjrtBackend<M> {
             max_batch,
             gens: Vec::new(),
             pending: HashMap::new(),
+            retained_buf: Vec::new(),
         }
+    }
+
+    /// As `new`, but with the disk tier enabled: layers the coordinator
+    /// spills are written as real files under `spill_dir`.
+    pub fn with_spill_dir(model: Rc<M>, max_batch: usize, spill_dir: std::path::PathBuf) -> Self {
+        let mut b = Self::new(model, max_batch);
+        b.store = KvStore::with_spill_dir(usize::MAX, spill_dir);
+        b
     }
 
     /// Register each job's prompt tokens, indexed by engine `ReqId`
@@ -234,21 +257,38 @@ impl<M: TokenModel> ExecutionBackend for PjrtBackend<M> {
         let out = self.model.clone().prefill(&toks)?;
         // the KvManager table's residency is the retained set the
         // scheduler solved; non-retained layers go straight to the host
-        // pool (the offload traffic a GPU build overlaps with the prefill)
-        let retained = kv.table(rid).map(|t| t.gpu_layers()).unwrap_or_default();
+        // pool (the offload traffic a GPU build overlaps with the
+        // prefill), and layers the coordinator admitted directly to the
+        // disk tier are spilled to their files right away
+        self.retained_buf.clear();
+        if let Some(t) = kv.table(rid) {
+            self.retained_buf.extend(t.gpu_layers());
+        }
         let before = self.store.stats.offload_bytes;
         if self.store.contains(rid) {
             self.store.release(rid); // defensive: stale entry
         }
-        self.store.insert(rid, out.kv, &retained);
-        let spilled = (self.store.stats.offload_bytes - before) as f64;
+        self.store.insert(rid, out.kv, &self.retained_buf);
+        let offloaded = (self.store.stats.offload_bytes - before) as f64;
+        let mut spill_bytes = 0.0;
+        if let Some(t) = kv.table(rid) {
+            if t.n_disk_layers() > 0 {
+                self.retained_buf.clear();
+                self.retained_buf.extend(t.disk_layers());
+                for i in 0..self.retained_buf.len() {
+                    let layer = self.retained_buf[i];
+                    spill_bytes += self.store.spill_layer(rid, layer) as f64;
+                }
+            }
+        }
         if fresh {
             self.gens[rid].out.push(argmax(&out.logits));
         }
         let done = self.clock.now();
         Ok(PrefillOutcome {
             duration: done - t0,
-            offload_bytes: spilled,
+            offload_bytes: offloaded,
+            spill_bytes,
             // stamp TTFT at THIS request's prefill end, not the batch's
             first_token_at: fresh.then_some(done),
         })
@@ -261,6 +301,7 @@ impl<M: TokenModel> ExecutionBackend for PjrtBackend<M> {
         _kv: &KvManager,
         _total_ctx: usize,
         _stream_bytes: f64,
+        _disk_stream_bytes: f64,
     ) -> Result<DecodeOutcome> {
         let t0 = self.clock.now();
         self.pending.clear();
@@ -305,6 +346,7 @@ impl<M: TokenModel> ExecutionBackend for PjrtBackend<M> {
             duration: self.clock.now() - t0,
             stream_stall_s: 0.0,
             contention_s: 0.0,
+            disk_stall_s: 0.0,
         })
     }
 
@@ -321,6 +363,18 @@ impl<M: TokenModel> ExecutionBackend for PjrtBackend<M> {
 
     fn onload_layer(&mut self, rid: ReqId, layer: usize) {
         self.store.onload_layer(rid, layer);
+    }
+
+    fn spill_layer(&mut self, rid: ReqId, layer: usize) {
+        self.store.spill_layer(rid, layer);
+    }
+
+    fn unspill_layer(&mut self, rid: ReqId, layer: usize) {
+        self.store.unspill_layer(rid, layer);
+    }
+
+    fn promote_disk_layer(&mut self, rid: ReqId, layer: usize) {
+        self.store.promote_layer(rid, layer);
     }
 
     fn evict(&mut self, rid: ReqId) {
@@ -391,14 +445,44 @@ impl<M: TokenModel> RealEngine<M> {
                 .collect(),
         };
 
-        let scfg = tiny_serving_config(&spec, self.cfg.policy, self.cfg.max_batch);
-        let kv = KvManager::new(
+        let mut scfg = tiny_serving_config(&spec, self.cfg.policy, self.cfg.max_batch);
+        if self.cfg.disk_layer_blocks > 0 {
+            // describe the spill-file tier to the policy layer so the
+            // scheduler's tiered x-solve prices the deeper link; like the
+            // rest of the CPU-testbed numbers these are magnitudes, not
+            // measurements — wall time is what gets reported
+            let layer_block_bytes =
+                scfg.block_size * 2 * spec.n_kv_heads * spec.head_dim * 4;
+            scfg.node.disk = DiskSpec {
+                bandwidth: 1.0e9,
+                latency: 100e-6,
+                capacity_bytes: (self.cfg.disk_layer_blocks * layer_block_bytes) as u64,
+            };
+        }
+        let kv = KvManager::new_tiered(
             device_layer_blocks(&spec, scfg.block_size, self.cfg.device_kv_budget),
-            HOST_LAYER_BLOCKS,
+            self.cfg.host_layer_blocks,
+            self.cfg.disk_layer_blocks,
             scfg.block_size,
             spec.n_layers,
         );
-        let mut backend = PjrtBackend::new(self.model.clone(), self.cfg.max_batch);
+        let mut backend = if self.cfg.disk_layer_blocks > 0 {
+            let dir = self.cfg.spill_dir.clone().unwrap_or_else(|| {
+                // unique per serve() call: spill files are keyed only by
+                // (request, layer), so engines sharing a directory would
+                // corrupt each other's tensors
+                use std::sync::atomic::{AtomicU64, Ordering};
+                static SPILL_SEQ: AtomicU64 = AtomicU64::new(0);
+                std::env::temp_dir().join(format!(
+                    "layerkv-spill-{}-{}",
+                    std::process::id(),
+                    SPILL_SEQ.fetch_add(1, Ordering::Relaxed)
+                ))
+            });
+            PjrtBackend::with_spill_dir(self.model.clone(), self.cfg.max_batch, dir)
+        } else {
+            PjrtBackend::new(self.model.clone(), self.cfg.max_batch)
+        };
         backend.load_jobs(&jobs);
         let predictor = LengthPredictor::new(smax.max(2), 1.0, 42);
         let mut engine = Engine::with_parts(scfg, kv, backend, predictor);
@@ -410,6 +494,11 @@ impl<M: TokenModel> RealEngine<M> {
         self.kv_stats.onloads += s.onloads;
         self.kv_stats.offload_bytes += s.offload_bytes;
         self.kv_stats.onload_bytes += s.onload_bytes;
+        self.kv_stats.spills += s.spills;
+        self.kv_stats.unspills += s.unspills;
+        self.kv_stats.spill_bytes += s.spill_bytes;
+        self.kv_stats.unspill_bytes += s.unspill_bytes;
+        self.kv_stats.disk_read_bytes += s.disk_read_bytes;
 
         let mut results: Vec<ServeResult> = report
             .records
@@ -451,7 +540,12 @@ mod tests {
     fn engine(policy: Policy, budget: usize) -> RealEngine<RefModel> {
         RealEngine::with_model(
             Rc::new(RefModel::new()),
-            RealEngineConfig { device_kv_budget: budget, policy, max_batch: 8 },
+            RealEngineConfig {
+                device_kv_budget: budget,
+                policy,
+                max_batch: 8,
+                ..Default::default()
+            },
         )
     }
 
@@ -524,6 +618,53 @@ mod tests {
         // no zero-length record skews the report
         assert_eq!(out.report.records.len(), 2);
         assert!(out.report.records.iter().all(|r| r.output_len > 0));
+    }
+
+    #[test]
+    fn disk_spill_serves_what_a_starved_host_rejects_same_tokens() {
+        // ground truth: ample host pool
+        let mut ample = engine(Policy::LayerKv { slo_aware: true }, 2 << 20);
+        let ra = ample.serve(jobs(4, 64, 6)).unwrap();
+        assert_eq!(ra.results.len(), 4);
+
+        // starved host (4 layer-blocks) + no disk: long prompts can never
+        // park their non-retained layers -> rejected
+        let spill_dir = std::env::temp_dir()
+            .join(format!("layerkv-realengine-spill-{}", std::process::id()));
+        let starved = |disk_blocks: usize| RealEngineConfig {
+            device_kv_budget: 2 << 20,
+            policy: Policy::LayerKv { slo_aware: true },
+            max_batch: 8,
+            host_layer_blocks: 4,
+            disk_layer_blocks: disk_blocks,
+            spill_dir: Some(spill_dir.clone()),
+        };
+        let mut no_disk = RealEngine::with_model(Rc::new(RefModel::new()), starved(0));
+        let rn = no_disk.serve(jobs(4, 64, 6)).unwrap();
+        assert!(
+            !rn.dropped.is_empty(),
+            "starved host without a disk tier must reject"
+        );
+
+        // same starved host + a disk tier: spill files engage, everything
+        // completes, and the tokens match the ample-host ground truth
+        let mut tiered = RealEngine::with_model(Rc::new(RefModel::new()), starved(4096));
+        let rt = tiered.serve(jobs(4, 64, 6)).unwrap();
+        assert!(rt.dropped.is_empty(), "disk tier must serve everything");
+        assert_eq!(rt.results.len(), 4);
+        assert!(
+            tiered.kv_stats().spill_bytes > 0,
+            "host saturation must write real spill files"
+        );
+        for (a, b) in ra.results.iter().zip(&rt.results) {
+            assert_eq!(a.output, b.output, "spilling must not change tokens");
+        }
+        // all spill files are cleaned up on release
+        let leftovers = std::fs::read_dir(&spill_dir)
+            .map(|d| d.count())
+            .unwrap_or(0);
+        assert_eq!(leftovers, 0, "spill files must be deleted on release");
+        std::fs::remove_dir_all(&spill_dir).ok();
     }
 
     #[test]

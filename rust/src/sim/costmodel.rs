@@ -80,6 +80,85 @@ impl CostModel {
         l.saturating_sub(offloadable)
     }
 
+    /// Eq. 4 generalized to the disk tier: time to push `layers` layers of
+    /// a `seqlen`-token KV shard over the host<->disk link (host pressure
+    /// spill, or the deep half of an admission that overflows host RAM).
+    /// Infinite when the node has no disk tier.
+    pub fn spill_time(&self, seqlen: usize, layers: usize) -> f64 {
+        if layers == 0 || seqlen == 0 {
+            return 0.0;
+        }
+        let c = &self.cfg;
+        if c.node.disk.bandwidth <= 0.0 {
+            return f64::INFINITY;
+        }
+        let bytes_per_gpu = seqlen as f64
+            * layers as f64
+            * c.offload_bytes_per_token_layer()
+            / c.tp as f64;
+        c.beta * bytes_per_gpu / c.node.disk.bandwidth + c.node.disk.latency
+    }
+
+    /// Restoring from the disk tier traverses the same link (symmetric
+    /// sequential bandwidth), plus the PCIe hop host->device.
+    pub fn disk_restore_time(&self, seqlen: usize, layers: usize) -> f64 {
+        if layers == 0 || seqlen == 0 {
+            return 0.0;
+        }
+        self.spill_time(seqlen, layers) + self.onload_time(seqlen, layers)
+    }
+
+    /// §3.1.1's x-solve, tier-aware: the first `host_layers` offloaded
+    /// layers ride the PCIe link; anything past them must continue to the
+    /// slower disk link, which hides fewer layers under the same prefill
+    /// window — and costs symmetrically more to restore. Solves the
+    /// largest offloadable count with the cumulative (host-then-disk)
+    /// transfer time still <= T_prefill, then x = L - offloadable.
+    /// With ample `host_layers` this reduces exactly to
+    /// `min_resident_layers`.
+    pub fn min_resident_layers_tiered(&self, seqlen: usize, host_layers: usize) -> usize {
+        let l = self.cfg.model.n_layers;
+        let t_prefill = self.prefill_compute_time(seqlen);
+        let per_host = self.offload_time(seqlen, 1);
+        if per_host <= 0.0 {
+            return 0;
+        }
+        let host_side = ((t_prefill / per_host).floor() as usize).min(host_layers).min(l);
+        let t_left = t_prefill - host_side as f64 * per_host;
+        let per_disk = self.spill_time(seqlen, 1);
+        let disk_side = if per_disk.is_finite() && per_disk > 0.0 && t_left > 0.0 {
+            (t_left / per_disk).floor() as usize
+        } else {
+            0
+        };
+        l.saturating_sub(host_side + disk_side)
+    }
+
+    /// Solve one tiered admission: given the flat-solved retained count
+    /// `x0`, the per-layer block demand, and the host blocks available,
+    /// return `(x, host_layers)` — the retained count re-solved against
+    /// the disk link when the host pool cannot hold all non-retained
+    /// layers, and how many of them fill the host (in layer order; the
+    /// rest overflow to disk). This is THE feasibility formula: the
+    /// LayerKV scheduler, the engine's `never_fits`, and the allocator's
+    /// host-fill split all agree through it.
+    pub fn tiered_admission(
+        &self,
+        seqlen: usize,
+        x0: usize,
+        per_layer: usize,
+        free_cpu_blocks: usize,
+    ) -> (usize, usize) {
+        let l = self.cfg.model.n_layers;
+        let host_cap =
+            if per_layer == 0 { l } else { free_cpu_blocks / per_layer };
+        let mut x = x0;
+        if host_cap < l - x {
+            x = x.max(self.min_resident_layers_tiered(seqlen, host_cap));
+        }
+        (x, host_cap.min(l - x))
+    }
+
     /// One iteration of batched decode. Memory-bound: stream the weight
     /// shard once plus every running request's resident KV; compute rides
     /// under that. `ctx_lens` are the current context lengths.
@@ -210,6 +289,48 @@ mod tests {
                 "s={s} x={x}"
             );
         }
+    }
+
+    #[test]
+    fn tiered_x_solve_degrades_gracefully() {
+        use crate::config::DiskSpec;
+        let mut cfg = ServingConfig::llama2_7b_tp1();
+        cfg.node.disk = DiskSpec::nvme_4tb();
+        let m = CostModel::new(cfg);
+        let s = 4096;
+        let x_flat = m.min_resident_layers(s);
+        // ample host: tiered solve collapses to the flat solve
+        assert_eq!(m.min_resident_layers_tiered(s, 10_000), x_flat);
+        // no host at all: every offload rides the slower disk link, so
+        // fewer layers hide under the prefill -> x can only grow
+        let x_disk_only = m.min_resident_layers_tiered(s, 0);
+        assert!(x_disk_only >= x_flat, "x_disk_only={x_disk_only} x_flat={x_flat}");
+        // monotone: more host room never increases x
+        let mut prev = x_disk_only;
+        for host in [1usize, 4, 8, 16, 32] {
+            let x = m.min_resident_layers_tiered(s, host);
+            assert!(x <= prev, "host={host}: x={x} prev={prev}");
+            prev = x;
+        }
+    }
+
+    #[test]
+    fn spill_slower_than_offload_restore_costs_both_links() {
+        use crate::config::DiskSpec;
+        let mut cfg = ServingConfig::llama2_7b_tp1();
+        cfg.node.disk = DiskSpec::nvme_4tb();
+        let m = CostModel::new(cfg);
+        assert!(m.spill_time(2048, 8) > m.offload_time(2048, 8));
+        assert!(
+            m.disk_restore_time(2048, 8)
+                > m.spill_time(2048, 8).max(m.onload_time(2048, 8))
+        );
+        assert_eq!(m.spill_time(0, 8), 0.0);
+        assert_eq!(m.spill_time(2048, 0), 0.0);
+        // two-tier node: the disk link does not exist
+        let two = CostModel::new(ServingConfig::llama2_7b_tp1());
+        assert_eq!(two.spill_time(2048, 1), f64::INFINITY);
+        assert_eq!(two.min_resident_layers_tiered(2048, 10_000), two.min_resident_layers(2048));
     }
 
     #[test]

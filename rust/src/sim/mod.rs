@@ -10,4 +10,4 @@ pub mod costmodel;
 pub mod pcie;
 
 pub use costmodel::CostModel;
-pub use pcie::{BusyWindow, PcieLink, SwapOutcome};
+pub use pcie::{BusyWindow, PcieLink, SwapOutcome, TransferLink};

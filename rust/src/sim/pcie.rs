@@ -1,8 +1,14 @@
-//! PCIe link occupancy model with the §3.1.3 contention-mitigation
-//! mechanism: before launching a swap, check whether the link is busy with
-//! an all-reduce; if so, back off for a fraction of the all-reduce latency
-//! and re-check; additionally split swaps into sub-units so an all-reduce
-//! arriving mid-swap only waits for the current chunk.
+//! Transfer-link occupancy model (bandwidth + fixed latency + chunking),
+//! with the §3.1.3 contention-mitigation mechanism: before launching a
+//! swap, check whether the link is busy with an all-reduce; if so, back
+//! off for a fraction of the all-reduce latency and re-check;
+//! additionally split swaps into sub-units so an all-reduce arriving
+//! mid-swap only waits for the current chunk.
+//!
+//! [`TransferLink`] is tier-agnostic: the GPU<->host PCIe link and the
+//! host<->disk spill path are both instances — disk is just a slower,
+//! higher-latency, higher-capacity "PCIe-like" link (`PcieLink` remains
+//! as an alias for the original name).
 //!
 //! The simulator uses this to answer: "a swap of B bytes is requested at
 //! time t while all-reduces occupy the link during [a_i, b_i) windows —
@@ -25,9 +31,11 @@ pub struct SwapOutcome {
     pub contended: f64,
 }
 
+/// One tier-to-tier transfer link: bandwidth, fixed per-transfer latency,
+/// and optional chunked scheduling around busy windows.
 #[derive(Debug, Clone)]
-pub struct PcieLink {
-    /// Bytes/s available to the swapping GPU.
+pub struct TransferLink {
+    /// Bytes/s available to the swapping endpoint.
     pub bandwidth: f64,
     /// Fixed per-transfer latency.
     pub latency: f64,
@@ -39,15 +47,42 @@ pub struct PcieLink {
     pub backoff_frac: f64,
 }
 
-impl PcieLink {
+/// The original name: the GPU<->host instance of [`TransferLink`].
+pub type PcieLink = TransferLink;
+
+impl TransferLink {
     pub fn new(bandwidth: f64, latency: f64, chunking: bool) -> Self {
-        PcieLink {
+        TransferLink {
             bandwidth,
             latency,
             chunking,
             chunk_bytes: 8.0 * 1024.0 * 1024.0,
             backoff_frac: 0.25,
         }
+    }
+
+    /// The host<->disk instance: spills do not contend with all-reduces,
+    /// so chunking is off and larger transfer units are used.
+    pub fn disk(spec: &crate::config::hardware::DiskSpec) -> Self {
+        TransferLink {
+            bandwidth: spec.bandwidth,
+            latency: spec.latency,
+            chunking: false,
+            chunk_bytes: 64.0 * 1024.0 * 1024.0,
+            backoff_frac: 0.25,
+        }
+    }
+
+    /// Pure (uncontended) transfer time for `bytes`: latency + bytes/bw.
+    /// 0 bytes cost nothing; a disabled link (bandwidth 0) is infinite.
+    pub fn transfer_time(&self, bytes: f64) -> f64 {
+        if bytes <= 0.0 {
+            return 0.0;
+        }
+        if self.bandwidth <= 0.0 {
+            return f64::INFINITY;
+        }
+        self.latency + bytes / self.bandwidth
     }
 
     /// Schedule a swap of `bytes` starting no earlier than `t`, against the
@@ -150,6 +185,27 @@ mod tests {
         let out = link.schedule_swap(0.0, 1024.0, &busy);
         assert!(out.finish >= 2.0); // waited out the all-reduce
         assert_eq!(out.contended, 0.0);
+    }
+
+    #[test]
+    fn transfer_time_basics() {
+        let link = TransferLink::new(BW, 10e-6, true);
+        assert_eq!(link.transfer_time(0.0), 0.0);
+        assert!((link.transfer_time(BW) - (1.0 + 10e-6)).abs() < 1e-9);
+        // disabled link (the two-tier configuration's disk): infinite
+        let off = TransferLink::new(0.0, 0.0, false);
+        assert_eq!(off.transfer_time(1.0), f64::INFINITY);
+    }
+
+    #[test]
+    fn disk_link_models_a_slower_pcie() {
+        let disk = TransferLink::disk(&crate::config::hardware::DiskSpec::nvme_4tb());
+        let pcie = TransferLink::new(BW, 10e-6, true);
+        let bytes = 1.0e9;
+        assert!(disk.transfer_time(bytes) > pcie.transfer_time(bytes));
+        // same scheduling machinery applies
+        let out = disk.schedule_swap(0.0, bytes, &[]);
+        assert!((out.finish - disk.transfer_time(bytes)).abs() < 1e-9);
     }
 
     #[test]

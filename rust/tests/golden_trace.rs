@@ -1,0 +1,163 @@
+//! Golden trace replay: a small committed trace (tests/golden/
+//! trace_small.jsonl) served by the default LayerKV policy in the
+//! two-tier configuration must reproduce the PRE-TENTPOLE engine
+//! bit-for-bit — per-request TTFT/TPOT (via the full latency records),
+//! makespan, and every stat counter. The committed oracle is
+//! tests/support/reference_engine.rs, the verbatim pre-refactor engine
+//! (do not edit it): whatever it produces on the committed trace IS the
+//! expected output, so the expectation can never drift out of sync with
+//! the cost model while still pinning pre-tentpole semantics.
+//!
+//! The replay also exercises the tier-transition log: in the two-tier
+//! configuration every logged move must stay inside {GPU, host}, agree
+//! with the engine's offload/onload counters, and be reproducible
+//! run-to-run. Set `LAYERKV_GOLDEN_DUMP=/path/to/file` to write the
+//! rendered log (bitwise timestamps + per-request latency lines) for
+//! inspection or archival.
+
+#[path = "support/reference_engine.rs"]
+mod reference_engine;
+
+use layerkv::config::{Policy, ServingConfig};
+use layerkv::coordinator::engine::run_trace_oracle;
+use layerkv::coordinator::{run_trace, standard_predictor, Engine};
+use layerkv::metrics::{TierTransition, TIER_DISK, TIER_GPU, TIER_HOST};
+use layerkv::workload::{trace, Trace};
+
+const ACC: f64 = 0.8;
+
+fn golden_trace() -> Trace {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/golden/trace_small.jsonl");
+    trace::load(&path).expect("committed golden trace must load")
+}
+
+fn golden_cfg() -> ServingConfig {
+    ServingConfig::llama2_7b_tp1().with_policy(Policy::LayerKv { slo_aware: true })
+}
+
+fn render(log: &[TierTransition], rep: &layerkv::metrics::Report) -> String {
+    let mut out = String::new();
+    for r in &rep.records {
+        out.push_str(&format!(
+            "req={} ttft={:016x} tpot={:016x}\n",
+            r.id,
+            r.ttft().to_bits(),
+            r.tpot().to_bits()
+        ));
+    }
+    for t in log {
+        out.push_str(&t.render());
+        out.push('\n');
+    }
+    out
+}
+
+#[test]
+fn golden_trace_replay_matches_pre_tentpole_oracle() {
+    let tr = golden_trace();
+    let cfg = golden_cfg();
+
+    // the expected per-request TTFT/TPOT: the pre-tentpole oracle
+    let (ref_rep, ref_stats) =
+        reference_engine::run_trace_reference(cfg.clone(), &tr, ACC);
+    assert_eq!(
+        ref_rep.records.len(),
+        tr.requests.len(),
+        "oracle must serve the whole committed trace"
+    );
+
+    let mut e = Engine::new(cfg.clone(), standard_predictor(&tr, ACC));
+    e.enable_transition_log();
+    let rep = e.run(&tr);
+    let stats = e.stats().clone();
+    let log = e.take_transitions();
+
+    // bit-identical latency records => bit-identical TTFT and TPOT
+    assert_eq!(rep.records, ref_rep.records, "records diverge from the oracle");
+    assert_eq!(rep.makespan.to_bits(), ref_rep.makespan.to_bits());
+    for (a, b) in rep.records.iter().zip(&ref_rep.records) {
+        assert_eq!(a.ttft().to_bits(), b.ttft().to_bits(), "req {} TTFT", a.id);
+        assert_eq!(a.tpot().to_bits(), b.tpot().to_bits(), "req {} TPOT", a.id);
+    }
+    assert_eq!(
+        (stats.steps, stats.prefill_steps, stats.decode_steps, stats.preemptions),
+        (
+            ref_stats.steps,
+            ref_stats.prefill_steps,
+            ref_stats.decode_steps,
+            ref_stats.preemptions
+        )
+    );
+    assert_eq!(
+        (
+            stats.proactive_offload_layers,
+            stats.oom_forced_offload_layers,
+            stats.onloaded_layers
+        ),
+        (
+            ref_stats.proactive_offload_layers,
+            ref_stats.oom_forced_offload_layers,
+            ref_stats.onloaded_layers
+        )
+    );
+    assert_eq!(stats.offload_bytes.to_bits(), ref_stats.offload_bytes.to_bits());
+
+    // tier-transition log: two-tier runs never leave {GPU, host}, and the
+    // log agrees with the counters
+    assert!(
+        !log.is_empty(),
+        "LayerKV admits these prompts layer-wise; restores must appear in the log"
+    );
+    assert!(log.iter().all(|t| t.from != TIER_DISK && t.to != TIER_DISK));
+    let count = |from: u8, to: u8| {
+        log.iter().filter(|t| t.from == from && t.to == to).count() as u64
+    };
+    assert_eq!(
+        count(TIER_GPU, TIER_HOST),
+        stats.proactive_offload_layers + stats.oom_forced_offload_layers
+    );
+    assert_eq!(count(TIER_HOST, TIER_GPU), stats.onloaded_layers);
+    assert!(log.windows(2).all(|w| w[0].t <= w[1].t), "log must be time-ordered");
+
+    // replaying the committed trace reproduces the identical log + report
+    let mut e2 = Engine::new(cfg, standard_predictor(&tr, ACC));
+    e2.enable_transition_log();
+    let rep2 = e2.run(&tr);
+    assert_eq!(rep.records, rep2.records);
+    assert_eq!(log, e2.take_transitions(), "transition log must be deterministic");
+
+    if let Ok(path) = std::env::var("LAYERKV_GOLDEN_DUMP") {
+        std::fs::write(&path, render(&log, &rep)).expect("golden dump");
+    }
+}
+
+#[test]
+fn golden_trace_oracle_mode_also_matches() {
+    // the recompute-from-scratch engine mode must agree with the
+    // pre-tentpole oracle on the committed trace too
+    let tr = golden_trace();
+    let cfg = golden_cfg();
+    let (a, sa) = run_trace_oracle(cfg.clone(), &tr, ACC);
+    let (b, sb) = reference_engine::run_trace_reference_oracle(cfg, &tr, ACC);
+    assert_eq!(a.records, b.records);
+    assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+    assert_eq!((sa.steps, sa.decode_steps), (sb.steps, sb.decode_steps));
+}
+
+#[test]
+fn golden_trace_every_policy_completes_it() {
+    // the committed trace is a fixture other suites can rely on: every
+    // policy serves it without drops
+    let tr = golden_trace();
+    for policy in [
+        Policy::Vllm,
+        Policy::LayerKv { slo_aware: true },
+        Policy::LayerKv { slo_aware: false },
+    ] {
+        let cfg = ServingConfig::llama2_7b_tp1().with_policy(policy);
+        let (rep, stats) = run_trace(cfg, &tr, ACC);
+        assert_eq!(rep.records.len(), tr.requests.len(), "{policy:?}");
+        assert!(stats.dropped.is_empty(), "{policy:?}");
+    }
+}

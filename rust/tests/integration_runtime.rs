@@ -152,7 +152,12 @@ fn real_engine_policies_agree_on_tokens() {
     for policy in [Policy::Vllm, Policy::LayerKv { slo_aware: true }] {
         let mut engine = RealEngine::load(
             &dir,
-            RealEngineConfig { device_kv_budget: 100 << 10, policy, max_batch: 8 },
+            RealEngineConfig {
+                device_kv_budget: 100 << 10,
+                policy,
+                max_batch: 8,
+                ..Default::default()
+            },
         )
         .unwrap();
         let out = engine.serve(jobs(4)).unwrap();
@@ -171,7 +176,7 @@ fn real_engine_policies_agree_on_tokens() {
 fn ref_engine(policy: Policy, budget: usize) -> RealEngine<RefModel> {
     RealEngine::with_model(
         Rc::new(RefModel::new()),
-        RealEngineConfig { device_kv_budget: budget, policy, max_batch: 8 },
+        RealEngineConfig { device_kv_budget: budget, policy, max_batch: 8, ..Default::default() },
     )
 }
 

@@ -1,0 +1,122 @@
+//! Integration tests for the GPU -> host -> disk KV hierarchy: a workload
+//! sized so host RAM saturates must engage the disk spill tier, still
+//! complete every request at bounded TTFT, and beat a no-disk baseline
+//! that can only reject (the tiered analog of the HOL-blocking test).
+
+use layerkv::config::{DiskSpec, Policy, ServingConfig};
+use layerkv::coordinator::{run_trace, standard_predictor, Engine};
+use layerkv::experiments::tier_sweep_with;
+use layerkv::util::Rng;
+use layerkv::workload::arrivals::Arrivals;
+use layerkv::workload::fixed::FixedWorkload;
+use layerkv::workload::Trace;
+
+/// Long-prompt workload whose host-KV demand (~0.5 GB per request at 4k
+/// tokens) saturates a 1 GB host swap pool immediately.
+fn saturating_trace(n: usize) -> Trace {
+    FixedWorkload {
+        prompt_len: 4096,
+        output_len: 64,
+        n_requests: n,
+        arrivals: Arrivals::Poisson { rate: 1.0 },
+    }
+    .generate(&mut Rng::new(23))
+}
+
+fn starved_cfg() -> ServingConfig {
+    let mut cfg =
+        ServingConfig::llama2_7b_tp1().with_policy(Policy::LayerKv { slo_aware: true });
+    cfg.cpu_swap_bytes = 1 << 30; // 1 GB host swap: < one prompt's L-x layers
+    cfg
+}
+
+#[test]
+fn host_pressure_spills_to_disk_requests_complete_ttft_bounded() {
+    let n = 8;
+    let trace = saturating_trace(n);
+
+    // no-disk baseline: the host pool cannot hold even one request's
+    // non-retained layers -> every long prompt is rejected
+    let (base_rep, base_stats) = run_trace(starved_cfg(), &trace, 0.8);
+    assert_eq!(
+        base_stats.dropped.len(),
+        n,
+        "starved two-tier baseline must reject the saturating workload"
+    );
+    assert!(base_rep.records.is_empty());
+
+    // same host pool + a disk tier: spill engages and everything is served
+    let cfg = starved_cfg().with_disk(DiskSpec::nvme_4tb());
+    let mut e = Engine::new(cfg, standard_predictor(&trace, 0.8));
+    let rep = e.run(&trace);
+    let stats = e.stats().clone();
+    assert_eq!(rep.records.len(), n, "disk tier must serve every request");
+    assert!(stats.dropped.is_empty());
+    assert!(stats.spill_bytes > 0.0, "host saturation must engage disk spill");
+    assert!(
+        stats.disk_promoted_layers > 0 || stats.disk_stream_bytes > 0.0,
+        "disk-resident layers must be read back to decode"
+    );
+
+    // TTFT stays bounded: admission is layer-wise (x solved against both
+    // links), so first tokens come at ~prefill latency, not at
+    // drain-the-queue latency
+    let ttft_mean = rep.ttft().mean();
+    assert!(ttft_mean < 10.0, "mean TTFT {ttft_mean}s must stay bounded under spill");
+    assert!(rep.queueing().mean() < 10.0);
+
+    // conservation after the run: every tier drains
+    assert_eq!(e.kv.gpu.used(), 0);
+    assert_eq!(e.kv.cpu.used(), 0);
+    assert_eq!(e.kv.disk.used(), 0);
+}
+
+#[test]
+fn deeper_disk_tiers_monotonically_reduce_rejections() {
+    let rows = tier_sweep_with(12);
+    assert_eq!(rows.len(), 4);
+    let baseline = &rows[0];
+    assert_eq!(baseline.disk_gb, 0);
+    assert!(
+        baseline.rejected > 0,
+        "host-only baseline must reject under host-saturating load"
+    );
+    assert_eq!(baseline.spill_mb, 0.0, "no disk tier, no spill traffic");
+    // every disk-equipped row serves more and spills
+    for r in &rows[1..] {
+        assert!(
+            r.rejected < baseline.rejected,
+            "disk {} GB: rejected {} not below baseline {}",
+            r.disk_gb,
+            r.rejected,
+            baseline.rejected
+        );
+        assert!(r.completed > baseline.completed);
+        assert!(r.spill_mb > 0.0);
+    }
+    // rejections never increase as the disk tier grows
+    for w in rows[1..].windows(2) {
+        assert!(w[1].rejected <= w[0].rejected);
+    }
+    // the largest tier serves everything
+    let last = rows.last().unwrap();
+    assert_eq!(last.rejected, 0, "512 GB disk tier must absorb the whole sweep");
+}
+
+#[test]
+fn two_tier_and_tiered_agree_when_host_is_ample() {
+    // ample host: the disk tier must not perturb a single bit of the
+    // served schedule (integration-level spot check; the randomized
+    // version lives in prop_invariants)
+    let trace = saturating_trace(6);
+    let base = ServingConfig::llama2_7b_tp1()
+        .with_policy(Policy::LayerKv { slo_aware: true });
+    let tiered = base.clone().with_disk(DiskSpec::nvme_4tb());
+    let (a, sa) = run_trace(base, &trace, 0.8);
+    let (b, sb) = run_trace(tiered, &trace, 0.8);
+    assert_eq!(a.records, b.records);
+    assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+    assert_eq!(sa.steps, sb.steps);
+    assert_eq!(sb.spilled_layers, 0);
+    assert_eq!(sb.spill_bytes, 0.0);
+}

@@ -221,44 +221,212 @@ fn prop_interleaved_retained_is_well_formed() {
     });
 }
 
+/// Block conservation across ALL tiers, checked after EVERY step of a
+/// randomized op mix: each tier's pool accounting equals the sum over
+/// live tables, held + free equals each tier's capacity, the free lists
+/// stay well-formed, and every table's cached per-tier aggregates match a
+/// recount (`LayerBlockTable::check`). Half the cases run the two-tier
+/// configuration (disk capacity 0) and additionally assert the disk tier
+/// is never touched.
 #[test]
 fn prop_kv_manager_conservation_with_policy_mix() {
     prop(60, |rng| {
         let n_layers = rng.range_usize(1, 48);
         let gpu = rng.range_usize(n_layers, 4000);
-        let mut m = KvManager::new(gpu, 4000, 16, n_layers);
+        let cpu = rng.range_usize(n_layers, 4000);
+        let disk = if rng.chance(0.5) { 0 } else { rng.range_usize(n_layers, 4000) };
+        let mut m = KvManager::new_tiered(gpu, cpu, disk, 16, n_layers);
         let mut live = Vec::new();
+        let check_all = |m: &KvManager, live: &[usize]| {
+            let gpu_held: usize =
+                live.iter().map(|&r| m.table(r).unwrap().gpu_blocks_held()).sum();
+            let cpu_held: usize =
+                live.iter().map(|&r| m.table(r).unwrap().cpu_blocks_held()).sum();
+            let disk_held: usize =
+                live.iter().map(|&r| m.table(r).unwrap().disk_blocks_held()).sum();
+            assert_eq!(m.gpu.used(), gpu_held);
+            assert_eq!(m.cpu.used(), cpu_held);
+            assert_eq!(m.disk.used(), disk_held);
+            assert_eq!(m.gpu.available() + gpu_held, m.gpu.total());
+            assert_eq!(m.cpu.available() + cpu_held, m.cpu.total());
+            assert_eq!(m.disk.available() + disk_held, m.disk.total());
+            m.gpu.check().unwrap();
+            m.cpu.check().unwrap();
+            m.disk.check().unwrap();
+            for &r in live {
+                m.table(r).unwrap().check().unwrap();
+            }
+            if m.disk.total() == 0 {
+                assert_eq!(disk_held, 0, "two-tier config must never touch disk");
+            }
+        };
         for id in 0..rng.range_usize(1, 40) {
             let tokens = rng.range_usize(1, 512);
             let x = rng.range_usize(0, n_layers + 1);
             if m.allocate_layerwise(id, tokens, x).is_ok() {
                 live.push(id);
             }
+            check_all(&m, &live);
         }
         for _ in 0..rng.range_usize(0, 200) {
             if live.is_empty() {
                 break;
             }
             let id = live[rng.range_usize(0, live.len())];
-            match rng.range(0, 3) {
+            match rng.range(0, 6) {
                 0 => {
                     let _ = m.append_token(id);
                 }
                 1 => {
                     let _ = m.offload_layer(id, rng.range_usize(0, n_layers));
                 }
-                _ => {
+                2 => {
                     let _ = m.onload_layer(id, rng.range_usize(0, n_layers));
                 }
+                3 => {
+                    let _ = m.spill_layer(id, rng.range_usize(0, n_layers));
+                }
+                4 => {
+                    let _ = m.unspill_layer(id, rng.range_usize(0, n_layers));
+                }
+                _ => {
+                    let _ = m.promote_disk_layer(id, rng.range_usize(0, n_layers));
+                }
             }
+            check_all(&m, &live);
         }
-        let held: usize = live.iter().map(|&r| m.table(r).unwrap().gpu_blocks_held()).sum();
-        assert_eq!(m.gpu.used(), held);
         for id in live {
             m.release(id).unwrap();
         }
         assert_eq!(m.gpu.used(), 0);
         assert_eq!(m.cpu.used(), 0);
+        assert_eq!(m.disk.used(), 0);
+    });
+}
+
+/// The tentpole's headline guarantee, property-tested: with the disk tier
+/// DISABLED (capacity 0 — the default on every preset), the tiered engine
+/// is bit-identical to the pre-tentpole reference engine on randomized
+/// traces under every policy — and all disk-side stats stay exactly zero.
+#[test]
+fn prop_two_tier_config_bit_identical_to_reference() {
+    prop(8, |rng| {
+        let n = rng.range_usize(5, 30);
+        let trace: Trace = if rng.chance(0.5) {
+            ShareGptWorkload::paper(rng.f64() * 5.0 + 0.5, n).generate(rng)
+        } else {
+            FixedWorkload {
+                prompt_len: rng.range_usize(16, 4096),
+                output_len: rng.range_usize(4, 128),
+                n_requests: n,
+                arrivals: Arrivals::Poisson { rate: rng.f64() * 3.0 + 0.2 },
+            }
+            .generate(rng)
+        };
+        for policy in [
+            Policy::Vllm,
+            Policy::LayerKv { slo_aware: true },
+            Policy::LayerKv { slo_aware: false },
+        ] {
+            // vary the host pool too: host pressure without a disk tier
+            // must degrade exactly like the pre-tentpole engine
+            let mut cfg = ServingConfig::llama2_7b_tp1().with_policy(policy);
+            if rng.chance(0.3) {
+                cfg.cpu_swap_bytes = 1u64 << rng.range(28, 38);
+            }
+            let (new_rep, new_stats) = run_trace(cfg.clone(), &trace, 0.8);
+            let (ref_rep, ref_stats) =
+                reference_engine::run_trace_reference(cfg, &trace, 0.8);
+            assert_eq!(new_rep.records, ref_rep.records, "{policy:?}: records diverge");
+            assert_eq!(new_rep.makespan.to_bits(), ref_rep.makespan.to_bits());
+            assert_stats_bit_identical(&new_stats, &ref_stats, &format!("{policy:?}"));
+            assert_eq!(new_stats.spilled_layers, 0);
+            assert_eq!(new_stats.disk_promoted_layers, 0);
+            assert_eq!(new_stats.spill_bytes.to_bits(), 0.0f64.to_bits());
+            assert_eq!(new_stats.disk_stall_s.to_bits(), 0.0f64.to_bits());
+        }
+    });
+}
+
+/// Adding a disk tier must be a no-op while the host pool stays ample:
+/// same reports, same stats, zero spill traffic — the hierarchy only
+/// engages under host pressure.
+#[test]
+fn prop_ample_host_disk_tier_is_inert() {
+    use layerkv::config::DiskSpec;
+    prop(6, |rng| {
+        let n = rng.range_usize(5, 25);
+        let trace: Trace = FixedWorkload {
+            prompt_len: rng.range_usize(16, 4096),
+            output_len: rng.range_usize(4, 128),
+            n_requests: n,
+            arrivals: Arrivals::Poisson { rate: rng.f64() * 3.0 + 0.2 },
+        }
+        .generate(rng);
+        for policy in [Policy::Vllm, Policy::LayerKv { slo_aware: true }] {
+            // default 256 GB host swap: ample for these traces
+            let base = ServingConfig::llama2_7b_tp1().with_policy(policy);
+            let tiered = base.clone().with_disk(DiskSpec::nvme_4tb());
+            let (a, sa) = run_trace(base, &trace, 0.8);
+            let (b, sb) = run_trace(tiered, &trace, 0.8);
+            assert_eq!(a.records, b.records, "{policy:?}: disk tier changed behaviour");
+            assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+            assert_stats_bit_identical(&sa, &sb, &format!("{policy:?} ample-host"));
+            assert_eq!(sb.spilled_layers, 0);
+            assert_eq!(sb.spill_bytes.to_bits(), 0.0f64.to_bits());
+        }
+    });
+}
+
+/// Under host-saturating load the hierarchy must stay conservative: the
+/// engine's pools drain to zero after the run, every request is accounted
+/// for (completed or rejected), and spill traffic only appears when the
+/// disk tier exists.
+#[test]
+fn prop_tiered_engine_conserves_and_completes() {
+    use layerkv::config::DiskSpec;
+    prop(6, |rng| {
+        let n = rng.range_usize(4, 16);
+        let trace: Trace = FixedWorkload {
+            prompt_len: rng.range_usize(2048, 8192),
+            output_len: rng.range_usize(4, 64),
+            n_requests: n,
+            arrivals: Arrivals::Poisson { rate: rng.f64() * 2.0 + 0.5 },
+        }
+        .generate(rng);
+        let mut cfg = ServingConfig::llama2_7b_tp1()
+            .with_policy(Policy::LayerKv { slo_aware: true })
+            .with_disk(DiskSpec::nvme_4tb());
+        // starve the host pool so spills actually engage
+        cfg.cpu_swap_bytes = 1u64 << rng.range(28, 31);
+        let predictor = LengthPredictor::new(
+            trace.requests.iter().map(|r| r.output_len).max().unwrap_or(64).max(2),
+            0.8,
+            42,
+        );
+        let mut e = layerkv::coordinator::Engine::new(cfg, predictor);
+        e.enable_transition_log();
+        let rep = e.run(&trace);
+        let stats = e.stats().clone();
+        let log = e.take_transitions();
+        assert_eq!(rep.records.len() + stats.dropped.len(), n);
+        assert_eq!(e.kv.gpu.used(), 0, "GPU pool must drain");
+        assert_eq!(e.kv.cpu.used(), 0, "host pool must drain");
+        assert_eq!(e.kv.disk.used(), 0, "disk pool must drain");
+        // transition log consistency: every logged move names a valid tier
+        // and the per-kind counts match the engine's counters
+        let count = |from: u8, to: u8| {
+            log.iter().filter(|t| t.from == from && t.to == to).count() as u64
+        };
+        assert_eq!(
+            count(0, 1),
+            stats.proactive_offload_layers + stats.oom_forced_offload_layers
+        );
+        assert_eq!(count(1, 0), stats.onloaded_layers);
+        assert_eq!(count(1, 2), stats.spilled_layers);
+        assert_eq!(count(2, 0), stats.disk_promoted_layers);
+        assert!(log.iter().all(|t| t.from <= 2 && t.to <= 2 && t.from != t.to));
+        assert!(log.windows(2).all(|w| w[0].t <= w[1].t), "log must be time-ordered");
     });
 }
 
