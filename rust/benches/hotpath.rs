@@ -165,6 +165,53 @@ fn main() {
         }
     }
 
+    // --- cluster routing ------------------------------------------------
+    // One route() call over 8 heterogeneously-loaded replica views, per
+    // policy. Routing runs once per arriving request at fleet scale, so
+    // it must stay allocation-free and O(replicas) — this series guards
+    // that alongside kv_manager/*.
+    {
+        use layerkv::cluster::{make_router, ReplicaView, RouterPolicy};
+        let cfg = ServingConfig::llama2_7b_tp1();
+        let cost = CostModel::new(cfg.clone());
+        let kvs: Vec<KvManager> = (0..8)
+            .map(|i| {
+                let mut m =
+                    KvManager::new(100_000, 500_000, cfg.block_size, cfg.model.n_layers);
+                for r in 0..(i * 6) {
+                    m.allocate_layerwise(r, 2048, 8).unwrap();
+                }
+                m
+            })
+            .collect();
+        let views: Vec<ReplicaView> = kvs
+            .iter()
+            .enumerate()
+            .map(|(i, kv)| ReplicaView {
+                idx: i,
+                waiting_len: i * 3,
+                running_len: i * 6,
+                waiting_tokens: i * 3 * 900,
+                running_tokens: i * 6 * 2056,
+                waiting_prefill_s: i as f64 * 0.3,
+                running_remaining_tokens: i * 6 * 128,
+                kv,
+                cost: &cost,
+                cfg: &cfg,
+            })
+            .collect();
+        for policy in RouterPolicy::ALL {
+            let mut router = make_router(*policy, 8);
+            for i in 0..8 {
+                router.observe_ttft(i, 0.1 + i as f64 * 0.05);
+            }
+            let name = format!("cluster/route_decision_{}", policy.name());
+            bench(&name, 1.0, || {
+                black_box(router.route(4096, &views));
+            });
+        }
+    }
+
     // --- pcie link ------------------------------------------------------
     let busy: Vec<BusyWindow> = (0..100)
         .map(|i| BusyWindow { start: i as f64 * 0.01, end: i as f64 * 0.01 + 0.004 })

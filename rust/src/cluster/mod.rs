@@ -1,0 +1,309 @@
+//! Cluster-scale serving: N independent engine replicas behind one
+//! KV-pressure- / SLO-aware router.
+//!
+//! The paper's Fig. 1 queueing blowups are competition for KV blocks on
+//! *one* engine; at fleet scale the same competition reappears one level
+//! up, as replica choice. A router that ignores per-replica KV pressure
+//! recreates exactly the head-of-line blocking LayerKV removed — so the
+//! router here reads each replica's live pool aggregates and cost model,
+//! the same signals the in-engine scheduler uses (see `router.rs` for
+//! the four policies).
+//!
+//! [`Cluster<B>`] owns N [`Engine<B>`] replicas — homogeneous or
+//! heterogeneous [`ServingConfig`]s, each with its own GPU/host/disk
+//! hierarchy — and steps them in virtual-time lockstep: every replica is
+//! advanced to each request's arrival instant before the router sees the
+//! views, so routing decisions observe exactly the state a front-end
+//! would at that moment. Replicas never interact below the router
+//! (separate pools, separate clocks), which is what makes the lockstep
+//! exact: stepping order between replicas cannot change any replica's
+//! outcome.
+//!
+//! The per-replica drive uses the engine's incremental API
+//! (`submit`/`step_once`), which mirrors `Engine::try_run` line for
+//! line — a 1-replica cluster is **bit-identical** to a bare
+//! `Engine<SimBackend>` run on the same trace, under every router
+//! (`tests/prop_cluster.rs`, and the acceptance gate in CI's prop-deep
+//! job).
+//!
+//! In a real deployment each replica is one serving process (one GPU or
+//! TP group), and the router is the front-end: `serve --replicas N
+//! --router <policy>` runs exactly that shape with real engine workers
+//! (see `server/`), and README "Cluster architecture" maps the pieces.
+
+pub mod replica;
+pub mod report;
+pub mod router;
+
+pub use replica::Replica;
+pub use report::{ClusterReport, ReplicaOutcome};
+pub use router::{
+    kv_pressure_score, make_router, ReplicaView, Router, RouterPolicy,
+};
+
+use crate::config::ServingConfig;
+use crate::coordinator::backend::{ExecutionBackend, SimBackend};
+use crate::coordinator::{standard_predictor, Engine, LengthPredictor};
+use crate::metrics::RequestRecord;
+use crate::workload::Trace;
+
+/// How a cluster is assembled: one `ServingConfig` per replica (mixed
+/// hardware is fine — each engine sizes its own pools) plus the routing
+/// policy.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    pub replicas: Vec<ServingConfig>,
+    pub router: RouterPolicy,
+    pub predictor_accuracy: f64,
+}
+
+/// Default predictor accuracy (the same 0.8 regime as
+/// `experiments::PREDICTOR_ACC`, defined here so the core cluster module
+/// does not depend on the experiment harness).
+pub const DEFAULT_PREDICTOR_ACC: f64 = 0.8;
+
+impl ClusterConfig {
+    /// N identical replicas of one config.
+    pub fn homogeneous(cfg: &ServingConfig, n: usize, router: RouterPolicy) -> Self {
+        ClusterConfig {
+            replicas: vec![cfg.clone(); n],
+            router,
+            predictor_accuracy: DEFAULT_PREDICTOR_ACC,
+        }
+    }
+}
+
+/// N engine replicas + a router, stepped in virtual-time lockstep.
+pub struct Cluster<B: ExecutionBackend = SimBackend> {
+    replicas: Vec<Replica<B>>,
+    router: Box<dyn Router>,
+    predictor_accuracy: f64,
+    /// `run` is single-shot (engines keep their stats/id maps); this
+    /// turns a second call into a clear error instead of bad data.
+    ran: bool,
+}
+
+impl Cluster<SimBackend> {
+    /// Build a simulation cluster: one `Engine<SimBackend>` per replica
+    /// config, pools sized by each config's memory-profiling pass.
+    pub fn new(cfg: &ClusterConfig) -> Self {
+        assert!(!cfg.replicas.is_empty(), "cluster needs at least one replica");
+        let replicas = cfg
+            .replicas
+            .iter()
+            .map(|c| {
+                // placeholder predictor: the incremental path receives
+                // each request's prediction at submit time, from the
+                // cluster's own trace-wide predictor (so a 1-replica
+                // cluster sees exactly run_trace's predictions)
+                let p = LengthPredictor::new(2, cfg.predictor_accuracy, 42);
+                Replica::new(Engine::new(c.clone(), p))
+            })
+            .collect();
+        Cluster {
+            replicas,
+            router: make_router(cfg.router, cfg.replicas.len()),
+            predictor_accuracy: cfg.predictor_accuracy,
+            ran: false,
+        }
+    }
+}
+
+impl<B: ExecutionBackend> Cluster<B> {
+    /// Assemble from pre-built engines (any backend) and a router.
+    pub fn from_replicas(
+        engines: Vec<Engine<B>>,
+        router: Box<dyn Router>,
+        predictor_accuracy: f64,
+    ) -> Self {
+        assert!(!engines.is_empty(), "cluster needs at least one replica");
+        Cluster {
+            replicas: engines.into_iter().map(Replica::new).collect(),
+            router,
+            predictor_accuracy,
+            ran: false,
+        }
+    }
+
+    pub fn n_replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    pub fn router_name(&self) -> &'static str {
+        self.router.name()
+    }
+
+    /// Serve a whole trace: route every request at its arrival instant,
+    /// drain all replicas, and merge the per-replica reports back into
+    /// trace order. Single-shot — build a fresh `Cluster` per trace (the
+    /// replica engines keep their clocks, stats, and id maps).
+    pub fn run(&mut self, trace: &Trace) -> anyhow::Result<ClusterReport> {
+        anyhow::ensure!(
+            !self.ran,
+            "Cluster::run is single-shot — build a fresh Cluster per trace"
+        );
+        self.ran = true;
+        let predictor = standard_predictor(trace, self.predictor_accuracy);
+        for tr in &trace.requests {
+            // lockstep: every replica catches up to this arrival before
+            // the router looks at the views (the 1e-12 mirrors try_run's
+            // arrival-admission epsilon)
+            for rep in &mut self.replicas {
+                while tr.arrival > rep.engine.now() + 1e-12 {
+                    if !rep.engine.step_once(false)? {
+                        break; // idle: its clock advances at its next submit
+                    }
+                }
+            }
+            self.pump_feedback();
+            let idx = {
+                let views: Vec<ReplicaView> =
+                    self.replicas.iter().enumerate().map(|(i, r)| r.view(i)).collect();
+                let picked = self.router.route(tr.prompt_len, &views);
+                assert!(
+                    picked < self.replicas.len(),
+                    "router {} returned out-of-range replica {picked} of {}",
+                    self.router.name(),
+                    self.replicas.len()
+                );
+                picked
+            };
+            let rep = &mut self.replicas[idx];
+            if tr.arrival > rep.engine.now() + 1e-12 {
+                rep.engine.wait_until(tr.arrival);
+            }
+            rep.submit(tr, predictor.predict(tr.id, tr.output_len));
+        }
+        // drain: no more input — replicas run independently to empty
+        for rep in &mut self.replicas {
+            while rep.engine.has_work() {
+                if !rep.engine.step_once(true)? {
+                    break;
+                }
+            }
+        }
+        self.pump_feedback();
+        Ok(self.take_report())
+    }
+
+    /// Feed newly completed requests' TTFTs to the router.
+    fn pump_feedback(&mut self) {
+        for (i, rep) in self.replicas.iter_mut().enumerate() {
+            // `self.replicas` and `self.router` are disjoint fields, so
+            // the record borrow and the router call coexist clone-free
+            let records = rep.engine.records();
+            for r in &records[rep.records_seen..] {
+                self.router.observe_ttft(i, r.ttft());
+            }
+            rep.records_seen = records.len();
+        }
+    }
+
+    /// Merge per-replica results, remapping local ids to global trace ids.
+    fn take_report(&mut self) -> ClusterReport {
+        let mut merged: Vec<RequestRecord> = Vec::new();
+        let mut dropped = Vec::new();
+        let mut per_replica = Vec::with_capacity(self.replicas.len());
+        for rep in &mut self.replicas {
+            let report = rep.engine.take_report();
+            let stats = rep.engine.stats().clone();
+            for r in &report.records {
+                let mut g = r.clone();
+                g.id = rep.global_ids[r.id];
+                merged.push(g);
+            }
+            for &local in &stats.dropped {
+                dropped.push(rep.global_ids[local]);
+            }
+            per_replica.push(ReplicaOutcome { routed: rep.routed(), report, stats });
+        }
+        dropped.sort_unstable();
+        ClusterReport {
+            merged: crate::metrics::Report::new(merged),
+            dropped,
+            per_replica,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Policy;
+    use crate::util::Rng;
+    use crate::workload::arrivals::Arrivals;
+    use crate::workload::fixed::FixedWorkload;
+
+    fn trace(n: usize, rate: f64) -> Trace {
+        FixedWorkload {
+            prompt_len: 1024,
+            output_len: 64,
+            n_requests: n,
+            arrivals: Arrivals::Poisson { rate },
+        }
+        .generate(&mut Rng::new(3))
+    }
+
+    #[test]
+    fn every_request_accounted_across_replicas() {
+        let cfg = ServingConfig::llama2_7b_tp1()
+            .with_policy(Policy::LayerKv { slo_aware: true });
+        for router in RouterPolicy::ALL {
+            let t = trace(24, 3.0);
+            let mut cluster = Cluster::new(&ClusterConfig::homogeneous(&cfg, 3, *router));
+            let out = cluster.run(&t).unwrap();
+            assert_eq!(out.accounted(), 24, "router {}", router.name());
+            assert_eq!(
+                out.per_replica.iter().map(|o| o.routed).sum::<usize>(),
+                24
+            );
+            // merged ids are exactly the trace's ids
+            let mut ids: Vec<usize> = out.merged.records.iter().map(|r| r.id).collect();
+            ids.extend(out.dropped.iter().copied());
+            ids.sort_unstable();
+            assert_eq!(ids, (0..24).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn round_robin_balances_exactly() {
+        let cfg = ServingConfig::llama2_7b_tp1()
+            .with_policy(Policy::LayerKv { slo_aware: true });
+        let t = trace(20, 2.0);
+        let mut cluster =
+            Cluster::new(&ClusterConfig::homogeneous(&cfg, 4, RouterPolicy::RoundRobin));
+        let out = cluster.run(&t).unwrap();
+        for o in &out.per_replica {
+            assert_eq!(o.routed, 5);
+        }
+        let s = out.summary(&cfg.slo);
+        assert!((s.max_share() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn run_is_single_shot() {
+        let cfg = ServingConfig::llama2_7b_tp1()
+            .with_policy(Policy::LayerKv { slo_aware: true });
+        let t = trace(4, 2.0);
+        let mut cluster =
+            Cluster::new(&ClusterConfig::homogeneous(&cfg, 2, RouterPolicy::RoundRobin));
+        cluster.run(&t).unwrap();
+        assert!(cluster.run(&t).is_err(), "second run must be a clear error");
+    }
+
+    #[test]
+    fn summary_matches_merged_report() {
+        let cfg = ServingConfig::llama2_7b_tp1()
+            .with_policy(Policy::LayerKv { slo_aware: true });
+        let t = trace(16, 2.0);
+        let mut cluster =
+            Cluster::new(&ClusterConfig::homogeneous(&cfg, 2, RouterPolicy::KvPressure));
+        let out = cluster.run(&t).unwrap();
+        let s = out.summary(&cfg.slo);
+        assert_eq!(
+            s.per_replica.iter().map(|r| r.completed).sum::<usize>(),
+            out.merged.records.len()
+        );
+        assert!((s.ttft_mean - out.merged.ttft().mean()).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,59 @@
+//! One cluster member: an [`Engine`] plus the local<->global request-id
+//! bookkeeping the cluster needs to merge per-replica reports back into
+//! trace order.
+//!
+//! Engines number requests densely in submission order (their `ReqId` is
+//! an index into their own request table), so a replica records, for each
+//! local id, the global trace id it was routed for. TTFT feedback for the
+//! router is read incrementally off the tail of the engine's completed
+//! records.
+
+use crate::coordinator::backend::ExecutionBackend;
+use crate::coordinator::{Engine, ReqId};
+use crate::workload::TraceRequest;
+
+use super::router::ReplicaView;
+
+pub struct Replica<B: ExecutionBackend> {
+    pub engine: Engine<B>,
+    /// Local engine id -> global trace id, in submission order. Its
+    /// length is the number of requests routed here.
+    pub global_ids: Vec<usize>,
+    /// How many completed records have already been fed to the router.
+    pub(crate) records_seen: usize,
+}
+
+impl<B: ExecutionBackend> Replica<B> {
+    pub fn new(engine: Engine<B>) -> Self {
+        Replica { engine, global_ids: Vec::new(), records_seen: 0 }
+    }
+
+    /// Requests routed to this replica so far.
+    pub fn routed(&self) -> usize {
+        self.global_ids.len()
+    }
+
+    /// Hand a routed request to the engine, recording the id mapping.
+    pub fn submit(&mut self, tr: &TraceRequest, predicted: (usize, usize)) -> ReqId {
+        let local = self.engine.submit(tr, predicted);
+        debug_assert_eq!(local, self.global_ids.len());
+        self.global_ids.push(tr.id);
+        local
+    }
+
+    /// The router's snapshot of this replica.
+    pub fn view(&self, idx: usize) -> ReplicaView<'_> {
+        ReplicaView {
+            idx,
+            waiting_len: self.engine.waiting_len(),
+            running_len: self.engine.running_len(),
+            waiting_tokens: self.engine.waiting_tokens(),
+            running_tokens: self.engine.running_tokens(),
+            waiting_prefill_s: self.engine.waiting_prefill_s(),
+            running_remaining_tokens: self.engine.running_remaining_tokens(),
+            kv: &self.engine.kv,
+            cost: &self.engine.cost,
+            cfg: &self.engine.cfg,
+        }
+    }
+}

@@ -1,0 +1,51 @@
+//! What a cluster run returns: the merged latency report (records keyed
+//! by *global* trace ids, so it is directly comparable to a single-engine
+//! `Report` on the same trace) plus each replica's own report, stats, and
+//! routed count.
+
+use crate::config::SloTargets;
+use crate::coordinator::EngineStats;
+use crate::metrics::{ClusterSummary, ReplicaSummary, Report};
+
+/// One replica's share of a finished cluster run.
+#[derive(Debug, Clone)]
+pub struct ReplicaOutcome {
+    /// Requests the router sent to this replica.
+    pub routed: usize,
+    /// Its latency report (records keyed by replica-local ids).
+    pub report: Report,
+    /// Its engine counters (dropped ids are replica-local).
+    pub stats: EngineStats,
+}
+
+/// A finished cluster run.
+#[derive(Debug, Clone)]
+pub struct ClusterReport {
+    /// All completions across replicas, with ids remapped to global trace
+    /// ids and sorted into trace order.
+    pub merged: Report,
+    /// Global trace ids of rejected requests, sorted.
+    pub dropped: Vec<usize>,
+    pub per_replica: Vec<ReplicaOutcome>,
+}
+
+impl ClusterReport {
+    /// Conservation check: completions + drops must account for every
+    /// routed request exactly once.
+    pub fn accounted(&self) -> usize {
+        self.merged.records.len() + self.dropped.len()
+    }
+
+    /// Roll up into the metrics-layer summary.
+    pub fn summary(&self, slo: &SloTargets) -> ClusterSummary {
+        let per = self
+            .per_replica
+            .iter()
+            .enumerate()
+            .map(|(i, o)| {
+                ReplicaSummary::from_report(i, o.routed, o.stats.dropped.len(), &o.report, slo)
+            })
+            .collect();
+        ClusterSummary::new(&self.merged, slo, per)
+    }
+}

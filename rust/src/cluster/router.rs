@@ -1,0 +1,396 @@
+//! Replica-selection policies: which engine a newly arrived request goes
+//! to. The router sees one read-only [`ReplicaView`] per replica —
+//! queue/running aggregates plus the replica's live `KvManager` pool
+//! counters (O(1) cached aggregates) and its `CostModel` — and returns a
+//! replica index. All four policies are deterministic (ties break toward
+//! the lowest index) and allocation-free on the decision path
+//! (`cluster/route_decision_*` in the hotpath bench guards this).
+//!
+//! * [`RoundRobin`](RouterPolicy::RoundRobin) — cycle the replicas,
+//!   ignoring all state. The baseline the cluster experiment measures
+//!   against: under skewed load it recreates exactly the head-of-line
+//!   blocking LayerKV removed inside one engine, one level up.
+//! * [`JoinShortestQueue`](RouterPolicy::JoinShortestQueue) — classic
+//!   JSQ over `waiting + running` request counts.
+//! * [`KvPressure`](RouterPolicy::KvPressure) — score replicas by free
+//!   blocks per tier (GPU full weight, host/disk discounted by their
+//!   restore cost) minus the queued + running token demand, all read
+//!   from the `KvManager`'s cached pool aggregates. Routes to the
+//!   highest score: the replica whose KV hierarchy has the most headroom
+//!   for this request's blocks.
+//! * [`SloAware`](RouterPolicy::SloAware) — predict each replica's
+//!   queueing delay (queued prefill backlog + a KV-admission stall term
+//!   derived from the §3.1.1 x-solve) and smooth it with an EWMA of the
+//!   TTFTs the replica actually delivered (the latency-probe idiom:
+//!   `ewma = alpha * sample + (1 - alpha) * ewma`). Routes to the lowest
+//!   predicted delay.
+
+use crate::config::ServingConfig;
+use crate::coordinator::block::{BlockPool, KvManager};
+use crate::sim::CostModel;
+
+/// EWMA smoothing for observed TTFT feedback: weight on the newest
+/// sample (the latency-probe idiom). Public so the serve front-end's
+/// ledger smooths TTFTs identically to the simulated SloAware policy.
+pub const EWMA_ALPHA: f64 = 0.7;
+
+/// One EWMA step: seed on the first sample, smooth thereafter. Shared by
+/// the SloAware router and the serve front-end's ledger so the two
+/// smoothing paths can never diverge.
+pub fn ewma_update(prev: Option<f64>, sample: f64) -> f64 {
+    match prev {
+        Some(e) => EWMA_ALPHA * sample + (1.0 - EWMA_ALPHA) * e,
+        None => sample,
+    }
+}
+
+/// Which replica-selection policy a cluster runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouterPolicy {
+    RoundRobin,
+    JoinShortestQueue,
+    KvPressure,
+    SloAware,
+}
+
+impl RouterPolicy {
+    /// Every policy, in reporting order.
+    pub const ALL: &'static [RouterPolicy] = &[
+        RouterPolicy::RoundRobin,
+        RouterPolicy::JoinShortestQueue,
+        RouterPolicy::KvPressure,
+        RouterPolicy::SloAware,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RouterPolicy::RoundRobin => "round-robin",
+            RouterPolicy::JoinShortestQueue => "jsq",
+            RouterPolicy::KvPressure => "kv-pressure",
+            RouterPolicy::SloAware => "slo-aware",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<RouterPolicy> {
+        match s {
+            "round-robin" | "rr" => Some(RouterPolicy::RoundRobin),
+            "jsq" | "shortest-queue" => Some(RouterPolicy::JoinShortestQueue),
+            "kv-pressure" | "kv" => Some(RouterPolicy::KvPressure),
+            "slo-aware" | "slo" => Some(RouterPolicy::SloAware),
+            _ => None,
+        }
+    }
+}
+
+/// Read-only snapshot of one replica at routing time. The pool counters
+/// behind `kv` are the `BlockPool`s' O(1) cached aggregates; the
+/// queue/running sums are O(queue) scans taken once per routing decision
+/// (per *arrival*, not per engine step — cheap at that cadence).
+/// `kv`/`cost`/`cfg` borrow the replica's live state directly (no
+/// copies).
+pub struct ReplicaView<'a> {
+    pub idx: usize,
+    pub waiting_len: usize,
+    pub running_len: usize,
+    /// Σ prefill tokens over the queue.
+    pub waiting_tokens: usize,
+    /// Σ context tokens over the running set.
+    pub running_tokens: usize,
+    /// Σ modeled prefill seconds over the queue.
+    pub waiting_prefill_s: f64,
+    /// Σ predicted-median remaining output tokens over the running set.
+    pub running_remaining_tokens: usize,
+    pub kv: &'a KvManager,
+    pub cost: &'a CostModel,
+    pub cfg: &'a ServingConfig,
+}
+
+/// A replica-selection policy instance (may carry state: the round-robin
+/// cursor, the EWMA table).
+pub trait Router {
+    fn name(&self) -> &'static str;
+
+    /// Pick a replica for a request of `prompt_len` tokens. `views` holds
+    /// one entry per replica, in replica order; implementations must
+    /// return one of the given `idx` values.
+    fn route(&mut self, prompt_len: usize, views: &[ReplicaView]) -> usize;
+
+    /// Feedback: a request routed to `replica` completed with this TTFT.
+    /// Only feedback-driven policies keep it.
+    fn observe_ttft(&mut self, replica: usize, ttft_s: f64) {
+        let _ = (replica, ttft_s);
+    }
+}
+
+/// Construct the router for a policy.
+pub fn make_router(policy: RouterPolicy, n_replicas: usize) -> Box<dyn Router> {
+    match policy {
+        RouterPolicy::RoundRobin => Box::new(RoundRobinRouter { next: 0 }),
+        RouterPolicy::JoinShortestQueue => Box::new(JsqRouter),
+        RouterPolicy::KvPressure => Box::new(KvPressureRouter),
+        RouterPolicy::SloAware => {
+            Box::new(SloAwareRouter { ewma_ttft_s: vec![None; n_replicas] })
+        }
+    }
+}
+
+/// Cycle replicas in order, state-blind.
+#[derive(Debug)]
+pub struct RoundRobinRouter {
+    next: usize,
+}
+
+impl Router for RoundRobinRouter {
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+
+    fn route(&mut self, _prompt_len: usize, views: &[ReplicaView]) -> usize {
+        let i = self.next % views.len();
+        self.next = self.next.wrapping_add(1);
+        views[i].idx
+    }
+}
+
+/// Join the shortest queue (waiting + running request count).
+#[derive(Debug)]
+pub struct JsqRouter;
+
+impl Router for JsqRouter {
+    fn name(&self) -> &'static str {
+        "jsq"
+    }
+
+    fn route(&mut self, _prompt_len: usize, views: &[ReplicaView]) -> usize {
+        let mut best = views[0].idx;
+        let mut best_depth = usize::MAX;
+        for v in views {
+            let depth = v.waiting_len + v.running_len;
+            if depth < best_depth {
+                best_depth = depth;
+                best = v.idx;
+            }
+        }
+        best
+    }
+}
+
+/// Free-blocks-per-tier minus queued token demand. Deeper tiers count for
+/// less headroom (their restores cost more), in rough proportion to the
+/// PCIe-vs-NVMe link gap.
+#[derive(Debug)]
+pub struct KvPressureRouter;
+
+/// The KvPressure score (higher = more headroom). Public so the hotpath
+/// bench and tests can pin its behaviour directly.
+pub fn kv_pressure_score(v: &ReplicaView) -> f64 {
+    let frac = |p: &BlockPool| {
+        if p.total() == 0 {
+            0.0
+        } else {
+            p.available() as f64 / p.total() as f64
+        }
+    };
+    let free = frac(&v.kv.gpu) + 0.25 * frac(&v.kv.cpu) + 0.10 * frac(&v.kv.disk);
+    // all queued + running tokens, charged at full-KV block demand — the
+    // upper bound on what this replica's pools still owe
+    let demand_blocks = (v.waiting_tokens + v.running_tokens).div_ceil(v.cfg.block_size)
+        * v.cfg.model.n_layers;
+    let demand = demand_blocks as f64 / v.kv.gpu.total().max(1) as f64;
+    free - demand
+}
+
+impl Router for KvPressureRouter {
+    fn name(&self) -> &'static str {
+        "kv-pressure"
+    }
+
+    fn route(&mut self, _prompt_len: usize, views: &[ReplicaView]) -> usize {
+        let mut best = views[0].idx;
+        let mut best_score = f64::NEG_INFINITY;
+        for v in views {
+            let score = kv_pressure_score(v);
+            if score > best_score {
+                best_score = score;
+                best = v.idx;
+            }
+        }
+        best
+    }
+}
+
+/// Predicted queueing delay + EWMA-smoothed observed TTFT, lowest wins.
+#[derive(Debug)]
+pub struct SloAwareRouter {
+    /// Per-replica EWMA of delivered TTFTs (None until first feedback).
+    ewma_ttft_s: Vec<Option<f64>>,
+}
+
+impl SloAwareRouter {
+    /// Model-predicted queueing delay for a `prompt_len` request landing
+    /// on this replica now: the queued prefill backlog, plus — when the
+    /// §3.1.1 x-solve says more GPU blocks must stay resident than are
+    /// free — the fraction of the outstanding decode work that has to
+    /// finish before those blocks exist.
+    pub fn predicted_delay(&self, prompt_len: usize, v: &ReplicaView) -> f64 {
+        let mut delay = v.waiting_prefill_s;
+        let x = v.cost.min_resident_layers(prompt_len);
+        let need = prompt_len.div_ceil(v.cfg.block_size) * x;
+        let free = v.kv.gpu.available();
+        if need > free {
+            let used = v.kv.gpu.total().saturating_sub(free);
+            let deficit_frac = ((need - free) as f64 / used.max(1) as f64).min(1.0);
+            let lanes = v.running_len.max(1);
+            let iters = (v.running_remaining_tokens as f64 / lanes as f64).ceil();
+            let iter_s = v.cost.decode_step_time_sum(v.running_tokens, lanes);
+            delay += deficit_frac * iters * iter_s;
+        }
+        delay + self.ewma_ttft_s.get(v.idx).copied().flatten().unwrap_or(0.0)
+    }
+}
+
+impl Router for SloAwareRouter {
+    fn name(&self) -> &'static str {
+        "slo-aware"
+    }
+
+    fn route(&mut self, prompt_len: usize, views: &[ReplicaView]) -> usize {
+        let mut best = views[0].idx;
+        let mut best_delay = f64::INFINITY;
+        for v in views {
+            let d = self.predicted_delay(prompt_len, v);
+            if d < best_delay {
+                best_delay = d;
+                best = v.idx;
+            }
+        }
+        best
+    }
+
+    fn observe_ttft(&mut self, replica: usize, ttft_s: f64) {
+        if replica >= self.ewma_ttft_s.len() {
+            self.ewma_ttft_s.resize(replica + 1, None);
+        }
+        self.ewma_ttft_s[replica] = Some(ewma_update(self.ewma_ttft_s[replica], ttft_s));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ServingConfig;
+
+    struct Fixture {
+        cfg: ServingConfig,
+        cost: CostModel,
+        kvs: Vec<KvManager>,
+    }
+
+    impl Fixture {
+        /// `fills[i]` requests of 2048 tokens, 8 resident layers each,
+        /// pre-allocated on replica i's pools.
+        fn new(fills: &[usize]) -> Self {
+            let cfg = ServingConfig::llama2_7b_tp1();
+            let cost = CostModel::new(cfg.clone());
+            let kvs = fills
+                .iter()
+                .map(|&fill| {
+                    let mut m =
+                        KvManager::new(100_000, 500_000, cfg.block_size, cfg.model.n_layers);
+                    for r in 0..fill {
+                        m.allocate_layerwise(r, 2048, 8).unwrap();
+                    }
+                    m
+                })
+                .collect();
+            Fixture { cfg, cost, kvs }
+        }
+
+        /// Views with queue depth `queues[i]` requests of 1k tokens each.
+        fn views(&self, queues: &[usize]) -> Vec<ReplicaView<'_>> {
+            self.kvs
+                .iter()
+                .enumerate()
+                .map(|(i, kv)| ReplicaView {
+                    idx: i,
+                    waiting_len: queues[i],
+                    running_len: 0,
+                    waiting_tokens: queues[i] * 1024,
+                    running_tokens: 0,
+                    waiting_prefill_s: queues[i] as f64
+                        * self.cost.prefill_time(1024),
+                    running_remaining_tokens: 0,
+                    kv,
+                    cost: &self.cost,
+                    cfg: &self.cfg,
+                })
+                .collect()
+        }
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let f = Fixture::new(&[0, 0, 0]);
+        let views = f.views(&[0, 0, 0]);
+        let mut r = make_router(RouterPolicy::RoundRobin, 3);
+        let picks: Vec<usize> = (0..6).map(|_| r.route(512, &views)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn jsq_picks_shortest_and_breaks_ties_low() {
+        let f = Fixture::new(&[0, 0, 0]);
+        let views = f.views(&[4, 1, 1]);
+        let mut r = make_router(RouterPolicy::JoinShortestQueue, 3);
+        assert_eq!(r.route(512, &views), 1); // tie between 1 and 2 -> 1
+        let views = f.views(&[0, 0, 0]);
+        assert_eq!(r.route(512, &views), 0);
+    }
+
+    #[test]
+    fn kv_pressure_prefers_free_pools_over_queued_demand() {
+        // replica 0: heavily allocated pools; replica 1: empty
+        let f = Fixture::new(&[64, 0]);
+        let views = f.views(&[0, 0]);
+        let mut r = make_router(RouterPolicy::KvPressure, 2);
+        assert_eq!(r.route(2048, &views), 1);
+        assert!(kv_pressure_score(&views[1]) > kv_pressure_score(&views[0]));
+        // equal pools but replica 1 has queued token demand -> pick 0
+        let g = Fixture::new(&[0, 0]);
+        let views = g.views(&[0, 8]);
+        assert_eq!(r.route(2048, &views), 0);
+    }
+
+    #[test]
+    fn slo_aware_avoids_prefill_backlog_and_bad_ttft_history() {
+        let f = Fixture::new(&[0, 0]);
+        // replica 0 has a deep prefill backlog -> route to 1
+        let views = f.views(&[10, 0]);
+        let mut r = make_router(RouterPolicy::SloAware, 2);
+        assert_eq!(r.route(2048, &views), 1);
+        // equal backlogs, but replica 1 has been delivering terrible TTFT
+        let views = f.views(&[1, 1]);
+        r.observe_ttft(0, 0.1);
+        r.observe_ttft(1, 30.0);
+        assert_eq!(r.route(2048, &views), 0);
+    }
+
+    #[test]
+    fn slo_aware_ewma_converges_toward_new_samples() {
+        let mut r = SloAwareRouter { ewma_ttft_s: vec![None; 1] };
+        r.observe_ttft(0, 1.0);
+        assert_eq!(r.ewma_ttft_s[0], Some(1.0));
+        r.observe_ttft(0, 2.0);
+        // alpha = 0.7: 0.7*2 + 0.3*1
+        assert!((r.ewma_ttft_s[0].unwrap() - 1.7).abs() < 1e-12);
+    }
+
+    #[test]
+    fn policy_names_roundtrip() {
+        for p in RouterPolicy::ALL {
+            assert_eq!(RouterPolicy::parse(p.name()), Some(*p));
+            assert_eq!(make_router(*p, 4).name(), p.name());
+        }
+        assert_eq!(RouterPolicy::parse("nope"), None);
+    }
+}

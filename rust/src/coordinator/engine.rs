@@ -46,7 +46,7 @@ use crate::coordinator::request::{Phase, ReqId, Request};
 use crate::coordinator::scheduler::{make_scheduler, Action, SchedContext, Scheduler};
 use crate::metrics::{Report, RequestRecord, TierTransition};
 use crate::sim::CostModel;
-use crate::workload::Trace;
+use crate::workload::{Trace, TraceRequest};
 
 /// Counters the experiments report alongside latency. Every `disk_*` /
 /// `spill*` field stays exactly 0 in the two-tier configuration (disk
@@ -134,6 +134,10 @@ pub struct Engine<B: ExecutionBackend = SimBackend> {
     /// Reusable per-step buffers (decode batch, finished list).
     active_buf: Vec<ReqId>,
     finished_buf: Vec<ReqId>,
+    /// Σ (prompt + output) tokens handed to `submit` — the incremental
+    /// path's livelock step bound grows with it (`try_run` derives the
+    /// same bound from the whole trace upfront).
+    submitted_tokens: u64,
 }
 
 impl Engine<SimBackend> {
@@ -188,6 +192,7 @@ impl<B: ExecutionBackend> Engine<B> {
             transitions: None,
             active_buf: Vec::new(),
             finished_buf: Vec::new(),
+            submitted_tokens: 0,
         }
     }
 
@@ -355,6 +360,170 @@ impl<B: ExecutionBackend> Engine<B> {
                     || per_layer * (l - x) > self.kv.cpu.total()
             }
         }
+    }
+
+    // --- incremental driving (the cluster/ lockstep API) ----------------
+    //
+    // `try_run` owns the whole trace and its arrival clock; a
+    // `cluster::Cluster` instead owns arrival time itself and drives each
+    // replica engine through `submit` + `step_once`. The two paths are
+    // deliberately line-for-line parallel: a 1-replica cluster on a trace
+    // must be bit-identical to `try_run` on the same trace
+    // (`tests/prop_cluster.rs` asserts it).
+
+    /// Enqueue one request at the engine's current time. The caller must
+    /// have advanced the clock to (at least) the request's arrival via
+    /// [`Engine::wait_until`]. Returns the engine-local id (dense, in
+    /// submission order) — the caller keeps the local -> global mapping.
+    pub fn submit(&mut self, tr: &TraceRequest, predicted: (usize, usize)) -> ReqId {
+        let local: ReqId = self.requests.len();
+        let mut r = Request::from_trace(tr, predicted);
+        r.id = local;
+        self.submitted_tokens += (tr.prompt_len + tr.output_len) as u64;
+        let supported = self.backend.supports_prompt(r.prompt_len);
+        self.requests.push(r);
+        if supported {
+            self.waiting.push_back(local);
+        } else {
+            // mirrors try_run's arrival-time rejection of prompts the
+            // executor can never run
+            self.stats.dropped.push(local);
+            self.requests[local].phase = Phase::Finished;
+        }
+        local
+    }
+
+    /// One scheduling step of the incremental path — the body of
+    /// `try_run`'s loop with the arrival bookkeeping lifted out. Returns
+    /// `Ok(true)` when state changed (a step ran or a hopeless request was
+    /// dropped) and `Ok(false)` when the engine can make no progress until
+    /// the caller submits more work (or, with `draining`, is fully
+    /// drained). `draining` corresponds to `try_run` having exhausted its
+    /// arrivals: a queue blocked with nothing running drops its head
+    /// instead of waiting for input that will never come.
+    pub fn step_once(&mut self, draining: bool) -> anyhow::Result<bool> {
+        self.oracle_refresh();
+        let action = {
+            let waiting = self.waiting.make_contiguous();
+            let ctx = SchedContext {
+                now: self.backend.clock().now(),
+                waiting,
+                running: &self.running,
+                requests: &self.requests,
+                kv: &self.kv,
+                cost: &self.cost,
+                cfg: &self.cfg,
+            };
+            self.scheduler.decide(&ctx)
+        };
+        match action {
+            Action::Prefill(reqs) => self.step_prefill(&reqs)?,
+            Action::Decode => self.step_decode()?,
+            Action::Wait => {
+                if let Some(&r) = self.waiting.front() {
+                    if self.never_fits(r) {
+                        self.waiting.pop_front();
+                        self.stats.dropped.push(r);
+                        self.requests[r].phase = Phase::Finished;
+                        return Ok(true); // try_run's `continue`: no step count
+                    }
+                }
+                if self.running.is_empty() && self.waiting.is_empty() {
+                    return Ok(false); // drained (try_run's `break`)
+                }
+                if !draining {
+                    // blocked until new input; the caller advances the
+                    // clock at the next submit (try_run's wait_until path)
+                    return Ok(false);
+                }
+                if self.running.is_empty() {
+                    // no arrivals will ever come: drop the blocked head,
+                    // exactly as try_run does past its last arrival
+                    let r = self.waiting.pop_front().unwrap();
+                    self.stats.dropped.push(r);
+                    self.requests[r].phase = Phase::Finished;
+                }
+                // falls through to the step count, as in try_run
+            }
+        }
+        self.stats.steps += 1;
+        let bound = 1000 + 4 * self.submitted_tokens;
+        if self.backend.bounded_steps() && self.stats.steps > bound {
+            panic!(
+                "engine exceeded {bound} steps ({} waiting, {} running) — livelock",
+                self.waiting.len(),
+                self.running.len()
+            );
+        }
+        Ok(true)
+    }
+
+    /// Engine time now (the backend clock).
+    pub fn now(&self) -> f64 {
+        self.backend.clock().now()
+    }
+
+    /// Advance the clock to `t` (never backwards) — the incremental
+    /// equivalent of `try_run`'s idle-until-next-arrival jump.
+    pub fn wait_until(&mut self, t: f64) {
+        self.backend.clock_mut().wait_until(t);
+    }
+
+    /// Anything queued or decoding?
+    pub fn has_work(&self) -> bool {
+        !self.running.is_empty() || !self.waiting.is_empty()
+    }
+
+    /// Completed-request records so far (appended in completion order).
+    /// The cluster router reads TTFT feedback from the tail of this.
+    pub fn records(&self) -> &[RequestRecord] {
+        &self.records
+    }
+
+    /// Close out an incremental run: the same report `try_run` returns.
+    pub fn take_report(&mut self) -> Report {
+        Report::new(std::mem::take(&mut self.records))
+    }
+
+    // --- router-facing load views ---------------------------------------
+
+    pub fn waiting_len(&self) -> usize {
+        self.waiting.len()
+    }
+
+    pub fn running_len(&self) -> usize {
+        self.running.len()
+    }
+
+    /// Σ prefill tokens over the queue — the queued token demand a
+    /// KV-pressure router scores against the pools.
+    pub fn waiting_tokens(&self) -> usize {
+        self.waiting.iter().map(|&r| self.requests[r].prefill_len()).sum()
+    }
+
+    /// Σ context tokens over the running set (what decode iterations
+    /// stream each step).
+    pub fn running_tokens(&self) -> usize {
+        self.running.iter().map(|&r| self.requests[r].context_len()).sum()
+    }
+
+    /// Σ modeled prefill time over the queue — the prefill backlog an
+    /// SLO-aware router counts as unavoidable delay ahead of a new
+    /// request.
+    pub fn waiting_prefill_s(&self) -> f64 {
+        self.waiting.iter().map(|&r| self.cost.prefill_time(self.requests[r].prefill_len())).sum()
+    }
+
+    /// Σ predicted-median remaining output tokens over the running set —
+    /// the decode work outstanding before blocks free up.
+    pub fn running_remaining_tokens(&self) -> usize {
+        self.running
+            .iter()
+            .map(|&r| {
+                let req = &self.requests[r];
+                req.predicted_median().saturating_sub(req.generated)
+            })
+            .sum()
     }
 
     // --- incremental-state upkeep --------------------------------------
@@ -1125,6 +1294,45 @@ mod tests {
         assert_eq!(count(TIER_HOST, TIER_DISK), 0);
         // time-ordered
         assert!(log.windows(2).all(|w| w[0].t <= w[1].t));
+    }
+
+    #[test]
+    fn submit_step_once_matches_try_run_smoke() {
+        // full randomized coverage lives in tests/prop_cluster.rs (the
+        // 1-replica cluster bit-identity property); this is the fast
+        // in-tree guard that the incremental API mirrors try_run
+        for policy in [Policy::Vllm, Policy::LayerKv { slo_aware: true }] {
+            let cfg = ServingConfig::llama2_7b_tp1().with_policy(policy);
+            let trace = small_trace(1024, 12, 2.0);
+            let (bare, bare_stats) = run_trace(cfg.clone(), &trace, 0.8);
+
+            let predictor = standard_predictor(&trace, 0.8);
+            let mut e = Engine::new(cfg, predictor.clone());
+            for tr in &trace.requests {
+                // drive the engine up to this arrival, then hand it over
+                // (the same pattern Cluster::run uses; the 1e-12 mirrors
+                // try_run's arrival-admission epsilon)
+                while tr.arrival > e.now() + 1e-12 {
+                    if !e.step_once(false).unwrap() {
+                        break;
+                    }
+                }
+                if tr.arrival > e.now() + 1e-12 {
+                    e.wait_until(tr.arrival);
+                }
+                e.submit(tr, predictor.predict(tr.id, tr.output_len));
+            }
+            while e.has_work() {
+                if !e.step_once(true).unwrap() {
+                    break;
+                }
+            }
+            let inc_stats = e.stats().clone();
+            let inc = e.take_report();
+            assert_eq!(inc.records, bare.records, "policy {policy:?}");
+            assert_eq!(inc.makespan.to_bits(), bare.makespan.to_bits());
+            assert_eq!(inc_stats, bare_stats, "policy {policy:?}");
+        }
     }
 
     #[test]

@@ -28,6 +28,7 @@
 #![allow(clippy::needless_range_loop)]
 
 pub mod benchutil;
+pub mod cluster;
 pub mod config;
 pub mod runtime;
 pub mod coordinator;

@@ -1,19 +1,21 @@
 //! LayerKV command-line entry point.
 //!
 //! ```text
-//! layerkv experiment <fig1|fig4|fig5|fig6|fig7|fig8|tiers|table1|all> [--quick]
+//! layerkv experiment <fig1|fig4|fig5|fig6|fig7|fig8|tiers|bursty|cluster|table1|all> [--quick]
 //! layerkv sim --model <7b|34b|70b> --policy <vllm|layerkv|layerkv-no-slo>
 //!             --ctx <tokens> --rate <req/s> --requests <n> [--sharegpt]
 //! layerkv serve [--addr 127.0.0.1:7181] [--artifacts DIR] [--budget BYTES]
 //!               [--policy <vllm|layerkv|layerkv-no-slo>] [--max-batch N]
-//!               [--ref-model]
+//!               [--ref-model] [--replicas N] [--router <policy>]
 //! layerkv selftest [--artifacts DIR]
 //! ```
 //!
 //! `serve --policy` exercises every scheduler against real tokens —
 //! the same `make_scheduler` policies the simulator runs. `--ref-model`
 //! serves the deterministic in-process executor instead of PJRT
-//! artifacts (works offline).
+//! artifacts (works offline). `--replicas N` runs N engine workers behind
+//! the front-end, with `--router` picking the replica-selection policy
+//! (round-robin | jsq | kv-pressure | slo-aware — see `cluster/`).
 //!
 //! Argument parsing is hand-rolled (clap is unavailable offline).
 
@@ -60,10 +62,11 @@ fn print_help() {
         "layerkv — layer-wise KV cache management for LLM serving (paper reproduction)\n\
          \n\
          USAGE:\n\
-         \x20 layerkv experiment <fig1|fig4|fig5|fig6|fig7|fig8|tiers|table1|all> [--quick]\n\
+         \x20 layerkv experiment <fig1|fig4|fig5|fig6|fig7|fig8|tiers|bursty|cluster|table1|all> [--quick]\n\
          \x20 layerkv sim --model 7b --policy layerkv --ctx 4096 --rate 1.0 --requests 100 [--sharegpt]\n\
          \x20 layerkv serve [--addr 127.0.0.1:7181] [--artifacts DIR] [--budget BYTES]\n\
          \x20               [--policy vllm|layerkv|layerkv-no-slo] [--max-batch N] [--ref-model]\n\
+         \x20               [--replicas N] [--router round-robin|jsq|kv-pressure|slo-aware]\n\
          \x20 layerkv selftest [--artifacts DIR]"
     );
 }
@@ -92,12 +95,16 @@ fn cmd_experiment(args: &[String]) -> anyhow::Result<()> {
             "table1" => exp::print_table1(),
             "fig8" => exp::print_fig8(&exp::fig8()),
             "tiers" => exp::print_tier_sweep(&exp::tier_sweep()),
+            "bursty" => exp::print_bursty(&exp::bursty()),
+            "cluster" => exp::print_cluster(&exp::cluster_sweep()),
             other => anyhow::bail!("unknown experiment '{other}'"),
         }
         Ok(())
     };
     if which == "all" {
-        for id in ["table1", "fig1", "fig4", "fig5", "fig6", "fig7", "fig8", "tiers"] {
+        for id in
+            ["table1", "fig1", "fig4", "fig5", "fig6", "fig7", "fig8", "tiers", "bursty", "cluster"]
+        {
             run(id)?;
         }
         Ok(())
@@ -187,6 +194,13 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
     let budget: usize = opt(args, "--budget").unwrap_or_else(|| "2097152".into()).parse()?;
     let policy = parse_policy(opt(args, "--policy").as_deref().unwrap_or("layerkv"))?;
     let max_batch: usize = opt(args, "--max-batch").unwrap_or_else(|| "8".into()).parse()?;
+    let replicas: usize = opt(args, "--replicas").unwrap_or_else(|| "1".into()).parse()?;
+    anyhow::ensure!(replicas >= 1, "--replicas must be at least 1");
+    let router_name = opt(args, "--router").unwrap_or_else(|| "kv-pressure".into());
+    let router = layerkv::cluster::RouterPolicy::parse(&router_name)
+        .ok_or_else(|| anyhow::anyhow!(
+            "unknown router '{router_name}' (round-robin|jsq|kv-pressure|slo-aware)"
+        ))?;
     let cfg = layerkv::runtime::RealEngineConfig {
         device_kv_budget: budget,
         policy,
@@ -194,7 +208,7 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
         ..Default::default()
     };
     let artifacts = (!flag(args, "--ref-model")).then_some(dir.as_path());
-    layerkv::server::serve(&addr, artifacts, cfg)
+    layerkv::server::serve(&addr, artifacts, cfg, replicas, router)
 }
 
 fn cmd_selftest(args: &[String]) -> anyhow::Result<()> {

@@ -153,6 +153,77 @@ impl Report {
     }
 }
 
+/// One replica's slice of a cluster run, rolled up for the cluster
+/// experiments and the per-replica report the `cluster/` subsystem emits.
+#[derive(Debug, Clone)]
+pub struct ReplicaSummary {
+    pub replica: usize,
+    /// Requests the router sent here (completed + dropped + in flight;
+    /// after a drained run, completed + dropped).
+    pub routed: usize,
+    pub completed: usize,
+    pub dropped: usize,
+    pub ttft_mean: f64,
+    pub ttft_p99: f64,
+    pub viol_rate: f64,
+}
+
+impl ReplicaSummary {
+    pub fn from_report(
+        replica: usize,
+        routed: usize,
+        dropped: usize,
+        report: &Report,
+        slo: &SloTargets,
+    ) -> Self {
+        let mut ttft = report.ttft();
+        ReplicaSummary {
+            replica,
+            routed,
+            completed: report.records.len(),
+            dropped,
+            ttft_mean: ttft.mean(),
+            ttft_p99: ttft.p99(),
+            viol_rate: report.slo_violation_rate(slo),
+        }
+    }
+}
+
+/// Cluster-wide rollup: the merged latency distribution plus each
+/// replica's share.
+#[derive(Debug, Clone)]
+pub struct ClusterSummary {
+    pub ttft_mean: f64,
+    pub ttft_p99: f64,
+    pub viol_rate: f64,
+    pub throughput_tok_s: f64,
+    pub per_replica: Vec<ReplicaSummary>,
+}
+
+impl ClusterSummary {
+    pub fn new(merged: &Report, slo: &SloTargets, per_replica: Vec<ReplicaSummary>) -> Self {
+        let mut ttft = merged.ttft();
+        ClusterSummary {
+            ttft_mean: ttft.mean(),
+            ttft_p99: ttft.p99(),
+            viol_rate: merged.slo_violation_rate(slo),
+            throughput_tok_s: merged.throughput_tok_s(),
+            per_replica,
+        }
+    }
+
+    /// Largest fraction of routed requests any one replica received —
+    /// 1/n for perfect balance, 1.0 when one replica got everything.
+    pub fn max_share(&self) -> f64 {
+        let total: usize = self.per_replica.iter().map(|r| r.routed).sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let max = self.per_replica.iter().map(|r| r.routed).max().unwrap_or(0);
+        max as f64 / total as f64
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -207,6 +278,27 @@ mod tests {
         assert_eq!(tr.render(), tr.clone().render());
         assert!(tr.render().contains("1->2"));
         assert!(tr.render().contains("req=3"));
+    }
+
+    #[test]
+    fn cluster_summary_rollup_and_balance() {
+        let slo = SloTargets { ttft_s: 3.0, tpot_s: 10.0 };
+        let fast = Report::new(vec![rec(0, 0.0, 0.5, 1.0, 2.0, 10)]);
+        let slow = Report::new(vec![rec(1, 0.0, 3.0, 4.0, 5.0, 10)]);
+        let merged = Report::new(
+            fast.records.iter().chain(slow.records.iter()).cloned().collect(),
+        );
+        let per = vec![
+            ReplicaSummary::from_report(0, 3, 0, &fast, &slo),
+            ReplicaSummary::from_report(1, 1, 0, &slow, &slo),
+        ];
+        assert_eq!(per[0].completed, 1);
+        assert_eq!(per[0].viol_rate, 0.0);
+        assert_eq!(per[1].viol_rate, 1.0); // ttft 4 > 3
+        let s = ClusterSummary::new(&merged, &slo, per);
+        assert_eq!(s.per_replica.len(), 2);
+        assert!((s.viol_rate - 0.5).abs() < 1e-12);
+        assert!((s.max_share() - 0.75).abs() < 1e-12); // 3 of 4 routed
     }
 
     #[test]

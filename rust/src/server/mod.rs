@@ -1,5 +1,5 @@
 //! Serving front-end: a line-delimited TCP protocol over the real engine
-//! (S18). Thread-per-connection with a shared single engine worker —
+//! (S18). Thread-per-connection over one or more engine workers —
 //! std::thread + mpsc stand in for tokio, which is unavailable offline
 //! (DESIGN.md §2).
 //!
@@ -17,6 +17,15 @@
 //! scheduler `--policy` selects (vLLM baseline, LayerKV, LayerKV without
 //! the SLO gate) — the same `make_scheduler` policies the simulator runs.
 //!
+//! With `--replicas N` the front-end runs N engine workers — each its own
+//! thread, its own engine, its own job queue, exactly the shape of one
+//! serving process per replica in a real deployment — and routes every
+//! request with the `cluster/` router policy selected by `--router`.
+//! Worker engines cannot be inspected across threads (as replica
+//! processes cannot across nodes), so the front-end routes on its own
+//! load ledger: queued jobs, in-flight tokens (the KV-demand proxy a
+//! replica would export), and an EWMA of each worker's delivered TTFTs.
+//!
 //! Example session: `cargo run --release -- serve` then
 //! `printf '{"id":1,"prompt":[1,2,3],"max_new_tokens":4}\n' | nc 127.0.0.1 7181`
 
@@ -25,11 +34,14 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::path::Path;
 use std::rc::Rc;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 
 use anyhow::{Context, Result};
 
+use crate::cluster::router::ewma_update;
+use crate::cluster::RouterPolicy;
 use crate::runtime::{RealEngine, RealEngineConfig, RefModel, ServeRequest, TokenModel};
 use crate::util::Json;
 
@@ -37,6 +49,136 @@ use crate::util::Json;
 struct Job {
     req: ServeRequest,
     reply: mpsc::Sender<String>,
+}
+
+/// One worker's share of the front-end load ledger.
+#[derive(Debug, Clone, Default)]
+struct WorkerLoad {
+    /// Jobs routed here and not yet answered.
+    queued_jobs: usize,
+    /// Σ (prompt + max_new) tokens of those jobs — the KV-demand proxy.
+    queued_tokens: usize,
+    /// EWMA of TTFTs this worker delivered (None until the first).
+    ewma_ttft_s: Option<f64>,
+    /// Its queue receiver is gone (worker thread died): never route here
+    /// again, and ignore whatever in-flight ledger shares it froze.
+    dead: bool,
+}
+
+/// Rough per-token service time of the CPU executors — only used to put
+/// queued tokens and observed TTFT on one axis for slo-aware picks.
+const SERVE_TOKEN_S: f64 = 1e-3;
+
+/// Pick a live worker for a job of `tokens` under `policy`; None when
+/// every worker is dead. `rr` is the round-robin cursor value for this
+/// job. Ties break toward the lowest index, like the simulation router.
+fn pick_worker(policy: RouterPolicy, loads: &[WorkerLoad], rr: usize) -> Option<usize> {
+    let alive = loads.iter().filter(|l| !l.dead).count();
+    if alive == 0 {
+        return None;
+    }
+    let argmin = |score: &dyn Fn(&WorkerLoad) -> f64| -> usize {
+        let mut best = 0usize;
+        let mut best_score = f64::INFINITY;
+        for (i, l) in loads.iter().enumerate() {
+            if l.dead {
+                continue;
+            }
+            let s = score(l);
+            if s < best_score {
+                best_score = s;
+                best = i;
+            }
+        }
+        best
+    };
+    Some(match policy {
+        RouterPolicy::RoundRobin => {
+            // cycle over the live workers only
+            let nth = rr % alive;
+            loads
+                .iter()
+                .enumerate()
+                .filter(|(_, l)| !l.dead)
+                .nth(nth)
+                .map(|(i, _)| i)
+                .unwrap_or(0)
+        }
+        RouterPolicy::JoinShortestQueue => argmin(&|l| l.queued_jobs as f64),
+        RouterPolicy::KvPressure => argmin(&|l| l.queued_tokens as f64),
+        RouterPolicy::SloAware => argmin(&|l| {
+            l.queued_tokens as f64 * SERVE_TOKEN_S + l.ewma_ttft_s.unwrap_or(0.0)
+        }),
+    })
+}
+
+/// The shared front-end: per-worker queues plus the load ledger the
+/// router reads.
+struct Frontend {
+    policy: RouterPolicy,
+    rr: AtomicUsize,
+    loads: Mutex<Vec<WorkerLoad>>,
+    txs: Vec<Mutex<mpsc::Sender<Job>>>,
+}
+
+impl Frontend {
+    fn new(policy: RouterPolicy, txs: Vec<mpsc::Sender<Job>>) -> Self {
+        Frontend {
+            policy,
+            rr: AtomicUsize::new(0),
+            loads: Mutex::new(vec![WorkerLoad::default(); txs.len()]),
+            txs: txs.into_iter().map(Mutex::new).collect(),
+        }
+    }
+
+    /// Route and enqueue one job; false only when every worker is gone.
+    /// A send failure marks that worker dead and retries the others, so
+    /// one crashed engine degrades capacity instead of killing clients.
+    fn dispatch(&self, req: ServeRequest, reply: mpsc::Sender<String>) -> bool {
+        let tokens = req.prompt.len() + req.max_new_tokens;
+        let mut job = Job { req, reply };
+        for _ in 0..self.txs.len() {
+            let w = {
+                let mut loads = self.loads.lock().expect("load ledger poisoned");
+                let rr = self.rr.fetch_add(1, Ordering::Relaxed);
+                let Some(w) = pick_worker(self.policy, &loads, rr) else {
+                    return false; // every worker is dead
+                };
+                loads[w].queued_jobs += 1;
+                loads[w].queued_tokens += tokens;
+                w
+            };
+            let result = {
+                let guard = self.txs[w].lock().expect("engine queue poisoned");
+                guard.send(job)
+            };
+            match result {
+                Ok(()) => return true,
+                Err(mpsc::SendError(unsent)) => {
+                    // recover the job, roll the ledger share back, and
+                    // fence the dead worker off before retrying
+                    job = unsent;
+                    let mut loads = self.loads.lock().expect("load ledger poisoned");
+                    loads[w].queued_jobs = loads[w].queued_jobs.saturating_sub(1);
+                    loads[w].queued_tokens = loads[w].queued_tokens.saturating_sub(tokens);
+                    loads[w].dead = true;
+                }
+            }
+        }
+        false
+    }
+
+    /// A worker finished (or rejected) a job: release its ledger share
+    /// and feed the TTFT back when one was delivered.
+    fn job_done(&self, worker: usize, tokens: usize, ttft_s: Option<f64>) {
+        let mut loads = self.loads.lock().expect("load ledger poisoned");
+        let l = &mut loads[worker];
+        l.queued_jobs = l.queued_jobs.saturating_sub(1);
+        l.queued_tokens = l.queued_tokens.saturating_sub(tokens);
+        if let Some(t) = ttft_s {
+            l.ewma_ttft_s = Some(ewma_update(l.ewma_ttft_s, t));
+        }
+    }
 }
 
 /// Parse one request line.
@@ -82,8 +224,16 @@ fn render_error(id: Option<usize>, msg: &str) -> String {
     Json::Obj(obj).dump()
 }
 
-/// Engine worker: drains the job queue, batching whatever is pending.
-fn engine_worker<M: TokenModel>(mut engine: RealEngine<M>, rx: mpsc::Receiver<Job>) {
+/// Engine worker: drains its job queue, batching whatever is pending,
+/// and reports completions back to the front-end ledger.
+fn engine_worker<M: TokenModel>(
+    mut engine: RealEngine<M>,
+    rx: mpsc::Receiver<Job>,
+    front: Arc<Frontend>,
+    worker: usize,
+) {
+    let job_tokens =
+        |j: &Job| -> usize { j.req.prompt.len() + j.req.max_new_tokens };
     while let Ok(first) = rx.recv() {
         // micro-batch: grab everything already queued
         let mut jobs = vec![first];
@@ -105,16 +255,19 @@ fn engine_worker<M: TokenModel>(mut engine: RealEngine<M>, rx: mpsc::Receiver<Jo
                         r.record.ttft(),
                         r.record.tpot(),
                     );
+                    front.job_done(worker, job_tokens(job), Some(r.record.ttft()));
                     let _ = job.reply.send(line);
                 }
                 // rejections come back as explicit errors, not fake records
                 for (rid, why) in out.dropped {
                     let job = &jobs[rid];
+                    front.job_done(worker, job_tokens(job), None);
                     let _ = job.reply.send(render_error(Some(job.req.id), &why));
                 }
             }
             Err(e) => {
                 for job in &jobs {
+                    front.job_done(worker, job_tokens(job), None);
                     let _ = job.reply.send(render_error(Some(job.req.id), &format!("{e:#}")));
                 }
             }
@@ -122,7 +275,7 @@ fn engine_worker<M: TokenModel>(mut engine: RealEngine<M>, rx: mpsc::Receiver<Jo
     }
 }
 
-fn handle_conn(stream: TcpStream, tx: Arc<Mutex<mpsc::Sender<Job>>>) {
+fn handle_conn(stream: TcpStream, front: Arc<Frontend>) {
     let peer = stream.peer_addr().ok();
     let mut writer = match stream.try_clone() {
         Ok(w) => w,
@@ -137,11 +290,8 @@ fn handle_conn(stream: TcpStream, tx: Arc<Mutex<mpsc::Sender<Job>>>) {
         let reply = match parse_request(&line) {
             Ok(req) => {
                 let (rtx, rrx) = mpsc::channel();
-                {
-                    let guard = tx.lock().expect("engine queue poisoned");
-                    if guard.send(Job { req, reply: rtx }).is_err() {
-                        break;
-                    }
+                if !front.dispatch(req, rtx) {
+                    break;
                 }
                 rrx.recv().unwrap_or_else(|_| render_error(None, "engine gone"))
             }
@@ -156,43 +306,73 @@ fn handle_conn(stream: TcpStream, tx: Arc<Mutex<mpsc::Sender<Job>>>) {
 
 /// Run the server (blocks forever). `artifacts_dir = None` serves the
 /// deterministic in-process `RefModel` instead of the PJRT artifacts —
-/// every `Policy` variant works on either executor.
-pub fn serve(addr: &str, artifacts_dir: Option<&Path>, cfg: RealEngineConfig) -> Result<()> {
-    let (tx, rx) = mpsc::channel::<Job>();
-    // PJRT handles are not Send: the engine lives entirely on the worker
+/// every `Policy` variant works on either executor. `replicas` engine
+/// workers run behind the front-end, with `router` picking which one
+/// each request joins (one worker + any router degenerates to the old
+/// single-engine server).
+pub fn serve(
+    addr: &str,
+    artifacts_dir: Option<&Path>,
+    cfg: RealEngineConfig,
+    replicas: usize,
+    router: RouterPolicy,
+) -> Result<()> {
+    assert!(replicas >= 1, "need at least one replica");
+    let mut txs = Vec::with_capacity(replicas);
+    let mut rxs = Vec::with_capacity(replicas);
+    for _ in 0..replicas {
+        let (tx, rx) = mpsc::channel::<Job>();
+        txs.push(tx);
+        rxs.push(rx);
+    }
+    let front = Arc::new(Frontend::new(router, txs));
+    // PJRT handles are not Send: each engine lives entirely on its worker
     // thread; load errors come back over a one-shot channel.
     let (init_tx, init_rx) = mpsc::channel::<std::result::Result<(), String>>();
-    match artifacts_dir {
-        Some(dir) => {
-            let dir = dir.to_path_buf();
-            std::thread::spawn(move || match RealEngine::load(&dir, cfg) {
-                Ok(engine) => {
+    for (worker, rx) in rxs.into_iter().enumerate() {
+        let init_tx = init_tx.clone();
+        let front = Arc::clone(&front);
+        let cfg = cfg.clone();
+        match artifacts_dir {
+            Some(dir) => {
+                let dir = dir.to_path_buf();
+                std::thread::spawn(move || match RealEngine::load(&dir, cfg) {
+                    Ok(engine) => {
+                        let _ = init_tx.send(Ok(()));
+                        engine_worker(engine, rx, front, worker);
+                    }
+                    Err(e) => {
+                        let _ = init_tx.send(Err(format!("{e:#}")));
+                    }
+                });
+            }
+            None => {
+                std::thread::spawn(move || {
+                    let engine = RealEngine::with_model(Rc::new(RefModel::new()), cfg);
                     let _ = init_tx.send(Ok(()));
-                    engine_worker(engine, rx);
-                }
-                Err(e) => {
-                    let _ = init_tx.send(Err(format!("{e:#}")));
-                }
-            });
-        }
-        None => {
-            std::thread::spawn(move || {
-                let engine = RealEngine::with_model(Rc::new(RefModel::new()), cfg);
-                let _ = init_tx.send(Ok(()));
-                engine_worker(engine, rx);
-            });
+                    engine_worker(engine, rx, front, worker);
+                });
+            }
         }
     }
-    init_rx
-        .recv()
-        .context("engine thread died during init")?
-        .map_err(|e| anyhow::anyhow!(e))?;
+    // drop the original sender: a worker panicking before its init send
+    // must close the channel (-> recv error), not hang the front-end
+    drop(init_tx);
+    for _ in 0..replicas {
+        init_rx
+            .recv()
+            .context("engine thread died during init")?
+            .map_err(|e| anyhow::anyhow!(e))?;
+    }
     let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
-    println!("layerkv serving on {addr}");
-    let tx = Arc::new(Mutex::new(tx));
+    println!(
+        "layerkv serving on {addr} ({replicas} replica{}, router {})",
+        if replicas == 1 { "" } else { "s" },
+        router.name()
+    );
     for stream in listener.incoming().flatten() {
-        let tx = Arc::clone(&tx);
-        std::thread::spawn(move || handle_conn(stream, tx));
+        let front = Arc::clone(&front);
+        std::thread::spawn(move || handle_conn(stream, front));
     }
     Ok(())
 }
@@ -200,6 +380,66 @@ pub fn serve(addr: &str, artifacts_dir: Option<&Path>, cfg: RealEngineConfig) ->
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn load(jobs: usize, tokens: usize, ewma: Option<f64>) -> WorkerLoad {
+        WorkerLoad { queued_jobs: jobs, queued_tokens: tokens, ewma_ttft_s: ewma, dead: false }
+    }
+
+    #[test]
+    fn pick_worker_policies() {
+        let loads = vec![
+            load(2, 4000, Some(0.05)),
+            load(1, 9000, Some(2.0)),
+            load(3, 100, None),
+        ];
+        assert_eq!(pick_worker(RouterPolicy::RoundRobin, &loads, 4), Some(1));
+        assert_eq!(pick_worker(RouterPolicy::JoinShortestQueue, &loads, 0), Some(1));
+        assert_eq!(pick_worker(RouterPolicy::KvPressure, &loads, 0), Some(2));
+        // slo-aware: 4000 tokens + 50ms ewma ~ 4.05s, 9000 + 2s ~ 11s,
+        // 100 tokens + no history ~ 0.1s
+        assert_eq!(pick_worker(RouterPolicy::SloAware, &loads, 0), Some(2));
+        // ties break toward the lowest worker index
+        let even = vec![load(1, 100, None), load(1, 100, None)];
+        assert_eq!(pick_worker(RouterPolicy::JoinShortestQueue, &even, 0), Some(0));
+        assert_eq!(pick_worker(RouterPolicy::KvPressure, &even, 0), Some(0));
+    }
+
+    #[test]
+    fn pick_worker_skips_dead_workers() {
+        let mut loads = vec![load(0, 0, None), load(5, 9000, Some(3.0))];
+        loads[0].dead = true;
+        // worker 0 would win every policy, but it is dead
+        for p in RouterPolicy::ALL {
+            assert_eq!(pick_worker(*p, &loads, 0), Some(1), "policy {}", p.name());
+        }
+        loads[1].dead = true;
+        assert_eq!(pick_worker(RouterPolicy::KvPressure, &loads, 0), None);
+    }
+
+    #[test]
+    fn frontend_ledger_tracks_dispatch_and_completion() {
+        let (tx0, rx0) = mpsc::channel();
+        let (tx1, rx1) = mpsc::channel();
+        let front = Frontend::new(RouterPolicy::KvPressure, vec![tx0, tx1]);
+        let req =
+            ServeRequest { id: 1, prompt: vec![1, 2, 3], max_new_tokens: 5, arrival_s: 0.0 };
+        let (rtx, _rrx) = mpsc::channel();
+        assert!(front.dispatch(req.clone(), rtx));
+        // 8 tokens landed on worker 0 (kv-pressure tie -> lowest index)
+        assert_eq!(front.loads.lock().unwrap()[0].queued_tokens, 8);
+        assert_eq!(front.loads.lock().unwrap()[0].queued_jobs, 1);
+        // the next kv-pressure dispatch avoids the loaded worker
+        let (rtx, _rrx) = mpsc::channel();
+        assert!(front.dispatch(req, rtx));
+        assert_eq!(front.loads.lock().unwrap()[1].queued_tokens, 8);
+        // completion releases the ledger share and records the TTFT EWMA
+        front.job_done(0, 8, Some(0.5));
+        let l = front.loads.lock().unwrap()[0].clone();
+        assert_eq!(l.queued_jobs, 0);
+        assert_eq!(l.queued_tokens, 0);
+        assert_eq!(l.ewma_ttft_s, Some(0.5));
+        drop((rx0, rx1));
+    }
 
     #[test]
     fn parses_valid_request() {

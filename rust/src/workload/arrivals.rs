@@ -11,11 +11,36 @@ pub enum Arrivals {
     Uniform { rate: f64 },
     /// Everything arrives at t=0 (offline/batch setting).
     Burst,
+    /// Bursty two-state (MMPP-style) on/off process: Poisson arrivals at
+    /// `rate_on` during exponentially-distributed ON periods of mean
+    /// `mean_on_s` seconds, silence during OFF periods of mean
+    /// `mean_off_s`. Long-run mean rate is
+    /// `rate_on * mean_on_s / (mean_on_s + mean_off_s)`, but arrivals
+    /// clump into bursts — the skewed load that exposes state-blind
+    /// request routing (and single-engine admission) to queueing spikes a
+    /// plain Poisson trace at the same mean rate never produces.
+    OnOff { rate_on: f64, mean_on_s: f64, mean_off_s: f64 },
 }
 
 impl Arrivals {
+    /// An on/off process with the given long-run mean rate: bursts at
+    /// `burstiness`x the mean, 2-second mean ON sojourns with the OFF
+    /// sojourn scaled so the duty cycle works out (short cycles, so even
+    /// a few-hundred-request trace spans many burst/drain rounds rather
+    /// than one mega-burst). `burstiness > 1`.
+    pub fn bursty(mean_rate: f64, burstiness: f64) -> Arrivals {
+        assert!(burstiness > 1.0, "burstiness must exceed 1 (got {burstiness})");
+        // duty = mean_on / (mean_on + mean_off) = 1 / burstiness
+        let mean_on_s = 2.0;
+        let mean_off_s = mean_on_s * (burstiness - 1.0);
+        Arrivals::OnOff { rate_on: mean_rate * burstiness, mean_on_s, mean_off_s }
+    }
+
     /// Generate `n` arrival timestamps (sorted, starting at ~0).
     pub fn generate(&self, n: usize, rng: &mut Rng) -> Vec<f64> {
+        if let Arrivals::OnOff { rate_on, mean_on_s, mean_off_s } = *self {
+            return Self::generate_on_off(n, rate_on, mean_on_s, mean_off_s, rng);
+        }
         let mut out = Vec::with_capacity(n);
         let mut t = 0.0;
         for _ in 0..n {
@@ -27,8 +52,40 @@ impl Arrivals {
                     t += 1.0 / rate;
                 }
                 Arrivals::Burst => {}
+                Arrivals::OnOff { .. } => unreachable!("handled above"),
             }
             out.push(t);
+        }
+        out
+    }
+
+    /// The two-state chain: starts ON (burst-first — the worst case for a
+    /// cold cluster), draws Poisson gaps at `rate_on`, and whenever a gap
+    /// overruns the remaining ON sojourn, jumps the OFF period and starts
+    /// a fresh ON sojourn.
+    fn generate_on_off(
+        n: usize,
+        rate_on: f64,
+        mean_on_s: f64,
+        mean_off_s: f64,
+        rng: &mut Rng,
+    ) -> Vec<f64> {
+        assert!(rate_on > 0.0 && mean_on_s > 0.0 && mean_off_s > 0.0);
+        let mut out = Vec::with_capacity(n);
+        let mut t = 0.0;
+        let mut on_left = rng.exponential(1.0 / mean_on_s);
+        while out.len() < n {
+            let gap = rng.exponential(rate_on);
+            if gap <= on_left {
+                on_left -= gap;
+                t += gap;
+                out.push(t);
+            } else {
+                // ON period expired before the next arrival: spend the
+                // rest of it, sleep through OFF, start a new ON sojourn
+                t += on_left + rng.exponential(1.0 / mean_off_s);
+                on_left = rng.exponential(1.0 / mean_on_s);
+            }
         }
         out
     }
@@ -65,5 +122,63 @@ mod tests {
         let mut rng = Rng::new(9);
         let ts = Arrivals::Poisson { rate: 1.0 }.generate(1000, &mut rng);
         assert!(ts.windows(2).all(|w| w[1] >= w[0]));
+    }
+
+    /// Squared coefficient of variation of the inter-arrival gaps: 1 for
+    /// Poisson, >1 for anything burstier.
+    fn cv2(ts: &[f64]) -> f64 {
+        let gaps: Vec<f64> = ts.windows(2).map(|w| w[1] - w[0]).collect();
+        let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+        let var =
+            gaps.iter().map(|g| (g - mean) * (g - mean)).sum::<f64>() / gaps.len() as f64;
+        var / (mean * mean)
+    }
+
+    #[test]
+    fn on_off_mean_rate_matches_duty_cycle() {
+        let mut rng = Rng::new(21);
+        // rate 8 during ON, 50% duty -> long-run mean 4 req/s
+        let a = Arrivals::OnOff { rate_on: 8.0, mean_on_s: 4.0, mean_off_s: 4.0 };
+        let ts = a.generate(40_000, &mut rng);
+        let mean_rate = 40_000.0 / ts.last().unwrap();
+        assert!((mean_rate - 4.0).abs() < 0.25, "mean_rate={mean_rate}");
+        assert!(ts.windows(2).all(|w| w[1] >= w[0]));
+        assert!(ts.iter().all(|t| t.is_finite() && *t >= 0.0));
+    }
+
+    #[test]
+    fn on_off_is_burstier_than_poisson() {
+        let mut rng = Rng::new(33);
+        let poisson = Arrivals::Poisson { rate: 4.0 }.generate(20_000, &mut rng);
+        let onoff = Arrivals::OnOff { rate_on: 16.0, mean_on_s: 2.0, mean_off_s: 6.0 }
+            .generate(20_000, &mut rng);
+        let (cp, co) = (cv2(&poisson), cv2(&onoff));
+        assert!((cp - 1.0).abs() < 0.15, "poisson cv2={cp}");
+        assert!(co > 1.5, "on/off cv2={co} must be clearly burstier than Poisson");
+    }
+
+    #[test]
+    fn bursty_helper_hits_requested_mean() {
+        let a = Arrivals::bursty(3.0, 2.0);
+        match a {
+            Arrivals::OnOff { rate_on, mean_on_s, mean_off_s } => {
+                assert_eq!(rate_on, 6.0);
+                let duty = mean_on_s / (mean_on_s + mean_off_s);
+                assert!((rate_on * duty - 3.0).abs() < 1e-12);
+            }
+            other => panic!("expected OnOff, got {other:?}"),
+        }
+        let mut rng = Rng::new(5);
+        let ts = a.generate(30_000, &mut rng);
+        let mean_rate = 30_000.0 / ts.last().unwrap();
+        assert!((mean_rate - 3.0).abs() < 0.2, "mean_rate={mean_rate}");
+    }
+
+    #[test]
+    fn on_off_deterministic_for_seed() {
+        let a = Arrivals::bursty(2.0, 3.0);
+        let x = a.generate(500, &mut Rng::new(11));
+        let y = a.generate(500, &mut Rng::new(11));
+        assert_eq!(x, y);
     }
 }

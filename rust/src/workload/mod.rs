@@ -40,7 +40,7 @@ impl Trace {
         self.requests.is_empty()
     }
 
-    /// Sanity: arrivals sorted, ids unique and dense.
+    /// Sanity: arrivals finite and sorted, ids unique and dense.
     pub fn validate(&self) -> Result<(), String> {
         for w in self.requests.windows(2) {
             if w[1].arrival < w[0].arrival {
@@ -51,6 +51,12 @@ impl Trace {
             }
         }
         for (i, r) in self.requests.iter().enumerate() {
+            // a NaN arrival compares false on `<` both ways, so the
+            // ordering sweep above can never catch it — reject every
+            // non-finite arrival explicitly
+            if !r.arrival.is_finite() {
+                return Err(format!("non-finite arrival {} for request {}", r.arrival, r.id));
+            }
             if r.id != i {
                 return Err(format!("non-dense id {} at index {i}", r.id));
             }
@@ -91,5 +97,29 @@ mod tests {
             requests: vec![TraceRequest { id: 3, arrival: 0.0, prompt_len: 8, output_len: 8 }],
         };
         assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_non_finite_arrivals() {
+        // regression: NaN compares false on `<`, so the ordering check
+        // alone used to accept a NaN arrival anywhere in the trace
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let t = Trace {
+                requests: vec![
+                    TraceRequest { id: 0, arrival: 0.5, prompt_len: 8, output_len: 8 },
+                    TraceRequest { id: 1, arrival: bad, prompt_len: 8, output_len: 8 },
+                    TraceRequest { id: 2, arrival: 1.0, prompt_len: 8, output_len: 8 },
+                ],
+            };
+            assert!(t.validate().is_err(), "arrival {bad} must be rejected");
+        }
+        // a finite, sorted trace still validates
+        let ok = Trace {
+            requests: vec![
+                TraceRequest { id: 0, arrival: 0.0, prompt_len: 8, output_len: 8 },
+                TraceRequest { id: 1, arrival: 0.0, prompt_len: 8, output_len: 8 },
+            ],
+        };
+        assert!(ok.validate().is_ok());
     }
 }

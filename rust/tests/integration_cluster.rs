@@ -1,0 +1,128 @@
+//! End-to-end cluster scenarios: the routing-policy payoff the `cluster`
+//! experiment reports (KV-pressure / SLO-aware routing vs state-blind
+//! round-robin under bursty ShareGPT-style load), heterogeneous-fleet
+//! routing, and rejection accounting.
+
+use layerkv::cluster::{Cluster, ClusterConfig, RouterPolicy};
+use layerkv::config::{Policy, ServingConfig};
+use layerkv::experiments as exp;
+use layerkv::util::Rng;
+use layerkv::workload::arrivals::Arrivals;
+use layerkv::workload::fixed::FixedWorkload;
+
+fn run_cluster(
+    cfg: &ServingConfig,
+    replicas: usize,
+    router: RouterPolicy,
+    trace: &layerkv::workload::Trace,
+) -> (f64, f64, layerkv::cluster::ClusterReport) {
+    let mut cluster = Cluster::new(&ClusterConfig::homogeneous(cfg, replicas, router));
+    let out = cluster.run(trace).expect("sim cluster run");
+    let mut ttft = out.merged.ttft();
+    let p99 = ttft.p99();
+    let viol = out.merged.slo_violation_rate(&cfg.slo);
+    (p99, viol, out)
+}
+
+/// The acceptance scenario: on a bursty ShareGPT-style trace over >= 4
+/// replicas, KV-pressure or SLO-aware routing strictly improves BOTH the
+/// p99 TTFT and the SLO violation rate over round-robin. Round-robin is
+/// state-blind: inside a burst it keeps feeding replicas that are already
+/// drowning in long-prompt KV demand, re-creating the head-of-line
+/// queueing LayerKV removed inside each engine.
+#[test]
+fn pressure_aware_routing_beats_round_robin_on_bursty_load() {
+    let replicas = 4;
+    let rate = exp::CLUSTER_RATE_PER_REPLICA * replicas as f64;
+    // ~90 requests/replica at a 6-second on/off cycle; seed 23's draw
+    // spans ~7 distinct burst/drain rounds at near-nominal mean rate —
+    // transient overload the router can spread, not one mega-burst
+    let trace = exp::cluster_trace(rate, 90 * replicas, 23);
+    let cfg = ServingConfig::llama2_7b_tp1()
+        .with_policy(Policy::LayerKv { slo_aware: true });
+
+    let (rr_p99, rr_viol, rr_out) =
+        run_cluster(&cfg, replicas, RouterPolicy::RoundRobin, &trace);
+    let (kv_p99, kv_viol, _) =
+        run_cluster(&cfg, replicas, RouterPolicy::KvPressure, &trace);
+    let (slo_p99, slo_viol, _) =
+        run_cluster(&cfg, replicas, RouterPolicy::SloAware, &trace);
+
+    // the load must actually hurt round-robin, or "improvement" is vacuous
+    assert!(
+        rr_viol > 0.0,
+        "bursty trace too light: round-robin violates nothing (p99 {rr_p99:.2}s)"
+    );
+    // round-robin itself must have balanced exactly (sanity that the
+    // comparison is routing quality, not routing volume)
+    for o in &rr_out.per_replica {
+        assert_eq!(o.routed, 90);
+    }
+
+    let best_p99 = kv_p99.min(slo_p99);
+    let best_viol = kv_viol.min(slo_viol);
+    assert!(
+        best_p99 < rr_p99,
+        "pressure-aware routing must cut p99 TTFT: kv {kv_p99:.2}s / slo {slo_p99:.2}s \
+         vs round-robin {rr_p99:.2}s"
+    );
+    assert!(
+        best_viol < rr_viol,
+        "pressure-aware routing must cut SLO violations: kv {:.1}% / slo {:.1}% \
+         vs round-robin {:.1}%",
+        100.0 * kv_viol,
+        100.0 * slo_viol,
+        100.0 * rr_viol
+    );
+}
+
+/// Mixed fleet: one roomy replica, one starved replica (smaller KV pool).
+/// KV-pressure routing reads the real pool aggregates and must shift load
+/// toward the roomy replica; round-robin splits 50/50 regardless.
+#[test]
+fn kv_pressure_prefers_the_roomier_replica_in_a_mixed_fleet() {
+    let roomy = ServingConfig::llama2_7b_tp1()
+        .with_policy(Policy::LayerKv { slo_aware: true });
+    let mut starved = roomy.clone();
+    starved.gpu_mem_util = 0.45; // roughly a third of the roomy KV pool
+    let trace = exp::cluster_trace(5.0, 120, 41);
+
+    let ccfg = ClusterConfig {
+        replicas: vec![roomy.clone(), starved],
+        router: RouterPolicy::KvPressure,
+        predictor_accuracy: 0.8,
+    };
+    let mut cluster = Cluster::new(&ccfg);
+    let out = cluster.run(&trace).expect("sim cluster run");
+    assert_eq!(out.accounted(), 120);
+    let routed: Vec<usize> = out.per_replica.iter().map(|o| o.routed).collect();
+    assert!(
+        routed[0] > routed[1],
+        "kv-pressure must favour the roomy replica, got {routed:?}"
+    );
+}
+
+/// Requests no replica can ever serve are rejected (never silently lost),
+/// and rejections stay conserved through the merge.
+#[test]
+fn cluster_accounts_rejections() {
+    let mut cfg = ServingConfig::llama2_7b_tp1();
+    cfg.max_model_len = 16384;
+    cfg.max_batched_tokens = 20000;
+    cfg.gpu_mem_util = 0.30; // pool below one 16k prompt's full-KV demand
+    let trace = FixedWorkload {
+        prompt_len: 16384,
+        output_len: 32,
+        n_requests: 6,
+        arrivals: Arrivals::Poisson { rate: 1.0 },
+    }
+    .generate(&mut Rng::new(1));
+
+    let mut cluster =
+        Cluster::new(&ClusterConfig::homogeneous(&cfg, 2, RouterPolicy::KvPressure));
+    let out = cluster.run(&trace).expect("sim cluster run");
+    assert_eq!(out.accounted(), 6);
+    assert!(!out.dropped.is_empty(), "impossible prompts must be rejected");
+    // drops carry global ids
+    assert!(out.dropped.iter().all(|&id| id < 6));
+}

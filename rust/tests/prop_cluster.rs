@@ -1,0 +1,174 @@
+//! Cluster invariants (randomized, seeded, replayable via
+//! LAYERKV_PROP_SEED / LAYERKV_PROP_CASES — see util::prop):
+//!
+//! * conservation — every trace request is routed to exactly one replica
+//!   and comes back exactly once (as a completion or a rejection), under
+//!   every router policy, replica count, and workload shape;
+//! * 1-replica identity — a single-replica cluster is **bit-identical**
+//!   to a bare `Engine<SimBackend>` run of the same trace, under every
+//!   router (with one replica every policy routes identically, so the
+//!   whole incremental `submit`/`step_once` drive must reproduce
+//!   `try_run` exactly: records, makespan bits, and every engine
+//!   counter).
+
+use layerkv::cluster::{Cluster, ClusterConfig, RouterPolicy};
+use layerkv::config::{Policy, ServingConfig};
+use layerkv::coordinator::run_trace;
+use layerkv::util::prop::prop;
+use layerkv::util::Rng;
+use layerkv::workload::arrivals::Arrivals;
+use layerkv::workload::fixed::FixedWorkload;
+use layerkv::workload::sharegpt::ShareGptWorkload;
+use layerkv::workload::Trace;
+
+fn random_policy(rng: &mut Rng) -> Policy {
+    match rng.range(0, 3) {
+        0 => Policy::Vllm,
+        1 => Policy::LayerKv { slo_aware: true },
+        _ => Policy::LayerKv { slo_aware: false },
+    }
+}
+
+fn random_trace(rng: &mut Rng, n: usize) -> Trace {
+    let rate = rng.f64() * 4.0 + 0.5;
+    let arrivals = if rng.chance(0.4) {
+        Arrivals::bursty(rate, rng.f64() * 2.0 + 1.5)
+    } else {
+        Arrivals::Poisson { rate }
+    };
+    if rng.chance(0.5) {
+        let mut w = ShareGptWorkload::paper(rate, n);
+        w.arrivals = arrivals;
+        w.generate(rng)
+    } else {
+        FixedWorkload {
+            prompt_len: rng.range_usize(16, 4096),
+            output_len: rng.range_usize(4, 128),
+            n_requests: n,
+            arrivals,
+        }
+        .generate(rng)
+    }
+}
+
+#[test]
+fn prop_every_request_routed_exactly_once() {
+    prop(8, |rng| {
+        let n = rng.range_usize(8, 40);
+        let k = rng.range_usize(1, 6);
+        let router = RouterPolicy::ALL[rng.range_usize(0, RouterPolicy::ALL.len())];
+        let trace = random_trace(rng, n);
+        let cfg = ServingConfig::llama2_7b_tp1().with_policy(random_policy(rng));
+        let mut cluster = Cluster::new(&ClusterConfig::homogeneous(&cfg, k, router));
+        let out = cluster.run(&trace).expect("sim cluster never fails");
+
+        // conservation across replicas: routed counts sum to the trace,
+        // and completions + rejections partition the global id space
+        assert_eq!(
+            out.per_replica.iter().map(|o| o.routed).sum::<usize>(),
+            n,
+            "router {} on {k} replicas lost/duplicated a routing",
+            router.name()
+        );
+        let mut ids: Vec<usize> = out.merged.records.iter().map(|r| r.id).collect();
+        ids.extend(out.dropped.iter().copied());
+        ids.sort_unstable();
+        assert_eq!(
+            ids,
+            (0..n).collect::<Vec<_>>(),
+            "router {} on {k} replicas: completions + drops must be a \
+             permutation of the trace",
+            router.name()
+        );
+        // per-replica accounting agrees with the merge
+        assert_eq!(
+            out.per_replica
+                .iter()
+                .map(|o| o.report.records.len() + o.stats.dropped.len())
+                .sum::<usize>(),
+            n
+        );
+        // causality on every merged record, against the *global* arrival
+        for rec in &out.merged.records {
+            let arrival = trace.requests[rec.id].arrival;
+            assert!(rec.arrival == arrival, "merged record keeps its trace arrival");
+            assert!(rec.prefill_start >= arrival - 1e-9);
+            assert!(rec.first_token >= rec.prefill_start);
+            assert!(rec.finish >= rec.first_token);
+        }
+    });
+}
+
+#[test]
+fn prop_single_replica_cluster_bit_identical_to_bare_engine() {
+    prop(6, |rng| {
+        let n = rng.range_usize(5, 30);
+        let trace = random_trace(rng, n);
+        let cfg = ServingConfig::llama2_7b_tp1().with_policy(random_policy(rng));
+        let (bare, bare_stats) = run_trace(cfg.clone(), &trace, 0.8);
+        for router in RouterPolicy::ALL {
+            let ccfg = ClusterConfig {
+                replicas: vec![cfg.clone()],
+                router: *router,
+                predictor_accuracy: 0.8,
+            };
+            let mut cluster = Cluster::new(&ccfg);
+            let out = cluster.run(&trace).expect("sim cluster never fails");
+            assert_eq!(
+                out.merged.records,
+                bare.records,
+                "router {}: records diverge from the bare engine",
+                router.name()
+            );
+            assert_eq!(
+                out.merged.makespan.to_bits(),
+                bare.makespan.to_bits(),
+                "router {}: makespan diverges",
+                router.name()
+            );
+            // every engine counter identical — the incremental drive is
+            // the same machine as try_run, not an approximation of it
+            assert_eq!(
+                &out.per_replica[0].stats,
+                &bare_stats,
+                "router {}: engine stats diverge",
+                router.name()
+            );
+            assert_eq!(out.per_replica[0].routed, n);
+        }
+    });
+}
+
+/// Homogeneous replicas + round-robin on a uniform workload: the routed
+/// counts are exactly balanced, and every replica's stats stay within the
+/// single-engine regime (no replica sees a request the others' existence
+/// could corrupt — replica isolation).
+#[test]
+fn prop_round_robin_balance_is_exact() {
+    prop(6, |rng| {
+        let k = rng.range_usize(2, 5);
+        let per = rng.range_usize(3, 10);
+        let n = k * per;
+        let trace = FixedWorkload {
+            prompt_len: rng.range_usize(64, 2048),
+            output_len: rng.range_usize(8, 64),
+            n_requests: n,
+            arrivals: Arrivals::Poisson { rate: rng.f64() * 3.0 + 0.5 },
+        }
+        .generate(rng);
+        let cfg = ServingConfig::llama2_7b_tp1()
+            .with_policy(Policy::LayerKv { slo_aware: true });
+        let mut cluster =
+            Cluster::new(&ClusterConfig::homogeneous(&cfg, k, RouterPolicy::RoundRobin));
+        let out = cluster.run(&trace).expect("sim cluster never fails");
+        for o in &out.per_replica {
+            assert_eq!(o.routed, per, "round-robin must balance {n} over {k} exactly");
+            // replica-local ids are dense in submission order
+            for rec in &o.report.records {
+                assert!(rec.id < o.routed);
+            }
+        }
+        let s = out.summary(&cfg.slo);
+        assert!((s.max_share() - 1.0 / k as f64).abs() < 1e-12);
+    });
+}
