@@ -43,7 +43,7 @@ pub use router::{
 
 use crate::config::ServingConfig;
 use crate::coordinator::backend::{ExecutionBackend, SimBackend};
-use crate::coordinator::{standard_predictor, Engine, LengthPredictor};
+use crate::coordinator::{standard_predictor, Engine, LengthPredictor, CLOCK_EPS};
 use crate::metrics::RequestRecord;
 use crate::workload::Trace;
 
@@ -133,6 +133,24 @@ impl<B: ExecutionBackend> Cluster<B> {
         self.router.name()
     }
 
+    /// Toggle decode fast-forwarding (macro-stepping) on every replica.
+    /// Off = the pure single-step lockstep, the debugging reference the
+    /// property suite and the hotpath bench compare against.
+    pub fn set_macro_steps(&mut self, on: bool) {
+        for rep in &mut self.replicas {
+            rep.engine.set_macro_steps(on);
+        }
+    }
+
+    /// Every replica recomputes its cached state from scratch each step
+    /// and single-steps every decode — the frozen-oracle path the golden
+    /// cluster replay pins router + lockstep changes against.
+    pub fn use_recompute_oracle(&mut self) {
+        for rep in &mut self.replicas {
+            rep.engine.use_recompute_oracle();
+        }
+    }
+
     /// Serve a whole trace: route every request at its arrival instant,
     /// drain all replicas, and merge the per-replica reports back into
     /// trace order. Single-shot — build a fresh `Cluster` per trace (the
@@ -146,11 +164,15 @@ impl<B: ExecutionBackend> Cluster<B> {
         let predictor = standard_predictor(trace, self.predictor_accuracy);
         for tr in &trace.requests {
             // lockstep: every replica catches up to this arrival before
-            // the router looks at the views (the 1e-12 mirrors try_run's
-            // arrival-admission epsilon)
+            // the router looks at the views (CLOCK_EPS mirrors try_run's
+            // arrival-admission epsilon). The arrival is each engine's
+            // decode fast-forward horizon, so a stable replica advances to
+            // its next event in ONE macro-step instead of one `step_once`
+            // per decode token — the loop runs O(events) turns, not
+            // O(tokens).
             for rep in &mut self.replicas {
-                while tr.arrival > rep.engine.now() + 1e-12 {
-                    if !rep.engine.step_once(false)? {
+                while tr.arrival > rep.engine.now() + CLOCK_EPS {
+                    if !rep.engine.step_once_until(false, tr.arrival)? {
                         break; // idle: its clock advances at its next submit
                     }
                 }
@@ -169,7 +191,7 @@ impl<B: ExecutionBackend> Cluster<B> {
                 picked
             };
             let rep = &mut self.replicas[idx];
-            if tr.arrival > rep.engine.now() + 1e-12 {
+            if tr.arrival > rep.engine.now() + CLOCK_EPS {
                 rep.engine.wait_until(tr.arrival);
             }
             rep.submit(tr, predictor.predict(tr.id, tr.output_len));

@@ -171,6 +171,19 @@ pub trait ExecutionBackend {
         true
     }
 
+    /// Whether the engine may *fast-forward* stable decode spans past this
+    /// backend: commit `k` decode iterations in one macro-step, advancing
+    /// the clock by the per-step analytic durations without calling
+    /// `decode`/`commit_token` per iteration (see `coordinator/horizon.rs`).
+    /// Only valid for backends whose decode cost is exactly
+    /// `CostModel::decode_step_time_sum` for a fully-GPU-resident batch
+    /// and whose per-token `commit_token` is a no-op — i.e. the analytic
+    /// simulator. Wall-clock executors must keep the default (`false`):
+    /// their step durations are measured, not modeled.
+    fn supports_fast_forward(&self) -> bool {
+        false
+    }
+
     /// Execute one admitted prefill. The request's `KvManager` table
     /// already records which layers were retained on the GPU.
     fn prefill(&mut self, req: &Request, kv: &KvManager) -> anyhow::Result<PrefillOutcome>;
@@ -272,6 +285,12 @@ impl ExecutionBackend for SimBackend {
 
     fn clock_mut(&mut self) -> &mut VirtualClock {
         &mut self.clock
+    }
+
+    /// Stable decode spans cost exactly `decode_step_time_sum` here (no
+    /// stream bytes, no contention), so macro-stepping them is free.
+    fn supports_fast_forward(&self) -> bool {
+        true
     }
 
     fn prefill(&mut self, req: &Request, kv: &KvManager) -> anyhow::Result<PrefillOutcome> {

@@ -77,6 +77,25 @@ impl BlockPool {
         Some(b)
     }
 
+    /// Allocate exactly `n` blocks or nothing, appending them to `out` in
+    /// the order `n` successive `alloc_one` pops would have produced (the
+    /// free list's tail, last id first) — the macro-stepping engine's bulk
+    /// equivalent of per-token growth, same free-list discipline. Returns
+    /// false (and leaves `out` untouched) when fewer than `n` are free.
+    pub fn alloc_span(&mut self, n: usize, out: &mut Vec<BlockId>) -> bool {
+        if self.free.len() < n {
+            return false;
+        }
+        let start = self.free.len() - n;
+        #[cfg(debug_assertions)]
+        for &b in &self.free[start..] {
+            assert!(self.allocated.insert(b), "double allocation of block {b}");
+        }
+        out.extend(self.free[start..].iter().rev().copied());
+        self.free.truncate(start);
+        true
+    }
+
     pub fn release(&mut self, blocks: &[BlockId]) {
         #[cfg(debug_assertions)]
         for &b in blocks {
@@ -164,6 +183,27 @@ mod tests {
         assert!(p.alloc_into(3, &mut buf));
         assert_eq!(buf.capacity(), cap, "buffer reused, not regrown");
         p.release(&buf);
+    }
+
+    #[test]
+    fn alloc_span_matches_repeated_alloc_one() {
+        let mut a = BlockPool::new(12);
+        let mut b = BlockPool::new(12);
+        let mut ids_a = Vec::new();
+        let mut ids_b = Vec::new();
+        assert!(a.alloc_span(5, &mut ids_a));
+        for _ in 0..5 {
+            ids_b.push(b.alloc_one().unwrap());
+        }
+        assert_eq!(ids_a, ids_b, "span must replay alloc_one's pop order");
+        assert_eq!(a.available(), b.available());
+        // all-or-nothing, buffer untouched on failure
+        assert!(!a.alloc_span(8, &mut ids_a), "only 7 left");
+        assert_eq!(ids_a.len(), 5);
+        assert!(a.alloc_span(0, &mut ids_a), "empty span always succeeds");
+        assert_eq!(ids_a.len(), 5);
+        a.release(&ids_a);
+        a.check().unwrap();
     }
 
     #[test]

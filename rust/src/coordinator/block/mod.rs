@@ -221,6 +221,46 @@ impl KvManager {
         Ok(())
     }
 
+    /// `k` more tokens for `req` at once — the macro-stepping engine's
+    /// bulk equivalent of `k` successive [`KvManager::append_token`]s.
+    /// Each layer grows by the span's block-boundary count in one
+    /// `alloc_span` draw from its residency tier's pool (same free-list
+    /// discipline as the per-token `alloc_one` path). All-or-nothing: on
+    /// any tier shortfall nothing is mutated and the per-token error
+    /// surface is returned, so callers can fall back to single-stepping.
+    pub fn alloc_span(&mut self, req: ReqId, k: usize) -> Result<(), KvError> {
+        if k == 0 {
+            return Ok(());
+        }
+        let t = self.tables.get_mut(&req).ok_or(KvError::UnknownRequest)?;
+        let growth = t.blocks_per_layer(t.tokens + k) - t.blocks_per_layer(t.tokens);
+        if growth > 0 {
+            let gpu_layers = t.n_gpu_layers();
+            let cpu_layers = t.n_cpu_layers();
+            let disk_layers = t.n_disk_layers();
+            if self.gpu.available() < growth * gpu_layers {
+                return Err(KvError::GpuExhausted);
+            }
+            if self.cpu.available() < growth * cpu_layers {
+                return Err(KvError::CpuExhausted);
+            }
+            if self.disk.available() < growth * disk_layers {
+                return Err(KvError::CpuExhausted);
+            }
+            for entry in &mut t.layers {
+                let pool = match entry.residency {
+                    Residency::Gpu => &mut self.gpu,
+                    Residency::Cpu => &mut self.cpu,
+                    Residency::Disk => &mut self.disk,
+                };
+                assert!(pool.alloc_span(growth, &mut entry.blocks), "checked above");
+            }
+            t.note_span_growth(growth);
+        }
+        t.tokens += k;
+        Ok(())
+    }
+
     /// Move one layer GPU -> host (§3.1.1 proactive offload / OOM relief).
     /// Returns the number of GPU layer-blocks freed. Allocation-free: the
     /// departing ids stage through `scratch` and the layer's Vec is
@@ -433,6 +473,54 @@ mod tests {
         assert_eq!(m.append_token(0), Err(KvError::GpuExhausted));
         assert_eq!(m.table(0).unwrap().tokens, 16);
         m.table(0).unwrap().check().unwrap();
+    }
+
+    #[test]
+    fn alloc_span_matches_repeated_append_token() {
+        // bulk span growth must land exactly where k single appends land:
+        // same per-tier pool usage, same table aggregates — across a
+        // mixed-residency (GPU + host + disk) table
+        let mut bulk = KvManager::new_tiered(64, 64, 64, 16, 4);
+        let mut single = KvManager::new_tiered(64, 64, 64, 16, 4);
+        for m in [&mut bulk, &mut single] {
+            m.allocate_layerwise(0, 20, 2).unwrap();
+            let parked = m.table(0).unwrap().cpu_layers().next().unwrap();
+            m.spill_layer(0, parked).unwrap();
+        }
+        bulk.alloc_span(0, 45).unwrap();
+        for _ in 0..45 {
+            single.append_token(0).unwrap();
+        }
+        let (tb, ts) = (bulk.table(0).unwrap(), single.table(0).unwrap());
+        assert_eq!(tb.tokens, ts.tokens);
+        assert_eq!(
+            (tb.gpu_blocks_held(), tb.cpu_blocks_held(), tb.disk_blocks_held()),
+            (ts.gpu_blocks_held(), ts.cpu_blocks_held(), ts.disk_blocks_held())
+        );
+        tb.check().unwrap();
+        assert_eq!(bulk.gpu.used(), single.gpu.used());
+        assert_eq!(bulk.cpu.used(), single.cpu.used());
+        assert_eq!(bulk.disk.used(), single.disk.used());
+        // a span inside the current block grows nothing but the count
+        let used = bulk.gpu.used();
+        bulk.alloc_span(0, 1).unwrap(); // 65 -> 66 tokens, still 5 blocks
+        assert_eq!(bulk.gpu.used(), used);
+        assert_eq!(bulk.table(0).unwrap().tokens, 66);
+        bulk.table(0).unwrap().check().unwrap();
+    }
+
+    #[test]
+    fn alloc_span_is_all_or_nothing() {
+        let mut m = mgr(8, 0); // 4 layers * 16-token blocks, tiny GPU pool
+        m.allocate_full(0, 16).unwrap(); // 4 blocks used, 4 free
+        // +17 tokens needs 2 more blocks/layer = 8 > 4 free
+        assert_eq!(m.alloc_span(0, 17), Err(KvError::GpuExhausted));
+        assert_eq!(m.table(0).unwrap().tokens, 16, "failed span must not mutate");
+        assert_eq!(m.gpu.used(), 4);
+        m.table(0).unwrap().check().unwrap();
+        assert_eq!(m.alloc_span(1, 4), Err(KvError::UnknownRequest));
+        m.alloc_span(0, 0).unwrap(); // empty span is a no-op
+        assert_eq!(m.table(0).unwrap().tokens, 16);
     }
 
     #[test]

@@ -181,9 +181,16 @@ impl LayerBlockTable {
 
     /// One block was appended to every layer (a block-boundary grow).
     pub(crate) fn note_block_growth(&mut self) {
-        self.gpu_blocks += self.gpu_layer_count;
-        self.cpu_blocks += self.layers.len() - self.gpu_layer_count - self.disk_layer_count;
-        self.disk_blocks += self.disk_layer_count;
+        self.note_span_growth(1);
+    }
+
+    /// `growth` blocks were appended to every layer at once (a
+    /// macro-stepped span crossing `growth` block boundaries).
+    pub(crate) fn note_span_growth(&mut self, growth: usize) {
+        self.gpu_blocks += growth * self.gpu_layer_count;
+        self.cpu_blocks +=
+            growth * (self.layers.len() - self.gpu_layer_count - self.disk_layer_count);
+        self.disk_blocks += growth * self.disk_layer_count;
     }
 
     /// Layer moved GPU -> host, `n` blocks.

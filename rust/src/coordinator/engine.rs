@@ -29,11 +29,23 @@
 //! * Backend dispatch is static (monomorphised), so the seam costs
 //!   nothing on the hot path (`engine/unified_step` in the hotpath
 //!   bench tracks this).
+//! * **Decode fast-forwarding (macro-stepping)**: when the machine is
+//!   *stable* — queue empty, every running request fully GPU-resident —
+//!   the engine solves the event horizon (`coordinator/horizon.rs`) for
+//!   the number of decode iterations `k` provably unchanged by any
+//!   scheduler decision, then commits all `k` in one macro-step:
+//!   per-step clock/EMA replication plus one bulk `KvManager::alloc_span`
+//!   per request. Scheduler invocations drop from O(total output tokens)
+//!   to O(events); `engine/fastforward_*` in the hotpath bench tracks the
+//!   win, and the whole thing is **bit-identical** to single-stepping
+//!   (`rust/tests/prop_fastforward.rs`). `set_macro_steps(false)` (or
+//!   `LAYERKV_MACRO=0`) restores pure single-stepping for debugging.
 //!
 //! `use_recompute_oracle()` switches every cached quantity back to
-//! from-scratch recomputation each step; `rust/tests/prop_invariants.rs`
-//! asserts both modes produce bit-identical reports, and additionally
-//! that `Engine<SimBackend>` matches the pre-refactor monolithic engine
+//! from-scratch recomputation each step (and disables macro-stepping);
+//! `rust/tests/prop_invariants.rs` asserts both modes produce
+//! bit-identical reports, and additionally that `Engine<SimBackend>`
+//! matches the pre-refactor monolithic engine
 //! (`tests/support/reference_engine.rs`) bit-for-bit.
 
 use std::collections::VecDeque;
@@ -41,12 +53,25 @@ use std::collections::VecDeque;
 use crate::config::{Policy, ServingConfig};
 use crate::coordinator::backend::{Clock, ExecutionBackend, SimBackend};
 use crate::coordinator::block::{KvError, KvManager, Residency};
+use crate::coordinator::horizon::{decode_horizon, HorizonInputs};
 use crate::coordinator::predict::LengthPredictor;
 use crate::coordinator::request::{Phase, ReqId, Request};
 use crate::coordinator::scheduler::{make_scheduler, Action, SchedContext, Scheduler};
 use crate::metrics::{Report, RequestRecord, TierTransition};
 use crate::sim::CostModel;
 use crate::workload::{Trace, TraceRequest};
+
+/// The engine's clock-comparison epsilon: an arrival is admissible when
+/// `arrival <= now + CLOCK_EPS`, and every driver (try_run's arrival
+/// loop, the cluster lockstep, the incremental-drive tests) gates on the
+/// same constant so the paths stay bit-identical.
+pub const CLOCK_EPS: f64 = 1e-12;
+
+/// Decode fast-forwarding default: on unless `LAYERKV_MACRO=0` (the
+/// experiments' `--no-macro-steps` debugging toggle sets this).
+fn macro_steps_enabled() -> bool {
+    std::env::var("LAYERKV_MACRO").map(|v| v != "0").unwrap_or(true)
+}
 
 /// Counters the experiments report alongside latency. Every `disk_*` /
 /// `spill*` field stays exactly 0 in the two-tier configuration (disk
@@ -105,6 +130,25 @@ impl RunningAggregates {
     }
 }
 
+/// §Perf: O(1) router-facing load aggregates, maintained at every
+/// submit/admit/append/preempt/finish/drop instead of re-scanning the
+/// queue and running set per route decision (they used to be O(n) scans —
+/// one per replica per arriving request at cluster scale). Maintained
+/// identically in incremental and recompute-oracle mode (the oracle
+/// recomputes *engine* state; these views feed only the router), and
+/// validated against the `*_scan` getters by the property suite. The two
+/// token counts and the remaining-token sum are exact integer bookkeeping;
+/// the prefill-seconds sum is float add/sub of identical per-request terms
+/// (re-pinned to 0.0 whenever the queue drains, so rounding residue
+/// cannot accumulate across queue cycles).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+struct LoadView {
+    waiting_tokens: usize,
+    waiting_prefill_s: f64,
+    running_tokens: usize,
+    running_remaining_tokens: usize,
+}
+
 /// The coordinator. One instance runs one trace to completion against its
 /// execution backend.
 pub struct Engine<B: ExecutionBackend = SimBackend> {
@@ -138,6 +182,23 @@ pub struct Engine<B: ExecutionBackend = SimBackend> {
     /// path's livelock step bound grows with it (`try_run` derives the
     /// same bound from the whole trace upfront).
     submitted_tokens: u64,
+    /// Decode fast-forwarding (macro-stepping) enabled. Default on; off in
+    /// recompute-oracle mode and under `LAYERKV_MACRO=0`.
+    macro_steps: bool,
+    /// `Scheduler::decide` calls so far — the invocation count
+    /// macro-stepping collapses from O(total output tokens) to O(events).
+    /// Deliberately NOT part of `EngineStats`: it measures the driving
+    /// loop, not the served workload, and differs between the macro and
+    /// single-step paths by design.
+    sched_invocations: u64,
+    /// O(1) router-facing load aggregates (see the router-facing getters).
+    view: LoadView,
+    /// Reusable `tokens % block_size` histogram for the horizon solver.
+    ff_hist: Vec<usize>,
+    /// Reusable per-step duration buffer: the horizon solver records the
+    /// span's decode durations here and the commit replays them, so the
+    /// cost model is evaluated once per step, not twice.
+    ff_durations: Vec<f64>,
 }
 
 impl Engine<SimBackend> {
@@ -193,11 +254,30 @@ impl<B: ExecutionBackend> Engine<B> {
             active_buf: Vec::new(),
             finished_buf: Vec::new(),
             submitted_tokens: 0,
+            macro_steps: macro_steps_enabled(),
+            sched_invocations: 0,
+            view: LoadView::default(),
+            ff_hist: Vec::new(),
+            ff_durations: Vec::new(),
         }
     }
 
     pub fn stats(&self) -> &EngineStats {
         &self.stats
+    }
+
+    /// Toggle decode fast-forwarding (macro-stepping). Off = pure
+    /// single-stepping, the debugging reference; the two are
+    /// property-tested bit-identical (`tests/prop_fastforward.rs`).
+    pub fn set_macro_steps(&mut self, on: bool) {
+        self.macro_steps = on;
+    }
+
+    /// `Scheduler::decide` calls so far. Macro-stepping's savings metric:
+    /// single-stepping pays one per decode iteration, fast-forwarding one
+    /// per *event* (arrival, completion, pool boundary).
+    pub fn sched_invocations(&self) -> u64 {
+        self.sched_invocations
     }
 
     /// Record every layer residency move (GPU <-> host <-> disk) into a
@@ -232,10 +312,12 @@ impl<B: ExecutionBackend> Engine<B> {
     }
 
     /// Switch to recomputing every cached aggregate from scratch each step
-    /// (and re-sorting `running`). Slower, straightforward, and the
-    /// reference the incremental path must match bit-for-bit.
+    /// (and re-sorting `running`), with macro-stepping disabled. Slower,
+    /// straightforward, and the reference the incremental path must match
+    /// bit-for-bit.
     pub fn use_recompute_oracle(&mut self) {
         self.incremental = false;
+        self.macro_steps = false;
     }
 
     /// Run a trace to completion; returns the latency report. Panics if
@@ -253,6 +335,7 @@ impl<B: ExecutionBackend> Engine<B> {
             .map(|t| Request::from_trace(t, self.predictor.predict(t.id, t.output_len)))
             .collect();
         self.agg = RunningAggregates::default();
+        self.view = LoadView::default();
         let mut next_arrival = 0usize;
         // generous step bound: every token plus scheduling slack
         let max_steps = 1000 + 4 * trace.total_tokens() as u64;
@@ -261,12 +344,13 @@ impl<B: ExecutionBackend> Engine<B> {
             // admit arrivals up to `now`
             while next_arrival < self.requests.len()
                 && self.requests[next_arrival].arrival
-                    <= self.backend.clock().now() + 1e-12
+                    <= self.backend.clock().now() + CLOCK_EPS
             {
                 let rid = next_arrival;
                 next_arrival += 1;
                 if self.backend.supports_prompt(self.requests[rid].prompt_len) {
                     self.waiting.push_back(rid);
+                    self.view_push_waiting(rid);
                 } else {
                     // the executor can never run this prompt (e.g. exceeds
                     // every compiled prefill bucket): reject it instead of
@@ -275,6 +359,12 @@ impl<B: ExecutionBackend> Engine<B> {
                     self.requests[rid].phase = Phase::Finished;
                 }
             }
+            // the macro-stepping event horizon: the next arrival instant
+            let deadline = self
+                .requests
+                .get(next_arrival)
+                .map(|r| r.arrival)
+                .unwrap_or(f64::INFINITY);
 
             self.oracle_refresh();
 
@@ -292,10 +382,12 @@ impl<B: ExecutionBackend> Engine<B> {
                 };
                 self.scheduler.decide(&ctx)
             };
+            self.sched_invocations += 1;
 
+            let mut steps_taken = 1u64;
             match action {
                 Action::Prefill(reqs) => self.step_prefill(&reqs)?,
-                Action::Decode => self.step_decode()?,
+                Action::Decode => steps_taken = self.decode_or_fast_forward(deadline)?,
                 Action::Wait => {
                     if let Some(&r) = self.waiting.front() {
                         // a request that can never fit (prompt KV exceeds the
@@ -303,6 +395,7 @@ impl<B: ExecutionBackend> Engine<B> {
                         // reject it like a serving front-end would
                         if self.never_fits(r) {
                             self.waiting.pop_front();
+                            self.view_pop_waiting(r);
                             self.stats.dropped.push(r);
                             self.requests[r].phase = Phase::Finished;
                             continue;
@@ -320,13 +413,14 @@ impl<B: ExecutionBackend> Engine<B> {
                         // waiting blocked forever (pool busy by nothing):
                         // cannot happen unless never_fits missed it
                         let r = self.waiting.pop_front().unwrap();
+                        self.view_pop_waiting(r);
                         self.stats.dropped.push(r);
                         self.requests[r].phase = Phase::Finished;
                     }
                 }
             }
 
-            self.stats.steps += 1;
+            self.stats.steps += steps_taken;
             if self.backend.bounded_steps() && self.stats.steps > max_steps {
                 panic!(
                     "engine exceeded {max_steps} steps ({} waiting, {} running) — livelock",
@@ -384,6 +478,7 @@ impl<B: ExecutionBackend> Engine<B> {
         self.requests.push(r);
         if supported {
             self.waiting.push_back(local);
+            self.view_push_waiting(local);
         } else {
             // mirrors try_run's arrival-time rejection of prompts the
             // executor can never run
@@ -393,6 +488,16 @@ impl<B: ExecutionBackend> Engine<B> {
         local
     }
 
+    /// One scheduling step of the incremental path with no arrival in
+    /// sight: [`Engine::step_once_until`] at an infinite event horizon.
+    /// Callers that step an engine *up to a known arrival instant* must
+    /// use `step_once_until` with that instant instead — otherwise a
+    /// macro-step can legitimately commit decode work past the arrival the
+    /// caller was about to submit, which single-stepping would not.
+    pub fn step_once(&mut self, draining: bool) -> anyhow::Result<bool> {
+        self.step_once_until(draining, f64::INFINITY)
+    }
+
     /// One scheduling step of the incremental path — the body of
     /// `try_run`'s loop with the arrival bookkeeping lifted out. Returns
     /// `Ok(true)` when state changed (a step ran or a hopeless request was
@@ -400,8 +505,10 @@ impl<B: ExecutionBackend> Engine<B> {
     /// the caller submits more work (or, with `draining`, is fully
     /// drained). `draining` corresponds to `try_run` having exhausted its
     /// arrivals: a queue blocked with nothing running drops its head
-    /// instead of waiting for input that will never come.
-    pub fn step_once(&mut self, draining: bool) -> anyhow::Result<bool> {
+    /// instead of waiting for input that will never come. `deadline` is
+    /// the caller's next submit instant — the decode fast-forward horizon,
+    /// exactly `try_run`'s next-arrival bound.
+    pub fn step_once_until(&mut self, draining: bool, deadline: f64) -> anyhow::Result<bool> {
         self.oracle_refresh();
         let action = {
             let waiting = self.waiting.make_contiguous();
@@ -416,13 +523,16 @@ impl<B: ExecutionBackend> Engine<B> {
             };
             self.scheduler.decide(&ctx)
         };
+        self.sched_invocations += 1;
+        let mut steps_taken = 1u64;
         match action {
             Action::Prefill(reqs) => self.step_prefill(&reqs)?,
-            Action::Decode => self.step_decode()?,
+            Action::Decode => steps_taken = self.decode_or_fast_forward(deadline)?,
             Action::Wait => {
                 if let Some(&r) = self.waiting.front() {
                     if self.never_fits(r) {
                         self.waiting.pop_front();
+                        self.view_pop_waiting(r);
                         self.stats.dropped.push(r);
                         self.requests[r].phase = Phase::Finished;
                         return Ok(true); // try_run's `continue`: no step count
@@ -440,13 +550,14 @@ impl<B: ExecutionBackend> Engine<B> {
                     // no arrivals will ever come: drop the blocked head,
                     // exactly as try_run does past its last arrival
                     let r = self.waiting.pop_front().unwrap();
+                    self.view_pop_waiting(r);
                     self.stats.dropped.push(r);
                     self.requests[r].phase = Phase::Finished;
                 }
                 // falls through to the step count, as in try_run
             }
         }
-        self.stats.steps += 1;
+        self.stats.steps += steps_taken;
         let bound = 1000 + 4 * self.submitted_tokens;
         if self.backend.bounded_steps() && self.stats.steps > bound {
             panic!(
@@ -486,6 +597,11 @@ impl<B: ExecutionBackend> Engine<B> {
     }
 
     // --- router-facing load views ---------------------------------------
+    //
+    // §Perf: all four aggregate views are O(1) reads of the `LoadView`
+    // cache (a router calls every one of them per replica per arriving
+    // request). The `*_scan` forms are the O(n) from-scratch oracles the
+    // property suite validates the cache against.
 
     pub fn waiting_len(&self) -> usize {
         self.waiting.len()
@@ -496,27 +612,48 @@ impl<B: ExecutionBackend> Engine<B> {
     }
 
     /// Σ prefill tokens over the queue — the queued token demand a
-    /// KV-pressure router scores against the pools.
+    /// KV-pressure router scores against the pools. O(1).
     pub fn waiting_tokens(&self) -> usize {
-        self.waiting.iter().map(|&r| self.requests[r].prefill_len()).sum()
+        self.view.waiting_tokens
     }
 
     /// Σ context tokens over the running set (what decode iterations
-    /// stream each step).
+    /// stream each step). O(1).
     pub fn running_tokens(&self) -> usize {
-        self.running.iter().map(|&r| self.requests[r].context_len()).sum()
+        self.view.running_tokens
     }
 
     /// Σ modeled prefill time over the queue — the prefill backlog an
     /// SLO-aware router counts as unavoidable delay ahead of a new
-    /// request.
+    /// request. O(1) (float add/sub cache; agrees with the scan to
+    /// rounding, and is re-pinned to 0 whenever the queue drains).
     pub fn waiting_prefill_s(&self) -> f64 {
-        self.waiting.iter().map(|&r| self.cost.prefill_time(self.requests[r].prefill_len())).sum()
+        self.view.waiting_prefill_s
     }
 
     /// Σ predicted-median remaining output tokens over the running set —
-    /// the decode work outstanding before blocks free up.
+    /// the decode work outstanding before blocks free up. O(1).
     pub fn running_remaining_tokens(&self) -> usize {
+        self.view.running_remaining_tokens
+    }
+
+    /// From-scratch oracle for [`Engine::waiting_tokens`].
+    pub fn waiting_tokens_scan(&self) -> usize {
+        self.waiting.iter().map(|&r| self.requests[r].prefill_len()).sum()
+    }
+
+    /// From-scratch oracle for [`Engine::running_tokens`].
+    pub fn running_tokens_scan(&self) -> usize {
+        self.running.iter().map(|&r| self.requests[r].context_len()).sum()
+    }
+
+    /// From-scratch oracle for [`Engine::waiting_prefill_s`].
+    pub fn waiting_prefill_s_scan(&self) -> f64 {
+        self.waiting.iter().map(|&r| self.cost.prefill_time(self.requests[r].prefill_len())).sum()
+    }
+
+    /// From-scratch oracle for [`Engine::running_remaining_tokens`].
+    pub fn running_remaining_tokens_scan(&self) -> usize {
         self.running
             .iter()
             .map(|&r| {
@@ -524,6 +661,61 @@ impl<B: ExecutionBackend> Engine<B> {
                 req.predicted_median().saturating_sub(req.generated)
             })
             .sum()
+    }
+
+    // --- load-view upkeep ------------------------------------------------
+
+    /// A request entered the queue (arrival admission, submit, or a
+    /// recompute preemption's re-queue — its phase is already `Preempted`
+    /// there, so `prefill_len` includes the generated tokens, matching
+    /// what the scan would count).
+    fn view_push_waiting(&mut self, rid: ReqId) {
+        let len = self.requests[rid].prefill_len();
+        self.view.waiting_tokens += len;
+        self.view.waiting_prefill_s += self.cost.prefill_time(len);
+    }
+
+    /// A request left the queue (admission or drop); call after the
+    /// removal but before any phase change, so `prefill_len` matches what
+    /// `view_push_waiting` added.
+    fn view_pop_waiting(&mut self, rid: ReqId) {
+        let len = self.requests[rid].prefill_len();
+        self.view.waiting_tokens -= len;
+        self.view.waiting_prefill_s -= self.cost.prefill_time(len);
+        if self.waiting.is_empty() {
+            // pin the float sum back to exactly zero so subtraction
+            // rounding cannot accumulate across queue cycles
+            self.view.waiting_prefill_s = 0.0;
+        }
+    }
+
+    /// A request joined the running set (post-allocation, pre-first-token).
+    fn view_admit_running(&mut self, rid: ReqId) {
+        let r = &self.requests[rid];
+        self.view.running_tokens += r.context_len();
+        self.view.running_remaining_tokens +=
+            r.predicted_median().saturating_sub(r.generated);
+    }
+
+    /// A request is leaving the running set (finish or preemption); call
+    /// before its timing fields change.
+    fn view_remove_running(&mut self, rid: ReqId) {
+        let r = &self.requests[rid];
+        self.view.running_tokens -= r.context_len();
+        self.view.running_remaining_tokens -=
+            r.predicted_median().saturating_sub(r.generated);
+    }
+
+    /// A running request generated one more token; call AFTER its
+    /// `generated` was incremented.
+    fn view_append_token(&mut self, rid: ReqId) {
+        self.view.running_tokens += 1;
+        let r = &self.requests[rid];
+        // remaining = median.saturating_sub(generated) only shrinks while
+        // generated has not passed the predicted median
+        if r.generated <= r.predicted_median() {
+            self.view.running_remaining_tokens -= 1;
+        }
     }
 
     // --- incremental-state upkeep --------------------------------------
@@ -537,7 +729,9 @@ impl<B: ExecutionBackend> Engine<B> {
         self.running.sort_by(|&a, &b| {
             let ta = reqs[a].prefill_start.unwrap_or(0.0);
             let tb = reqs[b].prefill_start.unwrap_or(0.0);
-            ta.partial_cmp(&tb).unwrap()
+            // total order: a NaN timestamp (which would be a bug upstream)
+            // sorts last instead of panicking mid-run
+            ta.total_cmp(&tb)
         });
         self.agg = RunningAggregates::recompute(&self.running, &self.requests, &self.kv);
     }
@@ -687,6 +881,119 @@ impl<B: ExecutionBackend> Engine<B> {
         freed >= need
     }
 
+    // --- decode fast-forward (macro-stepping) ---------------------------
+
+    /// The shared `Action::Decode` arm of `try_run` and `step_once_until`
+    /// (one body, so the two drive paths cannot desynchronize): try the
+    /// macro-step first, fall back to one single step, and return the
+    /// engine steps consumed for the caller's step accounting.
+    fn decode_or_fast_forward(&mut self, deadline: f64) -> anyhow::Result<u64> {
+        // 0 = not stable / horizon too short: run the single-step path
+        let k = self.fast_forward_decode(deadline);
+        if k == 0 {
+            self.step_decode()?;
+            return Ok(1);
+        }
+        Ok(k)
+    }
+
+    /// The scheduler just returned `Action::Decode`. If the machine is
+    /// *stable* — queue empty, nothing parked on host or disk (so every
+    /// running request is fully GPU-resident, `restore_layers` and the
+    /// host spill watermark are no-ops, and the decode batch is the whole
+    /// running set) — solve the event horizon and commit all `k`
+    /// iterations up to it in one macro-step. Returns the number of engine
+    /// steps committed; 0 means "not applicable, run the single-step
+    /// path". Bit-identical to `k` single steps by construction
+    /// (`tests/prop_fastforward.rs` drives the proof).
+    fn fast_forward_decode(&mut self, deadline: f64) -> u64 {
+        if !self.macro_steps || !self.incremental || !self.backend.supports_fast_forward()
+        {
+            return 0;
+        }
+        if !self.waiting.is_empty() || self.kv.cpu.used() != 0 || self.kv.disk.used() != 0
+        {
+            return 0;
+        }
+        let batch = self.running.len();
+        if batch == 0 || batch > self.backend.max_decode_lanes() {
+            return 0;
+        }
+        // nothing parked anywhere => every table is fully GPU-resident
+        debug_assert_eq!(self.agg.resident_count, batch);
+        let bs = self.kv.block_size;
+        self.ff_hist.clear();
+        self.ff_hist.resize(bs, 0);
+        let mut min_remaining = usize::MAX;
+        for &rid in &self.running {
+            let Some(t) = self.kv.table(rid) else { return 0 };
+            self.ff_hist[t.tokens % bs] += 1;
+            let r = &self.requests[rid];
+            min_remaining = min_remaining.min(r.output_len.saturating_sub(r.generated));
+        }
+        if min_remaining <= 1 {
+            return 0; // a completion lands this very step: single-step it
+        }
+        let k = decode_horizon(
+            &HorizonInputs {
+                now: self.backend.clock().now(),
+                deadline,
+                resident_tokens: self.agg.resident_tokens,
+                batch,
+                gpu_available: self.kv.gpu.available(),
+                gpu_total: self.kv.gpu.total(),
+                n_layers: self.cfg.model.n_layers,
+                offload_gate: matches!(self.cfg.policy, Policy::LayerKv { .. }),
+                cost: &self.cost,
+            },
+            min_remaining - 1, // stop strictly before the first completion
+            &self.ff_hist,
+            &mut self.ff_durations,
+        );
+        if k < 2 {
+            return 0; // nothing to skip: keep the single-step path hot
+        }
+        self.commit_fast_forward(k);
+        k as u64
+    }
+
+    /// Commit `k` horizon-cleared decode iterations at once. The clock and
+    /// the scheduler's TPOT feedback replay the solver's recorded per-step
+    /// duration sequence exactly (float accumulation order is semantics,
+    /// and the cost model is evaluated once per step, in the solver); the
+    /// block tables take one bulk `alloc_span` per request instead of `k`
+    /// `append_token`s.
+    fn commit_fast_forward(&mut self, k: usize) {
+        debug_assert_eq!(self.ff_durations.len(), k);
+        let batch = self.running.len();
+        #[cfg(debug_assertions)]
+        let (now0, ctx0) = (self.backend.clock().now(), self.agg.resident_tokens);
+        for &d in &self.ff_durations {
+            self.backend.clock_mut().advance(d);
+            self.scheduler.observe_decode_step(d);
+        }
+        #[cfg(debug_assertions)]
+        debug_assert_eq!(
+            self.backend.clock().now().to_bits(),
+            self.cost.decode_span_end(now0, ctx0, batch, k).to_bits(),
+            "macro-step clock must equal the closed-form span end"
+        );
+        for i in 0..self.running.len() {
+            let rid = self.running[i];
+            self.kv
+                .alloc_span(rid, k)
+                .expect("horizon solver cleared the span's block growth");
+            let r = &mut self.requests[rid];
+            let consumed = r.predicted_median().saturating_sub(r.generated).min(k);
+            r.generated += k;
+            debug_assert!(!r.done(), "horizon must stop before any completion");
+            self.view.running_tokens += k;
+            self.view.running_remaining_tokens -= consumed;
+        }
+        self.agg.resident_tokens += k * batch;
+        self.stats.decode_steps += k as u64;
+    }
+
     // --- prefill -------------------------------------------------------
 
     fn step_prefill(&mut self, reqs: &[(ReqId, usize)]) -> anyhow::Result<()> {
@@ -707,8 +1014,10 @@ impl<B: ExecutionBackend> Engine<B> {
             // admissions are a queue prefix -> O(1) pop in the common case
             if self.waiting.front() == Some(&rid) {
                 self.waiting.pop_front();
+                self.view_pop_waiting(rid);
             } else if let Some(pos) = self.waiting.iter().position(|&w| w == rid) {
                 self.waiting.remove(pos);
+                self.view_pop_waiting(rid);
             }
             if self.requests[rid].prefill_start.is_none() {
                 self.requests[rid].prefill_start = Some(self.backend.clock().now());
@@ -740,6 +1049,7 @@ impl<B: ExecutionBackend> Engine<B> {
                 .partition_point(|&o| reqs_ref[o].prefill_start.unwrap_or(0.0) <= ps);
             self.running.insert(pos, rid);
             self.agg_admit(rid);
+            self.view_admit_running(rid);
         }
         self.stats.offload_bytes += offload_bytes;
         self.stats.spill_bytes += spill_bytes;
@@ -757,6 +1067,7 @@ impl<B: ExecutionBackend> Engine<B> {
                     self.requests[rid].first_token = Some(now);
                 }
                 self.requests[rid].generated = 1;
+                self.view_append_token(rid);
                 if self.incremental
                     && self.kv.table(rid).map(|t| t.fully_resident()).unwrap_or(false)
                 {
@@ -886,6 +1197,7 @@ impl<B: ExecutionBackend> Engine<B> {
             }
             self.backend.commit_token(rid);
             self.requests[rid].generated += 1;
+            self.view_append_token(rid);
             if self.incremental
                 && self.kv.table(rid).map(|t| t.fully_resident()).unwrap_or(false)
             {
@@ -1015,11 +1327,15 @@ impl<B: ExecutionBackend> Engine<B> {
     /// vLLM recompute preemption: drop all KV, requeue at the FRONT.
     fn preempt_recompute(&mut self, rid: ReqId) {
         self.agg_remove(rid);
+        self.view_remove_running(rid);
         let _ = self.kv.release(rid);
         self.backend.evict(rid);
         self.running.retain(|&r| r != rid);
         self.requests[rid].phase = Phase::Preempted;
         self.waiting.push_front(rid);
+        // phase is already Preempted, so the queue view charges the full
+        // re-prefill (prompt + generated) — exactly what the scan counts
+        self.view_push_waiting(rid);
         self.stats.preemptions += 1;
     }
 
@@ -1066,6 +1382,7 @@ impl<B: ExecutionBackend> Engine<B> {
 
     fn complete(&mut self, rid: ReqId) {
         self.agg_remove(rid);
+        self.view_remove_running(rid);
         let _ = self.kv.release(rid);
         self.backend.release(rid);
         self.running.retain(|&r| r != rid);
@@ -1310,14 +1627,15 @@ mod tests {
             let mut e = Engine::new(cfg, predictor.clone());
             for tr in &trace.requests {
                 // drive the engine up to this arrival, then hand it over
-                // (the same pattern Cluster::run uses; the 1e-12 mirrors
-                // try_run's arrival-admission epsilon)
-                while tr.arrival > e.now() + 1e-12 {
-                    if !e.step_once(false).unwrap() {
+                // (the same pattern Cluster::run uses; CLOCK_EPS mirrors
+                // try_run's arrival-admission epsilon, and the arrival is
+                // the decode fast-forward horizon)
+                while tr.arrival > e.now() + CLOCK_EPS {
+                    if !e.step_once_until(false, tr.arrival).unwrap() {
                         break;
                     }
                 }
-                if tr.arrival > e.now() + 1e-12 {
+                if tr.arrival > e.now() + CLOCK_EPS {
                     e.wait_until(tr.arrival);
                 }
                 e.submit(tr, predictor.predict(tr.id, tr.output_len));
@@ -1332,6 +1650,33 @@ mod tests {
             assert_eq!(inc.records, bare.records, "policy {policy:?}");
             assert_eq!(inc.makespan.to_bits(), bare.makespan.to_bits());
             assert_eq!(inc_stats, bare_stats, "policy {policy:?}");
+        }
+    }
+
+    #[test]
+    fn macro_stepping_matches_single_step_smoke() {
+        // full randomized coverage lives in tests/prop_fastforward.rs;
+        // this is the fast in-tree guard that decode fast-forwarding is
+        // invisible in everything but the scheduler-invocation count
+        for policy in [Policy::Vllm, Policy::LayerKv { slo_aware: true }] {
+            let cfg = ServingConfig::llama2_7b_tp1().with_policy(policy);
+            let trace = small_trace(1024, 10, 2.0);
+            let predictor = standard_predictor(&trace, 0.8);
+            let mut fast = Engine::new(cfg.clone(), predictor.clone());
+            fast.set_macro_steps(true);
+            let rep_fast = fast.run(&trace);
+            let mut slow = Engine::new(cfg, predictor);
+            slow.set_macro_steps(false);
+            let rep_slow = slow.run(&trace);
+            assert_eq!(rep_fast.records, rep_slow.records, "policy {policy:?}");
+            assert_eq!(rep_fast.makespan.to_bits(), rep_slow.makespan.to_bits());
+            assert_eq!(fast.stats(), slow.stats(), "policy {policy:?}");
+            assert!(
+                fast.sched_invocations() < slow.sched_invocations(),
+                "macro-stepping must skip scheduler invocations ({} vs {})",
+                fast.sched_invocations(),
+                slow.sched_invocations()
+            );
         }
     }
 

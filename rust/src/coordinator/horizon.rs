@@ -1,0 +1,243 @@
+//! Event-horizon solver for decode fast-forwarding (macro-stepping).
+//!
+//! When the scheduler returns `Action::Decode` on a *stable* machine —
+//! the queue is empty and every running request's KV is fully GPU-resident
+//! (nothing parked on host or disk) — every subsequent engine loop turn is
+//! provably another identical-shape decode iteration until the next
+//! state-changing **event**:
+//!
+//! * the next **arrival** crosses the admission epsilon (the `deadline`
+//!   hint the caller threads in: `try_run`'s next trace arrival, or the
+//!   cluster lockstep's next routed request),
+//! * the earliest **completion** (min remaining output tokens over the
+//!   batch — ground truth, not the predictor bucket: `Request::done`
+//!   consumes `output_len`),
+//! * a **GPU pool event**: block-boundary growth either exhausts the free
+//!   list (the single-step path would force-offload or recompute-preempt)
+//!   or, under the LayerKV policy, drops free blocks to ≤ 25 % of the pool
+//!   — the point where `proactive_offloads` stops short-circuiting and the
+//!   Eq. 5 forecast could start planning offloads.
+//!
+//! Host/disk watermark crossings and restore activity cannot occur inside
+//! the span: stability requires `cpu.used() == 0 && disk.used() == 0`, so
+//! the host pool sits at full availability (≥ its spill watermark) and
+//! `restore_layers` short-circuits. Decode-lane caps are constant per
+//! backend; the engine only fast-forwards when the whole running set fits
+//! one batch.
+//!
+//! The solver walks candidate steps with O(1) work each — the per-step
+//! decode duration is `CostModel::decode_step_time_sum` on the running
+//! context total, and block-boundary growth comes from a histogram of
+//! `table.tokens % block_size` over the batch — and returns the largest
+//! committable `k`. The clock bound accumulates durations *sequentially*
+//! (`t += d_j`), the exact float-op sequence `VirtualClock::advance`
+//! performs, so the macro-step's final clock is bit-identical to `k`
+//! single steps.
+
+use crate::coordinator::engine::CLOCK_EPS;
+use crate::sim::CostModel;
+
+/// Everything the solver reads about the stable machine. One snapshot —
+/// the solver mutates nothing.
+pub struct HorizonInputs<'a> {
+    /// Engine clock now (the span's step 1 is already committed to run
+    /// at this instant: the scheduler decided `Decode` for it).
+    pub now: f64,
+    /// Next arrival instant (`f64::INFINITY` when no arrival is pending).
+    /// Step `j ≥ 2` is only committable while the admission check before
+    /// it — `arrival <= t + CLOCK_EPS` — would still come up empty.
+    pub deadline: f64,
+    /// Σ context tokens over the (fully resident) decode batch.
+    pub resident_tokens: usize,
+    /// Decode batch size (= the whole running set).
+    pub batch: usize,
+    /// Free GPU layer-blocks right now.
+    pub gpu_available: usize,
+    /// GPU pool capacity in layer-blocks.
+    pub gpu_total: usize,
+    /// Layers every table grows at a block boundary (all GPU-resident).
+    pub n_layers: usize,
+    /// LayerKV policy: keep free blocks above 25 % of the pool so the
+    /// Eq. 5 proactive-offload check keeps short-circuiting to "no plan"
+    /// (the vLLM baseline never offloads proactively; it only needs the
+    /// free list to cover the span's growth).
+    pub offload_gate: bool,
+    pub cost: &'a CostModel,
+}
+
+/// Largest `k` such that decode steps `1..=k` can be committed as one
+/// macro-step with bit-identical outcome to `k` single steps.
+///
+/// `max_k` is the completion bound (min remaining output tokens − 1, so
+/// the span stops strictly before any request finishes) and `hist[c]`
+/// counts batch tables with `tokens % block_size == c` — table tokens at
+/// step `j` have advanced by `j − 1`, so the tables crossing a block
+/// boundary at step `j` are exactly those with residue
+/// `(block_size − (j − 1) % block_size) % block_size`.
+///
+/// Each committed step's duration is pushed onto `durations` (cleared
+/// first; a reusable caller buffer) so the committing engine replays the
+/// exact same floats instead of re-evaluating the cost model `k` more
+/// times.
+///
+/// Returns 0 when even the already-decided first step violates a pool
+/// constraint — the caller falls back to the single-step path, which owns
+/// the messy cases (forced offload, preemption, forecast offloads).
+pub fn decode_horizon(
+    inp: &HorizonInputs,
+    max_k: usize,
+    hist: &[usize],
+    durations: &mut Vec<f64>,
+) -> usize {
+    let bs = hist.len();
+    debug_assert!(bs > 0 && inp.batch > 0);
+    durations.clear();
+    let mut t = inp.now;
+    let mut ctx = inp.resident_tokens;
+    let mut avail = inp.gpu_available;
+    let mut k = 0usize;
+    while k < max_k {
+        let j = k + 1;
+        // an arrival admitted before step j ends the span (step 1 was
+        // decided after this turn's admissions, so it carries no bound)
+        if j >= 2 && inp.deadline <= t + CLOCK_EPS {
+            break;
+        }
+        // block-boundary growth this step: every matching table adds one
+        // block per (GPU-resident) layer
+        let residue = (bs - (j - 1) % bs) % bs;
+        let need = hist[residue] * inp.n_layers;
+        if need > avail {
+            break; // single-step path would hit relieve_gpu_pressure
+        }
+        let after = avail - need;
+        if inp.offload_gate && after * 4 <= inp.gpu_total {
+            break; // Eq. 5 forecast would no longer short-circuit
+        }
+        // commit step j: same accumulation order as the engine's clock
+        let d = inp.cost.decode_step_time_sum(ctx, inp.batch);
+        durations.push(d);
+        t += d;
+        ctx += inp.batch;
+        avail = after;
+        k = j;
+    }
+    debug_assert_eq!(durations.len(), k);
+    // the walk above IS CostModel::decode_span_end — assert the two stay
+    // the same sequence (the engine's debug cross-check relies on it)
+    debug_assert_eq!(
+        t.to_bits(),
+        inp.cost.decode_span_end(inp.now, inp.resident_tokens, inp.batch, k).to_bits()
+    );
+    k
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ServingConfig;
+
+    fn inputs(cost: &CostModel) -> HorizonInputs<'_> {
+        HorizonInputs {
+            now: 10.0,
+            deadline: f64::INFINITY,
+            resident_tokens: 4096,
+            batch: 4,
+            gpu_available: 50_000,
+            gpu_total: 60_000,
+            n_layers: 32,
+            offload_gate: true,
+            cost,
+        }
+    }
+
+    #[test]
+    fn completion_bound_caps_the_span() {
+        let cost = CostModel::new(ServingConfig::llama2_7b_tp1());
+        let hist = vec![0usize; 16]; // no table near a block boundary
+        let inp = inputs(&cost);
+        assert_eq!(decode_horizon(&inp, 0, &hist, &mut Vec::new()), 0);
+        assert_eq!(decode_horizon(&inp, 7, &hist, &mut Vec::new()), 7);
+        assert_eq!(decode_horizon(&inp, 5000, &hist, &mut Vec::new()), 5000);
+    }
+
+    #[test]
+    fn durations_buffer_replays_the_walk() {
+        let cost = CostModel::new(ServingConfig::llama2_7b_tp1());
+        let hist = vec![0usize; 16];
+        let inp = inputs(&cost);
+        let mut durs = vec![99.0]; // stale content must be cleared
+        let k = decode_horizon(&inp, 25, &hist, &mut durs);
+        assert_eq!(k, 25);
+        assert_eq!(durs.len(), 25);
+        for (i, d) in durs.iter().enumerate() {
+            let want =
+                cost.decode_step_time_sum(inp.resident_tokens + i * inp.batch, inp.batch);
+            assert_eq!(d.to_bits(), want.to_bits(), "step {i}");
+        }
+    }
+
+    #[test]
+    fn deadline_bounds_by_clock_accumulation() {
+        let cost = CostModel::new(ServingConfig::llama2_7b_tp1());
+        let hist = vec![0usize; 16];
+        let mut inp = inputs(&cost);
+        // replay the solver's own accumulation to find where 3 steps land
+        let mut t = inp.now;
+        for i in 0..3usize {
+            t += cost.decode_step_time_sum(inp.resident_tokens + i * inp.batch, inp.batch);
+        }
+        // an arrival exactly at the 3-step mark: steps 1..=3 run (step 4's
+        // pre-check sees the arrival due), so the span is 3
+        inp.deadline = t;
+        assert_eq!(decode_horizon(&inp, 1000, &hist, &mut Vec::new()), 3);
+        // an arrival already due bounds the span to the decided step only
+        inp.deadline = inp.now;
+        assert_eq!(decode_horizon(&inp, 1000, &hist, &mut Vec::new()), 1);
+        // far-future arrival: completion bound wins again
+        inp.deadline = t + 1.0e9;
+        assert!(decode_horizon(&inp, 1000, &hist, &mut Vec::new()) > 3);
+    }
+
+    #[test]
+    fn gpu_capacity_bounds_block_boundaries() {
+        let cost = CostModel::new(ServingConfig::llama2_7b_tp1());
+        // 2 tables sitting right on a boundary (residue 0): they grow at
+        // step 1, then again every 16 steps
+        let mut hist = vec![0usize; 16];
+        hist[0] = 2;
+        let mut inp = inputs(&cost);
+        inp.offload_gate = false;
+        inp.batch = 2;
+        // room for exactly 3 boundary waves of 2 tables * 32 layers
+        inp.gpu_available = 3 * 2 * 32;
+        inp.gpu_total = 1 << 20;
+        // waves land at steps 1, 17, 33; the 4th wave at step 49 fails
+        assert_eq!(decode_horizon(&inp, 10_000, &hist, &mut Vec::new()), 48);
+        // first step itself infeasible -> 0 (caller single-steps)
+        inp.gpu_available = 63;
+        assert_eq!(decode_horizon(&inp, 10_000, &hist, &mut Vec::new()), 0);
+    }
+
+    #[test]
+    fn layerkv_gate_stops_above_pool_pressure() {
+        let cost = CostModel::new(ServingConfig::llama2_7b_tp1());
+        let mut hist = vec![0usize; 16];
+        hist[0] = 1;
+        let mut inp = inputs(&cost);
+        inp.batch = 1;
+        inp.n_layers = 32;
+        inp.gpu_total = 1000;
+        // 282 free: first boundary leaves 250 = exactly 25 % -> the gate
+        // (avail * 4 > total) fails right at step 1
+        inp.gpu_available = 282;
+        assert_eq!(decode_horizon(&inp, 10_000, &hist, &mut Vec::new()), 0);
+        // one block of headroom: step 1 passes, the next wave at step 17
+        // would leave 219 < 25 % -> span is 16
+        inp.gpu_available = 283;
+        assert_eq!(decode_horizon(&inp, 10_000, &hist, &mut Vec::new()), 16);
+        // vLLM ignores the gate and runs to raw capacity
+        inp.offload_gate = false;
+        assert!(decode_horizon(&inp, 10_000, &hist, &mut Vec::new()) > 16);
+    }
+}

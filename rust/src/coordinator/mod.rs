@@ -6,11 +6,13 @@
 //! * `predict`   — output-length bucket predictor (§3.1)
 //! * `backend`   — the `ExecutionBackend` seam: simulated vs real executor
 //! * `engine`    — the backend-generic continuous-batching coordinator
+//! * `horizon`   — the decode fast-forward (macro-stepping) event solver
 //! * `request`   — request lifecycle + Eq. 1 timing state
 
 pub mod backend;
 pub mod block;
 pub mod engine;
+pub mod horizon;
 pub mod predict;
 pub mod request;
 pub mod scheduler;
@@ -20,7 +22,7 @@ pub use backend::{
     WallClock,
 };
 pub use block::{KvError, KvManager};
-pub use engine::{run_trace, standard_predictor, Engine, EngineStats};
+pub use engine::{run_trace, standard_predictor, Engine, EngineStats, CLOCK_EPS};
 pub use predict::LengthPredictor;
 pub use request::{Phase, ReqId, Request};
 pub use scheduler::{Action, Scheduler};

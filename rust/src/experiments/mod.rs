@@ -600,9 +600,22 @@ pub const CLUSTER_RATES_PER_REPLICA: &[f64] = &[1.5, 2.5, 3.5];
 /// The sweep at an explicit per-replica request count (tests use a small
 /// one).
 pub fn cluster_sweep_with(n_per_replica: usize) -> Vec<ClusterRow> {
-    const REPLICAS: &[usize] = &[2, 4, 8];
+    cluster_sweep_cells(&[2, 4, 8], n_per_replica)
+}
+
+/// The scaled-up sweep decode fast-forwarding pays for: fleet sizes to 32
+/// replicas at several times the per-cell trace volume. Before
+/// macro-stepping, each cell cost O(total output tokens) scheduler
+/// invocations per replica — this grid was unaffordable in CI; now each
+/// replica advances O(events) per cell (`experiment cluster-wide`;
+/// `--no-macro-steps` restores the old cost for comparison).
+pub fn cluster_sweep_wide() -> Vec<ClusterRow> {
+    cluster_sweep_cells(&[4, 8, 16, 32], n_requests(300))
+}
+
+fn cluster_sweep_cells(replica_counts: &[usize], n_per_replica: usize) -> Vec<ClusterRow> {
     let mut cells: Vec<(usize, f64, RouterPolicy)> = Vec::new();
-    for &k in REPLICAS {
+    for &k in replica_counts {
         for &rate_per in CLUSTER_RATES_PER_REPLICA {
             for &router in RouterPolicy::ALL {
                 cells.push((k, rate_per, router));
@@ -658,7 +671,10 @@ pub fn print_cluster(rows: &[ClusterRow]) {
     t.print();
     // the headline comparison: state-blind vs pressure-aware at each size,
     // at the bursty-but-stable reference rate
-    for &k in &[4usize, 8] {
+    let mut sizes: Vec<usize> = rows.iter().map(|r| r.replicas).collect();
+    sizes.sort_unstable();
+    sizes.dedup();
+    for &k in sizes.iter().filter(|&&k| k >= 4) {
         let get = |p: RouterPolicy| {
             rows.iter().find(|r| {
                 r.replicas == k

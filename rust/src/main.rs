@@ -1,12 +1,15 @@
 //! LayerKV command-line entry point.
 //!
 //! ```text
-//! layerkv experiment <fig1|fig4|fig5|fig6|fig7|fig8|tiers|bursty|cluster|table1|all> [--quick]
+//! layerkv experiment <fig1|fig4|fig5|fig6|fig7|fig8|tiers|bursty|cluster|cluster-wide|table1|all>
+//!                    [--quick] [--macro-steps|--no-macro-steps]
 //! layerkv sim --model <7b|34b|70b> --policy <vllm|layerkv|layerkv-no-slo>
 //!             --ctx <tokens> --rate <req/s> --requests <n> [--sharegpt]
 //! layerkv serve [--addr 127.0.0.1:7181] [--artifacts DIR] [--budget BYTES]
 //!               [--policy <vllm|layerkv|layerkv-no-slo>] [--max-batch N]
 //!               [--ref-model] [--replicas N] [--router <policy>]
+//! layerkv bench-check [--baseline BENCH_baseline.json] [--current BENCH_hotpath.json]
+//!                     [--factor 2.5] [--update]
 //! layerkv selftest [--artifacts DIR]
 //! ```
 //!
@@ -37,6 +40,7 @@ fn main() -> ExitCode {
         "experiment" => cmd_experiment(rest),
         "sim" => cmd_sim(rest),
         "serve" => cmd_serve(rest),
+        "bench-check" => cmd_bench_check(rest),
         "selftest" => cmd_selftest(rest),
         "help" | "--help" | "-h" => {
             print_help();
@@ -62,11 +66,14 @@ fn print_help() {
         "layerkv — layer-wise KV cache management for LLM serving (paper reproduction)\n\
          \n\
          USAGE:\n\
-         \x20 layerkv experiment <fig1|fig4|fig5|fig6|fig7|fig8|tiers|bursty|cluster|table1|all> [--quick]\n\
+         \x20 layerkv experiment <fig1|fig4|fig5|fig6|fig7|fig8|tiers|bursty|cluster|cluster-wide|table1|all>\n\
+         \x20                    [--quick] [--macro-steps|--no-macro-steps]\n\
          \x20 layerkv sim --model 7b --policy layerkv --ctx 4096 --rate 1.0 --requests 100 [--sharegpt]\n\
          \x20 layerkv serve [--addr 127.0.0.1:7181] [--artifacts DIR] [--budget BYTES]\n\
          \x20               [--policy vllm|layerkv|layerkv-no-slo] [--max-batch N] [--ref-model]\n\
          \x20               [--replicas N] [--router round-robin|jsq|kv-pressure|slo-aware]\n\
+         \x20 layerkv bench-check [--baseline BENCH_baseline.json] [--current BENCH_hotpath.json]\n\
+         \x20                     [--factor 2.5] [--update]\n\
          \x20 layerkv selftest [--artifacts DIR]"
     );
 }
@@ -84,6 +91,13 @@ fn cmd_experiment(args: &[String]) -> anyhow::Result<()> {
     if flag(args, "--quick") {
         std::env::set_var("LAYERKV_QUICK", "1");
     }
+    // decode fast-forwarding toggle (default on; bit-identical results
+    // either way — off is the O(tokens) single-step debugging path)
+    if flag(args, "--no-macro-steps") {
+        std::env::set_var("LAYERKV_MACRO", "0");
+    } else if flag(args, "--macro-steps") {
+        std::env::set_var("LAYERKV_MACRO", "1");
+    }
     let which = args.first().map(String::as_str).unwrap_or("all");
     let run = |id: &str| -> anyhow::Result<()> {
         match id {
@@ -97,6 +111,10 @@ fn cmd_experiment(args: &[String]) -> anyhow::Result<()> {
             "tiers" => exp::print_tier_sweep(&exp::tier_sweep()),
             "bursty" => exp::print_bursty(&exp::bursty()),
             "cluster" => exp::print_cluster(&exp::cluster_sweep()),
+            // the macro-stepping payoff: fleets to 32 replicas at 3x the
+            // trace volume per cell (kept out of `all` — it is the
+            // dedicated scale run)
+            "cluster-wide" => exp::print_cluster(&exp::cluster_sweep_wide()),
             other => anyhow::bail!("unknown experiment '{other}'"),
         }
         Ok(())
@@ -209,6 +227,104 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
     };
     let artifacts = (!flag(args, "--ref-model")).then_some(dir.as_path());
     layerkv::server::serve(&addr, artifacts, cfg, replicas, router)
+}
+
+/// One recorded bench series: (name, ns_per_iter, iters). `iters == 0`
+/// marks a *seed* baseline entry (committed ceiling, not yet measured on
+/// this class of machine).
+fn load_bench_json(path: &str) -> anyhow::Result<Vec<(String, f64, f64)>> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+    let json = layerkv::util::Json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("parsing {path}: {e}"))?;
+    let arr = json
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("{path}: bench json must be an array"))?;
+    let mut out = Vec::new();
+    for entry in arr {
+        let name = entry
+            .req("name")?
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("{path}: series name must be a string"))?
+            .to_string();
+        let ns = entry
+            .req("ns_per_iter")?
+            .as_f64()
+            .ok_or_else(|| anyhow::anyhow!("{path}: {name}: ns_per_iter must be a number"))?;
+        let iters = entry.req("iters")?.as_f64().unwrap_or(0.0);
+        out.push((name, ns, iters));
+    }
+    Ok(out)
+}
+
+/// CI perf gate: compare the fresh `BENCH_hotpath.json` against the
+/// committed baseline and fail on any `kv_manager/` / `scheduler/` /
+/// `engine/` / `cluster/` series regressing past `--factor` (default
+/// 2.5x), or silently vanishing from the run. `--update` refreshes the
+/// baseline from the current results instead (do this deliberately, on a
+/// representative machine, when a slowdown is intended).
+fn cmd_bench_check(args: &[String]) -> anyhow::Result<()> {
+    let current = opt(args, "--current").unwrap_or_else(|| "BENCH_hotpath.json".into());
+    let baseline = opt(args, "--baseline").unwrap_or_else(|| "BENCH_baseline.json".into());
+    let factor: f64 = opt(args, "--factor").unwrap_or_else(|| "2.5".into()).parse()?;
+    if flag(args, "--update") {
+        std::fs::copy(&current, &baseline)
+            .map_err(|e| anyhow::anyhow!("copying {current} -> {baseline}: {e}"))?;
+        println!("bench-check: baseline {baseline} refreshed from {current}");
+        return Ok(());
+    }
+    const PREFIXES: &[&str] = &["kv_manager/", "scheduler/", "engine/", "cluster/"];
+    let gated = |name: &str| PREFIXES.iter().any(|p| name.starts_with(p));
+    let cur = load_bench_json(&current)?;
+    let base = load_bench_json(&baseline)?;
+    let mut failures: Vec<String> = Vec::new();
+    let mut checked = 0usize;
+    for (name, ns, _) in &cur {
+        if !gated(name) {
+            continue;
+        }
+        match base.iter().find(|(b, _, _)| b == name) {
+            None => println!(
+                "bench-check: {name}: new series (no baseline entry) — \
+                 refresh with `bench-check --update` once reviewed"
+            ),
+            Some((_, base_ns, base_iters)) => {
+                checked += 1;
+                let ratio = ns / base_ns.max(1e-9);
+                let tag = if *base_iters == 0.0 { " [seed baseline]" } else { "" };
+                if ratio > factor {
+                    failures.push(format!(
+                        "{name}: {ns:.1} ns/iter vs baseline {base_ns:.1} = {ratio:.2}x{tag}"
+                    ));
+                } else {
+                    println!("bench-check: {name}: {ratio:.2}x of baseline{tag} — ok");
+                }
+            }
+        }
+    }
+    // a deleted bench would otherwise dodge the gate forever
+    for (name, _, _) in &base {
+        if gated(name) && !cur.iter().any(|(c, _, _)| c == name) {
+            failures.push(format!("{name}: in the baseline but missing from {current}"));
+        }
+    }
+    anyhow::ensure!(
+        checked > 0,
+        "no comparable series found (checked prefixes: {PREFIXES:?})"
+    );
+    if failures.is_empty() {
+        println!("bench-check: {checked} series within {factor}x of the baseline");
+        Ok(())
+    } else {
+        for f in &failures {
+            eprintln!("bench-check REGRESSION: {f}");
+        }
+        anyhow::bail!(
+            "{} series regressed past {factor}x (if intentional, refresh with \
+             `layerkv bench-check --update`)",
+            failures.len()
+        )
+    }
 }
 
 fn cmd_selftest(args: &[String]) -> anyhow::Result<()> {

@@ -184,6 +184,37 @@ impl CostModel {
         (weights + kv).max(compute) + self.allreduce_time(batch) + STEP_OVERHEAD_S
     }
 
+    /// Engine clock after `k` stable decode iterations starting at `now`
+    /// over a fixed batch whose total context starts at `total_ctx` and
+    /// grows by `batch` tokens per step (every lane appends one token).
+    ///
+    /// Deliberately accumulated per-step in sequence — NOT algebraically
+    /// collapsed — because float addition is non-associative and the
+    /// macro-stepping engine's contract is that the span's final clock is
+    /// **bit-identical** to `k` successive `decode_step_time_sum` clock
+    /// advances (the horizon solver and the committing engine both walk
+    /// this exact sequence).
+    pub fn decode_span_end(&self, now: f64, total_ctx: usize, batch: usize, k: usize) -> f64 {
+        let mut t = now;
+        let mut ctx = total_ctx;
+        for _ in 0..k {
+            t += self.decode_step_time_sum(ctx, batch);
+            ctx += batch;
+        }
+        t
+    }
+
+    /// Closed form for the KV bytes a `k`-step stable decode span streams
+    /// from GPU memory (reporting/roofline use — not on the bit-identity
+    /// path, so the arithmetic series IS collapsed): Σ_{i=0}^{k-1}
+    /// (total_ctx + i·batch) tokens of per-token KV, per GPU shard.
+    pub fn decode_span_kv_bytes(&self, total_ctx: usize, batch: usize, k: usize) -> f64 {
+        let c = &self.cfg;
+        let tokens =
+            k as f64 * total_ctx as f64 + batch as f64 * (k as f64 - 1.0) * k as f64 / 2.0;
+        tokens * c.model.kv_bytes_per_token() as f64 / c.tp as f64
+    }
+
     /// Per-forward-pass all-reduce cost under TP: two all-reduces per layer
     /// over `tokens` activations (§3.1.3). On NVLink this is fast and off
     /// the PCIe; on PCIe-fabric nodes it shares the link with KV swaps.
@@ -342,6 +373,33 @@ mod tests {
         assert!((0.015..0.1).contains(&t), "t={t}");
         // larger contexts stream more KV
         assert!(m.decode_step_time(&[8192; 8]) > t);
+    }
+
+    #[test]
+    fn decode_span_end_replays_per_step_accumulation() {
+        // the macro-stepping contract: bit-identical to stepping k times
+        let m = cm();
+        let mut t = 3.5f64;
+        let mut ctx = 2048usize;
+        for _ in 0..37 {
+            t += m.decode_step_time_sum(ctx, 4);
+            ctx += 4;
+        }
+        assert_eq!(m.decode_span_end(3.5, 2048, 4, 37).to_bits(), t.to_bits());
+        assert_eq!(m.decode_span_end(3.5, 2048, 4, 0).to_bits(), 3.5f64.to_bits());
+    }
+
+    #[test]
+    fn decode_span_kv_bytes_matches_series_sum() {
+        let m = cm();
+        let per_tok = m.cfg.model.kv_bytes_per_token() as f64 / m.cfg.tp as f64;
+        let mut want = 0.0;
+        for i in 0..10usize {
+            want += (1000 + i * 4) as f64 * per_tok;
+        }
+        let got = m.decode_span_kv_bytes(1000, 4, 10);
+        assert!((got - want).abs() < 1e-6 * want, "got={got} want={want}");
+        assert_eq!(m.decode_span_kv_bytes(1000, 4, 0), 0.0);
     }
 
     #[test]

@@ -1,0 +1,115 @@
+//! Golden cluster replay: a committed 4-replica bursty run
+//! (tests/golden/cluster_bursty.jsonl — hand-written, deliberately NOT
+//! produced by the workload generators, so it cannot drift with them)
+//! replayed under every router against the frozen oracle path: every
+//! replica in recompute-from-scratch mode with decode fast-forwarding
+//! disabled. Router or lockstep changes that silently alter scheduling,
+//! routing feedback, or the macro-stepping seam show up here as a
+//! bit-level diff between the fast path and the oracle path.
+
+use layerkv::cluster::{Cluster, ClusterConfig, RouterPolicy};
+use layerkv::config::{Policy, ServingConfig};
+use layerkv::workload::{trace, Trace};
+
+fn golden_cluster_trace() -> Trace {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/golden/cluster_bursty.jsonl");
+    trace::load(&path).expect("committed golden cluster trace must load")
+}
+
+fn golden_cfg() -> ServingConfig {
+    ServingConfig::llama2_7b_tp1().with_policy(Policy::LayerKv { slo_aware: true })
+}
+
+#[test]
+fn golden_cluster_fast_path_matches_frozen_oracle_under_every_router() {
+    let tr = golden_cluster_trace();
+    assert_eq!(tr.requests.len(), 48, "committed fixture changed shape");
+    let cfg = golden_cfg();
+    for router in RouterPolicy::ALL {
+        let ccfg = ClusterConfig::homogeneous(&cfg, 4, *router);
+
+        let mut fast = Cluster::new(&ccfg);
+        // pin the mode explicitly: the ambient LAYERKV_MACRO default must
+        // not decide whether this test exercises the macro-stepping seam
+        fast.set_macro_steps(true);
+        let out_fast = fast.run(&tr).expect("sim cluster never fails");
+
+        let mut oracle = Cluster::new(&ccfg);
+        oracle.use_recompute_oracle();
+        let out_oracle = oracle.run(&tr).expect("sim cluster never fails");
+
+        assert_eq!(
+            out_fast.merged.records,
+            out_oracle.merged.records,
+            "router {}: fast path diverged from the frozen oracle",
+            router.name()
+        );
+        assert_eq!(
+            out_fast.merged.makespan.to_bits(),
+            out_oracle.merged.makespan.to_bits(),
+            "router {}: makespan bits diverge",
+            router.name()
+        );
+        assert_eq!(out_fast.dropped, out_oracle.dropped, "router {}", router.name());
+        assert_eq!(out_fast.per_replica.len(), 4);
+        for (i, (a, b)) in
+            out_fast.per_replica.iter().zip(&out_oracle.per_replica).enumerate()
+        {
+            assert_eq!(
+                a.routed,
+                b.routed,
+                "router {}: replica {i} routing diverged",
+                router.name()
+            );
+            assert_eq!(
+                a.report.records, b.report.records,
+                "router {}: replica {i} records diverged",
+                router.name()
+            );
+            assert_eq!(
+                &a.stats,
+                &b.stats,
+                "router {}: replica {i} engine stats diverged",
+                router.name()
+            );
+        }
+        // conservation on the fixture: every request comes back once
+        assert_eq!(out_fast.accounted(), 48, "router {}", router.name());
+    }
+}
+
+#[test]
+fn golden_cluster_replay_is_deterministic() {
+    // the fixture is a fixture: two fast-path replays are bit-identical
+    let tr = golden_cluster_trace();
+    let ccfg = ClusterConfig::homogeneous(&golden_cfg(), 4, RouterPolicy::SloAware);
+    let run_once = || {
+        let mut c = Cluster::new(&ccfg);
+        c.set_macro_steps(true);
+        c.run(&tr).unwrap()
+    };
+    let a = run_once();
+    let b = run_once();
+    assert_eq!(a.merged.records, b.merged.records);
+    assert_eq!(a.merged.makespan.to_bits(), b.merged.makespan.to_bits());
+    assert_eq!(a.dropped, b.dropped);
+    for (x, y) in a.per_replica.iter().zip(&b.per_replica) {
+        assert_eq!(x.routed, y.routed);
+        assert_eq!(&x.stats, &y.stats);
+    }
+}
+
+#[test]
+fn golden_cluster_every_policy_serves_the_fixture() {
+    // the committed trace stays a usable fixture for other suites: both
+    // engine policies complete it on a 4-replica fleet without drops
+    let tr = golden_cluster_trace();
+    for policy in [Policy::Vllm, Policy::LayerKv { slo_aware: true }] {
+        let cfg = ServingConfig::llama2_7b_tp1().with_policy(policy);
+        let ccfg = ClusterConfig::homogeneous(&cfg, 4, RouterPolicy::KvPressure);
+        let out = Cluster::new(&ccfg).run(&tr).unwrap();
+        assert_eq!(out.merged.records.len(), 48, "{policy:?}");
+        assert!(out.dropped.is_empty(), "{policy:?}");
+    }
+}

@@ -1,0 +1,351 @@
+//! Decode fast-forward (macro-stepping) invariants: the macro-stepping
+//! engine must be **bit-identical** to the single-step path — records,
+//! makespan bits, every stat counter, tier-transition logs, and pool
+//! state — on randomized traces and configs (two-tier, starved-host, and
+//! three-tier shapes; all policies; bursty and Poisson arrivals; bare
+//! engines and clusters), with the only visible difference being fewer
+//! scheduler invocations. Randomized, seeded, replayable via
+//! LAYERKV_PROP_SEED / LAYERKV_PROP_CASES (see util::prop); CI's
+//! prop-deep job runs this suite at 512 cases.
+
+use layerkv::cluster::{Cluster, ClusterConfig, RouterPolicy};
+use layerkv::config::{DiskSpec, Policy, ServingConfig};
+use layerkv::coordinator::{standard_predictor, Engine, SimBackend, CLOCK_EPS};
+use layerkv::util::prop::prop;
+use layerkv::util::Rng;
+use layerkv::workload::arrivals::Arrivals;
+use layerkv::workload::fixed::FixedWorkload;
+use layerkv::workload::sharegpt::ShareGptWorkload;
+use layerkv::workload::Trace;
+
+fn random_policy(rng: &mut Rng) -> Policy {
+    match rng.range(0, 3) {
+        0 => Policy::Vllm,
+        1 => Policy::LayerKv { slo_aware: true },
+        _ => Policy::LayerKv { slo_aware: false },
+    }
+}
+
+/// Two-tier by default; sometimes starved-host, sometimes three-tier —
+/// the shapes that park KV off-GPU and so exercise the stability gate.
+fn random_cfg(rng: &mut Rng) -> ServingConfig {
+    let mut cfg = ServingConfig::llama2_7b_tp1().with_policy(random_policy(rng));
+    if rng.chance(0.3) {
+        cfg.cpu_swap_bytes = 1u64 << rng.range(28, 38);
+    }
+    if rng.chance(0.4) {
+        cfg = cfg.with_disk(DiskSpec::nvme_4tb());
+    }
+    cfg
+}
+
+fn random_trace(rng: &mut Rng, n: usize) -> Trace {
+    let rate = rng.f64() * 4.0 + 0.5;
+    let arrivals = if rng.chance(0.4) {
+        Arrivals::bursty(rate, rng.f64() * 2.0 + 1.5)
+    } else {
+        Arrivals::Poisson { rate }
+    };
+    if rng.chance(0.5) {
+        let mut w = ShareGptWorkload::paper(rate, n);
+        w.arrivals = arrivals;
+        w.generate(rng)
+    } else {
+        FixedWorkload {
+            prompt_len: rng.range_usize(16, 4096),
+            output_len: rng.range_usize(4, 256),
+            n_requests: n,
+            arrivals,
+        }
+        .generate(rng)
+    }
+}
+
+/// Full machine-state comparison: clock bits, per-tier pool counts, queue
+/// and running sizes, and every live table's tokens / per-tier layer and
+/// block aggregates ("pool state" in the acceptance sense — block ids are
+/// interchangeable by construction, counts and residency are semantics).
+fn assert_same_machine_state(
+    a: &Engine<SimBackend>,
+    b: &Engine<SimBackend>,
+    submitted: usize,
+    what: &str,
+) {
+    assert_eq!(a.now().to_bits(), b.now().to_bits(), "{what}: clocks diverge");
+    assert_eq!(
+        (a.kv.gpu.used(), a.kv.cpu.used(), a.kv.disk.used()),
+        (b.kv.gpu.used(), b.kv.cpu.used(), b.kv.disk.used()),
+        "{what}: pool usage diverges"
+    );
+    assert_eq!(
+        (a.kv.gpu.available(), a.kv.cpu.available(), a.kv.disk.available()),
+        (b.kv.gpu.available(), b.kv.cpu.available(), b.kv.disk.available()),
+        "{what}: pool availability diverges"
+    );
+    a.kv.gpu.check().unwrap();
+    a.kv.cpu.check().unwrap();
+    a.kv.disk.check().unwrap();
+    assert_eq!(a.waiting_len(), b.waiting_len(), "{what}: queue depth diverges");
+    assert_eq!(a.running_len(), b.running_len(), "{what}: running set diverges");
+    for rid in 0..submitted {
+        match (a.kv.table(rid), b.kv.table(rid)) {
+            (None, None) => {}
+            (Some(x), Some(y)) => {
+                assert_eq!(x.tokens, y.tokens, "{what}: req {rid} token count");
+                assert_eq!(
+                    (x.n_gpu_layers(), x.n_cpu_layers(), x.n_disk_layers()),
+                    (y.n_gpu_layers(), y.n_cpu_layers(), y.n_disk_layers()),
+                    "{what}: req {rid} layer residency"
+                );
+                assert_eq!(
+                    (x.gpu_blocks_held(), x.cpu_blocks_held(), x.disk_blocks_held()),
+                    (y.gpu_blocks_held(), y.cpu_blocks_held(), y.disk_blocks_held()),
+                    "{what}: req {rid} blocks held"
+                );
+                x.check().unwrap();
+            }
+            _ => panic!("{what}: req {rid} table presence diverges"),
+        }
+    }
+}
+
+/// End-to-end `try_run`: macro-stepping vs single-stepping on the same
+/// trace must produce bit-identical records, makespan, stats (including
+/// the dropped list and every f64 accumulator via `EngineStats`'s
+/// `PartialEq`), and tier-transition logs — with drained pools on both
+/// sides and never MORE scheduler invocations on the macro path.
+#[test]
+fn prop_macro_stepping_bit_identical_end_to_end() {
+    prop(8, |rng| {
+        let n = rng.range_usize(5, 30);
+        let trace = random_trace(rng, n);
+        let cfg = random_cfg(rng);
+        let predictor = standard_predictor(&trace, 0.8);
+
+        let mut fast = Engine::new(cfg.clone(), predictor.clone());
+        fast.set_macro_steps(true);
+        fast.enable_transition_log();
+        let rep_fast = fast.run(&trace);
+
+        let mut slow = Engine::new(cfg.clone(), predictor);
+        slow.set_macro_steps(false);
+        slow.enable_transition_log();
+        let rep_slow = slow.run(&trace);
+
+        let what = format!("{:?}", cfg.policy);
+        assert_eq!(rep_fast.records, rep_slow.records, "{what}: records diverge");
+        assert_eq!(
+            rep_fast.makespan.to_bits(),
+            rep_slow.makespan.to_bits(),
+            "{what}: makespan diverges"
+        );
+        assert_eq!(fast.stats(), slow.stats(), "{what}: stats diverge");
+        assert_eq!(
+            fast.take_transitions(),
+            slow.take_transitions(),
+            "{what}: tier-transition logs diverge"
+        );
+        assert_eq!(
+            (fast.kv.gpu.used(), fast.kv.cpu.used(), fast.kv.disk.used()),
+            (0, 0, 0),
+            "{what}: macro path leaked blocks"
+        );
+        assert_eq!(
+            (slow.kv.gpu.used(), slow.kv.cpu.used(), slow.kv.disk.used()),
+            (0, 0, 0)
+        );
+        assert!(
+            fast.sched_invocations() <= slow.sched_invocations(),
+            "{what}: macro path must never invoke the scheduler more often \
+             ({} vs {})",
+            fast.sched_invocations(),
+            slow.sched_invocations()
+        );
+    });
+}
+
+/// The incremental drive (the cluster lockstep shape): both engines are
+/// stepped to each arrival with the arrival as the fast-forward horizon,
+/// and the WHOLE machine state — clock bits, pools, tables — must agree
+/// at every submit boundary and after the drain.
+#[test]
+fn prop_macro_stepping_pool_state_matches_at_every_arrival() {
+    prop(6, |rng| {
+        let n = rng.range_usize(5, 25);
+        let trace = random_trace(rng, n);
+        let cfg = random_cfg(rng);
+        let predictor = standard_predictor(&trace, 0.8);
+
+        let mut fast = Engine::new(cfg.clone(), predictor.clone());
+        fast.set_macro_steps(true);
+        let mut slow = Engine::new(cfg.clone(), predictor.clone());
+        slow.set_macro_steps(false);
+
+        let mut submitted = 0usize;
+        for tr in &trace.requests {
+            for e in [&mut fast, &mut slow] {
+                while tr.arrival > e.now() + CLOCK_EPS {
+                    if !e.step_once_until(false, tr.arrival).unwrap() {
+                        break;
+                    }
+                }
+                if tr.arrival > e.now() + CLOCK_EPS {
+                    e.wait_until(tr.arrival);
+                }
+                e.submit(tr, predictor.predict(tr.id, tr.output_len));
+            }
+            submitted += 1;
+            assert_same_machine_state(
+                &fast,
+                &slow,
+                submitted,
+                &format!("{:?} after submit {}", cfg.policy, tr.id),
+            );
+        }
+        for e in [&mut fast, &mut slow] {
+            while e.has_work() {
+                if !e.step_once(true).unwrap() {
+                    break;
+                }
+            }
+        }
+        assert_same_machine_state(&fast, &slow, submitted, "after drain");
+        let rep_fast = fast.take_report();
+        let rep_slow = slow.take_report();
+        assert_eq!(rep_fast.records, rep_slow.records);
+        assert_eq!(rep_fast.makespan.to_bits(), rep_slow.makespan.to_bits());
+        assert_eq!(fast.stats(), slow.stats());
+    });
+}
+
+/// Cluster shapes: a macro-stepping fleet must reproduce the single-step
+/// fleet exactly — merged records, routing counts, drops, and per-replica
+/// stats — under every router and replica count.
+#[test]
+fn prop_cluster_macro_stepping_matches_single_step() {
+    prop(6, |rng| {
+        let n = rng.range_usize(8, 32);
+        let k = rng.range_usize(1, 6);
+        let router = RouterPolicy::ALL[rng.range_usize(0, RouterPolicy::ALL.len())];
+        let trace = random_trace(rng, n);
+        let cfg = ServingConfig::llama2_7b_tp1().with_policy(random_policy(rng));
+        let ccfg = ClusterConfig::homogeneous(&cfg, k, router);
+
+        let mut fast = Cluster::new(&ccfg);
+        fast.set_macro_steps(true);
+        let out_fast = fast.run(&trace).expect("sim cluster never fails");
+
+        let mut slow = Cluster::new(&ccfg);
+        slow.set_macro_steps(false);
+        let out_slow = slow.run(&trace).expect("sim cluster never fails");
+
+        let what = format!("router {} x{k}", router.name());
+        assert_eq!(out_fast.merged.records, out_slow.merged.records, "{what}");
+        assert_eq!(
+            out_fast.merged.makespan.to_bits(),
+            out_slow.merged.makespan.to_bits(),
+            "{what}"
+        );
+        assert_eq!(out_fast.dropped, out_slow.dropped, "{what}");
+        for (i, (a, b)) in
+            out_fast.per_replica.iter().zip(&out_slow.per_replica).enumerate()
+        {
+            assert_eq!(a.routed, b.routed, "{what}: replica {i} routing");
+            assert_eq!(a.report.records, b.report.records, "{what}: replica {i}");
+            assert_eq!(&a.stats, &b.stats, "{what}: replica {i} stats");
+        }
+    });
+}
+
+/// The O(1) router-view aggregates must agree with their from-scratch
+/// scans after every engine step and submit — exactly for the three
+/// integer views, to float rounding for the prefill-seconds sum.
+#[test]
+fn prop_router_views_match_scan_oracles() {
+    prop(6, |rng| {
+        let n = rng.range_usize(5, 25);
+        let trace = random_trace(rng, n);
+        let cfg = random_cfg(rng);
+        let predictor = standard_predictor(&trace, 0.8);
+        let mut e = Engine::new(cfg, predictor.clone());
+        e.set_macro_steps(rng.chance(0.5));
+
+        let check = |e: &Engine<SimBackend>, what: &str| {
+            assert_eq!(e.waiting_tokens(), e.waiting_tokens_scan(), "{what}");
+            assert_eq!(e.running_tokens(), e.running_tokens_scan(), "{what}");
+            assert_eq!(
+                e.running_remaining_tokens(),
+                e.running_remaining_tokens_scan(),
+                "{what}"
+            );
+            let (cached, scan) = (e.waiting_prefill_s(), e.waiting_prefill_s_scan());
+            assert!(
+                (cached - scan).abs() <= 1e-9 * scan.abs().max(1.0),
+                "{what}: waiting_prefill_s cached {cached} vs scan {scan}"
+            );
+        };
+
+        for tr in &trace.requests {
+            while tr.arrival > e.now() + CLOCK_EPS {
+                if !e.step_once_until(false, tr.arrival).unwrap() {
+                    break;
+                }
+                check(&e, "mid-drive");
+            }
+            if tr.arrival > e.now() + CLOCK_EPS {
+                e.wait_until(tr.arrival);
+            }
+            e.submit(tr, predictor.predict(tr.id, tr.output_len));
+            check(&e, "after submit");
+        }
+        while e.has_work() {
+            if !e.step_once(true).unwrap() {
+                break;
+            }
+            check(&e, "draining");
+        }
+        // drained: every view at exactly zero
+        assert_eq!(e.waiting_tokens(), 0);
+        assert_eq!(e.running_tokens(), 0);
+        assert_eq!(e.running_remaining_tokens(), 0);
+        assert_eq!(e.waiting_prefill_s().to_bits(), 0.0f64.to_bits());
+    });
+}
+
+/// The acceptance bar, pinned deterministically: on a long-decode trace
+/// the macro path must cut scheduler invocations by ≥10x while staying
+/// bit-identical. (The wall-clock side of the same claim lives in the
+/// `engine/fastforward_*` hotpath bench series.)
+#[test]
+fn fastforward_cuts_scheduler_invocations_10x_on_long_decode() {
+    let trace = FixedWorkload {
+        prompt_len: 512,
+        output_len: 1536,
+        n_requests: 8,
+        arrivals: Arrivals::Poisson { rate: 4.0 },
+    }
+    .generate(&mut Rng::new(11));
+    for policy in [Policy::Vllm, Policy::LayerKv { slo_aware: true }] {
+        let cfg = ServingConfig::llama2_7b_tp1().with_policy(policy);
+        let predictor = standard_predictor(&trace, 0.8);
+
+        let mut fast = Engine::new(cfg.clone(), predictor.clone());
+        fast.set_macro_steps(true);
+        let rep_fast = fast.run(&trace);
+
+        let mut slow = Engine::new(cfg, predictor);
+        slow.set_macro_steps(false);
+        let rep_slow = slow.run(&trace);
+
+        assert_eq!(rep_fast.records, rep_slow.records, "{policy:?}");
+        assert_eq!(rep_fast.makespan.to_bits(), rep_slow.makespan.to_bits());
+        assert_eq!(fast.stats(), slow.stats(), "{policy:?}");
+        assert!(
+            slow.sched_invocations() >= 10 * fast.sched_invocations(),
+            "{policy:?}: expected ≥10x fewer scheduler invocations, got {} (macro) \
+             vs {} (single-step)",
+            fast.sched_invocations(),
+            slow.sched_invocations()
+        );
+    }
+}
