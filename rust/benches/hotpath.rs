@@ -195,6 +195,7 @@ fn main() {
                 running_tokens: i * 6 * 2056,
                 waiting_prefill_s: i as f64 * 0.3,
                 running_remaining_tokens: i * 6 * 128,
+                slowdown: 1.0,
                 kv,
                 cost: &cost,
                 cfg: &cfg,

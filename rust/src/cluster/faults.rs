@@ -1,0 +1,520 @@
+//! Deterministic fault injection for cluster runs: a [`FaultPlan`] is a
+//! virtual-time schedule of replica crash/recover windows, straggler
+//! slowdown windows, and disk-tier I/O error bursts. The cluster compiles
+//! it to a time-sorted [`FaultEvent`] stream and applies each event in
+//! lockstep with the trace's arrivals, so a (plan, trace, seed) triple
+//! replays byte-identically — crashes included.
+//!
+//! The empty plan is the load-bearing special case: `Cluster::with_faults`
+//! on `FaultPlan::default()` must be **bit-identical** to a cluster built
+//! without faults (`tests/prop_faults.rs` pins this), which is why
+//! [`HealthRouter`] delegates with the caller's untouched view slice
+//! whenever no replica is down or in probation.
+//!
+//! The health model:
+//! * **down** — crashed replicas are fenced: never routed to, their
+//!   engine drained (admission closed, unfinished requests exported).
+//! * **probation** — a freshly recovered replica is routable but
+//!   deprioritized for `probation_s` seconds: it only receives requests
+//!   when every non-probation replica is down. Its pools are cold and its
+//!   EWMA feedback stale; probation keeps one recovery from instantly
+//!   re-absorbing the load that crashed it.
+//! * **stragglers** — not a health state but a view signal: the backend's
+//!   `slowdown()` factor rides into [`ReplicaView`] and the
+//!   `kv-pressure`/`slo-aware` scores stretch their estimates by it.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::metrics::{FaultEvent, FaultKind};
+use crate::util::Rng;
+
+use super::router::{ReplicaView, Router};
+
+/// One replica crash window: down at `at`, back at `recover_at`
+/// (`f64::INFINITY` = never recovers).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CrashWindow {
+    pub replica: usize,
+    pub at: f64,
+    pub recover_at: f64,
+}
+
+/// One straggler window: the replica's backend runs `slowdown`x slower
+/// between `from` and `until`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Straggler {
+    pub replica: usize,
+    pub from: f64,
+    pub until: f64,
+    /// Factor >= 1.0 (1.0 is nominal).
+    pub slowdown: f64,
+}
+
+/// One disk-tier I/O error burst: every spill/restore on the replica
+/// fails between `from` and `until` (K consecutive failures fence the
+/// tier — see `Engine::set_disk_faulty`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct IoBurst {
+    pub replica: usize,
+    pub from: f64,
+    pub until: f64,
+}
+
+/// A deterministic, virtual-time fault schedule for one cluster run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    pub crashes: Vec<CrashWindow>,
+    pub stragglers: Vec<Straggler>,
+    pub io_bursts: Vec<IoBurst>,
+    /// Max re-submissions per request after crash drains; a request
+    /// drained more than this many times is failed, exactly once.
+    pub retry_budget: u32,
+    /// Seconds a recovered replica stays deprioritized.
+    pub probation_s: f64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            crashes: Vec::new(),
+            stragglers: Vec::new(),
+            io_bursts: Vec::new(),
+            retry_budget: 2,
+            probation_s: 5.0,
+        }
+    }
+}
+
+impl FaultPlan {
+    /// No faults scheduled (budget/probation knobs don't count: with no
+    /// events they can never fire).
+    pub fn is_empty(&self) -> bool {
+        self.crashes.is_empty() && self.stragglers.is_empty() && self.io_bursts.is_empty()
+    }
+
+    /// Seeded random plan over `n_replicas` replicas and a `horizon_s`
+    /// run window — the property suite's generator. Same seed, same plan.
+    /// Never crashes all replicas at once is NOT guaranteed; conservation
+    /// must hold anyway (requests park until a recovery, or fail).
+    pub fn generate(seed: u64, n_replicas: usize, horizon_s: f64) -> FaultPlan {
+        let mut rng = Rng::new(seed ^ 0xFA417);
+        let mut plan = FaultPlan {
+            retry_budget: rng.range(0, 4) as u32,
+            probation_s: rng.f64() * horizon_s * 0.2,
+            ..FaultPlan::default()
+        };
+        for replica in 0..n_replicas {
+            if rng.chance(0.5) {
+                let at = rng.f64() * horizon_s;
+                let recover_at = if rng.chance(0.25) {
+                    f64::INFINITY // permanent loss
+                } else {
+                    at + rng.f64() * horizon_s * 0.5
+                };
+                plan.crashes.push(CrashWindow { replica, at, recover_at });
+            }
+            if rng.chance(0.4) {
+                let from = rng.f64() * horizon_s;
+                plan.stragglers.push(Straggler {
+                    replica,
+                    from,
+                    until: from + rng.f64() * horizon_s * 0.5,
+                    slowdown: 1.5 + rng.f64() * 6.5,
+                });
+            }
+            if rng.chance(0.4) {
+                let from = rng.f64() * horizon_s;
+                plan.io_bursts.push(IoBurst {
+                    replica,
+                    from,
+                    until: from + rng.f64() * horizon_s * 0.5,
+                });
+            }
+        }
+        plan
+    }
+
+    /// Compile to a time-sorted event stream. Window ends at or before
+    /// their starts are dropped (zero-length crash windows still fire:
+    /// crash sorts before recover at the same instant, so the drain +
+    /// failover happens). Ties order by (time, kind rank, replica) — a
+    /// total order, so the stream is deterministic for a given plan.
+    pub fn events(&self) -> Vec<FaultEvent> {
+        let mut evs = Vec::new();
+        for c in &self.crashes {
+            evs.push(FaultEvent { t: c.at, replica: c.replica, kind: FaultKind::Crash });
+            if c.recover_at.is_finite() && c.recover_at >= c.at {
+                evs.push(FaultEvent {
+                    t: c.recover_at,
+                    replica: c.replica,
+                    kind: FaultKind::Recover,
+                });
+            }
+        }
+        for s in &self.stragglers {
+            if s.until <= s.from || s.slowdown == 1.0 {
+                continue;
+            }
+            evs.push(FaultEvent {
+                t: s.from,
+                replica: s.replica,
+                kind: FaultKind::StragglerStart { slowdown: s.slowdown },
+            });
+            if s.until.is_finite() {
+                evs.push(FaultEvent {
+                    t: s.until,
+                    replica: s.replica,
+                    kind: FaultKind::StragglerEnd,
+                });
+            }
+        }
+        for b in &self.io_bursts {
+            if b.until <= b.from {
+                continue;
+            }
+            evs.push(FaultEvent {
+                t: b.from,
+                replica: b.replica,
+                kind: FaultKind::IoErrorStart,
+            });
+            if b.until.is_finite() {
+                evs.push(FaultEvent {
+                    t: b.until,
+                    replica: b.replica,
+                    kind: FaultKind::IoErrorEnd,
+                });
+            }
+        }
+        evs.sort_by(|a, b| {
+            a.t.partial_cmp(&b.t)
+                .expect("fault times are never NaN")
+                .then(a.kind.rank().cmp(&b.kind.rank()))
+                .then(a.replica.cmp(&b.replica))
+        });
+        evs
+    }
+
+    /// Largest replica index any window names (for validation).
+    pub fn max_replica(&self) -> Option<usize> {
+        let c = self.crashes.iter().map(|c| c.replica);
+        let s = self.stragglers.iter().map(|s| s.replica);
+        let b = self.io_bursts.iter().map(|b| b.replica);
+        c.chain(s).chain(b).max()
+    }
+
+    /// Parse a CLI fault spec: comma-separated clauses
+    ///
+    /// * `crash=R@T1:T2` — replica R down from T1 to T2 (`crash=R@T1`
+    ///   never recovers)
+    /// * `straggle=R@T1:T2xF` — replica R runs Fx slower from T1 to T2
+    /// * `io=R@T1:T2` — replica R's disk tier errors from T1 to T2
+    /// * `retries=N` — per-request retry budget (default 2)
+    /// * `probation=S` — post-recovery probation seconds (default 5)
+    ///
+    /// e.g. `--faults crash=1@20:60,straggle=0@10:40x4,retries=3`
+    pub fn parse_spec(spec: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::default();
+        for clause in spec.split(',').filter(|c| !c.is_empty()) {
+            let (key, val) = clause
+                .split_once('=')
+                .ok_or_else(|| format!("fault clause `{clause}` has no `=`"))?;
+            match key {
+                "retries" => {
+                    plan.retry_budget =
+                        val.parse().map_err(|_| format!("bad retries `{val}`"))?;
+                }
+                "probation" => {
+                    plan.probation_s =
+                        val.parse().map_err(|_| format!("bad probation `{val}`"))?;
+                }
+                "crash" | "straggle" | "io" => {
+                    let (rep, win) = val
+                        .split_once('@')
+                        .ok_or_else(|| format!("`{clause}`: expected R@T1[:T2]"))?;
+                    let replica: usize =
+                        rep.parse().map_err(|_| format!("bad replica `{rep}`"))?;
+                    match key {
+                        "crash" => {
+                            let (t1, t2) = parse_window(win, true)?;
+                            plan.crashes.push(CrashWindow {
+                                replica,
+                                at: t1,
+                                recover_at: t2,
+                            });
+                        }
+                        "io" => {
+                            let (t1, t2) = parse_window(win, false)?;
+                            plan.io_bursts.push(IoBurst { replica, from: t1, until: t2 });
+                        }
+                        _ => {
+                            let (range, factor) = win
+                                .split_once('x')
+                                .ok_or_else(|| format!("`{clause}`: expected T1:T2xF"))?;
+                            let (t1, t2) = parse_window(range, false)?;
+                            let slowdown: f64 = factor
+                                .parse()
+                                .map_err(|_| format!("bad slowdown `{factor}`"))?;
+                            if slowdown < 1.0 {
+                                return Err(format!("slowdown {slowdown} < 1.0"));
+                            }
+                            plan.stragglers.push(Straggler {
+                                replica,
+                                from: t1,
+                                until: t2,
+                                slowdown,
+                            });
+                        }
+                    }
+                }
+                _ => return Err(format!("unknown fault key `{key}`")),
+            }
+        }
+        Ok(plan)
+    }
+}
+
+/// `T1:T2` (or bare `T1`, which means "forever" when `open_ok`).
+fn parse_window(win: &str, open_ok: bool) -> Result<(f64, f64), String> {
+    match win.split_once(':') {
+        Some((a, b)) => {
+            let t1: f64 = a.parse().map_err(|_| format!("bad time `{a}`"))?;
+            let t2: f64 = b.parse().map_err(|_| format!("bad time `{b}`"))?;
+            if t2 < t1 {
+                return Err(format!("window `{win}` ends before it starts"));
+            }
+            Ok((t1, t2))
+        }
+        None if open_ok => {
+            let t1: f64 = win.parse().map_err(|_| format!("bad time `{win}`"))?;
+            Ok((t1, f64::INFINITY))
+        }
+        None => Err(format!("`{win}`: expected T1:T2")),
+    }
+}
+
+/// Shared replica health table: the cluster's fault loop writes it, the
+/// [`HealthRouter`] inside the `Box<dyn Router>` reads it (single-threaded
+/// interior mutability — `Rc<RefCell>` — so the wrapper needs no API on
+/// the `Router` trait).
+#[derive(Debug)]
+pub struct HealthState {
+    pub down: Vec<bool>,
+    /// Probation deadline per replica (engine virtual time).
+    pub probation_until: Vec<f64>,
+    /// Cluster virtual "now", advanced by the fault loop before routing.
+    pub now: f64,
+}
+
+impl HealthState {
+    pub fn new(n_replicas: usize) -> Self {
+        HealthState {
+            down: vec![false; n_replicas],
+            probation_until: vec![f64::NEG_INFINITY; n_replicas],
+            now: 0.0,
+        }
+    }
+
+    pub fn any_up(&self) -> bool {
+        self.down.iter().any(|&d| !d)
+    }
+
+    fn in_probation(&self, i: usize) -> bool {
+        self.now < self.probation_until[i]
+    }
+}
+
+/// Health-aware wrapper around any routing policy: fences crashed
+/// replicas out of the candidate views, holds freshly recovered ones in
+/// probation (used only when every non-probation replica is down), and
+/// otherwise delegates — with the caller's *original* slice when nothing
+/// is fenced, preserving the empty-plan bit-identity property.
+pub struct HealthRouter {
+    inner: Box<dyn Router>,
+    state: Rc<RefCell<HealthState>>,
+}
+
+impl HealthRouter {
+    pub fn new(inner: Box<dyn Router>, state: Rc<RefCell<HealthState>>) -> Self {
+        HealthRouter { inner, state }
+    }
+}
+
+impl Router for HealthRouter {
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn route(&mut self, prompt_len: usize, views: &[ReplicaView]) -> usize {
+        let st = self.state.borrow();
+        let fenced = views
+            .iter()
+            .any(|v| st.down[v.idx] || st.in_probation(v.idx));
+        if !fenced {
+            drop(st);
+            return self.inner.route(prompt_len, views);
+        }
+        // prefer healthy non-probation replicas; fall back to probation
+        // ones; a fully-down cluster falls through to the caller's slice
+        // (callers park instead of routing then, so this is defensive)
+        let mut candidates: Vec<ReplicaView> = views
+            .iter()
+            .filter(|v| !st.down[v.idx] && !st.in_probation(v.idx))
+            .cloned()
+            .collect();
+        if candidates.is_empty() {
+            candidates = views.iter().filter(|v| !st.down[v.idx]).cloned().collect();
+        }
+        drop(st);
+        if candidates.is_empty() {
+            return self.inner.route(prompt_len, views);
+        }
+        self.inner.route(prompt_len, &candidates)
+    }
+
+    fn observe_ttft(&mut self, replica: usize, ttft_s: f64) {
+        self.inner.observe_ttft(replica, ttft_s);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::router::{make_router, RouterPolicy};
+    use crate::config::ServingConfig;
+    use crate::coordinator::block::KvManager;
+    use crate::sim::CostModel;
+
+    #[test]
+    fn empty_plan_compiles_to_no_events() {
+        let plan = FaultPlan::default();
+        assert!(plan.is_empty());
+        assert!(plan.events().is_empty());
+        assert_eq!(plan.max_replica(), None);
+    }
+
+    #[test]
+    fn events_sort_by_time_then_rank_crash_before_recover() {
+        let plan = FaultPlan {
+            crashes: vec![CrashWindow { replica: 1, at: 20.0, recover_at: 20.0 }],
+            stragglers: vec![Straggler {
+                replica: 0,
+                from: 5.0,
+                until: 20.0,
+                slowdown: 3.0,
+            }],
+            io_bursts: vec![IoBurst { replica: 0, from: 25.0, until: 30.0 }],
+            ..FaultPlan::default()
+        };
+        let evs = plan.events();
+        assert_eq!(evs.len(), 6);
+        assert!(evs.windows(2).all(|w| w[0].t <= w[1].t));
+        // at t=20: crash (rank 0) fires before straggler-end and recover
+        let at20: Vec<&FaultEvent> = evs.iter().filter(|e| e.t == 20.0).collect();
+        assert_eq!(at20[0].kind, FaultKind::Crash);
+        assert_eq!(at20.last().unwrap().kind, FaultKind::Recover);
+        assert_eq!(plan.max_replica(), Some(1));
+    }
+
+    #[test]
+    fn generate_is_seed_deterministic() {
+        let a = FaultPlan::generate(7, 4, 100.0);
+        let b = FaultPlan::generate(7, 4, 100.0);
+        assert_eq!(a, b);
+        assert_ne!(a, FaultPlan::generate(8, 4, 100.0));
+        if let Some(m) = a.max_replica() {
+            assert!(m < 4);
+        }
+    }
+
+    #[test]
+    fn spec_roundtrip_and_rejections() {
+        let plan =
+            FaultPlan::parse_spec("crash=1@20:60,crash=0@75,straggle=2@10:40x3.5,io=0@5:15,retries=3,probation=8")
+                .unwrap();
+        assert_eq!(plan.retry_budget, 3);
+        assert_eq!(plan.probation_s, 8.0);
+        assert_eq!(plan.crashes.len(), 2);
+        assert_eq!(plan.crashes[1].recover_at, f64::INFINITY);
+        assert_eq!(plan.stragglers[0].slowdown, 3.5);
+        assert_eq!(plan.io_bursts[0].until, 15.0);
+
+        assert!(FaultPlan::parse_spec("crash=1").is_err());
+        assert!(FaultPlan::parse_spec("nope=3@1:2").is_err());
+        assert!(FaultPlan::parse_spec("straggle=0@1:2x0.5").is_err());
+        assert!(FaultPlan::parse_spec("io=0@9:4").is_err());
+        assert!(FaultPlan::parse_spec("io=0@5").is_err(), "io needs a closed window");
+    }
+
+    struct Fixture {
+        cfg: ServingConfig,
+        cost: CostModel,
+        kvs: Vec<KvManager>,
+    }
+
+    impl Fixture {
+        fn new(n: usize) -> Self {
+            let cfg = ServingConfig::llama2_7b_tp1();
+            let cost = CostModel::new(cfg.clone());
+            let kvs = (0..n)
+                .map(|_| KvManager::new(100_000, 500_000, cfg.block_size, cfg.model.n_layers))
+                .collect();
+            Fixture { cfg, cost, kvs }
+        }
+
+        fn views(&self) -> Vec<ReplicaView<'_>> {
+            self.kvs
+                .iter()
+                .enumerate()
+                .map(|(i, kv)| ReplicaView {
+                    idx: i,
+                    waiting_len: 0,
+                    running_len: 0,
+                    waiting_tokens: 0,
+                    running_tokens: 0,
+                    waiting_prefill_s: 0.0,
+                    running_remaining_tokens: 0,
+                    slowdown: 1.0,
+                    kv,
+                    cost: &self.cost,
+                    cfg: &self.cfg,
+                })
+                .collect()
+        }
+    }
+
+    #[test]
+    fn health_router_fences_down_and_deprioritizes_probation() {
+        let f = Fixture::new(3);
+        let views = f.views();
+        let state = Rc::new(RefCell::new(HealthState::new(3)));
+        let mut hr =
+            HealthRouter::new(make_router(RouterPolicy::RoundRobin, 3), Rc::clone(&state));
+        assert_eq!(hr.name(), "round-robin");
+        // nothing fenced: transparent delegation (round-robin cycles all)
+        let picks: Vec<usize> = (0..3).map(|_| hr.route(128, &views)).collect();
+        assert_eq!(picks, vec![0, 1, 2]);
+        // replica 0 down: never picked
+        state.borrow_mut().down[0] = true;
+        for _ in 0..4 {
+            assert_ne!(hr.route(128, &views), 0);
+        }
+        // replica 1 also in probation: only 2 remains
+        state.borrow_mut().probation_until[1] = 100.0;
+        state.borrow_mut().now = 50.0;
+        for _ in 0..3 {
+            assert_eq!(hr.route(128, &views), 2);
+        }
+        // 2 goes down too: probation is better than nothing
+        state.borrow_mut().down[2] = true;
+        for _ in 0..3 {
+            assert_eq!(hr.route(128, &views), 1);
+        }
+        // probation expires with time
+        state.borrow_mut().now = 150.0;
+        assert_eq!(hr.route(128, &views), 1);
+        assert!(state.borrow().any_up());
+        state.borrow_mut().down[1] = true;
+        assert!(!state.borrow().any_up());
+    }
+}

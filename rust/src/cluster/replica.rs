@@ -51,6 +51,7 @@ impl<B: ExecutionBackend> Replica<B> {
             running_tokens: self.engine.running_tokens(),
             waiting_prefill_s: self.engine.waiting_prefill_s(),
             running_remaining_tokens: self.engine.running_remaining_tokens(),
+            slowdown: self.engine.backend.slowdown(),
             kv: &self.engine.kv,
             cost: &self.engine.cost,
             cfg: &self.engine.cfg,

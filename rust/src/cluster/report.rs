@@ -5,7 +5,7 @@
 
 use crate::config::SloTargets;
 use crate::coordinator::EngineStats;
-use crate::metrics::{ClusterSummary, ReplicaSummary, Report};
+use crate::metrics::{ClusterSummary, FaultSummary, ReplicaSummary, Report};
 
 /// One replica's share of a finished cluster run.
 #[derive(Debug, Clone)]
@@ -26,14 +26,20 @@ pub struct ClusterReport {
     pub merged: Report,
     /// Global trace ids of rejected requests, sorted.
     pub dropped: Vec<usize>,
+    /// Global trace ids of requests that exhausted their crash-failover
+    /// retry budget (or never found a live replica), sorted. Always empty
+    /// on a fault-free run.
+    pub failed: Vec<usize>,
+    /// Fault rollup, present iff the run carried a `FaultPlan`.
+    pub faults: Option<FaultSummary>,
     pub per_replica: Vec<ReplicaOutcome>,
 }
 
 impl ClusterReport {
-    /// Conservation check: completions + drops must account for every
-    /// routed request exactly once.
+    /// Conservation check: completions + drops + retry-exhaustions must
+    /// account for every trace request exactly once.
     pub fn accounted(&self) -> usize {
-        self.merged.records.len() + self.dropped.len()
+        self.merged.records.len() + self.dropped.len() + self.failed.len()
     }
 
     /// Roll up into the metrics-layer summary.

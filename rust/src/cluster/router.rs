@@ -87,7 +87,9 @@ impl RouterPolicy {
 /// queue/running sums are O(queue) scans taken once per routing decision
 /// (per *arrival*, not per engine step — cheap at that cadence).
 /// `kv`/`cost`/`cfg` borrow the replica's live state directly (no
-/// copies).
+/// copies; `Clone` just re-borrows, so the health wrapper can filter a
+/// candidate subset without touching the replicas).
+#[derive(Clone)]
 pub struct ReplicaView<'a> {
     pub idx: usize,
     pub waiting_len: usize,
@@ -100,6 +102,10 @@ pub struct ReplicaView<'a> {
     pub waiting_prefill_s: f64,
     /// Σ predicted-median remaining output tokens over the running set.
     pub running_remaining_tokens: usize,
+    /// Service-rate degradation factor from the replica's backend: 1.0 is
+    /// nominal, 3.0 means every step takes 3x as long (a straggler).
+    /// State-aware policies stretch their delay/headroom estimates by it.
+    pub slowdown: f64,
     pub kv: &'a KvManager,
     pub cost: &'a CostModel,
     pub cfg: &'a ServingConfig,
@@ -197,6 +203,12 @@ pub fn kv_pressure_score(v: &ReplicaView) -> f64 {
     let demand_blocks = (v.waiting_tokens + v.running_tokens).div_ceil(v.cfg.block_size)
         * v.cfg.model.n_layers;
     let demand = demand_blocks as f64 / v.kv.gpu.total().max(1) as f64;
+    // a straggler frees blocks slower and sits on its queued demand
+    // longer: its headroom is worth less and its debt weighs more. Gated
+    // so the nominal path stays bit-identical to the slowdown-free score.
+    if v.slowdown != 1.0 {
+        return free / v.slowdown - demand * v.slowdown;
+    }
     free - demand
 }
 
@@ -234,6 +246,11 @@ impl SloAwareRouter {
     /// finish before those blocks exist.
     pub fn predicted_delay(&self, prompt_len: usize, v: &ReplicaView) -> f64 {
         let mut delay = v.waiting_prefill_s;
+        // every second of modeled service on a straggler takes
+        // `slowdown` wall seconds (gated: nominal path is bit-identical)
+        if v.slowdown != 1.0 {
+            delay *= v.slowdown;
+        }
         let x = v.cost.min_resident_layers(prompt_len);
         let need = prompt_len.div_ceil(v.cfg.block_size) * x;
         let free = v.kv.gpu.available();
@@ -243,7 +260,11 @@ impl SloAwareRouter {
             let lanes = v.running_len.max(1);
             let iters = (v.running_remaining_tokens as f64 / lanes as f64).ceil();
             let iter_s = v.cost.decode_step_time_sum(v.running_tokens, lanes);
-            delay += deficit_frac * iters * iter_s;
+            let mut stall = deficit_frac * iters * iter_s;
+            if v.slowdown != 1.0 {
+                stall *= v.slowdown;
+            }
+            delay += stall;
         }
         delay + self.ewma_ttft_s.get(v.idx).copied().flatten().unwrap_or(0.0)
     }
@@ -320,6 +341,7 @@ mod tests {
                     waiting_prefill_s: queues[i] as f64
                         * self.cost.prefill_time(1024),
                     running_remaining_tokens: 0,
+                    slowdown: 1.0,
                     kv,
                     cost: &self.cost,
                     cfg: &self.cfg,
@@ -383,6 +405,22 @@ mod tests {
         r.observe_ttft(0, 2.0);
         // alpha = 0.7: 0.7*2 + 0.3*1
         assert!((r.ewma_ttft_s[0].unwrap() - 1.7).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stragglers_repel_state_aware_policies() {
+        let f = Fixture::new(&[0, 0]);
+        let mut views = f.views(&[2, 2]);
+        views[0].slowdown = 4.0; // replica 0 is dragging
+        let mut kv = make_router(RouterPolicy::KvPressure, 2);
+        assert_eq!(kv.route(2048, &views), 1);
+        assert!(kv_pressure_score(&views[1]) > kv_pressure_score(&views[0]));
+        let mut slo = make_router(RouterPolicy::SloAware, 2);
+        assert_eq!(slo.route(2048, &views), 1);
+        // the gate leaves nominal views bit-identical: ties break to 0
+        let nominal = f.views(&[2, 2]);
+        assert_eq!(kv.route(2048, &nominal), 0);
+        assert_eq!(slo.route(2048, &nominal), 0);
     }
 
     #[test]

@@ -224,20 +224,43 @@ pub trait ExecutionBackend {
 
     /// Mirror of a granted `KvManager::spill_layer` (host -> disk). A real
     /// backend writes the layer's tensor to a spill file and frees the
-    /// host copy.
-    fn spill_layer(&mut self, rid: ReqId, layer: usize) {
+    /// host copy. `Err` means the disk-tier I/O failed and the layer is
+    /// still host-resident; the engine rolls the block accounting back and
+    /// counts the error toward its disk-tier fence (K consecutive errors
+    /// retire the tier — see `Engine::fence_disk`).
+    fn spill_layer(&mut self, rid: ReqId, layer: usize) -> anyhow::Result<()> {
         let _ = (rid, layer);
+        Ok(())
     }
 
     /// Mirror of a granted `KvManager::unspill_layer` (disk -> host).
-    fn unspill_layer(&mut self, rid: ReqId, layer: usize) {
+    /// `Err` means the spill file could not be read back; the layer stays
+    /// disk-resident.
+    fn unspill_layer(&mut self, rid: ReqId, layer: usize) -> anyhow::Result<()> {
         let _ = (rid, layer);
+        Ok(())
     }
 
     /// Mirror of a granted `KvManager::promote_disk_layer` (disk -> GPU):
-    /// a disk read followed by the h2d copy.
-    fn promote_disk_layer(&mut self, rid: ReqId, layer: usize) {
+    /// a disk read followed by the h2d copy. `Err` means the disk read
+    /// failed and the layer stays disk-resident.
+    fn promote_disk_layer(&mut self, rid: ReqId, layer: usize) -> anyhow::Result<()> {
         let _ = (rid, layer);
+        Ok(())
+    }
+
+    /// Straggler injection: scale this executor's step durations by
+    /// `factor` (1.0 = nominal). Only meaningful for modeled time; the
+    /// default ignores it — a wall-clock backend is exactly as slow as it
+    /// really is.
+    fn set_slowdown(&mut self, factor: f64) {
+        let _ = factor;
+    }
+
+    /// Current straggler factor (1.0 = nominal). Routers fold this into
+    /// their load scores so degraded replicas attract less traffic.
+    fn slowdown(&self) -> f64 {
+        1.0
     }
 
     /// Recompute preemption: the request's KV is dropped everywhere; its
@@ -263,6 +286,10 @@ pub struct SimBackend {
     /// The host<->disk link (a slow, high-latency PCIe-like link).
     disk_link: crate::sim::TransferLink,
     clock: VirtualClock,
+    /// Straggler factor: every step duration is scaled by this (1.0 =
+    /// nominal, the only value on the fault-free path — the multiply is
+    /// gated so bit-identity holds there).
+    slowdown: f64,
 }
 
 impl SimBackend {
@@ -272,6 +299,7 @@ impl SimBackend {
             cost: CostModel::new(cfg.clone()),
             disk_link: crate::sim::TransferLink::disk(&cfg.node.disk),
             clock: VirtualClock::new(),
+            slowdown: 1.0,
         }
     }
 }
@@ -288,9 +316,21 @@ impl ExecutionBackend for SimBackend {
     }
 
     /// Stable decode spans cost exactly `decode_step_time_sum` here (no
-    /// stream bytes, no contention), so macro-stepping them is free.
+    /// stream bytes, no contention), so macro-stepping them is free —
+    /// unless a straggler slowdown is active: the fast-forward horizon
+    /// replays *nominal* per-step durations, so a degraded replica must
+    /// single-step until the slowdown lifts.
     fn supports_fast_forward(&self) -> bool {
-        true
+        self.slowdown == 1.0
+    }
+
+    fn set_slowdown(&mut self, factor: f64) {
+        debug_assert!(factor >= 1.0, "slowdown scales durations up");
+        self.slowdown = factor;
+    }
+
+    fn slowdown(&self) -> f64 {
+        self.slowdown
     }
 
     fn prefill(&mut self, req: &Request, kv: &KvManager) -> anyhow::Result<PrefillOutcome> {
@@ -311,8 +351,12 @@ impl ExecutionBackend for SimBackend {
             * disk_layers as f64
             * self.cfg.offload_bytes_per_token_layer()
             / self.cfg.tp as f64;
+        let mut duration = self.cost.prefill_time(len);
+        if self.slowdown != 1.0 {
+            duration *= self.slowdown;
+        }
         Ok(PrefillOutcome {
-            duration: self.cost.prefill_time(len),
+            duration,
             offload_bytes,
             spill_bytes,
             first_token_at: None, // virtual time: first token at batch end
@@ -344,10 +388,10 @@ impl ExecutionBackend for SimBackend {
         let disk_time = self.disk_link.transfer_time(disk_stream_bytes);
         let total_stream = stream_time + disk_time;
         let mut step = compute.max(total_stream);
-        let stream_stall_s = (total_stream - compute).max(0.0);
+        let mut stream_stall_s = (total_stream - compute).max(0.0);
         // only the portion that actually inflated the step counts as a
         // disk stall (compute can hide part or all of the disk leg)
-        let disk_stall_s = disk_time.min(stream_stall_s);
+        let mut disk_stall_s = disk_time.min(stream_stall_s);
 
         // §3.1.3 PCIe contention: TP over PCIe shares the link between
         // all-reduce and KV streams. The check+chunk mechanism confines the
@@ -359,6 +403,13 @@ impl ExecutionBackend for SimBackend {
                 if self.cfg.pcie_chunking { 0.05 * ar } else { ar.min(stream_time) };
             step += penalty;
             contention_s = penalty;
+        }
+        if self.slowdown != 1.0 {
+            // a straggler is uniformly degraded: compute and stalls alike
+            step *= self.slowdown;
+            stream_stall_s *= self.slowdown;
+            contention_s *= self.slowdown;
+            disk_stall_s *= self.slowdown;
         }
         Ok(DecodeOutcome { duration: step, stream_stall_s, contention_s, disk_stall_s })
     }
@@ -402,6 +453,24 @@ mod tests {
         assert_eq!(out.stream_stall_s, 0.0);
         assert_eq!(out.contention_s, 0.0);
         assert_eq!(out.disk_stall_s, 0.0);
+    }
+
+    #[test]
+    fn sim_backend_slowdown_scales_steps_and_gates_fast_forward() {
+        let cfg = ServingConfig::llama2_7b_tp1();
+        let kv = KvManager::new(16, 16, cfg.block_size, cfg.model.n_layers);
+        let reqs: Vec<Request> = Vec::new();
+        let mut b = SimBackend::new(&cfg);
+        assert!(b.supports_fast_forward());
+        let nominal = b.decode(&[0, 1], &reqs, &kv, 2048, 0.0, 0.0).unwrap();
+        b.set_slowdown(3.0);
+        assert!(!b.supports_fast_forward(), "stragglers must single-step");
+        let slow = b.decode(&[0, 1], &reqs, &kv, 2048, 0.0, 0.0).unwrap();
+        assert!((slow.duration - 3.0 * nominal.duration).abs() < 1e-15);
+        b.set_slowdown(1.0);
+        let back = b.decode(&[0, 1], &reqs, &kv, 2048, 0.0, 0.0).unwrap();
+        assert_eq!(back.duration.to_bits(), nominal.duration.to_bits());
+        assert!(b.supports_fast_forward());
     }
 
     #[test]

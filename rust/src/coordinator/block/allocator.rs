@@ -106,6 +106,18 @@ impl BlockPool {
         debug_assert!(self.free.len() <= self.total);
     }
 
+    /// Permanently take the pool out of service: capacity drops to zero,
+    /// so every future allocation fails and `total() == 0` — the
+    /// "tier disabled" sentinel the scheduler keys on. The pool must be
+    /// fully free: the engine's disk-tier fence guarantees this by
+    /// preempting every request still holding disk layers first (their
+    /// ids would otherwise dangle above the shrunk capacity).
+    pub fn retire(&mut self) {
+        debug_assert_eq!(self.used(), 0, "retire requires all blocks released");
+        self.total = 0;
+        self.free.clear();
+    }
+
     /// Validate free-list integrity (property tests): every free id is in
     /// range and unique, and free + allocated never exceeds the capacity.
     /// The per-tier conservation suite runs this against every pool in
@@ -226,6 +238,19 @@ mod tests {
         all.sort();
         all.dedup();
         assert_eq!(all.len(), 100);
+    }
+
+    #[test]
+    fn retire_kills_the_pool() {
+        let mut p = BlockPool::new(8);
+        let a = p.alloc(3).unwrap();
+        p.release(&a);
+        p.retire();
+        assert_eq!(p.total(), 0);
+        assert_eq!(p.available(), 0);
+        assert!(p.alloc_one().is_none());
+        assert!(p.alloc(1).is_none());
+        p.check().unwrap();
     }
 
     #[test]

@@ -381,6 +381,36 @@ impl KvManager {
         Ok(n)
     }
 
+    /// Move one layer GPU -> disk directly — the exact inverse of
+    /// `promote_disk_layer`. Used only to roll back a promote whose
+    /// backend disk read failed (the bytes never actually moved); the
+    /// disk blocks the failed promote just freed make it infallible in
+    /// that context, but the signature stays fallible for symmetry.
+    pub(crate) fn demote_gpu_layer_to_disk(
+        &mut self,
+        req: ReqId,
+        layer: usize,
+    ) -> Result<usize, KvError> {
+        let t = self.tables.get(&req).ok_or(KvError::UnknownRequest)?;
+        let entry = &t.layers[layer];
+        if entry.residency != Residency::Gpu {
+            return Ok(0);
+        }
+        let n = entry.blocks.len();
+        if self.disk.available() < n {
+            return Err(KvError::CpuExhausted);
+        }
+        let t = self.tables.get_mut(&req).unwrap();
+        let entry = &mut t.layers[layer];
+        self.scratch.clear();
+        std::mem::swap(&mut self.scratch, &mut entry.blocks); // scratch := GPU ids
+        assert!(self.disk.alloc_into(n, &mut entry.blocks), "checked");
+        entry.residency = Residency::Disk;
+        t.note_demoted(n);
+        self.gpu.release(&self.scratch);
+        Ok(n)
+    }
+
     /// Release everything a request holds (completion or recompute
     /// preemption — serving systems are stateless across requests, §2.2).
     /// The table (and its per-layer Vec capacity) is recycled for the next

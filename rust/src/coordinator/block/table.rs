@@ -230,6 +230,16 @@ impl LayerBlockTable {
         self.gpu_blocks += n;
     }
 
+    /// Layer moved GPU -> disk directly, `n` blocks (the engine rolling
+    /// back a deep restore whose disk read failed: the bytes never
+    /// actually left the disk tier).
+    pub(crate) fn note_demoted(&mut self, n: usize) {
+        self.gpu_layer_count -= 1;
+        self.disk_layer_count += 1;
+        self.gpu_blocks -= n;
+        self.disk_blocks += n;
+    }
+
     /// Rebuild the cached aggregates from the layers (after bulk edits —
     /// admission fills, or tests that poke `layers` directly).
     pub fn recount(&mut self) {

@@ -73,6 +73,25 @@ fn macro_steps_enabled() -> bool {
     std::env::var("LAYERKV_MACRO").map(|v| v != "0").unwrap_or(true)
 }
 
+/// Consecutive disk-tier I/O errors before the engine fences the tier
+/// (retires the disk pool and falls back to two-tier + recompute).
+pub const DISK_FENCE_K: u32 = 3;
+
+/// An unfinished request exported by [`Engine::drain`], carrying exactly
+/// what a failover path needs to re-submit it elsewhere from scratch: the
+/// ORIGINAL lengths (any partially generated tokens are discarded — this
+/// is recompute preemption across replicas) and the original arrival, so
+/// the eventual record's TTFT/queueing includes the downtime.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DrainedRequest {
+    /// Engine-local id (dense submission order); the caller owns the
+    /// local -> global mapping.
+    pub id: ReqId,
+    pub arrival: f64,
+    pub prompt_len: usize,
+    pub output_len: usize,
+}
+
 /// Counters the experiments report alongside latency. Every `disk_*` /
 /// `spill*` field stays exactly 0 in the two-tier configuration (disk
 /// pool capacity 0), by construction of the gating in `Engine`.
@@ -105,6 +124,12 @@ pub struct EngineStats {
     pub disk_stream_bytes: f64,
     /// Seconds decode steps were inflated by the disk link specifically.
     pub disk_stall_s: f64,
+    /// Disk-tier I/O failures observed (injected via `set_disk_faulty`
+    /// or reported by a real backend's spill/restore hooks).
+    pub disk_io_errors: u64,
+    /// The disk tier was fenced after K consecutive I/O errors: its pool
+    /// was retired and the engine fell back to two-tier + recompute.
+    pub disk_fenced: bool,
 }
 
 /// Incrementally-maintained totals over the running set: the membership
@@ -199,6 +224,21 @@ pub struct Engine<B: ExecutionBackend = SimBackend> {
     /// span's decode durations here and the commit replays them, so the
     /// cost model is evaluated once per step, not twice.
     ff_durations: Vec<f64>,
+    /// False between `drain()` and `reopen_admission()`: the engine is
+    /// fenced off and `submit` is a caller bug (debug-asserted).
+    admission_open: bool,
+    /// Fault injection: while true every disk-tier spill/restore the
+    /// engine attempts fails as an I/O error (the simulated analog of a
+    /// failing NVMe; a real backend reports errors through its hooks
+    /// instead).
+    disk_faulty: bool,
+    /// Consecutive disk-tier I/O errors; `DISK_FENCE_K` of them arms the
+    /// fence. Reset by any successful disk-tier op.
+    disk_err_streak: u32,
+    /// The fence trips at the next step boundary (errors surface deep in
+    /// loops that iterate `running` by index, where preempting in place
+    /// would invalidate the iteration).
+    disk_fence_pending: bool,
 }
 
 impl Engine<SimBackend> {
@@ -259,6 +299,10 @@ impl<B: ExecutionBackend> Engine<B> {
             view: LoadView::default(),
             ff_hist: Vec::new(),
             ff_durations: Vec::new(),
+            admission_open: true,
+            disk_faulty: false,
+            disk_err_streak: 0,
+            disk_fence_pending: false,
         }
     }
 
@@ -320,6 +364,106 @@ impl<B: ExecutionBackend> Engine<B> {
         self.macro_steps = false;
     }
 
+    // --- faults & graceful drain ----------------------------------------
+
+    /// Stop admission and export every unfinished request for
+    /// re-submission elsewhere (failover, scale-down). Running requests
+    /// are recompute-preempted first — their KV is released on every tier
+    /// and in the backend — then the whole queue is popped. Completed
+    /// records and all counters survive; `reopen_admission` re-arms the
+    /// engine (e.g. after a crash window ends). Exported requests are
+    /// sorted by local id, i.e. original submission order.
+    pub fn drain(&mut self) -> Vec<DrainedRequest> {
+        self.admission_open = false;
+        while let Some(&rid) = self.running.first() {
+            self.preempt_recompute(rid);
+        }
+        let mut out = Vec::with_capacity(self.waiting.len());
+        while let Some(rid) = self.waiting.pop_front() {
+            self.view_pop_waiting(rid);
+            let r = &mut self.requests[rid];
+            r.phase = Phase::Finished; // terminal here; lives on via re-submit
+            out.push(DrainedRequest {
+                id: rid,
+                arrival: r.arrival,
+                prompt_len: r.prompt_len,
+                output_len: r.output_len,
+            });
+        }
+        out.sort_by_key(|d| d.id);
+        debug_assert!(!self.has_work());
+        out
+    }
+
+    /// Re-open admission after a `drain` (a recovered replica).
+    pub fn reopen_admission(&mut self) {
+        self.admission_open = true;
+    }
+
+    /// Is the engine accepting `submit`s (i.e. not drained)?
+    pub fn admission_open(&self) -> bool {
+        self.admission_open
+    }
+
+    /// Fault injection: while set, every disk-tier spill/restore fails as
+    /// an I/O error. `DISK_FENCE_K` consecutive errors fence the tier.
+    pub fn set_disk_faulty(&mut self, faulty: bool) {
+        self.disk_faulty = faulty;
+    }
+
+    /// Has the disk tier been fenced (retired after K consecutive errors)?
+    pub fn disk_fenced(&self) -> bool {
+        self.stats.disk_fenced
+    }
+
+    /// Record one disk-tier I/O failure; arms the fence at the K-th
+    /// consecutive error. The fence itself trips at the next step boundary
+    /// (`maybe_fence_disk`) because errors surface inside loops indexing
+    /// `running`, where preempting in place would invalidate the walk.
+    fn note_disk_error(&mut self) {
+        self.stats.disk_io_errors += 1;
+        self.disk_err_streak += 1;
+        if self.disk_err_streak >= DISK_FENCE_K && self.kv.disk.total() > 0 {
+            self.disk_fence_pending = true;
+        }
+    }
+
+    /// Step-boundary check for an armed disk fence. A plain bool test on
+    /// the fault-free path.
+    fn maybe_fence_disk(&mut self) {
+        if self.disk_fence_pending {
+            self.fence_disk();
+        }
+    }
+
+    /// Degraded mode: the disk tier is unreliable — take it out of
+    /// service instead of looping on errors. Every request still holding
+    /// disk-resident layers is recompute-preempted (its re-prefill needs
+    /// no disk reads), which releases all disk blocks; then the pool is
+    /// retired (`total() == 0`), which by construction makes every disk
+    /// path unreachable: the scheduler's tiered admission, `never_fits`'
+    /// tiered arm, `relieve_host_pressure`, and the host-spill watermark
+    /// all key on `disk.total() > 0`. The engine is now exactly a
+    /// two-tier + recompute machine.
+    fn fence_disk(&mut self) {
+        self.disk_fence_pending = false;
+        if self.kv.disk.total() == 0 {
+            return;
+        }
+        loop {
+            let victim = self.running.iter().copied().find(|&r| {
+                self.kv.table(r).map(|t| t.n_disk_layers() > 0).unwrap_or(false)
+            });
+            match victim {
+                Some(rid) => self.preempt_recompute(rid),
+                None => break,
+            }
+        }
+        debug_assert_eq!(self.kv.disk.used(), 0, "preemptions must free the disk pool");
+        self.kv.disk.retire();
+        self.stats.disk_fenced = true;
+    }
+
     /// Run a trace to completion; returns the latency report. Panics if
     /// the backend fails (the simulated backend never does); fallible
     /// backends drive `try_run`.
@@ -366,6 +510,7 @@ impl<B: ExecutionBackend> Engine<B> {
                 .map(|r| r.arrival)
                 .unwrap_or(f64::INFINITY);
 
+            self.maybe_fence_disk();
             self.oracle_refresh();
 
             let action = {
@@ -470,6 +615,7 @@ impl<B: ExecutionBackend> Engine<B> {
     /// [`Engine::wait_until`]. Returns the engine-local id (dense, in
     /// submission order) — the caller keeps the local -> global mapping.
     pub fn submit(&mut self, tr: &TraceRequest, predicted: (usize, usize)) -> ReqId {
+        debug_assert!(self.admission_open, "submit on a drained engine (reopen_admission first)");
         let local: ReqId = self.requests.len();
         let mut r = Request::from_trace(tr, predicted);
         r.id = local;
@@ -509,6 +655,7 @@ impl<B: ExecutionBackend> Engine<B> {
     /// the caller's next submit instant — the decode fast-forward horizon,
     /// exactly `try_run`'s next-arrival bound.
     pub fn step_once_until(&mut self, draining: bool, deadline: f64) -> anyhow::Result<bool> {
+        self.maybe_fence_disk();
         self.oracle_refresh();
         let action = {
             let waiting = self.waiting.make_contiguous();
@@ -817,11 +964,27 @@ impl<B: ExecutionBackend> Engine<B> {
 
     /// Spill with backend mirroring and stats: host -> disk. Decode-batch
     /// membership is unaffected — a host layer was already non-resident.
+    /// `Ok(0)` on a disk-tier I/O failure (injected or reported by the
+    /// backend's write hook): the layer stays host-resident, the error
+    /// counts toward the fence, and the caller sees "no progress".
     fn kv_spill(&mut self, rid: ReqId, layer: usize) -> Result<usize, KvError> {
+        if self.disk_faulty {
+            self.note_disk_error();
+            return Ok(0);
+        }
         let out = self.kv.spill_layer(rid, layer);
         if let Ok(n) = out {
             if n > 0 {
-                self.backend.spill_layer(rid, layer);
+                if self.backend.spill_layer(rid, layer).is_err() {
+                    // the write failed: the layer never left the host.
+                    // Roll the block accounting back (infallible — the
+                    // host blocks the spill just freed are still free).
+                    let rolled = self.kv.unspill_layer(rid, layer);
+                    debug_assert!(matches!(rolled, Ok(m) if m == n));
+                    self.note_disk_error();
+                    return Ok(0);
+                }
+                self.disk_err_streak = 0;
                 self.log_transition(rid, layer, Residency::Cpu, Residency::Disk, n);
                 self.stats.spilled_layers += 1;
                 self.stats.spill_bytes += self.layer_wire_bytes(rid);
@@ -832,11 +995,26 @@ impl<B: ExecutionBackend> Engine<B> {
 
     /// Deep restore with aggregate upkeep: disk -> GPU directly (a disk
     /// read plus the h2d copy; `disk_restore_bytes` tracks the deep leg).
+    /// `Ok(0)` on a disk-tier I/O failure, as in `kv_spill`: the layer
+    /// stays disk-resident and the error counts toward the fence.
     fn kv_promote_disk(&mut self, rid: ReqId, layer: usize) -> Result<usize, KvError> {
+        if self.disk_faulty {
+            self.note_disk_error();
+            return Ok(0);
+        }
         let out = self.kv.promote_disk_layer(rid, layer);
         if let Ok(n) = out {
             if n > 0 {
-                self.backend.promote_disk_layer(rid, layer);
+                if self.backend.promote_disk_layer(rid, layer).is_err() {
+                    // the disk read failed: the bytes never moved. Undo
+                    // the accounting (infallible — the disk blocks the
+                    // promote just freed are still free).
+                    let rolled = self.kv.demote_gpu_layer_to_disk(rid, layer);
+                    debug_assert!(matches!(rolled, Ok(m) if m == n));
+                    self.note_disk_error();
+                    return Ok(0);
+                }
+                self.disk_err_streak = 0;
                 self.log_transition(rid, layer, Residency::Disk, Residency::Gpu, n);
                 self.stats.disk_promoted_layers += 1;
                 self.stats.disk_restore_bytes += self.layer_wire_bytes(rid);

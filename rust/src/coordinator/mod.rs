@@ -22,7 +22,10 @@ pub use backend::{
     WallClock,
 };
 pub use block::{KvError, KvManager};
-pub use engine::{run_trace, standard_predictor, Engine, EngineStats, CLOCK_EPS};
+pub use engine::{
+    run_trace, standard_predictor, DrainedRequest, Engine, EngineStats, CLOCK_EPS,
+    DISK_FENCE_K,
+};
 pub use predict::LengthPredictor;
 pub use request::{Phase, ReqId, Request};
 pub use scheduler::{Action, Scheduler};

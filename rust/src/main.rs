@@ -1,10 +1,11 @@
 //! LayerKV command-line entry point.
 //!
 //! ```text
-//! layerkv experiment <fig1|fig4|fig5|fig6|fig7|fig8|tiers|bursty|cluster|cluster-wide|table1|all>
+//! layerkv experiment <fig1|fig4|fig5|fig6|fig7|fig8|tiers|bursty|cluster|cluster-wide|faults|table1|all>
 //!                    [--quick] [--macro-steps|--no-macro-steps]
 //! layerkv sim --model <7b|34b|70b> --policy <vllm|layerkv|layerkv-no-slo>
 //!             --ctx <tokens> --rate <req/s> --requests <n> [--sharegpt]
+//!             [--replicas N] [--router <policy>] [--faults SPEC]
 //! layerkv serve [--addr 127.0.0.1:7181] [--artifacts DIR] [--budget BYTES]
 //!               [--policy <vllm|layerkv|layerkv-no-slo>] [--max-batch N]
 //!               [--ref-model] [--replicas N] [--router <policy>]
@@ -19,6 +20,11 @@
 //! artifacts (works offline). `--replicas N` runs N engine workers behind
 //! the front-end, with `--router` picking the replica-selection policy
 //! (round-robin | jsq | kv-pressure | slo-aware — see `cluster/`).
+//!
+//! `sim --replicas N` routes the trace across an N-replica simulated
+//! cluster; `--faults SPEC` injects a deterministic fault schedule
+//! (`crash=R@T1[:T2],straggle=R@T1:T2xF,io=R@T1:T2,retries=N,probation=S`
+//! — see `cluster::faults::FaultPlan::parse_spec`).
 //!
 //! Argument parsing is hand-rolled (clap is unavailable offline).
 
@@ -66,9 +72,11 @@ fn print_help() {
         "layerkv — layer-wise KV cache management for LLM serving (paper reproduction)\n\
          \n\
          USAGE:\n\
-         \x20 layerkv experiment <fig1|fig4|fig5|fig6|fig7|fig8|tiers|bursty|cluster|cluster-wide|table1|all>\n\
+         \x20 layerkv experiment <fig1|fig4|fig5|fig6|fig7|fig8|tiers|bursty|cluster|cluster-wide|faults|table1|all>\n\
          \x20                    [--quick] [--macro-steps|--no-macro-steps]\n\
          \x20 layerkv sim --model 7b --policy layerkv --ctx 4096 --rate 1.0 --requests 100 [--sharegpt]\n\
+         \x20             [--replicas N] [--router round-robin|jsq|kv-pressure|slo-aware]\n\
+         \x20             [--faults crash=R@T1[:T2],straggle=R@T1:T2xF,io=R@T1:T2,retries=N,probation=S]\n\
          \x20 layerkv serve [--addr 127.0.0.1:7181] [--artifacts DIR] [--budget BYTES]\n\
          \x20               [--policy vllm|layerkv|layerkv-no-slo] [--max-batch N] [--ref-model]\n\
          \x20               [--replicas N] [--router round-robin|jsq|kv-pressure|slo-aware]\n\
@@ -115,14 +123,16 @@ fn cmd_experiment(args: &[String]) -> anyhow::Result<()> {
             // trace volume per cell (kept out of `all` — it is the
             // dedicated scale run)
             "cluster-wide" => exp::print_cluster(&exp::cluster_sweep_wide()),
+            "faults" => exp::print_faults(&exp::fault_sweep()),
             other => anyhow::bail!("unknown experiment '{other}'"),
         }
         Ok(())
     };
     if which == "all" {
-        for id in
-            ["table1", "fig1", "fig4", "fig5", "fig6", "fig7", "fig8", "tiers", "bursty", "cluster"]
-        {
+        for id in [
+            "table1", "fig1", "fig4", "fig5", "fig6", "fig7", "fig8", "tiers", "bursty",
+            "cluster", "faults",
+        ] {
             run(id)?;
         }
         Ok(())
@@ -167,6 +177,12 @@ fn cmd_sim(args: &[String]) -> anyhow::Result<()> {
         layerkv::workload::trace::save(&trace, std::path::Path::new(&path))?;
         println!("trace saved to {path}");
     }
+    let replicas: usize = opt(args, "--replicas").unwrap_or_else(|| "1".into()).parse()?;
+    anyhow::ensure!(replicas >= 1, "--replicas must be at least 1");
+    let faults_spec = opt(args, "--faults");
+    if replicas > 1 || faults_spec.is_some() {
+        return sim_cluster(args, cfg, &trace, replicas, faults_spec);
+    }
     let (rep, stats) = run_trace(cfg.clone(), &trace, exp::PREDICTOR_ACC);
     let (mut ttft, mut tpot) = (rep.ttft(), rep.tpot());
     println!("model={model} policy={} ctx={ctx} rate={rate} n={n}", cfg.policy.name());
@@ -201,6 +217,67 @@ fn cmd_sim(args: &[String]) -> anyhow::Result<()> {
         stats.offload_bytes / 1e6,
         stats.onload_stream_bytes / 1e6,
     );
+    Ok(())
+}
+
+/// `sim` over a multi-replica cluster, optionally fault-injected.
+fn sim_cluster(
+    args: &[String],
+    cfg: ServingConfig,
+    trace: &layerkv::workload::Trace,
+    replicas: usize,
+    faults_spec: Option<String>,
+) -> anyhow::Result<()> {
+    use layerkv::cluster::{Cluster, ClusterConfig, FaultPlan, RouterPolicy};
+    let router_name = opt(args, "--router").unwrap_or_else(|| "kv-pressure".into());
+    let router = RouterPolicy::parse(&router_name).ok_or_else(|| {
+        anyhow::anyhow!("unknown router '{router_name}' (round-robin|jsq|kv-pressure|slo-aware)")
+    })?;
+    let mut cluster = Cluster::new(&ClusterConfig::homogeneous(&cfg, replicas, router));
+    if let Some(spec) = &faults_spec {
+        let plan = FaultPlan::parse_spec(spec).map_err(|e| anyhow::anyhow!(e))?;
+        cluster = cluster.with_faults(plan);
+    }
+    let out = cluster.run(trace)?;
+    let (mut ttft, mut tpot) = (out.merged.ttft(), out.merged.tpot());
+    println!(
+        "cluster replicas={replicas} router={} policy={} n={}",
+        router.name(),
+        cfg.policy.name(),
+        trace.requests.len()
+    );
+    println!(
+        "completed {}   dropped {}   failed {}",
+        out.merged.records.len(),
+        out.dropped.len(),
+        out.failed.len()
+    );
+    println!(
+        "TTFT   mean {:8.3}s   p50 {:8.3}s   p99 {:8.3}s",
+        ttft.mean(),
+        ttft.p50(),
+        ttft.p99()
+    );
+    println!("TPOT   mean {:8.4}s   p99 {:8.4}s", tpot.mean(), tpot.p99());
+    println!(
+        "tput   {:.1} tok/s   goodput {:.2} req/s   violations {:.1}%",
+        out.merged.throughput_tok_s(),
+        out.merged.goodput_req_s(&cfg.slo),
+        100.0 * out.merged.slo_violation_rate(&cfg.slo)
+    );
+    let routed: Vec<String> =
+        out.per_replica.iter().map(|o| o.routed.to_string()).collect();
+    println!("routed per replica: [{}]", routed.join(", "));
+    if let Some(f) = &out.faults {
+        println!(
+            "faults crashes {}   recoveries {}   stragglers {}   io bursts {}   \
+             retries {}   downtime {:.1}s",
+            f.crashes, f.recoveries, f.straggler_windows, f.io_bursts, f.retries, f.downtime_s
+        );
+        for ev in cluster.fault_log() {
+            println!("  {}", ev.render());
+        }
+    }
     Ok(())
 }
 

@@ -49,6 +49,70 @@ impl TierTransition {
     }
 }
 
+/// What a fault-plan event does to a replica (see `cluster::faults`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// Replica goes down: fenced, drained, its requests re-routed.
+    Crash,
+    /// Replica comes back: admission reopens, probation window starts.
+    Recover,
+    /// Service-rate degradation begins (factor >= 1.0).
+    StragglerStart { slowdown: f64 },
+    StragglerEnd,
+    /// Disk-tier I/O errors begin on this replica.
+    IoErrorStart,
+    IoErrorEnd,
+}
+
+impl FaultKind {
+    /// Stable ordering rank for same-instant events (crashes before
+    /// recoveries so a zero-length window still drains).
+    pub fn rank(&self) -> u8 {
+        match self {
+            FaultKind::Crash => 0,
+            FaultKind::StragglerStart { .. } => 1,
+            FaultKind::IoErrorStart => 2,
+            FaultKind::IoErrorEnd => 3,
+            FaultKind::StragglerEnd => 4,
+            FaultKind::Recover => 5,
+        }
+    }
+}
+
+/// One fault event in cluster virtual time, applied to one replica.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultEvent {
+    /// Cluster virtual time of the event (seconds).
+    pub t: f64,
+    pub replica: usize,
+    pub kind: FaultKind,
+}
+
+impl FaultEvent {
+    /// Compact one-line rendering; time is rendered to bits so the event
+    /// log doubles as a determinism witness (like `TierTransition`).
+    pub fn render(&self) -> String {
+        format!("t={:016x} replica={} {:?}", self.t.to_bits(), self.replica, self.kind)
+    }
+}
+
+/// Rollup of a faulted cluster run: what was injected and what it cost.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultSummary {
+    pub crashes: usize,
+    pub recoveries: usize,
+    pub straggler_windows: usize,
+    pub io_bursts: usize,
+    /// Re-submissions of drained requests (failover traffic).
+    pub retries: u64,
+    /// Requests that exhausted their retry budget or never found a live
+    /// replica to land on.
+    pub failed: usize,
+    /// Σ per-replica seconds spent crashed (windows still open at the end
+    /// of the run count up to the run's end).
+    pub downtime_s: f64,
+}
+
 /// Per-request latency record (all timestamps in seconds of engine time).
 #[derive(Debug, Clone, PartialEq)]
 pub struct RequestRecord {
@@ -141,6 +205,16 @@ impl Report {
             return 0.0;
         }
         self.records.len() as f64 / self.makespan
+    }
+
+    /// Goodput: completed requests that met both SLOs, per second of
+    /// makespan. The fault experiments report this because under crashes
+    /// raw throughput hides retries that finished uselessly late.
+    pub fn goodput_req_s(&self, slo: &SloTargets) -> f64 {
+        if self.makespan <= 0.0 {
+            return 0.0;
+        }
+        self.records.iter().filter(|r| !r.violates(slo)).count() as f64 / self.makespan
     }
 
     /// Fraction of requests violating either SLO (Fig. 8).
@@ -299,6 +373,29 @@ mod tests {
         assert_eq!(s.per_replica.len(), 2);
         assert!((s.viol_rate - 0.5).abs() < 1e-12);
         assert!((s.max_share() - 0.75).abs() < 1e-12); // 3 of 4 routed
+    }
+
+    #[test]
+    fn fault_event_render_is_stable_and_ranks_order_same_instant() {
+        let ev = FaultEvent { t: 20.0, replica: 1, kind: FaultKind::Crash };
+        assert_eq!(ev.render(), ev.clone().render());
+        assert!(ev.render().contains("replica=1"));
+        assert!(FaultKind::Crash.rank() < FaultKind::Recover.rank());
+        assert!(
+            FaultKind::StragglerStart { slowdown: 2.0 }.rank()
+                < FaultKind::StragglerEnd.rank()
+        );
+    }
+
+    #[test]
+    fn goodput_counts_only_slo_ok_completions() {
+        let slo = SloTargets { ttft_s: 3.0, tpot_s: 10.0 };
+        let rep = Report::new(vec![
+            rec(0, 0.0, 0.5, 1.0, 2.0, 10),  // ttft 1.0: ok
+            rec(1, 0.0, 3.0, 4.0, 5.0, 10),  // ttft 4.0: violates
+        ]);
+        assert!((rep.goodput_req_s(&slo) - 1.0 / 5.0).abs() < 1e-12);
+        assert!((rep.throughput_req_s() - 2.0 / 5.0).abs() < 1e-12);
     }
 
     #[test]

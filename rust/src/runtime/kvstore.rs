@@ -31,6 +31,12 @@ pub struct KvStoreStats {
     /// Bytes read from spill files by decode-path streaming (the layer
     /// stayed on disk).
     pub disk_read_bytes: u64,
+    /// Disk-tier I/O failures: spill writes and restore/stream reads that
+    /// errored. Spill/restore failures also propagate to the caller as
+    /// `Err`; the decode-path streaming reads additionally fall back to
+    /// zeroed history (see `append_row`/`fill_scratch`) but still count
+    /// here so the degradation is observable.
+    pub io_errors: u64,
 }
 
 #[derive(Debug)]
@@ -188,18 +194,21 @@ impl KvStore {
     }
 
     /// Spill one host layer to a real file under the spill directory and
-    /// free its host copy. Returns bytes written (0 when the layer is on
-    /// the device, already spilled, the tier is disabled, or I/O failed).
-    pub fn spill_layer(&mut self, req: ReqId, layer: usize) -> usize {
-        let Some(dir) = self.spill_dir.as_ref() else { return 0 };
+    /// free its host copy. Returns bytes written — `Ok(0)` when the layer
+    /// is on the device, already spilled, or the tier is disabled — and
+    /// `Err` when the file write failed (the layer stays host-resident
+    /// and the failure counts toward `stats.io_errors`).
+    pub fn spill_layer(&mut self, req: ReqId, layer: usize) -> std::io::Result<usize> {
+        let Some(dir) = self.spill_dir.as_ref() else { return Ok(0) };
         let path = dir.join(format!("kv_r{req}_l{layer}.bin"));
-        let Some(ls) = self.entries.get_mut(&req) else { return 0 };
+        let Some(ls) = self.entries.get_mut(&req) else { return Ok(0) };
         let l = &mut ls[layer];
         if l.on_device || l.spill_path.is_some() {
-            return 0;
+            return Ok(0);
         }
-        if write_f32_file(&path, &l.kv.data).is_err() {
-            return 0;
+        if let Err(e) = write_f32_file(&path, &l.kv.data) {
+            self.stats.io_errors += 1;
+            return Err(e);
         }
         let bytes = l.kv.bytes();
         l.kv.data = Vec::new(); // host copy freed; metadata stays
@@ -208,16 +217,25 @@ impl KvStore {
         self.disk_used += bytes;
         self.stats.spills += 1;
         self.stats.spill_bytes += bytes as u64;
-        bytes
+        Ok(bytes)
     }
 
     /// Restore one spilled layer back to the host pool (read + delete the
-    /// spill file). Returns bytes read.
-    pub fn unspill_layer(&mut self, req: ReqId, layer: usize) -> usize {
-        let Some(ls) = self.entries.get_mut(&req) else { return 0 };
+    /// spill file). Returns bytes read — `Ok(0)` when the layer is not
+    /// spilled — and `Err` when the spill file is unreadable or truncated
+    /// (the layer stays on disk and the failure counts toward
+    /// `stats.io_errors`).
+    pub fn unspill_layer(&mut self, req: ReqId, layer: usize) -> std::io::Result<usize> {
+        let Some(ls) = self.entries.get_mut(&req) else { return Ok(0) };
         let l = &mut ls[layer];
-        let Some(path) = l.spill_path.clone() else { return 0 };
-        let Some(data) = read_f32_file(&path, l.kv.numel()) else { return 0 };
+        let Some(path) = l.spill_path.clone() else { return Ok(0) };
+        let Some(data) = read_f32_file(&path, l.kv.numel()) else {
+            self.stats.io_errors += 1;
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("spill file unreadable or truncated: {}", path.display()),
+            ));
+        };
         std::fs::remove_file(&path).ok();
         l.kv.data = data;
         l.spill_path = None;
@@ -226,18 +244,19 @@ impl KvStore {
         self.host_used += bytes;
         self.stats.unspills += 1;
         self.stats.unspill_bytes += bytes as u64;
-        bytes
+        Ok(bytes)
     }
 
     /// Deep restore: disk -> host -> device in one call (mirrors the
     /// coordinator's `promote_disk_layer`). Returns bytes moved to the
-    /// device (0 if any leg failed — the layer may legitimately end up
-    /// host-resident when the device budget is full).
-    pub fn promote_layer(&mut self, req: ReqId, layer: usize) -> usize {
-        if self.unspill_layer(req, layer) == 0 {
-            return 0;
+    /// device — `Ok(0)` if either leg declined (the layer may
+    /// legitimately end up host-resident when the device budget is
+    /// full) — and `Err` when the unspill read failed.
+    pub fn promote_layer(&mut self, req: ReqId, layer: usize) -> std::io::Result<usize> {
+        if self.unspill_layer(req, layer)? == 0 {
+            return Ok(0);
         }
-        self.onload_layer(req, layer)
+        Ok(self.onload_layer(req, layer))
     }
 
     /// Append one committed token's KV to every layer of `req`.
@@ -253,6 +272,7 @@ impl KvStore {
         let mut disk_grown = 0usize;
         let mut disk_unspilled = 0usize;
         let mut host_grown = 0usize;
+        let mut io_errs = 0u64;
         for (layer, row) in ls.iter_mut().zip(rows.iter()) {
             let kv = &mut layer.kv;
             let (kh, d) = (kv.kh, kv.d);
@@ -271,7 +291,10 @@ impl KvStore {
                         disk_read += (v.len() * 4) as u64;
                         v
                     }
-                    None => vec![0.0; 2 * kh * kv.t * d],
+                    None => {
+                        io_errs += 1;
+                        vec![0.0; 2 * kh * kv.t * d]
+                    }
                 },
                 None => std::mem::take(&mut kv.data),
             };
@@ -297,6 +320,7 @@ impl KvStore {
                     // count from its siblings (the token was already
                     // committed by the coordinator). The old spill file is
                     // stale — remove it.
+                    io_errs += 1;
                     std::fs::remove_file(&path).ok();
                     let old_bytes = kv.bytes();
                     kv.data = out;
@@ -319,6 +343,7 @@ impl KvStore {
         self.disk_used -= disk_unspilled;
         self.host_used += host_grown;
         self.stats.disk_read_bytes += disk_read;
+        self.stats.io_errors += io_errs;
     }
 
     /// Fill lane `lane` of the dense scratch from the store (any residency;
@@ -334,6 +359,7 @@ impl KvStore {
         let Some(ls) = self.entries.get(&req) else { return 0 };
         let mut streamed = 0usize;
         let mut disk_read = 0u64;
+        let mut io_errs = 0u64;
         for (layer, s) in ls.iter().zip(scratch.iter_mut()) {
             let kv = &layer.kv;
             let (kh, d, t) = (kv.kh, kv.d, kv.t);
@@ -348,7 +374,10 @@ impl KvStore {
                         disk_read += (v.len() * 4) as u64;
                         Some(v)
                     }
-                    None => Some(vec![0.0; 2 * kh * t * d]),
+                    None => {
+                        io_errs += 1;
+                        Some(vec![0.0; 2 * kh * t * d])
+                    }
                 },
                 None => None,
             };
@@ -368,6 +397,7 @@ impl KvStore {
             self.stats.onload_bytes += streamed as u64;
         }
         self.stats.disk_read_bytes += disk_read;
+        self.stats.io_errors += io_errs;
         streamed
     }
 
@@ -520,19 +550,19 @@ mod tests {
         let mut s = KvStore::with_spill_dir(2 * layer_bytes, dir.clone());
         s.insert(0, four_layers(8), &[1, 3]); // 0, 2 on host
         let host0 = s.host_used();
-        assert_eq!(s.spill_layer(0, 0), layer_bytes);
+        assert_eq!(s.spill_layer(0, 0).unwrap(), layer_bytes);
         assert_eq!(s.host_used(), host0 - layer_bytes);
         assert_eq!(s.disk_used(), layer_bytes);
         assert_eq!(s.disk_layers(0), vec![0]);
         assert_eq!(s.host_layers(0), vec![2]);
         assert!(dir.join("kv_r0_l0.bin").exists(), "spill must hit the filesystem");
         // device-resident and already-spilled layers refuse to spill
-        assert_eq!(s.spill_layer(0, 1), 0);
-        assert_eq!(s.spill_layer(0, 0), 0);
+        assert_eq!(s.spill_layer(0, 1).unwrap(), 0);
+        assert_eq!(s.spill_layer(0, 0).unwrap(), 0);
         // spilled layers do not onload directly
         assert_eq!(s.onload_layer(0, 0), 0);
         // restore reads the bytes back and deletes the file
-        assert_eq!(s.unspill_layer(0, 0), layer_bytes);
+        assert_eq!(s.unspill_layer(0, 0).unwrap(), layer_bytes);
         assert!(!dir.join("kv_r0_l0.bin").exists());
         assert_eq!(s.disk_used(), 0);
         assert_eq!(s.host_used(), host0);
@@ -546,7 +576,7 @@ mod tests {
     fn spill_disabled_without_dir() {
         let mut s = KvStore::new(usize::MAX);
         s.insert(0, four_layers(8), &[]);
-        assert_eq!(s.spill_layer(0, 0), 0);
+        assert_eq!(s.spill_layer(0, 0).unwrap(), 0);
         assert_eq!(s.disk_used(), 0);
     }
 
@@ -556,7 +586,7 @@ mod tests {
         let (b, smax, kh, d) = (1usize, 16usize, 2usize, 4usize);
         let mut s = KvStore::with_spill_dir(0, dir.clone()); // nothing fits the device
         s.insert(7, four_layers(3), &[]);
-        assert!(s.spill_layer(7, 2) > 0);
+        assert!(s.spill_layer(7, 2).unwrap() > 0);
         // decode still reads the spilled layer's true bytes
         let mut scratch: Vec<Vec<f32>> =
             (0..4).map(|_| vec![0.0; b * 2 * kh * smax * d]).collect();
@@ -574,10 +604,35 @@ mod tests {
         s.fill_scratch(7, &mut scratch2, 0, b, smax);
         assert_eq!(scratch2[2][3 * d], 5.0, "appended row readable from the file");
         // promote: disk -> host (device budget 0 keeps it off-device)
-        assert_eq!(s.promote_layer(7, 2), 0);
+        assert_eq!(s.promote_layer(7, 2).unwrap(), 0);
         assert!(s.disk_layers(7).is_empty(), "unspill leg must have run");
         s.release(7);
         assert_eq!((s.device_used(), s.host_used(), s.disk_used()), (0, 0, 0));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_spill_file_is_an_error_not_a_mask() {
+        let dir = spill_dir("ioerr");
+        let mut s = KvStore::with_spill_dir(0, dir.clone());
+        s.insert(9, four_layers(4), &[]);
+        assert!(s.spill_layer(9, 1).unwrap() > 0);
+        // sabotage the disk tier: the spill file vanishes out from under us
+        std::fs::remove_file(dir.join("kv_r9_l1.bin")).unwrap();
+        assert!(s.unspill_layer(9, 1).is_err(), "lost file must surface as Err");
+        assert!(s.promote_layer(9, 1).is_err());
+        assert_eq!(s.stats.io_errors, 2);
+        // the layer stays disk-resident (accounting untouched) so the
+        // caller can decide to fence the tier and recompute instead.
+        assert_eq!(s.disk_layers(9), vec![1]);
+        // the streaming read path degrades to zeroed history + a count
+        let (b, smax, kh, d) = (1usize, 16usize, 2usize, 4usize);
+        let mut scratch: Vec<Vec<f32>> =
+            (0..4).map(|_| vec![7.0; b * 2 * kh * smax * d]).collect();
+        s.fill_scratch(9, &mut scratch, 0, b, smax);
+        assert_eq!(scratch[1][0], 0.0, "lost layer must stream zeros, not stale bytes");
+        assert_eq!(s.stats.io_errors, 3);
+        s.release(9);
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -586,8 +641,8 @@ mod tests {
         let dir = spill_dir("release");
         let mut s = KvStore::with_spill_dir(0, dir.clone());
         s.insert(3, four_layers(8), &[]);
-        assert!(s.spill_layer(3, 0) > 0);
-        assert!(s.spill_layer(3, 1) > 0);
+        assert!(s.spill_layer(3, 0).unwrap() > 0);
+        assert!(s.spill_layer(3, 1).unwrap() > 0);
         let f0 = dir.join("kv_r3_l0.bin");
         assert!(f0.exists());
         s.release(3);

@@ -277,7 +277,12 @@ impl<M: TokenModel> ExecutionBackend for PjrtBackend<M> {
                 self.retained_buf.extend(t.disk_layers());
                 for i in 0..self.retained_buf.len() {
                     let layer = self.retained_buf[i];
-                    spill_bytes += self.store.spill_layer(rid, layer) as f64;
+                    // a failed write leaves the layer host-resident; the
+                    // store counts the error, and the layer stays usable
+                    // (decode streams from host instead of the file)
+                    if let Ok(b) = self.store.spill_layer(rid, layer) {
+                        spill_bytes += b as f64;
+                    }
                 }
             }
         }
@@ -365,16 +370,19 @@ impl<M: TokenModel> ExecutionBackend for PjrtBackend<M> {
         self.store.onload_layer(rid, layer);
     }
 
-    fn spill_layer(&mut self, rid: ReqId, layer: usize) {
-        self.store.spill_layer(rid, layer);
+    fn spill_layer(&mut self, rid: ReqId, layer: usize) -> Result<()> {
+        self.store.spill_layer(rid, layer)?;
+        Ok(())
     }
 
-    fn unspill_layer(&mut self, rid: ReqId, layer: usize) {
-        self.store.unspill_layer(rid, layer);
+    fn unspill_layer(&mut self, rid: ReqId, layer: usize) -> Result<()> {
+        self.store.unspill_layer(rid, layer)?;
+        Ok(())
     }
 
-    fn promote_disk_layer(&mut self, rid: ReqId, layer: usize) {
-        self.store.promote_layer(rid, layer);
+    fn promote_disk_layer(&mut self, rid: ReqId, layer: usize) -> Result<()> {
+        self.store.promote_layer(rid, layer)?;
+        Ok(())
     }
 
     fn evict(&mut self, rid: ReqId) {
@@ -499,6 +507,7 @@ impl<M: TokenModel> RealEngine<M> {
         self.kv_stats.spill_bytes += s.spill_bytes;
         self.kv_stats.unspill_bytes += s.unspill_bytes;
         self.kv_stats.disk_read_bytes += s.disk_read_bytes;
+        self.kv_stats.io_errors += s.io_errors;
 
         let mut results: Vec<ServeResult> = report
             .records

@@ -26,6 +26,14 @@
 //! load ledger: queued jobs, in-flight tokens (the KV-demand proxy a
 //! replica would export), and an EWMA of each worker's delivered TTFTs.
 //!
+//! Worker failure is handled at the front-end, not the client: every job
+//! waits on its reply with a bounded timeout, a worker that misses it (or
+//! whose thread died) is fenced out of the ledger, and the job fails over
+//! to the survivors under a deterministic jittered exponential backoff —
+//! one attempt per configured worker, so a request is answered or
+//! explicitly errored, never silently lost. This is the thread-level
+//! twin of `cluster::faults`' crash failover.
+//!
 //! Example session: `cargo run --release -- serve` then
 //! `printf '{"id":1,"prompt":[1,2,3],"max_new_tokens":4}\n' | nc 127.0.0.1 7181`
 
@@ -37,13 +45,14 @@ use std::rc::Rc;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
 use crate::cluster::router::ewma_update;
 use crate::cluster::RouterPolicy;
 use crate::runtime::{RealEngine, RealEngineConfig, RefModel, ServeRequest, TokenModel};
-use crate::util::Json;
+use crate::util::{Json, Rng};
 
 /// A queued inference job plus its reply channel.
 struct Job {
@@ -68,6 +77,16 @@ struct WorkerLoad {
 /// Rough per-token service time of the CPU executors — only used to put
 /// queued tokens and observed TTFT on one axis for slo-aware picks.
 const SERVE_TOKEN_S: f64 = 1e-3;
+
+/// How long the front-end waits for a worker to answer one job before
+/// fencing it as hung. Generous: covers a full micro-batch on the CPU
+/// executors, so only a genuinely wedged engine trips it.
+const REPLY_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// Base delay of the jittered exponential backoff between failover
+/// attempts: doubles each attempt, scaled by a deterministic jitter in
+/// [0.5, 1.0) so retrying clients spread out instead of thundering.
+const BACKOFF_BASE_S: f64 = 5e-3;
 
 /// Pick a live worker for a job of `tokens` under `policy`; None when
 /// every worker is dead. `rr` is the round-robin cursor value for this
@@ -119,6 +138,8 @@ struct Frontend {
     rr: AtomicUsize,
     loads: Mutex<Vec<WorkerLoad>>,
     txs: Vec<Mutex<mpsc::Sender<Job>>>,
+    /// Per-job reply deadline; missing it fences the worker as hung.
+    reply_timeout: Duration,
 }
 
 impl Frontend {
@@ -128,13 +149,28 @@ impl Frontend {
             rr: AtomicUsize::new(0),
             loads: Mutex::new(vec![WorkerLoad::default(); txs.len()]),
             txs: txs.into_iter().map(Mutex::new).collect(),
+            reply_timeout: REPLY_TIMEOUT,
         }
     }
 
-    /// Route and enqueue one job; false only when every worker is gone.
-    /// A send failure marks that worker dead and retries the others, so
-    /// one crashed engine degrades capacity instead of killing clients.
-    fn dispatch(&self, req: ServeRequest, reply: mpsc::Sender<String>) -> bool {
+    #[cfg(test)]
+    fn with_reply_timeout(mut self, d: Duration) -> Self {
+        self.reply_timeout = d;
+        self
+    }
+
+    /// Fence a worker out of routing (crashed or hung). Its in-flight
+    /// ledger shares are frozen but ignored from here on; `saturating_sub`
+    /// keeps any late `job_done` from a merely-slow worker harmless.
+    fn fence(&self, worker: usize) {
+        self.loads.lock().expect("load ledger poisoned")[worker].dead = true;
+    }
+
+    /// Route and enqueue one job, returning the worker it landed on;
+    /// `None` only when every worker is gone. A send failure marks that
+    /// worker dead and retries the others, so one crashed engine degrades
+    /// capacity instead of killing clients.
+    fn dispatch(&self, req: ServeRequest, reply: mpsc::Sender<String>) -> Option<usize> {
         let tokens = req.prompt.len() + req.max_new_tokens;
         let mut job = Job { req, reply };
         for _ in 0..self.txs.len() {
@@ -142,7 +178,7 @@ impl Frontend {
                 let mut loads = self.loads.lock().expect("load ledger poisoned");
                 let rr = self.rr.fetch_add(1, Ordering::Relaxed);
                 let Some(w) = pick_worker(self.policy, &loads, rr) else {
-                    return false; // every worker is dead
+                    return None; // every worker is dead
                 };
                 loads[w].queued_jobs += 1;
                 loads[w].queued_tokens += tokens;
@@ -153,7 +189,7 @@ impl Frontend {
                 guard.send(job)
             };
             match result {
-                Ok(()) => return true,
+                Ok(()) => return Some(w),
                 Err(mpsc::SendError(unsent)) => {
                     // recover the job, roll the ledger share back, and
                     // fence the dead worker off before retrying
@@ -165,7 +201,38 @@ impl Frontend {
                 }
             }
         }
-        false
+        None
+    }
+
+    /// Serve one request end to end: dispatch, wait (bounded) for the
+    /// reply, and on a hung or dead worker fence it and fail the job over
+    /// — with jittered exponential backoff between attempts — until a
+    /// reply arrives or every worker has been tried. Always returns
+    /// exactly one response line per request (a JSON error when the fleet
+    /// is gone), so request ids are conserved at the client no matter
+    /// which workers die.
+    fn call(&self, req: ServeRequest, rng: &mut Rng) -> String {
+        let id = req.id;
+        for attempt in 0..self.txs.len() {
+            if attempt > 0 {
+                let base = BACKOFF_BASE_S * (1u64 << (attempt - 1).min(10)) as f64;
+                std::thread::sleep(Duration::from_secs_f64(base * (0.5 + 0.5 * rng.f64())));
+            }
+            let (rtx, rrx) = mpsc::channel();
+            let Some(w) = self.dispatch(req.clone(), rtx) else { break };
+            match rrx.recv_timeout(self.reply_timeout) {
+                Ok(line) => return line,
+                // timeout: the worker is hung on this job (or wedged
+                // behind one). Fence it; if it ever answers, the reply
+                // lands in this dropped channel and the ledger update is
+                // ignored (dead workers are never routed to again).
+                // Disconnected: the worker thread died mid-batch and
+                // dropped our reply sender. Same treatment.
+                Err(mpsc::RecvTimeoutError::Timeout)
+                | Err(mpsc::RecvTimeoutError::Disconnected) => self.fence(w),
+            }
+        }
+        render_error(Some(id), "no live engine workers")
     }
 
     /// A worker finished (or rejected) a job: release its ledger share
@@ -289,11 +356,10 @@ fn handle_conn(stream: TcpStream, front: Arc<Frontend>) {
         }
         let reply = match parse_request(&line) {
             Ok(req) => {
-                let (rtx, rrx) = mpsc::channel();
-                if !front.dispatch(req, rtx) {
-                    break;
-                }
-                rrx.recv().unwrap_or_else(|_| render_error(None, "engine gone"))
+                // per-request deterministic jitter seed: replays of the
+                // same request sequence back off identically
+                let mut rng = Rng::new(0xBACC0FF ^ req.id as u64);
+                front.call(req, &mut rng)
             }
             Err(e) => render_error(None, &format!("{e:#}")),
         };
@@ -424,13 +490,13 @@ mod tests {
         let req =
             ServeRequest { id: 1, prompt: vec![1, 2, 3], max_new_tokens: 5, arrival_s: 0.0 };
         let (rtx, _rrx) = mpsc::channel();
-        assert!(front.dispatch(req.clone(), rtx));
+        assert_eq!(front.dispatch(req.clone(), rtx), Some(0));
         // 8 tokens landed on worker 0 (kv-pressure tie -> lowest index)
         assert_eq!(front.loads.lock().unwrap()[0].queued_tokens, 8);
         assert_eq!(front.loads.lock().unwrap()[0].queued_jobs, 1);
         // the next kv-pressure dispatch avoids the loaded worker
         let (rtx, _rrx) = mpsc::channel();
-        assert!(front.dispatch(req, rtx));
+        assert_eq!(front.dispatch(req, rtx), Some(1));
         assert_eq!(front.loads.lock().unwrap()[1].queued_tokens, 8);
         // completion releases the ledger share and records the TTFT EWMA
         front.job_done(0, 8, Some(0.5));
@@ -439,6 +505,103 @@ mod tests {
         assert_eq!(l.queued_tokens, 0);
         assert_eq!(l.ewma_ttft_s, Some(0.5));
         drop((rx0, rx1));
+    }
+
+    /// One live RefModel engine worker on its own thread (engines are not
+    /// Send, so it is built inside the thread, like `serve` does).
+    fn spawn_live_worker(
+        rx: mpsc::Receiver<Job>,
+        front: Arc<Frontend>,
+        worker: usize,
+    ) -> std::thread::JoinHandle<()> {
+        std::thread::spawn(move || {
+            let engine =
+                RealEngine::with_model(Rc::new(RefModel::new()), RealEngineConfig::default());
+            engine_worker(engine, rx, front, worker);
+        })
+    }
+
+    fn call_ids(front: &Arc<Frontend>, ids: &[usize]) -> Vec<String> {
+        ids.iter()
+            .map(|&id| {
+                let req = ServeRequest {
+                    id,
+                    prompt: vec![1, 2, 3],
+                    max_new_tokens: 4,
+                    arrival_s: 0.0,
+                };
+                front.call(req, &mut Rng::new(id as u64))
+            })
+            .collect()
+    }
+
+    #[test]
+    fn dead_worker_is_fenced_and_every_request_id_answered() {
+        let (tx0, rx0) = mpsc::channel::<Job>();
+        let (tx1, rx1) = mpsc::channel::<Job>();
+        // worker 0 "crashed before boot": its queue receiver is dropped
+        drop(rx0);
+        let front = Arc::new(Frontend::new(RouterPolicy::RoundRobin, vec![tx0, tx1]));
+        let live = spawn_live_worker(rx1, Arc::clone(&front), 1);
+        let ids: Vec<usize> = (100..108).collect();
+        let replies = call_ids(&front, &ids);
+        // conservation: exactly one successful reply per id, in order
+        for (line, &id) in replies.iter().zip(&ids) {
+            let j = Json::parse(line).unwrap();
+            assert!(j.get("error").is_none(), "unexpected error: {line}");
+            assert_eq!(j.req("id").unwrap().as_usize(), Some(id));
+        }
+        assert!(front.loads.lock().unwrap()[0].dead, "send failure fences worker 0");
+        assert!(!front.loads.lock().unwrap()[1].dead);
+        // the worker thread holds its own Arc<Frontend> (and thus its own
+        // queue sender), so it parks in recv until the process exits —
+        // same lifecycle as `serve`'s workers. Don't join it.
+        drop(live);
+    }
+
+    #[test]
+    fn hung_worker_times_out_fences_and_fails_over() {
+        let (tx0, rx0) = mpsc::channel::<Job>();
+        let (tx1, rx1) = mpsc::channel::<Job>();
+        let front = Arc::new(
+            Frontend::new(RouterPolicy::RoundRobin, vec![tx0, tx1])
+                .with_reply_timeout(Duration::from_millis(50)),
+        );
+        // worker 0 hangs: accepts jobs forever, never replies
+        let hung = std::thread::spawn(move || {
+            let mut parked = Vec::new();
+            while let Ok(j) = rx0.recv() {
+                parked.push(j); // keep reply senders alive: a true hang,
+                                // not a disconnect
+            }
+        });
+        let live = spawn_live_worker(rx1, Arc::clone(&front), 1);
+        let ids: Vec<usize> = (7..13).collect();
+        let replies = call_ids(&front, &ids);
+        for (line, &id) in replies.iter().zip(&ids) {
+            let j = Json::parse(line).unwrap();
+            assert!(j.get("error").is_none(), "unexpected error: {line}");
+            assert_eq!(j.req("id").unwrap().as_usize(), Some(id));
+        }
+        assert!(front.loads.lock().unwrap()[0].dead, "timeout fences the hung worker");
+        // only the first request paid the timeout: the fence keeps every
+        // later round-robin pick off the dead worker. Worker threads park
+        // in recv (they hold their own Arc<Frontend>); don't join.
+        drop((live, hung));
+    }
+
+    #[test]
+    fn all_workers_dead_yields_explicit_error_per_request() {
+        let (tx0, rx0) = mpsc::channel::<Job>();
+        drop(rx0);
+        let front = Arc::new(Frontend::new(RouterPolicy::SloAware, vec![tx0]));
+        let req =
+            ServeRequest { id: 41, prompt: vec![5], max_new_tokens: 2, arrival_s: 0.0 };
+        let line = front.call(req, &mut Rng::new(1));
+        let j = Json::parse(&line).unwrap();
+        // the id still comes back: the client can account for the request
+        assert_eq!(j.req("id").unwrap().as_usize(), Some(41));
+        assert!(j.req("error").unwrap().as_str().is_some());
     }
 
     #[test]

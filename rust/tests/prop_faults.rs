@@ -1,0 +1,281 @@
+//! Fault-injection invariants (randomized, seeded, replayable via
+//! LAYERKV_PROP_SEED / LAYERKV_PROP_CASES — see util::prop):
+//!
+//! * empty-plan identity — `Cluster::with_faults(FaultPlan::default())`
+//!   is **bit-identical** to a cluster built without faults, under every
+//!   router, with decode fast-forwarding both on and off. The fault layer
+//!   must cost exactly nothing when nothing is injected.
+//! * conservation under arbitrary plans — for generated fault schedules
+//!   (crashes incl. permanent ones, stragglers, I/O bursts), completions
+//!   + rejections + retry-exhausted failures partition the trace's id
+//!   space: no request is lost or answered twice, no matter which
+//!   replicas die when.
+//! * same-seed determinism — the same (trace, plan) pair replays
+//!   byte-identically: records, makespan bits, fault summary, and the
+//!   rendered fault-event log.
+//! * drain exports — `Engine::drain` exports every unfinished request
+//!   exactly once with its original lengths, closes admission, and
+//!   leaves completed records intact.
+//! * disk-fence degraded mode — an engine whose disk tier always errors
+//!   fences it after `DISK_FENCE_K` consecutive failures and still
+//!   conserves the trace as a two-tier machine.
+
+use layerkv::cluster::{Cluster, ClusterConfig, FaultPlan, RouterPolicy};
+use layerkv::config::{DiskSpec, Policy, ServingConfig};
+use layerkv::coordinator::{Engine, LengthPredictor, CLOCK_EPS, DISK_FENCE_K};
+use layerkv::util::prop::prop;
+use layerkv::util::Rng;
+use layerkv::workload::arrivals::Arrivals;
+use layerkv::workload::fixed::FixedWorkload;
+use layerkv::workload::sharegpt::ShareGptWorkload;
+use layerkv::workload::Trace;
+
+fn random_policy(rng: &mut Rng) -> Policy {
+    match rng.range(0, 3) {
+        0 => Policy::Vllm,
+        1 => Policy::LayerKv { slo_aware: true },
+        _ => Policy::LayerKv { slo_aware: false },
+    }
+}
+
+fn random_trace(rng: &mut Rng, n: usize) -> Trace {
+    let rate = rng.f64() * 4.0 + 0.5;
+    let arrivals = if rng.chance(0.4) {
+        Arrivals::bursty(rate, rng.f64() * 2.0 + 1.5)
+    } else {
+        Arrivals::Poisson { rate }
+    };
+    if rng.chance(0.5) {
+        let mut w = ShareGptWorkload::paper(rate, n);
+        w.arrivals = arrivals;
+        w.generate(rng)
+    } else {
+        FixedWorkload {
+            prompt_len: rng.range_usize(16, 4096),
+            output_len: rng.range_usize(4, 128),
+            n_requests: n,
+            arrivals,
+        }
+        .generate(rng)
+    }
+}
+
+/// The merged ids + drops + failures must be a permutation of `0..n`.
+fn assert_conserved(out: &layerkv::cluster::ClusterReport, n: usize, label: &str) {
+    assert_eq!(out.accounted(), n, "{label}: accounting mismatch");
+    let mut ids: Vec<usize> = out.merged.records.iter().map(|r| r.id).collect();
+    ids.extend(out.dropped.iter().copied());
+    ids.extend(out.failed.iter().copied());
+    ids.sort_unstable();
+    assert_eq!(
+        ids,
+        (0..n).collect::<Vec<_>>(),
+        "{label}: completions + drops + failures must partition the trace"
+    );
+}
+
+#[test]
+fn prop_empty_fault_plan_is_bit_identical_to_no_plan() {
+    prop(6, |rng| {
+        let n = rng.range_usize(6, 28);
+        let k = rng.range_usize(1, 5);
+        let trace = random_trace(rng, n);
+        let cfg = ServingConfig::llama2_7b_tp1().with_policy(random_policy(rng));
+        for router in RouterPolicy::ALL {
+            for macro_steps in [true, false] {
+                let mut plain = Cluster::new(&ClusterConfig::homogeneous(&cfg, k, *router));
+                plain.set_macro_steps(macro_steps);
+                let a = plain.run(&trace).expect("sim cluster never fails");
+                let mut faulted = Cluster::new(&ClusterConfig::homogeneous(&cfg, k, *router))
+                    .with_faults(FaultPlan::default());
+                faulted.set_macro_steps(macro_steps);
+                let b = faulted.run(&trace).expect("sim cluster never fails");
+                let label =
+                    format!("router {} k={k} macro={macro_steps}", router.name());
+                assert_eq!(a.merged.records, b.merged.records, "{label}: records");
+                assert_eq!(
+                    a.merged.makespan.to_bits(),
+                    b.merged.makespan.to_bits(),
+                    "{label}: makespan bits"
+                );
+                assert_eq!(a.dropped, b.dropped, "{label}: drops");
+                assert!(b.failed.is_empty(), "{label}: empty plan can fail nothing");
+                assert!(faulted.fault_log().is_empty(), "{label}: no events fire");
+                for (pa, pb) in a.per_replica.iter().zip(&b.per_replica) {
+                    assert_eq!(pa.routed, pb.routed, "{label}: routing diverged");
+                    assert_eq!(&pa.stats, &pb.stats, "{label}: engine stats diverged");
+                }
+                let f = b.faults.expect("plan attached");
+                assert_eq!(f.crashes + f.recoveries + f.straggler_windows + f.io_bursts, 0);
+                assert_eq!(f.retries, 0);
+                assert_eq!(f.downtime_s, 0.0);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_generated_fault_plans_preserve_conservation() {
+    prop(8, |rng| {
+        let n = rng.range_usize(10, 36);
+        let k = rng.range_usize(2, 5);
+        let router = RouterPolicy::ALL[rng.range_usize(0, RouterPolicy::ALL.len())];
+        let trace = random_trace(rng, n);
+        let horizon = trace
+            .requests
+            .last()
+            .map(|r| r.arrival)
+            .unwrap_or(0.0)
+            .max(1.0);
+        // a horizon slightly past the last arrival also lands events in
+        // the drain phase
+        let plan = FaultPlan::generate(rng.range(0, 1 << 30) as u64, k, horizon * 1.3);
+        let cfg = ServingConfig::llama2_7b_tp1().with_policy(random_policy(rng));
+        let mut cluster =
+            Cluster::new(&ClusterConfig::homogeneous(&cfg, k, router)).with_faults(plan.clone());
+        let out = cluster.run(&trace).expect("faulted sim cluster never errors");
+        let label = format!("router {} k={k} plan={plan:?}", router.name());
+        assert_conserved(&out, n, &label);
+        let f = out.faults.as_ref().expect("plan attached");
+        assert_eq!(f.failed, out.failed.len(), "{label}: summary/report failed mismatch");
+        assert!(
+            f.crashes >= f.recoveries,
+            "{label}: cannot recover more often than crashing"
+        );
+        // every fired event came from the compiled schedule, in order
+        let fired = cluster.fault_log();
+        let schedule = plan.events();
+        assert!(fired.len() <= schedule.len(), "{label}: phantom events");
+        assert_eq!(
+            fired,
+            &schedule[..fired.len()],
+            "{label}: events must fire in schedule order"
+        );
+    });
+}
+
+#[test]
+fn prop_same_seed_fault_runs_are_byte_identical() {
+    prop(6, |rng| {
+        let n = rng.range_usize(8, 30);
+        let k = rng.range_usize(2, 4);
+        let router = RouterPolicy::ALL[rng.range_usize(0, RouterPolicy::ALL.len())];
+        let trace = random_trace(rng, n);
+        let horizon = trace
+            .requests
+            .last()
+            .map(|r| r.arrival)
+            .unwrap_or(0.0)
+            .max(1.0);
+        let plan = FaultPlan::generate(rng.range(0, 1 << 30) as u64, k, horizon);
+        let cfg = ServingConfig::llama2_7b_tp1().with_policy(random_policy(rng));
+        let run = |plan: FaultPlan| {
+            let mut cluster = Cluster::new(&ClusterConfig::homogeneous(&cfg, k, router))
+                .with_faults(plan);
+            let out = cluster.run(&trace).expect("faulted sim cluster never errors");
+            let log: Vec<String> =
+                cluster.fault_log().iter().map(|e| e.render()).collect();
+            (out, log)
+        };
+        let (a, log_a) = run(plan.clone());
+        let (b, log_b) = run(plan);
+        assert_eq!(a.merged.records, b.merged.records, "records must replay");
+        assert_eq!(a.merged.makespan.to_bits(), b.merged.makespan.to_bits());
+        assert_eq!(a.dropped, b.dropped);
+        assert_eq!(a.failed, b.failed);
+        assert_eq!(a.faults, b.faults, "fault summary must replay");
+        assert_eq!(log_a, log_b, "fault-event log must replay byte-identically");
+    });
+}
+
+#[test]
+fn prop_drain_exports_every_unfinished_request_exactly_once() {
+    prop(8, |rng| {
+        let n = rng.range_usize(5, 24);
+        let trace = random_trace(rng, n);
+        let cfg = ServingConfig::llama2_7b_tp1().with_policy(random_policy(rng));
+        let mut engine = Engine::new(cfg, LengthPredictor::new(2, 0.8, 42));
+        // submit a random prefix at its arrivals, advancing in between so
+        // some requests complete, some run, some still queue
+        let cut = rng.range_usize(1, n + 1);
+        for tr in trace.requests.iter().take(cut) {
+            while tr.arrival > engine.now() + CLOCK_EPS {
+                if !engine.step_once_until(false, tr.arrival).expect("sim engine") {
+                    break;
+                }
+            }
+            if tr.arrival > engine.now() + CLOCK_EPS {
+                engine.wait_until(tr.arrival);
+            }
+            engine.submit(tr, (tr.prompt_len, tr.output_len));
+        }
+        let completed_before = engine.records().len();
+        let drained = engine.drain();
+        assert!(!engine.has_work(), "drain leaves no queued or running work");
+        assert!(!engine.admission_open(), "drain closes admission");
+        assert_eq!(engine.records().len(), completed_before, "drain forges no records");
+        // exported ids + completed ids + rejected ids partition the
+        // submitted prefix, and exports carry their ORIGINAL lengths
+        let mut ids: Vec<usize> = drained.iter().map(|d| d.id).collect();
+        ids.extend(engine.records().iter().map(|r| r.id));
+        ids.extend(engine.stats().dropped.iter().copied());
+        ids.sort_unstable();
+        assert_eq!(ids, (0..cut).collect::<Vec<_>>());
+        for d in &drained {
+            let tr = &trace.requests[d.id];
+            assert_eq!(d.prompt_len, tr.prompt_len, "original prompt length");
+            assert_eq!(d.output_len, tr.output_len, "original output length");
+            assert_eq!(d.arrival, tr.arrival, "original arrival");
+        }
+        // a second drain has nothing left to export
+        assert!(engine.drain().is_empty());
+        // reopen: the engine serves again
+        engine.reopen_admission();
+        assert!(engine.admission_open());
+    });
+}
+
+/// Deterministic: a disk tier that always errors is fenced after
+/// `DISK_FENCE_K` consecutive failures, and the engine finishes the trace
+/// as a two-tier + recompute machine with every request accounted.
+#[test]
+fn faulty_disk_tier_fences_and_degrades_to_two_tier() {
+    let mut cfg = ServingConfig::llama2_7b_tp1()
+        .with_policy(Policy::LayerKv { slo_aware: true });
+    // starve the host pool so the disk tier sees real traffic
+    cfg.cpu_swap_bytes = 1 << 30;
+    cfg.node.disk = DiskSpec::nvme(64 * (1u64 << 30));
+    let trace = FixedWorkload {
+        prompt_len: 4096,
+        output_len: 64,
+        n_requests: 24,
+        arrivals: Arrivals::Poisson { rate: 1.0 },
+    }
+    .generate(&mut Rng::new(23));
+    let mut engine = Engine::new(cfg, LengthPredictor::new(2, 0.8, 42));
+    engine.set_disk_faulty(true);
+    let report = engine.try_run(&trace).expect("degraded engine still serves");
+    let stats = engine.stats();
+    assert!(
+        stats.disk_io_errors >= DISK_FENCE_K as u64,
+        "the starved-host workload must actually hit the disk tier \
+         (got {} errors)",
+        stats.disk_io_errors
+    );
+    assert!(engine.disk_fenced(), "K consecutive errors fence the tier");
+    assert_eq!(
+        report.records.len() + stats.dropped.len(),
+        24,
+        "degraded mode still conserves the trace"
+    );
+    // healthy control: same config and trace, no injected faults
+    let mut cfg2 = ServingConfig::llama2_7b_tp1()
+        .with_policy(Policy::LayerKv { slo_aware: true });
+    cfg2.cpu_swap_bytes = 1 << 30;
+    cfg2.node.disk = DiskSpec::nvme(64 * (1u64 << 30));
+    let mut healthy = Engine::new(cfg2, LengthPredictor::new(2, 0.8, 42));
+    let h = healthy.try_run(&trace).expect("sim engine");
+    assert!(!healthy.disk_fenced());
+    assert_eq!(healthy.stats().disk_io_errors, 0);
+    assert_eq!(h.records.len() + healthy.stats().dropped.len(), 24);
+}
