@@ -336,6 +336,92 @@ fn main() {
         }
     }
 
+    // --- cluster event heap vs lockstep ---------------------------------
+    // The same fleet trace on both drives: the heap pops only the
+    // replicas whose horizons land (O(total events)); lockstep touches
+    // every replica at every arrival. Bit-identical results — the prop
+    // suite pins them — so the gap is pure drive overhead.
+    {
+        use layerkv::cluster::{Cluster, ClusterConfig, RouterPolicy};
+        let trace = FixedWorkload {
+            prompt_len: 1024,
+            output_len: 384,
+            n_requests: 96,
+            arrivals: Arrivals::bursty(12.0, 3.0),
+        }
+        .generate(&mut Rng::new(37));
+        let cfg = ServingConfig::llama2_7b_tp1()
+            .with_policy(Policy::LayerKv { slo_aware: true });
+        for (name, lockstep) in [
+            ("cluster/heap_pop_heap", false),
+            ("cluster/heap_pop_lockstep", true),
+        ] {
+            let ccfg = ClusterConfig::homogeneous(&cfg, 8, RouterPolicy::KvPressure);
+            let trace = &trace;
+            bench(name, 3.0, || {
+                let mut c = Cluster::new(&ccfg);
+                c.set_lockstep(lockstep);
+                black_box(c.run(trace).expect("sim cluster run"));
+            });
+        }
+        // context for the series: the advance gap behind the time gap
+        let ccfg = ClusterConfig::homogeneous(&cfg, 8, RouterPolicy::KvPressure);
+        let mut heap = Cluster::new(&ccfg);
+        let _ = heap.run(&trace).expect("sim cluster run");
+        let mut lock = Cluster::new(&ccfg);
+        lock.set_lockstep(true);
+        let _ = lock.run(&trace).expect("sim cluster run");
+        println!(
+            "event heap: {} replica advances vs {} lockstep = {:.1}x fewer",
+            heap.advances(),
+            lock.advances(),
+            lock.advances() as f64 / heap.advances().max(1) as f64,
+        );
+    }
+
+    // --- engine horizon query -------------------------------------------
+    // The heap's arming call on a stable all-decoding engine. Stable:
+    // span already cached, the query reads span_end (O(1)). Replan: an
+    // invalidation (the no-op slowdown write) forces every query through
+    // the horizon solver — the cost a submit/fault pays to re-arm.
+    {
+        let cfg = ServingConfig::llama2_7b_tp1()
+            .with_policy(Policy::LayerKv { slo_aware: true });
+        let trace = FixedWorkload {
+            prompt_len: 512,
+            output_len: 256,
+            n_requests: 8,
+            arrivals: Arrivals::Burst,
+        }
+        .generate(&mut Rng::new(41));
+        let p = LengthPredictor::new(256, 0.8, 42);
+        let mut e = Engine::new(cfg, LengthPredictor::new(256, 0.8, 42));
+        for tr in &trace.requests {
+            e.submit(tr, p.predict(tr.id, tr.output_len));
+        }
+        // step into the stable all-decoding regime the span cache covers
+        let mut guard = 0;
+        loop {
+            let h = e.next_event_horizon();
+            if h.is_finite() && h > e.now() {
+                break; // span planned and cached
+            }
+            guard += 1;
+            assert!(guard < 10_000, "bench fixture never reached a stable span");
+            assert!(
+                e.step_once(true).expect("sim engine"),
+                "bench fixture engine blocked before a span formed"
+            );
+        }
+        bench("cluster/horizon_query_stable", 2.0, || {
+            black_box(e.next_event_horizon());
+        });
+        bench("cluster/horizon_query_replan", 2.0, || {
+            e.set_slowdown(1.0);
+            black_box(e.next_event_horizon());
+        });
+    }
+
     // --- predictor ------------------------------------------------------
     let p = LengthPredictor::new(2048, 0.8, 1);
     bench("predictor/predict", 1.0, || {

@@ -1,9 +1,11 @@
 //! Deterministic fault injection for cluster runs: a [`FaultPlan`] is a
 //! virtual-time schedule of replica crash/recover windows, straggler
 //! slowdown windows, and disk-tier I/O error bursts. The cluster compiles
-//! it to a time-sorted [`FaultEvent`] stream and applies each event in
-//! lockstep with the trace's arrivals, so a (plan, trace, seed) triple
-//! replays byte-identically — crashes included.
+//! it to a time-sorted [`FaultEvent`] stream and interleaves it with the
+//! trace's arrivals — merged into the cluster-wide event heap on the
+//! default drive, scanned per arrival on the lockstep oracle; both apply
+//! the stream in the identical compiled order, so a (plan, trace, seed)
+//! triple replays byte-identically — crashes included.
 //!
 //! The empty plan is the load-bearing special case: `Cluster::with_faults`
 //! on `FaultPlan::default()` must be **bit-identical** to a cluster built

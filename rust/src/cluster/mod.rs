@@ -11,20 +11,34 @@
 //!
 //! [`Cluster<B>`] owns N [`Engine<B>`] replicas — homogeneous or
 //! heterogeneous [`ServingConfig`]s, each with its own GPU/host/disk
-//! hierarchy — and steps them in virtual-time lockstep: every replica is
-//! advanced to each request's arrival instant before the router sees the
-//! views, so routing decisions observe exactly the state a front-end
-//! would at that moment. Replicas never interact below the router
-//! (separate pools, separate clocks), which is what makes the lockstep
-//! exact: stepping order between replicas cannot change any replica's
-//! outcome.
+//! hierarchy — behind one **cluster-wide event heap**: arrivals, compiled
+//! [`FaultEvent`]s, and per-replica *horizon events* (the instant a
+//! replica's cached decode span lands, `Engine::next_event_horizon`) all
+//! merge into a single time-ordered binary heap, and the run loop pops
+//! the globally earliest one, advancing **only** the replica(s) that
+//! event involves. Replica entries use lazy invalidation — a per-replica
+//! stamp kills superseded entries on pop instead of deleting from the
+//! heap — so a routing decision that perturbs one replica never forces a
+//! fleet-wide re-solve. Idle and mid-span replicas are never stepped
+//! between their own events: fleet cost is O(total events), not
+//! O(replicas x arrivals).
 //!
-//! The per-replica drive uses the engine's incremental API
-//! (`submit`/`step_once`), which mirrors `Engine::try_run` line for
-//! line — a 1-replica cluster is **bit-identical** to a bare
-//! `Engine<SimBackend>` run on the same trace, under every router
-//! (`tests/prop_cluster.rs`, and the acceptance gate in CI's prop-deep
-//! job).
+//! Routing semantics are unchanged: every live replica is advanced to
+//! each routing instant (through the engine's span cache, without
+//! scheduler invocations) before the router sees the views, so decisions
+//! observe exactly the state a front-end would at that moment. Replicas
+//! never interact below the router (separate pools, separate clocks),
+//! which is what makes per-event advancement exact: stepping order
+//! between replicas cannot change any replica's outcome.
+//!
+//! The PR-6 virtual-time lockstep drive is kept verbatim as the oracle
+//! (`Cluster::set_lockstep` / `LAYERKV_LOCKSTEP=1` / `sim --lockstep`):
+//! the heap drive is property-tested **bit-identical** to it — records,
+//! drops, fault logs, pool state, rendered reports — across routers x
+//! macro-stepping x generated fault plans (`tests/prop_cluster_heap.rs`),
+//! and a 1-replica cluster stays bit-identical to a bare
+//! `Engine<SimBackend>` run on the same trace (`tests/prop_cluster.rs`,
+//! both in CI's prop-deep job).
 //!
 //! In a real deployment each replica is one serving process (one GPU or
 //! TP group), and the router is the front-end: `serve --replicas N
@@ -44,7 +58,8 @@ pub use router::{
 };
 
 use std::cell::RefCell;
-use std::collections::HashMap;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
 use std::rc::Rc;
 
 use crate::config::ServingConfig;
@@ -92,6 +107,85 @@ pub struct Cluster<B: ExecutionBackend = SimBackend> {
     /// Fault-injection state; `None` (the default) takes the exact
     /// pre-fault code path — no health checks, no event stream.
     faults: Option<FaultRun>,
+    /// Drive mode: `true` replays the PR-6 virtual-time lockstep (the
+    /// bit-identity oracle), `false` (default) runs the event-heap core.
+    lockstep: bool,
+    /// Scheduler-bearing engine steps the cluster drive has issued —
+    /// `step_once_until` calls and heap-forced decides; span-cache chunk
+    /// commits count zero. The O(total events) claim is pinned on this
+    /// counter (`tests/prop_cluster_heap.rs` asserts the heap drive takes
+    /// >=5x fewer than lockstep on a bursty 32-replica trace).
+    advances: u64,
+}
+
+/// Fleet-wide drive-mode default: `LAYERKV_LOCKSTEP=1` forces every
+/// cluster onto the lockstep oracle (mirrors `LAYERKV_MACRO=0`).
+fn lockstep_default() -> bool {
+    std::env::var("LAYERKV_LOCKSTEP").map(|v| v == "1").unwrap_or(false)
+}
+
+/// One entry in the cluster-wide event heap, min-ordered by time with a
+/// deterministic tie chain: replica horizon events fire before fault
+/// events fire before arrivals at the same instant (a replica is always
+/// caught up before an external event observes it; a crash at an arrival
+/// instant fences the replica before the router can pick it, exactly the
+/// lockstep order), and same-kind ties fire in stream/index order.
+#[derive(Debug, Clone, Copy)]
+struct HeapEvent {
+    t: f64,
+    rank: u8,
+    /// Replica index (RANK_REPLICA), compiled fault-stream index
+    /// (RANK_FAULT), or trace index (RANK_ARRIVAL).
+    idx: usize,
+    /// Lazy invalidation for replica entries: stale when it no longer
+    /// matches the replica's current stamp. Always 0 for external events.
+    stamp: u64,
+}
+
+const RANK_REPLICA: u8 = 0;
+const RANK_FAULT: u8 = 1;
+const RANK_ARRIVAL: u8 = 2;
+
+impl Ord for HeapEvent {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.t
+            .total_cmp(&other.t)
+            .then(self.rank.cmp(&other.rank))
+            .then(self.idx.cmp(&other.idx))
+            .then(self.stamp.cmp(&other.stamp))
+    }
+}
+
+impl PartialOrd for HeapEvent {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl PartialEq for HeapEvent {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+
+impl Eq for HeapEvent {}
+
+/// Lazy-invalidation bookkeeping for the per-replica heap entries: a
+/// popped replica entry is live only while its stamp matches, and
+/// `armed`/`t` remember the entry currently sitting in the heap so a
+/// refresh that finds the horizon unchanged re-pushes nothing — the heap
+/// holds at most one live entry per replica, O(live events), not
+/// O(refreshes).
+struct ArmState {
+    stamp: Vec<u64>,
+    armed: Vec<bool>,
+    t: Vec<f64>,
+}
+
+impl ArmState {
+    fn new(n: usize) -> Self {
+        ArmState { stamp: vec![0; n], armed: vec![false; n], t: vec![0.0; n] }
+    }
 }
 
 /// Live state of one fault-injected run: the compiled event stream, the
@@ -162,6 +256,8 @@ impl Cluster<SimBackend> {
             predictor_accuracy: cfg.predictor_accuracy,
             ran: false,
             faults: None,
+            lockstep: lockstep_default(),
+            advances: 0,
         }
     }
 }
@@ -180,6 +276,8 @@ impl<B: ExecutionBackend> Cluster<B> {
             predictor_accuracy,
             ran: false,
             faults: None,
+            lockstep: lockstep_default(),
+            advances: 0,
         }
     }
 
@@ -200,6 +298,8 @@ impl<B: ExecutionBackend> Cluster<B> {
             router: Box::new(HealthRouter::new(self.router, Rc::clone(&health))),
             predictor_accuracy: self.predictor_accuracy,
             ran: self.ran,
+            lockstep: self.lockstep,
+            advances: self.advances,
             faults: Some(FaultRun {
                 plan,
                 events,
@@ -247,6 +347,24 @@ impl<B: ExecutionBackend> Cluster<B> {
         }
     }
 
+    /// Force the virtual-time lockstep drive (the bit-identity oracle)
+    /// instead of the event heap. Also settable fleet-wide via
+    /// `LAYERKV_LOCKSTEP=1`, or per run with `sim --lockstep`.
+    pub fn set_lockstep(&mut self, on: bool) {
+        self.lockstep = on;
+    }
+
+    pub fn lockstep(&self) -> bool {
+        self.lockstep
+    }
+
+    /// Scheduler-bearing replica advances the drive has issued so far
+    /// (span-cache chunk commits count zero) — the O(total events) yard
+    /// stick the heap-vs-lockstep tests measure.
+    pub fn advances(&self) -> u64 {
+        self.advances
+    }
+
     /// Serve a whole trace: route every request at its arrival instant,
     /// drain all replicas, and merge the per-replica reports back into
     /// trace order. Single-shot — build a fresh `Cluster` per trace (the
@@ -258,12 +376,36 @@ impl<B: ExecutionBackend> Cluster<B> {
         );
         self.ran = true;
         let predictor = standard_predictor(trace, self.predictor_accuracy);
+        // The heap drive pops arrivals through the same time-ordered heap
+        // as everything else, so it needs them non-decreasing (lockstep
+        // processes a trace in its own order). Generators emit sorted
+        // traces; a hand-built out-of-order one takes the oracle path.
+        let sorted =
+            trace.requests.windows(2).all(|w| w[0].arrival <= w[1].arrival);
+        if self.lockstep || !sorted {
+            self.run_lockstep(trace, &predictor)?;
+        } else {
+            self.run_heap(trace, &predictor)?;
+        }
+        Ok(self.take_report())
+    }
+
+    /// The PR-6 virtual-time lockstep drive, kept verbatim as the oracle
+    /// the event-heap path is property-tested bit-identical against
+    /// (`set_lockstep` / `LAYERKV_LOCKSTEP=1`). Every live replica is
+    /// advanced at every external event — O(replicas x arrivals)
+    /// scheduler-bearing steps.
+    fn run_lockstep(
+        &mut self,
+        trace: &Trace,
+        predictor: &LengthPredictor,
+    ) -> anyhow::Result<()> {
         for tr in &trace.requests {
             // fault events scheduled before this arrival fire first (a
             // crash at the arrival instant fences the replica before the
             // router can pick it)
             if self.faults.is_some() {
-                self.fire_events_until(tr.arrival, false, &predictor)?;
+                self.fire_events_until(tr.arrival, false, predictor)?;
             }
             // lockstep: every replica catches up to this arrival before
             // the router looks at the views (CLOCK_EPS mirrors try_run's
@@ -273,16 +415,19 @@ impl<B: ExecutionBackend> Cluster<B> {
             // per decode token — the loop runs O(events) turns, not
             // O(tokens).
             let down = self.down_flags();
+            let mut adv = 0u64;
             for (i, rep) in self.replicas.iter_mut().enumerate() {
                 if down.as_ref().is_some_and(|d| d[i]) {
                     continue; // crashed: fenced until its recovery event
                 }
                 while tr.arrival > rep.engine.now() + CLOCK_EPS {
+                    adv += 1;
                     if !rep.engine.step_once_until(false, tr.arrival)? {
                         break; // idle: its clock advances at its next submit
                     }
                 }
             }
+            self.advances += adv;
             if let Some(f) = &mut self.faults {
                 let mut st = f.health.borrow_mut();
                 st.now = tr.arrival;
@@ -295,18 +440,7 @@ impl<B: ExecutionBackend> Cluster<B> {
                 }
             }
             self.pump_feedback();
-            let idx = {
-                let views: Vec<ReplicaView> =
-                    self.replicas.iter().enumerate().map(|(i, r)| r.view(i)).collect();
-                let picked = self.router.route(tr.prompt_len, &views);
-                assert!(
-                    picked < self.replicas.len(),
-                    "router {} returned out-of-range replica {picked} of {}",
-                    self.router.name(),
-                    self.replicas.len()
-                );
-                picked
-            };
+            let idx = self.route_request(tr.prompt_len);
             let rep = &mut self.replicas[idx];
             if tr.arrival > rep.engine.now() + CLOCK_EPS {
                 rep.engine.wait_until(tr.arrival);
@@ -316,20 +450,23 @@ impl<B: ExecutionBackend> Cluster<B> {
         // remaining fault events (crashes/recoveries past the last
         // arrival) fire in order while the replicas drain toward them
         if self.faults.is_some() {
-            self.fire_events_until(f64::INFINITY, true, &predictor)?;
+            self.fire_events_until(f64::INFINITY, true, predictor)?;
         }
         // drain: no more input — replicas run independently to empty
         let down = self.down_flags();
+        let mut adv = 0u64;
         for (i, rep) in self.replicas.iter_mut().enumerate() {
             if down.as_ref().is_some_and(|d| d[i]) {
                 continue;
             }
             while rep.engine.has_work() {
+                adv += 1;
                 if !rep.engine.step_once(true)? {
                     break;
                 }
             }
         }
+        self.advances += adv;
         // requests still parked (no replica ever recovered): failed
         if let Some(f) = &mut self.faults {
             for tr in std::mem::take(&mut f.parked) {
@@ -337,7 +474,270 @@ impl<B: ExecutionBackend> Cluster<B> {
             }
         }
         self.pump_feedback();
-        Ok(self.take_report())
+        Ok(())
+    }
+
+    /// The event-heap drive: pop the globally earliest event — a replica
+    /// horizon, a fault, or an arrival — and advance only the replica(s)
+    /// it involves. Bit-identity with `run_lockstep` rests on the engine
+    /// span cache (`Engine::advance_until` commits exactly the decode
+    /// iterations lockstep's deadline-bounded macro-steps would, chunked
+    /// at the same sync instants) and on every handler advancing every
+    /// replica whose state it observes to the event instant first.
+    fn run_heap(
+        &mut self,
+        trace: &Trace,
+        predictor: &LengthPredictor,
+    ) -> anyhow::Result<()> {
+        let n_arr = trace.requests.len();
+        let n_faults = self.faults.as_ref().map(|f| f.events.len()).unwrap_or(0);
+        let mut heap: BinaryHeap<Reverse<HeapEvent>> =
+            BinaryHeap::with_capacity(n_arr + n_faults + self.replicas.len());
+        for (i, tr) in trace.requests.iter().enumerate() {
+            heap.push(Reverse(HeapEvent {
+                t: tr.arrival,
+                rank: RANK_ARRIVAL,
+                idx: i,
+                stamp: 0,
+            }));
+        }
+        if let Some(f) = &self.faults {
+            for (i, ev) in f.events.iter().enumerate() {
+                heap.push(Reverse(HeapEvent { t: ev.t, rank: RANK_FAULT, idx: i, stamp: 0 }));
+            }
+        }
+        let mut arm = ArmState::new(self.replicas.len());
+        let mut next_arrival = 0usize;
+        let mut next_fault = 0usize;
+        while let Some(Reverse(ev)) = heap.pop() {
+            match ev.rank {
+                RANK_REPLICA => {
+                    if arm.stamp[ev.idx] != ev.stamp {
+                        continue; // stale: superseded by a later refresh
+                    }
+                    // consume the live entry
+                    arm.armed[ev.idx] = false;
+                    arm.stamp[ev.idx] += 1;
+                    if self.is_down(ev.idx) {
+                        continue; // crashed after arming: fenced until recovery
+                    }
+                    let draining = next_arrival >= n_arr;
+                    let cap = self.external_cap(trace, next_arrival, next_fault);
+                    // catch up to the event instant (span chunks, no
+                    // decides while stable), then take the one forced
+                    // scheduling step lockstep would take at the next
+                    // external sync — same state, same deadline
+                    let (decides, progressed) = self.replicas[ev.idx]
+                        .engine
+                        .service_horizon_event(ev.t, cap, draining)?;
+                    self.advances += decides;
+                    // a blocked replica (`progressed == false`) is not
+                    // re-armed — it cannot change state without new input,
+                    // and every external handler below refreshes it
+                    if progressed {
+                        self.refresh_horizon(ev.idx, cap, &mut heap, &mut arm);
+                    }
+                }
+                RANK_FAULT => {
+                    next_fault = ev.idx + 1;
+                    let draining = next_arrival >= n_arr;
+                    // take the fault state out so the handler can borrow
+                    // replicas and router mutably alongside it
+                    let Some(mut f) = self.faults.take() else {
+                        unreachable!("fault heap event without fault state")
+                    };
+                    let result = self.fire_heap_event(&mut f, ev.idx, draining, predictor);
+                    self.faults = Some(f);
+                    result?;
+                    let cap = self.external_cap(trace, next_arrival, next_fault);
+                    self.refresh_all(cap, &mut heap, &mut arm);
+                }
+                _ => {
+                    debug_assert_eq!(ev.rank, RANK_ARRIVAL);
+                    let tr = &trace.requests[ev.idx];
+                    next_arrival = ev.idx + 1;
+                    // every live replica catches up to the routing instant,
+                    // exactly as lockstep — but through the span cache, so
+                    // stable replicas commit pre-solved chunks and idle
+                    // ones break immediately, both without a decide
+                    let down = self.down_flags();
+                    let mut adv = 0u64;
+                    for (i, rep) in self.replicas.iter_mut().enumerate() {
+                        if down.as_ref().is_some_and(|d| d[i]) {
+                            continue;
+                        }
+                        adv += rep.engine.advance_until(tr.arrival, false)?;
+                    }
+                    self.advances += adv;
+                    let mut parked = false;
+                    if let Some(f) = &mut self.faults {
+                        let mut st = f.health.borrow_mut();
+                        st.now = tr.arrival;
+                        if !st.any_up() {
+                            drop(st);
+                            f.parked.push(tr.clone());
+                            parked = true;
+                        }
+                    }
+                    if !parked {
+                        self.pump_feedback();
+                        let idx = self.route_request(tr.prompt_len);
+                        let rep = &mut self.replicas[idx];
+                        if tr.arrival > rep.engine.now() + CLOCK_EPS {
+                            rep.engine.wait_until(tr.arrival);
+                        }
+                        rep.submit(tr, predictor.predict(tr.id, tr.output_len));
+                    }
+                    let cap = self.external_cap(trace, next_arrival, next_fault);
+                    self.refresh_all(cap, &mut heap, &mut arm);
+                }
+            }
+        }
+        // heap empty: every live replica is quiescent (a replica with work
+        // always re-arms), every arrival and fault has fired
+        if let Some(f) = &mut self.faults {
+            for tr in std::mem::take(&mut f.parked) {
+                f.failed.push(tr.id);
+            }
+        }
+        self.pump_feedback();
+        Ok(())
+    }
+
+    /// Apply the `ei`-th compiled fault event in heap mode: advance the
+    /// replica(s) whose state the handler observes to the event instant,
+    /// then apply. Crash/recover handlers route drained or parked work
+    /// through the router's views, so every live replica must be at
+    /// `ev.t`; straggler and I/O toggles observe nothing — only their
+    /// target advances (its pending step durations depend on the toggle),
+    /// the rest catch up lazily at their next event, committing the same
+    /// steps either way.
+    fn fire_heap_event(
+        &mut self,
+        f: &mut FaultRun,
+        ei: usize,
+        draining: bool,
+        predictor: &LengthPredictor,
+    ) -> anyhow::Result<()> {
+        debug_assert_eq!(f.next_event, ei, "heap must fire fault events in stream order");
+        f.next_event = ei + 1;
+        let ev = f.events[ei];
+        let mut adv = 0u64;
+        {
+            // `f` is detached from `self`, so the health borrow can be
+            // held across the replica walk
+            let health = f.health.borrow();
+            match ev.kind {
+                FaultKind::Crash | FaultKind::Recover => {
+                    for (i, rep) in self.replicas.iter_mut().enumerate() {
+                        if health.down[i] {
+                            continue;
+                        }
+                        adv += rep.engine.advance_until(ev.t, draining)?;
+                    }
+                }
+                _ => {
+                    if !health.down[ev.replica] {
+                        adv +=
+                            self.replicas[ev.replica].engine.advance_until(ev.t, draining)?;
+                    }
+                }
+            }
+        }
+        self.advances += adv;
+        f.health.borrow_mut().now = ev.t;
+        self.apply_event(f, &ev, predictor)?;
+        f.log.push(ev);
+        Ok(())
+    }
+
+    /// Was replica `i` down (crash-fenced) at the last health update?
+    fn is_down(&self, i: usize) -> bool {
+        self.faults.as_ref().is_some_and(|f| f.health.borrow().down[i])
+    }
+
+    /// The next external event instant — the earliest unprocessed arrival
+    /// or fault — bounding every replica-local advance, exactly as the
+    /// lockstep drive's per-sync deadlines do.
+    fn external_cap(&self, trace: &Trace, next_arrival: usize, next_fault: usize) -> f64 {
+        let a = trace
+            .requests
+            .get(next_arrival)
+            .map(|r| r.arrival)
+            .unwrap_or(f64::INFINITY);
+        let b = self
+            .faults
+            .as_ref()
+            .and_then(|f| f.events.get(next_fault))
+            .map(|e| e.t)
+            .unwrap_or(f64::INFINITY);
+        a.min(b)
+    }
+
+    /// Re-arm one replica's heap entry against its current horizon: bump
+    /// the stamp (lazily invalidating any stale entry) and push the new
+    /// horizon when it lands before `cap`. Horizons at or past the next
+    /// external event need no entry — that handler's refresh re-derives
+    /// them — and an entry whose horizon is unchanged is left in place.
+    fn refresh_horizon(
+        &mut self,
+        idx: usize,
+        cap: f64,
+        heap: &mut BinaryHeap<Reverse<HeapEvent>>,
+        arm: &mut ArmState,
+    ) {
+        let h = self.replicas[idx].horizon();
+        if arm.armed[idx] && arm.t[idx].to_bits() == h.to_bits() {
+            return; // the live entry is already exact
+        }
+        arm.stamp[idx] += 1;
+        arm.armed[idx] = false;
+        if h < cap {
+            heap.push(Reverse(HeapEvent {
+                t: h,
+                rank: RANK_REPLICA,
+                idx,
+                stamp: arm.stamp[idx],
+            }));
+            arm.armed[idx] = true;
+            arm.t[idx] = h;
+        }
+    }
+
+    /// Refresh every live replica's heap entry against a new external cap.
+    /// Every external-event handler ends here: it is what guarantees a
+    /// replica whose horizon sat past the *previous* cap is re-armed once
+    /// that cap moves — without it, a replica could be stranded with work
+    /// after the last external event and never drain.
+    fn refresh_all(
+        &mut self,
+        cap: f64,
+        heap: &mut BinaryHeap<Reverse<HeapEvent>>,
+        arm: &mut ArmState,
+    ) {
+        let down = self.down_flags();
+        for i in 0..self.replicas.len() {
+            if down.as_ref().is_some_and(|d| d[i]) {
+                continue;
+            }
+            self.refresh_horizon(i, cap, heap, arm);
+        }
+    }
+
+    /// Pick a replica for a request through the router. Callers must have
+    /// advanced every live replica to the routing instant first (both
+    /// drive modes do), so the views are lockstep-fresh.
+    fn route_request(&mut self, prompt_len: usize) -> usize {
+        let views: Vec<ReplicaView> =
+            self.replicas.iter().enumerate().map(|(i, r)| r.view(i)).collect();
+        let picked = self.router.route(prompt_len, &views);
+        assert!(
+            picked < self.replicas.len(),
+            "router {} returned out-of-range replica {picked} of {}",
+            self.router.name(),
+            self.replicas.len()
+        );
+        picked
     }
 
     /// Per-replica down flags when faults are active (`None` on the
@@ -372,19 +772,29 @@ impl<B: ExecutionBackend> Cluster<B> {
         predictor: &LengthPredictor,
     ) -> anyhow::Result<()> {
         while f.next_event < f.events.len() && f.events[f.next_event].t <= horizon {
-            let ev = f.events[f.next_event].clone();
+            // fire by copy — `FaultEvent` is a three-word `Copy`; this
+            // loop used to clone the event AND the whole down-vector per
+            // event, on the hot path of every faulted arrival
+            let ev = f.events[f.next_event];
             f.next_event += 1;
-            let down = f.health.borrow().down.clone();
-            for (i, rep) in self.replicas.iter_mut().enumerate() {
-                if down[i] {
-                    continue;
-                }
-                while ev.t > rep.engine.now() + CLOCK_EPS {
-                    if !rep.engine.step_once_until(draining, ev.t)? {
-                        break;
+            let mut adv = 0u64;
+            {
+                // `f` is detached from `self` (see `fire_events_until`),
+                // so the health borrow can be held across the replica walk
+                let health = f.health.borrow();
+                for (i, rep) in self.replicas.iter_mut().enumerate() {
+                    if health.down[i] {
+                        continue;
+                    }
+                    while ev.t > rep.engine.now() + CLOCK_EPS {
+                        adv += 1;
+                        if !rep.engine.step_once_until(draining, ev.t)? {
+                            break;
+                        }
                     }
                 }
             }
+            self.advances += adv;
             f.health.borrow_mut().now = ev.t;
             self.apply_event(f, &ev, predictor)?;
             f.log.push(ev);
@@ -449,10 +859,12 @@ impl<B: ExecutionBackend> Cluster<B> {
                 }
             }
             FaultKind::StragglerStart { slowdown } => {
-                self.replicas[ev.replica].engine.backend.set_slowdown(slowdown);
+                // through the engine, not the backend: the engine's cached
+                // horizon span embeds the old factor and must die with it
+                self.replicas[ev.replica].engine.set_slowdown(slowdown);
             }
             FaultKind::StragglerEnd => {
-                self.replicas[ev.replica].engine.backend.set_slowdown(1.0);
+                self.replicas[ev.replica].engine.set_slowdown(1.0);
             }
             FaultKind::IoErrorStart => {
                 self.replicas[ev.replica].engine.set_disk_faulty(true);
@@ -478,18 +890,7 @@ impl<B: ExecutionBackend> Cluster<B> {
             return Ok(());
         }
         self.pump_feedback();
-        let idx = {
-            let views: Vec<ReplicaView> =
-                self.replicas.iter().enumerate().map(|(i, r)| r.view(i)).collect();
-            let picked = self.router.route(tr.prompt_len, &views);
-            assert!(
-                picked < self.replicas.len(),
-                "router {} returned out-of-range replica {picked} of {}",
-                self.router.name(),
-                self.replicas.len()
-            );
-            picked
-        };
+        let idx = self.route_request(tr.prompt_len);
         debug_assert!(
             !f.health.borrow().down[idx],
             "health router must fence crashed replicas"
@@ -763,6 +1164,98 @@ mod tests {
                 router.name()
             );
         }
+    }
+
+    #[test]
+    fn heap_drive_matches_lockstep_bit_for_bit() {
+        let cfg = ServingConfig::llama2_7b_tp1()
+            .with_policy(Policy::LayerKv { slo_aware: true });
+        for router in RouterPolicy::ALL {
+            let t = trace(24, 3.0);
+            let mut heap = Cluster::new(&ClusterConfig::homogeneous(&cfg, 3, *router));
+            heap.set_lockstep(false);
+            let a = heap.run(&t).unwrap();
+            let mut lock = Cluster::new(&ClusterConfig::homogeneous(&cfg, 3, *router));
+            lock.set_lockstep(true);
+            let b = lock.run(&t).unwrap();
+            assert_eq!(a.merged.records, b.merged.records, "router {}", router.name());
+            assert_eq!(a.dropped, b.dropped, "router {}", router.name());
+            assert_eq!(
+                a.merged.makespan.to_bits(),
+                b.merged.makespan.to_bits(),
+                "router {}",
+                router.name()
+            );
+            assert!(
+                heap.advances() <= lock.advances(),
+                "heap drive took {} scheduler-bearing steps, lockstep {} (router {})",
+                heap.advances(),
+                lock.advances(),
+                router.name()
+            );
+        }
+    }
+
+    #[test]
+    fn heap_drive_matches_lockstep_under_faults() {
+        let cfg = ServingConfig::llama2_7b_tp1()
+            .with_policy(Policy::LayerKv { slo_aware: true });
+        let plan = FaultPlan {
+            crashes: vec![CrashWindow { replica: 1, at: 1.0, recover_at: 2.5 }],
+            stragglers: vec![Straggler {
+                replica: 0,
+                from: 0.5,
+                until: 3.0,
+                slowdown: 4.0,
+            }],
+            io_bursts: vec![IoBurst { replica: 2, from: 0.5, until: 2.0 }],
+            probation_s: 0.5,
+            ..FaultPlan::default()
+        };
+        for router in RouterPolicy::ALL {
+            let t = trace(24, 3.0);
+            let mut heap = Cluster::new(&ClusterConfig::homogeneous(&cfg, 3, *router))
+                .with_faults(plan.clone());
+            heap.set_lockstep(false);
+            let a = heap.run(&t).unwrap();
+            let log_a: Vec<String> =
+                heap.fault_log().iter().map(|e| e.render()).collect();
+            let mut lock = Cluster::new(&ClusterConfig::homogeneous(&cfg, 3, *router))
+                .with_faults(plan.clone());
+            lock.set_lockstep(true);
+            let b = lock.run(&t).unwrap();
+            let log_b: Vec<String> =
+                lock.fault_log().iter().map(|e| e.render()).collect();
+            assert_eq!(a.merged.records, b.merged.records, "router {}", router.name());
+            assert_eq!(a.dropped, b.dropped, "router {}", router.name());
+            assert_eq!(a.failed, b.failed, "router {}", router.name());
+            assert_eq!(log_a, log_b, "router {}", router.name());
+            assert_eq!(a.faults, b.faults, "router {}", router.name());
+        }
+    }
+
+    #[test]
+    fn unsorted_trace_falls_back_to_lockstep_order() {
+        let cfg = ServingConfig::llama2_7b_tp1()
+            .with_policy(Policy::LayerKv { slo_aware: true });
+        let mut t = trace(8, 3.0);
+        t.requests.swap(2, 5); // ids keep their arrivals: now out of order
+        let mut a = Cluster::new(&ClusterConfig::homogeneous(
+            &cfg,
+            2,
+            RouterPolicy::RoundRobin,
+        ));
+        let out_a = a.run(&t).unwrap();
+        let mut b = Cluster::new(&ClusterConfig::homogeneous(
+            &cfg,
+            2,
+            RouterPolicy::RoundRobin,
+        ));
+        b.set_lockstep(true);
+        let out_b = b.run(&t).unwrap();
+        // the dispatcher must notice the disorder and take the oracle path
+        assert_eq!(out_a.merged.records, out_b.merged.records);
+        assert_eq!(a.advances(), b.advances());
     }
 
     #[test]

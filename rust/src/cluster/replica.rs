@@ -41,6 +41,15 @@ impl<B: ExecutionBackend> Replica<B> {
         local
     }
 
+    /// The earliest instant this replica's state can change without new
+    /// input — the cluster event heap's arming query. `INFINITY` when
+    /// idle; the cached decode span's landing instant when stable; `now`
+    /// when the engine needs an ordinary scheduling step to find out.
+    /// Lazily (re)solves the engine's span cache; commits nothing.
+    pub fn horizon(&mut self) -> f64 {
+        self.engine.next_event_horizon()
+    }
+
     /// The router's snapshot of this replica.
     pub fn view(&self, idx: usize) -> ReplicaView<'_> {
         ReplicaView {

@@ -89,6 +89,13 @@ impl RouterPolicy {
 /// `kv`/`cost`/`cfg` borrow the replica's live state directly (no
 /// copies; `Clone` just re-borrows, so the health wrapper can filter a
 /// candidate subset without touching the replicas).
+///
+/// **Freshness contract:** views are only ever read at routing instants,
+/// and the cluster drive — lockstep *and* event-heap — advances every
+/// live replica to that instant first, so a view always reflects the
+/// state a front-end would observe at that moment. The event heap
+/// preserves this without scheduler work: stable replicas catch up by
+/// committing pre-solved span chunks, idle ones are already exact.
 #[derive(Clone)]
 pub struct ReplicaView<'a> {
     pub idx: usize,

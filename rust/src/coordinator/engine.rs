@@ -239,6 +239,17 @@ pub struct Engine<B: ExecutionBackend = SimBackend> {
     /// loops that iterate `running` by index, where preempting in place
     /// would invalidate the iteration).
     disk_fence_pending: bool,
+    /// Cached, *uncommitted* stable decode span backing the cluster event
+    /// heap's horizon queries (`next_event_horizon`): the horizon
+    /// solver's per-step durations, solved once at an infinite deadline,
+    /// with `span_pos` of them already committed by `commit_span_until`
+    /// and `span_end` the absolute clock instant the full span lands on.
+    /// Any state perturbation invalidates it; committing a chunk replays
+    /// exactly the floats the same steps would produce one at a time.
+    span_durs: Vec<f64>,
+    span_pos: usize,
+    span_end: f64,
+    span_valid: bool,
 }
 
 impl Engine<SimBackend> {
@@ -303,6 +314,10 @@ impl<B: ExecutionBackend> Engine<B> {
             disk_faulty: false,
             disk_err_streak: 0,
             disk_fence_pending: false,
+            span_durs: Vec::new(),
+            span_pos: 0,
+            span_end: 0.0,
+            span_valid: false,
         }
     }
 
@@ -315,6 +330,7 @@ impl<B: ExecutionBackend> Engine<B> {
     /// property-tested bit-identical (`tests/prop_fastforward.rs`).
     pub fn set_macro_steps(&mut self, on: bool) {
         self.macro_steps = on;
+        self.span_valid = false;
     }
 
     /// `Scheduler::decide` calls so far. Macro-stepping's savings metric:
@@ -362,6 +378,7 @@ impl<B: ExecutionBackend> Engine<B> {
     pub fn use_recompute_oracle(&mut self) {
         self.incremental = false;
         self.macro_steps = false;
+        self.span_valid = false;
     }
 
     // --- faults & graceful drain ----------------------------------------
@@ -375,6 +392,7 @@ impl<B: ExecutionBackend> Engine<B> {
     /// sorted by local id, i.e. original submission order.
     pub fn drain(&mut self) -> Vec<DrainedRequest> {
         self.admission_open = false;
+        self.span_valid = false;
         while let Some(&rid) = self.running.first() {
             self.preempt_recompute(rid);
         }
@@ -409,6 +427,16 @@ impl<B: ExecutionBackend> Engine<B> {
     /// an I/O error. `DISK_FENCE_K` consecutive errors fence the tier.
     pub fn set_disk_faulty(&mut self, faulty: bool) {
         self.disk_faulty = faulty;
+        self.span_valid = false;
+    }
+
+    /// Set the backend's service-rate degradation factor (straggler
+    /// injection). Routed through the engine — not the backend directly —
+    /// so the cached horizon span, whose durations embed the old factor,
+    /// is invalidated with it.
+    pub fn set_slowdown(&mut self, factor: f64) {
+        self.span_valid = false;
+        self.backend.set_slowdown(factor);
     }
 
     /// Has the disk tier been fenced (retired after K consecutive errors)?
@@ -480,6 +508,7 @@ impl<B: ExecutionBackend> Engine<B> {
             .collect();
         self.agg = RunningAggregates::default();
         self.view = LoadView::default();
+        self.span_valid = false;
         let mut next_arrival = 0usize;
         // generous step bound: every token plus scheduling slack
         let max_steps = 1000 + 4 * trace.total_tokens() as u64;
@@ -616,6 +645,7 @@ impl<B: ExecutionBackend> Engine<B> {
     /// submission order) — the caller keeps the local -> global mapping.
     pub fn submit(&mut self, tr: &TraceRequest, predicted: (usize, usize)) -> ReqId {
         debug_assert!(self.admission_open, "submit on a drained engine (reopen_admission first)");
+        self.span_valid = false;
         let local: ReqId = self.requests.len();
         let mut r = Request::from_trace(tr, predicted);
         r.id = local;
@@ -655,6 +685,7 @@ impl<B: ExecutionBackend> Engine<B> {
     /// the caller's next submit instant — the decode fast-forward horizon,
     /// exactly `try_run`'s next-arrival bound.
     pub fn step_once_until(&mut self, draining: bool, deadline: f64) -> anyhow::Result<bool> {
+        self.span_valid = false;
         self.maybe_fence_disk();
         self.oracle_refresh();
         let action = {
@@ -724,6 +755,7 @@ impl<B: ExecutionBackend> Engine<B> {
     /// Advance the clock to `t` (never backwards) — the incremental
     /// equivalent of `try_run`'s idle-until-next-arrival jump.
     pub fn wait_until(&mut self, t: f64) {
+        self.span_valid = false;
         self.backend.clock_mut().wait_until(t);
     }
 
@@ -1170,6 +1202,237 @@ impl<B: ExecutionBackend> Engine<B> {
         }
         self.agg.resident_tokens += k * batch;
         self.stats.decode_steps += k as u64;
+    }
+
+    // --- cached horizon span (cluster event-heap support) ---------------
+    //
+    // The cluster's event heap needs each replica's *next event horizon* —
+    // the earliest instant its state can change on its own — without
+    // committing anything. On a stable machine that instant is the end of
+    // the decode span the horizon solver would clear, so we cache one
+    // uncommitted solve (at an infinite deadline, capped at
+    // `min_remaining - 1`) and commit deadline-bounded chunks of it as the
+    // heap advances this replica. Bit-identity with the lockstep drive
+    // rests on three facts, each already load-bearing in PR 5:
+    //
+    // 1. *Skipping the stable decide is unobservable.* With the queue
+    //    empty and a non-empty running set, every scheduler returns
+    //    `Action::Decode` unconditionally, and `decide`'s only mutations
+    //    are idempotent caches. `sched_invocations` is deliberately not
+    //    part of `EngineStats`.
+    // 2. *The deadline only adds stop points.* The solver walks the same
+    //    per-step duration sequence whatever the deadline; a finite
+    //    deadline merely truncates it at the first step whose start
+    //    violates `deadline > t + CLOCK_EPS` — the exact condition
+    //    `commit_span_until` re-applies per chunk. So the ∞-solve
+    //    committed in deadline-bounded chunks covers the same iteration
+    //    set, with the same floats, as lockstep's repeated
+    //    deadline-bounded solves between the same sync instants.
+    // 3. *Chunked commits compose.* `alloc_span(a)` then `alloc_span(b)`
+    //    equals `alloc_span(a + b)` (PR 5 free-list discipline); the
+    //    clock/TPOT-EMA floats accumulate per step in the same order;
+    //    `consumed = min(remaining, c)` chunks compose; and a chunk of 1
+    //    equals `step_decode` on a stable machine (PR 5's property test).
+    //
+    // Any state perturbation — a submit, a drain, a fault toggle, a
+    // slowdown change, or an ordinary `step_once_until` — invalidates the
+    // cache; `plan_span` re-solves lazily on the next query.
+
+    /// Nothing queued, nothing running, no armed disk fence: the engine
+    /// cannot change state until the caller submits work (an armed fence
+    /// *would* fire at the next step boundary, so it counts as work).
+    fn quiescent(&self) -> bool {
+        !self.has_work() && !self.disk_fence_pending
+    }
+
+    /// Solve and cache an uncommitted stable decode span. Returns false —
+    /// leaving the cache invalid — when the machine is not in the stable
+    /// regime (`fast_forward_decode`'s preconditions) or the horizon is
+    /// empty.
+    fn plan_span(&mut self) -> bool {
+        self.span_valid = false;
+        if !self.macro_steps || !self.incremental || !self.backend.supports_fast_forward()
+        {
+            return false;
+        }
+        if self.disk_fence_pending
+            || !self.waiting.is_empty()
+            || self.kv.cpu.used() != 0
+            || self.kv.disk.used() != 0
+        {
+            return false;
+        }
+        let batch = self.running.len();
+        if batch == 0 || batch > self.backend.max_decode_lanes() {
+            return false;
+        }
+        debug_assert_eq!(self.agg.resident_count, batch);
+        let bs = self.kv.block_size;
+        self.ff_hist.clear();
+        self.ff_hist.resize(bs, 0);
+        let mut min_remaining = usize::MAX;
+        for &rid in &self.running {
+            let Some(t) = self.kv.table(rid) else { return false };
+            self.ff_hist[t.tokens % bs] += 1;
+            let r = &self.requests[rid];
+            min_remaining = min_remaining.min(r.output_len.saturating_sub(r.generated));
+        }
+        if min_remaining <= 1 {
+            return false; // a completion lands this very step: single-step it
+        }
+        let k = decode_horizon(
+            &HorizonInputs {
+                now: self.backend.clock().now(),
+                deadline: f64::INFINITY,
+                resident_tokens: self.agg.resident_tokens,
+                batch,
+                gpu_available: self.kv.gpu.available(),
+                gpu_total: self.kv.gpu.total(),
+                n_layers: self.cfg.model.n_layers,
+                offload_gate: matches!(self.cfg.policy, Policy::LayerKv { .. }),
+                cost: &self.cost,
+            },
+            min_remaining - 1, // stop strictly before the first completion
+            &self.ff_hist,
+            &mut self.span_durs,
+        );
+        if k == 0 {
+            return false;
+        }
+        // Cache the span's landing instant by the same sequential float
+        // accumulation the chunk commits will replay, so a replica popped
+        // at its horizon lands on `span_end` to the bit — and horizon
+        // queries stay O(1) instead of re-summing the tail.
+        let mut t = self.backend.clock().now();
+        for &d in &self.span_durs {
+            t += d;
+        }
+        self.span_end = t;
+        self.span_pos = 0;
+        self.span_valid = true;
+        true
+    }
+
+    /// Commit the cached span's iterations whose *start* lies strictly
+    /// before `deadline` (the solver's own stop rule). Returns the number
+    /// of decode iterations committed; 0 means no span applies here and
+    /// the caller should take the ordinary scheduling path.
+    fn commit_span_until(&mut self, deadline: f64) -> u64 {
+        if !self.span_valid && !self.plan_span() {
+            return 0;
+        }
+        let mut c = 0usize;
+        let mut t = self.backend.clock().now();
+        while self.span_pos + c < self.span_durs.len() && deadline > t + CLOCK_EPS {
+            t += self.span_durs[self.span_pos + c];
+            c += 1;
+        }
+        if c == 0 {
+            return 0;
+        }
+        self.commit_span_chunk(c);
+        if self.span_pos >= self.span_durs.len() {
+            self.span_valid = false;
+        }
+        c as u64
+    }
+
+    /// `commit_fast_forward` for a mid-span chunk: same per-step clock and
+    /// TPOT replay, same bulk allocation, plus the `stats.steps` the
+    /// lockstep drive would have counted through its `step_once_until`
+    /// wrapper (there is no wrapper call here to count them).
+    fn commit_span_chunk(&mut self, c: usize) {
+        debug_assert!(self.span_valid && self.span_pos + c <= self.span_durs.len());
+        let batch = self.running.len();
+        #[cfg(debug_assertions)]
+        let (now0, ctx0) = (self.backend.clock().now(), self.agg.resident_tokens);
+        for i in 0..c {
+            let d = self.span_durs[self.span_pos + i];
+            self.backend.clock_mut().advance(d);
+            self.scheduler.observe_decode_step(d);
+        }
+        #[cfg(debug_assertions)]
+        debug_assert_eq!(
+            self.backend.clock().now().to_bits(),
+            self.cost.decode_span_end(now0, ctx0, batch, c).to_bits(),
+            "span chunk clock must equal the closed-form span end"
+        );
+        for i in 0..self.running.len() {
+            let rid = self.running[i];
+            self.kv
+                .alloc_span(rid, c)
+                .expect("horizon solver cleared the span's block growth");
+            let r = &mut self.requests[rid];
+            let consumed = r.predicted_median().saturating_sub(r.generated).min(c);
+            r.generated += c;
+            debug_assert!(!r.done(), "horizon must stop before any completion");
+            self.view.running_tokens += c;
+            self.view.running_remaining_tokens -= consumed;
+        }
+        self.agg.resident_tokens += c * batch;
+        self.stats.decode_steps += c as u64;
+        self.stats.steps += c as u64;
+        self.span_pos += c;
+    }
+
+    /// The earliest instant this engine's state can change without new
+    /// input: `INFINITY` when quiescent, the cached span's landing instant
+    /// when the stable regime applies, else `now()` (meaning: the cluster
+    /// must drive an ordinary step to find out). Commits nothing.
+    pub fn next_event_horizon(&mut self) -> f64 {
+        if self.quiescent() {
+            return f64::INFINITY;
+        }
+        if !self.span_valid && !self.plan_span() {
+            return self.now();
+        }
+        self.span_end
+    }
+
+    /// Advance this engine to `t` exactly as the lockstep cluster drive
+    /// would (`while t > now + CLOCK_EPS { step_once_until(draining, t) }`),
+    /// but committing cached span chunks in place of the scheduler-bearing
+    /// steps they replace. Returns the number of scheduler-bearing steps
+    /// actually taken (the cluster's `advances` metric — span chunks count
+    /// zero).
+    pub fn advance_until(&mut self, t: f64, draining: bool) -> anyhow::Result<u64> {
+        let mut decides = 0u64;
+        while t > self.backend.clock().now() + CLOCK_EPS {
+            if self.commit_span_until(t) > 0 {
+                continue;
+            }
+            if self.quiescent() {
+                break; // idle: the clock advances at the next submit
+            }
+            decides += 1;
+            if !self.step_once_until(draining, t)? {
+                break; // blocked until new input
+            }
+        }
+        Ok(decides)
+    }
+
+    /// Service this engine's own heap event at instant `t`: advance to
+    /// `t`, then take the one deadline-bounded scheduling step the
+    /// lockstep drive would take at the next external sync `cap` — the
+    /// identical call, on identical state, it would make there. Returns
+    /// (scheduler-bearing steps taken, whether the forced step progressed)
+    /// — `false` means the engine is blocked (or quiescent) and must not
+    /// be re-armed until the next external touch, which keeps the heap
+    /// loop free of zero-progress spins.
+    pub fn service_horizon_event(
+        &mut self,
+        t: f64,
+        cap: f64,
+        draining: bool,
+    ) -> anyhow::Result<(u64, bool)> {
+        let mut decides = self.advance_until(t, draining)?;
+        if self.quiescent() {
+            return Ok((decides, false));
+        }
+        decides += 1;
+        let progressed = self.step_once_until(draining, cap)?;
+        Ok((decides, progressed))
     }
 
     // --- prefill -------------------------------------------------------

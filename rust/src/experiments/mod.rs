@@ -841,6 +841,144 @@ pub fn print_faults(rows: &[FaultRow]) {
 }
 
 // ---------------------------------------------------------------------
+// Fleet sweep — the event-heap payoff run: 64-512 replicas under a
+// diurnal day/night load at 3x the cluster sweep's per-replica trace
+// volume. Under lockstep this grid cost O(replicas x arrivals) replica
+// advances per cell (every replica touched at every arrival, fleet-wide
+// idle included); the cluster-wide event heap advances only the replicas
+// whose horizons actually land, so advances/request stays flat as the
+// fleet grows. `set_lockstep(true)` / LAYERKV_LOCKSTEP=1 re-runs any
+// cell on the oracle drive for comparison (bit-identical results).
+// ---------------------------------------------------------------------
+
+/// Replica counts the full fleet sweep crosses with routers.
+pub const FLEET_SIZES: &[usize] = &[64, 128, 256, 512];
+/// Quick-mode subset — CI still exercises a 256-replica cell.
+pub const FLEET_SIZES_QUICK: &[usize] = &[64, 256];
+
+pub struct FleetRow {
+    pub replicas: usize,
+    pub router: RouterPolicy,
+    /// Long-run mean arrival rate (req/s) across the whole fleet.
+    pub rate: f64,
+    pub completed: usize,
+    pub dropped: usize,
+    pub ttft_p99: f64,
+    pub viol: f64,
+    pub tput: f64,
+    /// Scheduler-bearing replica advances the drive spent on the cell.
+    pub advances: u64,
+    /// Advances per trace request — the O(total events) witness: flat
+    /// across fleet sizes on the heap drive, O(replicas) under lockstep.
+    pub advances_per_req: f64,
+}
+
+/// The diurnal ShareGPT-style trace the fleet routes: sinusoidal
+/// day/night rate swinging 0.4x-1.6x around `mean_rate` over a 60 s
+/// "day", so each cell spans two full cycles with a whole-fleet trough.
+pub fn fleet_trace(mean_rate: f64, n: usize, seed: u64) -> Trace {
+    let mut w = ShareGptWorkload::paper(mean_rate, n);
+    w.arrivals = Arrivals::Diurnal {
+        base_rate: mean_rate * 0.4,
+        peak_rate: mean_rate * 1.6,
+        period_s: 60.0,
+    };
+    w.generate(&mut Rng::new(seed))
+}
+
+/// The sweep at an explicit per-replica request count (tests and the CI
+/// smoke use a small one).
+pub fn fleet_sweep_with(n_per_replica: usize) -> Vec<FleetRow> {
+    let sizes: &[usize] = if quick() { FLEET_SIZES_QUICK } else { FLEET_SIZES };
+    let mut cells: Vec<(usize, RouterPolicy)> = Vec::new();
+    for &k in sizes {
+        // the state-blind baseline vs one pressure-aware router is the
+        // comparison that matters at this scale; the full four-router
+        // cross lives in `experiment cluster`/`cluster-wide`
+        for router in [RouterPolicy::RoundRobin, RouterPolicy::KvPressure] {
+            cells.push((k, router));
+        }
+    }
+    par_map(&cells, |&(k, router)| {
+        let rate = CLUSTER_RATE_PER_REPLICA * k as f64;
+        let trace = fleet_trace(rate, n_per_replica * k, 41);
+        let n = trace.requests.len();
+        let cfg = setup("7b").with_policy(Policy::LayerKv { slo_aware: true });
+        let mut cluster = Cluster::new(&ClusterConfig::homogeneous(&cfg, k, router));
+        let out = cluster.run(&trace).expect("sim fleet run");
+        let s = out.summary(&cfg.slo);
+        FleetRow {
+            replicas: k,
+            router,
+            rate,
+            completed: out.merged.records.len(),
+            dropped: out.dropped.len(),
+            ttft_p99: s.ttft_p99,
+            viol: s.viol_rate,
+            tput: s.throughput_tok_s,
+            advances: cluster.advances(),
+            advances_per_req: cluster.advances() as f64 / n.max(1) as f64,
+        }
+    })
+}
+
+/// 3x the cluster sweep's per-replica trace volume (quick mode shrinks
+/// it the usual 5x, keeping the 256-replica cell affordable in CI).
+pub fn fleet_sweep() -> Vec<FleetRow> {
+    fleet_sweep_with(n_requests(300))
+}
+
+pub fn print_fleet(rows: &[FleetRow]) {
+    let mut t = Table::new(
+        "Fleet sweep — cluster-wide event heap at 64-512 replicas, diurnal \
+         ShareGPT load (2.5 req/s per replica mean, 0.4x-1.6x day/night swing)",
+        &["replicas", "router", "req/s", "completed", "dropped", "TTFT p99(s)",
+          "viol %", "tok/s", "advances", "adv/req"],
+    );
+    for r in rows {
+        t.row(&[
+            r.replicas.to_string(),
+            r.router.name().to_string(),
+            format!("{:.0}", r.rate),
+            r.completed.to_string(),
+            r.dropped.to_string(),
+            format!("{:.2}", r.ttft_p99),
+            format!("{:.1}", 100.0 * r.viol),
+            format!("{:.1}", r.tput),
+            r.advances.to_string(),
+            format!("{:.1}", r.advances_per_req),
+        ]);
+    }
+    t.print();
+    // headline: the O(total events) witness — advances/request must not
+    // grow with the fleet (lockstep's grows linearly in replica count)
+    let mut sizes: Vec<usize> = rows.iter().map(|r| r.replicas).collect();
+    sizes.sort_unstable();
+    sizes.dedup();
+    if let (Some(&lo), Some(&hi)) = (sizes.first(), sizes.last()) {
+        let mean_adv = |k: usize| {
+            let cells: Vec<f64> = rows
+                .iter()
+                .filter(|r| r.replicas == k)
+                .map(|r| r.advances_per_req)
+                .collect();
+            cells.iter().sum::<f64>() / cells.len().max(1) as f64
+        };
+        if lo != hi {
+            println!(
+                "event heap: {:.1} advances/request at {lo} replicas vs {:.1} at \
+                 {hi} ({:.2}x across a {}x fleet growth; lockstep would scale ~{}x)",
+                mean_adv(lo),
+                mean_adv(hi),
+                mean_adv(hi) / mean_adv(lo).max(1e-9),
+                hi / lo,
+                hi / lo,
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
 // Table 1 is qualitative — rendered directly.
 // ---------------------------------------------------------------------
 

@@ -1,11 +1,11 @@
 //! LayerKV command-line entry point.
 //!
 //! ```text
-//! layerkv experiment <fig1|fig4|fig5|fig6|fig7|fig8|tiers|bursty|cluster|cluster-wide|faults|table1|all>
+//! layerkv experiment <fig1|fig4|fig5|fig6|fig7|fig8|tiers|bursty|cluster|cluster-wide|fleet|faults|table1|all>
 //!                    [--quick] [--macro-steps|--no-macro-steps]
 //! layerkv sim --model <7b|34b|70b> --policy <vllm|layerkv|layerkv-no-slo>
 //!             --ctx <tokens> --rate <req/s> --requests <n> [--sharegpt]
-//!             [--replicas N] [--router <policy>] [--faults SPEC]
+//!             [--replicas N] [--router <policy>] [--faults SPEC] [--lockstep]
 //! layerkv serve [--addr 127.0.0.1:7181] [--artifacts DIR] [--budget BYTES]
 //!               [--policy <vllm|layerkv|layerkv-no-slo>] [--max-batch N]
 //!               [--ref-model] [--replicas N] [--router <policy>]
@@ -24,7 +24,10 @@
 //! `sim --replicas N` routes the trace across an N-replica simulated
 //! cluster; `--faults SPEC` injects a deterministic fault schedule
 //! (`crash=R@T1[:T2],straggle=R@T1:T2xF,io=R@T1:T2,retries=N,probation=S`
-//! — see `cluster::faults::FaultPlan::parse_spec`).
+//! — see `cluster::faults::FaultPlan::parse_spec`). `--lockstep` (or
+//! LAYERKV_LOCKSTEP=1) drives the cluster on the per-arrival lockstep
+//! oracle instead of the cluster-wide event heap — bit-identical
+//! results, O(replicas x arrivals) cost.
 //!
 //! Argument parsing is hand-rolled (clap is unavailable offline).
 
@@ -72,10 +75,10 @@ fn print_help() {
         "layerkv — layer-wise KV cache management for LLM serving (paper reproduction)\n\
          \n\
          USAGE:\n\
-         \x20 layerkv experiment <fig1|fig4|fig5|fig6|fig7|fig8|tiers|bursty|cluster|cluster-wide|faults|table1|all>\n\
+         \x20 layerkv experiment <fig1|fig4|fig5|fig6|fig7|fig8|tiers|bursty|cluster|cluster-wide|fleet|faults|table1|all>\n\
          \x20                    [--quick] [--macro-steps|--no-macro-steps]\n\
          \x20 layerkv sim --model 7b --policy layerkv --ctx 4096 --rate 1.0 --requests 100 [--sharegpt]\n\
-         \x20             [--replicas N] [--router round-robin|jsq|kv-pressure|slo-aware]\n\
+         \x20             [--replicas N] [--router round-robin|jsq|kv-pressure|slo-aware] [--lockstep]\n\
          \x20             [--faults crash=R@T1[:T2],straggle=R@T1:T2xF,io=R@T1:T2,retries=N,probation=S]\n\
          \x20 layerkv serve [--addr 127.0.0.1:7181] [--artifacts DIR] [--budget BYTES]\n\
          \x20               [--policy vllm|layerkv|layerkv-no-slo] [--max-batch N] [--ref-model]\n\
@@ -123,6 +126,9 @@ fn cmd_experiment(args: &[String]) -> anyhow::Result<()> {
             // trace volume per cell (kept out of `all` — it is the
             // dedicated scale run)
             "cluster-wide" => exp::print_cluster(&exp::cluster_sweep_wide()),
+            // the event-heap payoff: 64-512 replicas under diurnal load
+            // (kept out of `all` alongside cluster-wide — scale runs)
+            "fleet" => exp::print_fleet(&exp::fleet_sweep()),
             "faults" => exp::print_faults(&exp::fault_sweep()),
             other => anyhow::bail!("unknown experiment '{other}'"),
         }
@@ -237,6 +243,9 @@ fn sim_cluster(
     if let Some(spec) = &faults_spec {
         let plan = FaultPlan::parse_spec(spec).map_err(|e| anyhow::anyhow!(e))?;
         cluster = cluster.with_faults(plan);
+    }
+    if flag(args, "--lockstep") {
+        cluster.set_lockstep(true);
     }
     let out = cluster.run(trace)?;
     let (mut ttft, mut tpot) = (out.merged.ttft(), out.merged.tpot());

@@ -80,7 +80,7 @@ impl FaultKind {
 }
 
 /// One fault event in cluster virtual time, applied to one replica.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct FaultEvent {
     /// Cluster virtual time of the event (seconds).
     pub t: f64,

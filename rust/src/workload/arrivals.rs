@@ -20,6 +20,14 @@ pub enum Arrivals {
     /// request routing (and single-engine admission) to queueing spikes a
     /// plain Poisson trace at the same mean rate never produces.
     OnOff { rate_on: f64, mean_on_s: f64, mean_off_s: f64 },
+    /// Diurnal inhomogeneous Poisson process: the instantaneous rate
+    /// swings sinusoidally between `base_rate` (trough) and `peak_rate`
+    /// (peak) over a `period_s`-second day, starting at the trough.
+    /// Sampled exactly by thinning against the peak rate, so it stays a
+    /// true Poisson process at every instant — the fleet-scale day/night
+    /// load shape the `experiment fleet` sweeps drive (multi-hour traces
+    /// where a whole shift of replicas idles through the trough).
+    Diurnal { base_rate: f64, peak_rate: f64, period_s: f64 },
 }
 
 impl Arrivals {
@@ -41,6 +49,9 @@ impl Arrivals {
         if let Arrivals::OnOff { rate_on, mean_on_s, mean_off_s } = *self {
             return Self::generate_on_off(n, rate_on, mean_on_s, mean_off_s, rng);
         }
+        if let Arrivals::Diurnal { base_rate, peak_rate, period_s } = *self {
+            return Self::generate_diurnal(n, base_rate, peak_rate, period_s, rng);
+        }
         let mut out = Vec::with_capacity(n);
         let mut t = 0.0;
         for _ in 0..n {
@@ -52,7 +63,9 @@ impl Arrivals {
                     t += 1.0 / rate;
                 }
                 Arrivals::Burst => {}
-                Arrivals::OnOff { .. } => unreachable!("handled above"),
+                Arrivals::OnOff { .. } | Arrivals::Diurnal { .. } => {
+                    unreachable!("handled above")
+                }
             }
             out.push(t);
         }
@@ -85,6 +98,35 @@ impl Arrivals {
                 // rest of it, sleep through OFF, start a new ON sojourn
                 t += on_left + rng.exponential(1.0 / mean_off_s);
                 on_left = rng.exponential(1.0 / mean_on_s);
+            }
+        }
+        out
+    }
+
+    /// Exact thinning (Lewis–Shedler): draw candidate gaps from a
+    /// homogeneous Poisson process at `peak_rate`, accept each candidate
+    /// at `t` with probability `rate(t) / peak_rate`. The rate curve is
+    /// `base + (peak - base) * (1 - cos(2πt/period)) / 2` — trough at
+    /// t = 0 (a cold fleet ramping into the day), peak at half-period.
+    fn generate_diurnal(
+        n: usize,
+        base_rate: f64,
+        peak_rate: f64,
+        period_s: f64,
+        rng: &mut Rng,
+    ) -> Vec<f64> {
+        assert!(
+            base_rate > 0.0 && peak_rate >= base_rate && period_s > 0.0,
+            "diurnal needs 0 < base_rate <= peak_rate and a positive period"
+        );
+        let mut out = Vec::with_capacity(n);
+        let mut t = 0.0;
+        while out.len() < n {
+            t += rng.exponential(peak_rate);
+            let phase = (std::f64::consts::TAU * t / period_s).cos();
+            let rate = base_rate + (peak_rate - base_rate) * (1.0 - phase) * 0.5;
+            if rng.f64() * peak_rate <= rate {
+                out.push(t);
             }
         }
         out
@@ -172,6 +214,48 @@ mod tests {
         let ts = a.generate(30_000, &mut rng);
         let mean_rate = 30_000.0 / ts.last().unwrap();
         assert!((mean_rate - 3.0).abs() < 0.2, "mean_rate={mean_rate}");
+    }
+
+    #[test]
+    fn diurnal_mean_rate_between_base_and_peak() {
+        let mut rng = Rng::new(7);
+        let a = Arrivals::Diurnal { base_rate: 2.0, peak_rate: 10.0, period_s: 50.0 };
+        let ts = a.generate(40_000, &mut rng);
+        assert!(ts.windows(2).all(|w| w[1] >= w[0]));
+        assert!(ts.iter().all(|t| t.is_finite() && *t >= 0.0));
+        // long-run mean of the sinusoid is (base + peak) / 2 = 6 req/s
+        let mean_rate = 40_000.0 / ts.last().unwrap();
+        assert!((mean_rate - 6.0).abs() < 0.3, "mean_rate={mean_rate}");
+    }
+
+    #[test]
+    fn diurnal_peak_half_period_outweighs_trough_half() {
+        let mut rng = Rng::new(13);
+        let period = 40.0;
+        let a = Arrivals::Diurnal { base_rate: 1.0, peak_rate: 9.0, period_s: period };
+        let ts = a.generate(20_000, &mut rng);
+        // count arrivals landing in the peak-centred half of each day
+        // (phase in [0.25, 0.75)) vs the trough-centred half
+        let peak_half = ts
+            .iter()
+            .filter(|t| {
+                let phase = (*t % period) / period;
+                (0.25..0.75).contains(&phase)
+            })
+            .count();
+        let trough_half = ts.len() - peak_half;
+        assert!(
+            peak_half as f64 > 2.0 * trough_half as f64,
+            "peak_half={peak_half} trough_half={trough_half}"
+        );
+    }
+
+    #[test]
+    fn diurnal_deterministic_for_seed() {
+        let a = Arrivals::Diurnal { base_rate: 1.5, peak_rate: 6.0, period_s: 30.0 };
+        let x = a.generate(500, &mut Rng::new(19));
+        let y = a.generate(500, &mut Rng::new(19));
+        assert_eq!(x, y);
     }
 
     #[test]
