@@ -50,7 +50,7 @@ impl SchedFixture {
         for i in 0..64usize {
             let id = requests.len();
             let mut r = Request::from_trace(
-                &TraceRequest { id, arrival: 0.0, prompt_len: 1024, output_len: 512 },
+                &TraceRequest { id, arrival: 0.0, prompt_len: 1024, output_len: 512, ..Default::default() },
                 (256, 512),
             );
             r.phase = Phase::Decoding;
@@ -65,7 +65,7 @@ impl SchedFixture {
         for _ in 0..512usize {
             let id = requests.len();
             requests.push(Request::from_trace(
-                &TraceRequest { id, arrival: 1.0, prompt_len: 8192, output_len: 512 },
+                &TraceRequest { id, arrival: 1.0, prompt_len: 8192, output_len: 512, ..Default::default() },
                 (256, 512),
             ));
             waiting.push(id);

@@ -188,13 +188,53 @@ impl FaultPlan {
                 });
             }
         }
+        // total_cmp, not partial_cmp: `validate()` rejects NaN times at
+        // every construction edge, but a sort must never be the thing
+        // that panics on a hostile plan (this used to be a user-reachable
+        // `.expect` via `--faults`)
         evs.sort_by(|a, b| {
-            a.t.partial_cmp(&b.t)
-                .expect("fault times are never NaN")
+            a.t.total_cmp(&b.t)
                 .then(a.kind.rank().cmp(&b.kind.rank()))
                 .then(a.replica.cmp(&b.replica))
         });
         evs
+    }
+
+    /// Reject plans whose times could poison the event stream or the
+    /// cluster clock: every start must be finite and non-negative; every
+    /// end must be >= its start and never NaN (`INFINITY` = open window);
+    /// slowdowns must be finite and >= 1; probation must be finite and
+    /// non-negative. Called by `parse_spec` so a hostile `--faults` spec
+    /// is a parse error, and available to programmatic builders.
+    pub fn validate(&self) -> Result<(), String> {
+        let closed = |what: &str, t1: f64, t2: f64| -> Result<(), String> {
+            if !t1.is_finite() || t1 < 0.0 {
+                return Err(format!("{what}: start {t1} must be finite and >= 0"));
+            }
+            if t2.is_nan() || t2 < t1 {
+                return Err(format!("{what}: end {t2} invalid for start {t1}"));
+            }
+            Ok(())
+        };
+        for c in &self.crashes {
+            closed(&format!("crash on replica {}", c.replica), c.at, c.recover_at)?;
+        }
+        for s in &self.stragglers {
+            closed(&format!("straggler on replica {}", s.replica), s.from, s.until)?;
+            if !s.slowdown.is_finite() || s.slowdown < 1.0 {
+                return Err(format!(
+                    "straggler on replica {}: slowdown {} must be finite and >= 1",
+                    s.replica, s.slowdown
+                ));
+            }
+        }
+        for b in &self.io_bursts {
+            closed(&format!("io burst on replica {}", b.replica), b.from, b.until)?;
+        }
+        if !self.probation_s.is_finite() || self.probation_s < 0.0 {
+            return Err(format!("probation {} must be finite and >= 0", self.probation_s));
+        }
+        Ok(())
     }
 
     /// Largest replica index any window names (for validation).
@@ -272,25 +312,35 @@ impl FaultPlan {
                 _ => return Err(format!("unknown fault key `{key}`")),
             }
         }
+        plan.validate()?;
         Ok(plan)
     }
 }
 
-/// `T1:T2` (or bare `T1`, which means "forever" when `open_ok`).
+/// `T1:T2` (or bare `T1`, which means "forever" when `open_ok`). Times
+/// must be finite and non-negative — Rust's float parser happily accepts
+/// `NaN`, `inf`, and negatives, and a NaN here used to survive all the
+/// way to the event-stream sort's `.expect` (a user-reachable panic via
+/// `--faults`). `t2 < t1` alone cannot catch NaN (every comparison with
+/// NaN is false), hence the explicit finiteness checks.
 fn parse_window(win: &str, open_ok: bool) -> Result<(f64, f64), String> {
+    let time = |s: &str| -> Result<f64, String> {
+        let t: f64 = s.parse().map_err(|_| format!("bad time `{s}`"))?;
+        if !t.is_finite() || t < 0.0 {
+            return Err(format!("time `{s}` must be finite and >= 0"));
+        }
+        Ok(t)
+    };
     match win.split_once(':') {
         Some((a, b)) => {
-            let t1: f64 = a.parse().map_err(|_| format!("bad time `{a}`"))?;
-            let t2: f64 = b.parse().map_err(|_| format!("bad time `{b}`"))?;
+            let t1 = time(a)?;
+            let t2 = time(b)?;
             if t2 < t1 {
                 return Err(format!("window `{win}` ends before it starts"));
             }
             Ok((t1, t2))
         }
-        None if open_ok => {
-            let t1: f64 = win.parse().map_err(|_| format!("bad time `{win}`"))?;
-            Ok((t1, f64::INFINITY))
-        }
+        None if open_ok => Ok((time(win)?, f64::INFINITY)),
         None => Err(format!("`{win}`: expected T1:T2")),
     }
 }
@@ -374,6 +424,33 @@ impl Router for HealthRouter {
         self.inner.route(prompt_len, &candidates)
     }
 
+    /// Same fencing as `route`, but preserving the full [`RouteQuery`]
+    /// for the inner policy (a prefix-aware inner router must still see
+    /// the prefix identity after crashed replicas are filtered out).
+    fn route_query(&mut self, q: &super::router::RouteQuery, views: &[ReplicaView]) -> usize {
+        let st = self.state.borrow();
+        let fenced = views
+            .iter()
+            .any(|v| st.down[v.idx] || st.in_probation(v.idx));
+        if !fenced {
+            drop(st);
+            return self.inner.route_query(q, views);
+        }
+        let mut candidates: Vec<ReplicaView> = views
+            .iter()
+            .filter(|v| !st.down[v.idx] && !st.in_probation(v.idx))
+            .cloned()
+            .collect();
+        if candidates.is_empty() {
+            candidates = views.iter().filter(|v| !st.down[v.idx]).cloned().collect();
+        }
+        drop(st);
+        if candidates.is_empty() {
+            return self.inner.route_query(q, views);
+        }
+        self.inner.route_query(q, &candidates)
+    }
+
     fn observe_ttft(&mut self, replica: usize, ttft_s: f64) {
         self.inner.observe_ttft(replica, ttft_s);
     }
@@ -446,6 +523,55 @@ mod tests {
         assert!(FaultPlan::parse_spec("straggle=0@1:2x0.5").is_err());
         assert!(FaultPlan::parse_spec("io=0@9:4").is_err());
         assert!(FaultPlan::parse_spec("io=0@5").is_err(), "io needs a closed window");
+    }
+
+    #[test]
+    fn spec_rejects_non_finite_and_negative_times() {
+        // regression: a NaN time parsed fine and survived to the event
+        // stream's sort, where `.expect("fault times are never NaN")`
+        // panicked — user-reachable straight from `--faults crash=0@NaN`
+        for bad in [
+            "crash=0@NaN",
+            "crash=0@nan:5",
+            "crash=0@5:NaN",
+            "crash=0@inf",
+            "crash=0@-5",
+            "crash=0@1:-2",
+            "straggle=0@NaN:5x2",
+            "straggle=0@0:5xNaN",
+            "straggle=0@0:5xinf",
+            "io=0@NaN:5",
+            "io=0@-1:5",
+            "probation=NaN",
+            "probation=-3",
+        ] {
+            let res = FaultPlan::parse_spec(bad);
+            assert!(res.is_err(), "`{bad}` must be rejected, got {res:?}");
+        }
+    }
+
+    #[test]
+    fn events_never_panic_even_on_hand_built_nan_plans() {
+        // parse/validate fence the CLI, but a programmatic plan that
+        // skipped `validate()` must still sort (total_cmp), not panic
+        let plan = FaultPlan {
+            crashes: vec![
+                CrashWindow { replica: 0, at: f64::NAN, recover_at: 5.0 },
+                CrashWindow { replica: 1, at: 1.0, recover_at: 2.0 },
+            ],
+            ..FaultPlan::default()
+        };
+        assert!(plan.validate().is_err());
+        let evs = plan.events();
+        assert!(!evs.is_empty()); // sorted under total order, no panic
+    }
+
+    #[test]
+    fn generated_plans_always_validate() {
+        for seed in 0..32 {
+            let plan = FaultPlan::generate(seed, 4, 120.0);
+            assert!(plan.validate().is_ok(), "seed {seed}: {:?}", plan.validate());
+        }
     }
 
     struct Fixture {

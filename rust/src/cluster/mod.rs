@@ -54,7 +54,8 @@ pub use faults::{CrashWindow, FaultPlan, HealthRouter, IoBurst, Straggler};
 pub use replica::Replica;
 pub use report::{ClusterReport, ReplicaOutcome};
 pub use router::{
-    kv_pressure_score, make_router, ReplicaView, Router, RouterPolicy,
+    kv_pressure_score, make_router, prefix_affinity_score, ReplicaView, RouteQuery, Router,
+    RouterPolicy,
 };
 
 use std::cell::RefCell;
@@ -440,7 +441,7 @@ impl<B: ExecutionBackend> Cluster<B> {
                 }
             }
             self.pump_feedback();
-            let idx = self.route_request(tr.prompt_len);
+            let idx = self.route_request(tr);
             let rep = &mut self.replicas[idx];
             if tr.arrival > rep.engine.now() + CLOCK_EPS {
                 rep.engine.wait_until(tr.arrival);
@@ -581,7 +582,7 @@ impl<B: ExecutionBackend> Cluster<B> {
                     }
                     if !parked {
                         self.pump_feedback();
-                        let idx = self.route_request(tr.prompt_len);
+                        let idx = self.route_request(tr);
                         let rep = &mut self.replicas[idx];
                         if tr.arrival > rep.engine.now() + CLOCK_EPS {
                             rep.engine.wait_until(tr.arrival);
@@ -726,11 +727,19 @@ impl<B: ExecutionBackend> Cluster<B> {
 
     /// Pick a replica for a request through the router. Callers must have
     /// advanced every live replica to the routing instant first (both
-    /// drive modes do), so the views are lockstep-fresh.
-    fn route_request(&mut self, prompt_len: usize) -> usize {
+    /// drive modes do), so the views are lockstep-fresh. Routes through
+    /// `route_query` so cache-affine policies see the prefix identity;
+    /// every length-only policy's default delegation keeps its decisions
+    /// bit-identical to the old `route(prompt_len, ..)` path.
+    fn route_request(&mut self, tr: &TraceRequest) -> usize {
         let views: Vec<ReplicaView> =
             self.replicas.iter().enumerate().map(|(i, r)| r.view(i)).collect();
-        let picked = self.router.route(prompt_len, &views);
+        let q = RouteQuery {
+            prompt_len: tr.prompt_len,
+            prefix_hash: tr.prefix.hash,
+            prefix_len: tr.prefix.len,
+        };
+        let picked = self.router.route_query(&q, &views);
         assert!(
             picked < self.replicas.len(),
             "router {} returned out-of-range replica {picked} of {}",
@@ -837,6 +846,7 @@ impl<B: ExecutionBackend> Cluster<B> {
                         arrival: d.arrival, // original: TTFT includes downtime
                         prompt_len: d.prompt_len,
                         output_len: d.output_len,
+                        prefix: d.prefix, // failover target can still match/publish
                     };
                     self.resubmit(f, tr, predictor, ev.t)?;
                 }
@@ -890,7 +900,7 @@ impl<B: ExecutionBackend> Cluster<B> {
             return Ok(());
         }
         self.pump_feedback();
-        let idx = self.route_request(tr.prompt_len);
+        let idx = self.route_request(&tr);
         debug_assert!(
             !f.health.borrow().down[idx],
             "health router must fence crashed replicas"

@@ -24,9 +24,15 @@
 //!   TTFTs the replica actually delivered (the latency-probe idiom:
 //!   `ewma = alpha * sample + (1 - alpha) * ewma`). Routes to the lowest
 //!   predicted delay.
+//! * [`PrefixAware`](RouterPolicy::PrefixAware) — the KvPressure score
+//!   plus a cache-affinity bonus: probe each replica's prefix cache for
+//!   the request's prefix hash and credit the fraction of the prompt it
+//!   would serve, discounted by the tier the cached blocks sit on (a GPU
+//!   hit is worth the full prefill savings, a disk hit much less).
+//!   Requests with no prefix key score identically to KvPressure.
 
 use crate::config::ServingConfig;
-use crate::coordinator::block::{BlockPool, KvManager};
+use crate::coordinator::block::{BlockPool, KvManager, Residency};
 use crate::sim::CostModel;
 
 /// EWMA smoothing for observed TTFT feedback: weight on the newest
@@ -51,6 +57,7 @@ pub enum RouterPolicy {
     JoinShortestQueue,
     KvPressure,
     SloAware,
+    PrefixAware,
 }
 
 impl RouterPolicy {
@@ -60,6 +67,7 @@ impl RouterPolicy {
         RouterPolicy::JoinShortestQueue,
         RouterPolicy::KvPressure,
         RouterPolicy::SloAware,
+        RouterPolicy::PrefixAware,
     ];
 
     pub fn name(&self) -> &'static str {
@@ -68,6 +76,7 @@ impl RouterPolicy {
             RouterPolicy::JoinShortestQueue => "jsq",
             RouterPolicy::KvPressure => "kv-pressure",
             RouterPolicy::SloAware => "slo-aware",
+            RouterPolicy::PrefixAware => "prefix-aware",
         }
     }
 
@@ -77,9 +86,24 @@ impl RouterPolicy {
             "jsq" | "shortest-queue" => Some(RouterPolicy::JoinShortestQueue),
             "kv-pressure" | "kv" => Some(RouterPolicy::KvPressure),
             "slo-aware" | "slo" => Some(RouterPolicy::SloAware),
+            "prefix-aware" | "prefix" => Some(RouterPolicy::PrefixAware),
             _ => None,
         }
     }
+}
+
+/// What the router knows about an arriving request. `prompt_len` is what
+/// the legacy `route` path sees; the prefix fields let cache-affine
+/// policies probe replica caches. A zero `prefix_hash` means "no shared
+/// prefix" and makes every policy behave exactly as if it only saw the
+/// length.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RouteQuery {
+    pub prompt_len: usize,
+    /// Content hash of the request's reusable prefix (0 = none).
+    pub prefix_hash: u64,
+    /// Token length of that prefix.
+    pub prefix_len: usize,
 }
 
 /// Read-only snapshot of one replica at routing time. The pool counters
@@ -128,6 +152,14 @@ pub trait Router {
     /// return one of the given `idx` values.
     fn route(&mut self, prompt_len: usize, views: &[ReplicaView]) -> usize;
 
+    /// Pick a replica for a full [`RouteQuery`]. Length-only policies
+    /// inherit this delegation; cache-affine ones override it. The
+    /// cluster always routes through this entry point, so the default
+    /// keeps every legacy policy's decisions bit-identical.
+    fn route_query(&mut self, q: &RouteQuery, views: &[ReplicaView]) -> usize {
+        self.route(q.prompt_len, views)
+    }
+
     /// Feedback: a request routed to `replica` completed with this TTFT.
     /// Only feedback-driven policies keep it.
     fn observe_ttft(&mut self, replica: usize, ttft_s: f64) {
@@ -144,6 +176,7 @@ pub fn make_router(policy: RouterPolicy, n_replicas: usize) -> Box<dyn Router> {
         RouterPolicy::SloAware => {
             Box::new(SloAwareRouter { ewma_ttft_s: vec![None; n_replicas] })
         }
+        RouterPolicy::PrefixAware => Box::new(PrefixAwareRouter),
     }
 }
 
@@ -229,6 +262,77 @@ impl Router for KvPressureRouter {
         let mut best_score = f64::NEG_INFINITY;
         for v in views {
             let score = kv_pressure_score(v);
+            if score > best_score {
+                best_score = score;
+                best = v.idx;
+            }
+        }
+        best
+    }
+}
+
+/// Weight of the cache-affinity term against the KvPressure headroom
+/// score. A full-prompt GPU hit is worth half a "whole pool of free GPU
+/// blocks" — strong enough to pull session turns back to their cache,
+/// weak enough that a saturated replica still sheds load.
+pub const PREFIX_AFFINITY_WEIGHT: f64 = 0.5;
+
+/// How much of a hit's prefill savings survives each tier: GPU blocks
+/// reuse at full value, host blocks pay an onload, disk blocks a far
+/// slower restore (mirrors the tier discounts in `kv_pressure_score`'s
+/// headroom weighting, scaled to the restore-vs-recompute gap).
+fn prefix_tier_discount(tier: Residency) -> f64 {
+    match tier {
+        Residency::Gpu => 1.0,
+        Residency::Cpu => 0.6,
+        Residency::Disk => 0.25,
+    }
+}
+
+/// KvPressure plus cache affinity: score each replica's headroom, then
+/// credit the block-aligned fraction of this prompt its prefix cache
+/// would serve, tier-discounted. Highest score wins; ties break low.
+#[derive(Debug)]
+pub struct PrefixAwareRouter;
+
+/// The PrefixAware score (public so tests can pin the affinity math).
+pub fn prefix_affinity_score(q: &RouteQuery, v: &ReplicaView) -> f64 {
+    let mut score = kv_pressure_score(v);
+    if q.prefix_hash != 0 && q.prompt_len > 0 {
+        if let Some((tokens, tier)) = v.kv.prefix_probe(q.prefix_hash) {
+            let usable = tokens.min(q.prefix_len).min(q.prompt_len);
+            let frac = usable as f64 / q.prompt_len as f64;
+            score += PREFIX_AFFINITY_WEIGHT * frac * prefix_tier_discount(tier);
+        }
+    }
+    score
+}
+
+impl Router for PrefixAwareRouter {
+    fn name(&self) -> &'static str {
+        "prefix-aware"
+    }
+
+    /// Length-only entry point: no prefix identity to probe, so this is
+    /// exactly the KvPressure decision.
+    fn route(&mut self, _prompt_len: usize, views: &[ReplicaView]) -> usize {
+        let mut best = views[0].idx;
+        let mut best_score = f64::NEG_INFINITY;
+        for v in views {
+            let score = kv_pressure_score(v);
+            if score > best_score {
+                best_score = score;
+                best = v.idx;
+            }
+        }
+        best
+    }
+
+    fn route_query(&mut self, q: &RouteQuery, views: &[ReplicaView]) -> usize {
+        let mut best = views[0].idx;
+        let mut best_score = f64::NEG_INFINITY;
+        for v in views {
+            let score = prefix_affinity_score(q, v);
             if score > best_score {
                 best_score = score;
                 best = v.idx;
@@ -436,6 +540,53 @@ mod tests {
             assert_eq!(RouterPolicy::parse(p.name()), Some(*p));
             assert_eq!(make_router(*p, 4).name(), p.name());
         }
+        assert_eq!(RouterPolicy::parse("prefix"), Some(RouterPolicy::PrefixAware));
         assert_eq!(RouterPolicy::parse("nope"), None);
+    }
+
+    #[test]
+    fn prefix_aware_pulls_hits_to_their_cache() {
+        let mut f = Fixture::new(&[0, 0]);
+        // replica 1 holds a cached 2048-token prefix under hash 7
+        f.kvs[1].prefix_publish(7, 2048);
+        assert!(f.kvs[1].prefix_probe(7).is_some());
+        let views = f.views(&[0, 0]);
+        let mut r = make_router(RouterPolicy::PrefixAware, 2);
+        let q = RouteQuery { prompt_len: 2048, prefix_hash: 7, prefix_len: 2048 };
+        assert_eq!(r.route_query(&q, &views), 1);
+        // no prefix identity -> pure KvPressure, ties break low
+        let plain = RouteQuery { prompt_len: 2048, prefix_hash: 0, prefix_len: 0 };
+        assert_eq!(r.route_query(&plain, &views), 0);
+        assert_eq!(r.route(2048, &views), 0);
+    }
+
+    #[test]
+    fn prefix_affinity_discounts_deeper_tiers() {
+        let mut f = Fixture::new(&[0, 0]);
+        f.kvs[0].prefix_publish(7, 2048);
+        f.kvs[1].prefix_publish(7, 2048);
+        // demote replica 1's copy off the GPU: its hit is worth less
+        let mut moves = Vec::new();
+        f.kvs[1].prefix_demote_gpu(usize::MAX, &mut moves);
+        assert!(!moves.is_empty());
+        let views = f.views(&[0, 0]);
+        let q = RouteQuery { prompt_len: 2048, prefix_hash: 7, prefix_len: 2048 };
+        assert!(prefix_affinity_score(&q, &views[0]) > prefix_affinity_score(&q, &views[1]));
+        // and both beat a replica with no cached copy at all
+        let g = Fixture::new(&[0]);
+        let empty = g.views(&[0]);
+        assert!(prefix_affinity_score(&q, &views[1]) > prefix_affinity_score(&q, &empty[0]));
+    }
+
+    #[test]
+    fn prefix_affinity_does_not_override_heavy_pressure() {
+        // replica 0 has the cache hit but a nearly exhausted GPU pool and
+        // deep queued demand; affinity must not pin the request there
+        let mut f = Fixture::new(&[90, 0]);
+        f.kvs[0].prefix_publish(7, 2048);
+        let views = f.views(&[64, 0]);
+        let mut r = make_router(RouterPolicy::PrefixAware, 2);
+        let q = RouteQuery { prompt_len: 2048, prefix_hash: 7, prefix_len: 2048 };
+        assert_eq!(r.route_query(&q, &views), 1);
     }
 }

@@ -77,6 +77,17 @@ pub struct ServingConfig {
     /// every PCIe transfer (Eq. 4, decode streaming) by
     /// `quant_bytes / dtype_bytes`; on-GPU compute stays full precision.
     pub offload_quant: OffloadQuant,
+    /// Cross-request prefix caching over the tier hierarchy. On by
+    /// default (`LAYERKV_PREFIX=0` or `--no-prefix-cache` disables it);
+    /// requests without a prefix hash never touch the cache, so traces
+    /// with zero shared prefixes behave identically either way.
+    pub prefix_cache: bool,
+}
+
+/// Default for [`ServingConfig::prefix_cache`]: on unless
+/// `LAYERKV_PREFIX=0`.
+fn prefix_cache_default() -> bool {
+    std::env::var("LAYERKV_PREFIX").map(|v| v != "0").unwrap_or(true)
 }
 
 /// Precision of offloaded KV (paper §8: "integrating KV cache quantization
@@ -123,6 +134,7 @@ impl ServingConfig {
             beta: 1.10,
             x_override: None,
             offload_quant: OffloadQuant::None,
+            prefix_cache: prefix_cache_default(),
         }
     }
 
@@ -145,6 +157,12 @@ impl ServingConfig {
     pub fn with_max_model_len(mut self, len: usize) -> Self {
         self.max_model_len = len;
         self.max_batched_tokens = len.max(2048);
+        self
+    }
+
+    /// Enable/disable cross-request prefix caching.
+    pub fn with_prefix_cache(mut self, on: bool) -> Self {
+        self.prefix_cache = on;
         self
     }
 

@@ -351,7 +351,14 @@ impl ExecutionBackend for SimBackend {
             * disk_layers as f64
             * self.cfg.offload_bytes_per_token_layer()
             / self.cfg.tp as f64;
-        let mut duration = self.cost.prefill_time(len);
+        // Compute only the un-cached suffix: tokens restored from the
+        // prefix cache skip the forward pass (their restore cost was
+        // already charged by the engine at admission). Offload/spill
+        // bytes still cover the *full* table — cached layers were
+        // re-materialised into this request's table and ride the same
+        // links out.
+        let compute_len = len - req.cached_prefix.min(len.saturating_sub(1));
+        let mut duration = self.cost.prefill_time(compute_len);
         if self.slowdown != 1.0 {
             duration *= self.slowdown;
         }

@@ -4,9 +4,11 @@
 //! spill/unspill at the host boundary, promote for deep restores).
 
 pub mod allocator;
+pub mod prefix;
 pub mod table;
 
 pub use allocator::{BlockId, BlockPool};
+pub use prefix::{PrefixHit, PrefixMove, PrefixPublish, PrefixStore};
 pub use table::{LayerBlockTable, LayerEntry, Residency};
 
 use std::collections::HashMap;
@@ -48,6 +50,9 @@ pub struct KvManager {
     spare_tables: Vec<LayerBlockTable>,
     /// Staging buffer for block ids in flight between pools.
     scratch: Vec<BlockId>,
+    /// Cross-request prefix cache (see `prefix.rs`); empty — and
+    /// bit-invisible — unless the engine publishes into it.
+    pub(crate) prefix: PrefixStore,
 }
 
 impl KvManager {
@@ -74,6 +79,7 @@ impl KvManager {
             tables: HashMap::new(),
             spare_tables: Vec::new(),
             scratch: Vec::new(),
+            prefix: PrefixStore::new(),
         }
     }
 

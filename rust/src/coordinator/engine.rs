@@ -52,14 +52,14 @@ use std::collections::VecDeque;
 
 use crate::config::{Policy, ServingConfig};
 use crate::coordinator::backend::{Clock, ExecutionBackend, SimBackend};
-use crate::coordinator::block::{KvError, KvManager, Residency};
+use crate::coordinator::block::{KvError, KvManager, PrefixMove, Residency};
 use crate::coordinator::horizon::{decode_horizon, HorizonInputs};
 use crate::coordinator::predict::LengthPredictor;
 use crate::coordinator::request::{Phase, ReqId, Request};
 use crate::coordinator::scheduler::{make_scheduler, Action, SchedContext, Scheduler};
 use crate::metrics::{Report, RequestRecord, TierTransition};
 use crate::sim::CostModel;
-use crate::workload::{Trace, TraceRequest};
+use crate::workload::{PrefixKey, Trace, TraceRequest};
 
 /// The engine's clock-comparison epsilon: an arrival is admissible when
 /// `arrival <= now + CLOCK_EPS`, and every driver (try_run's arrival
@@ -77,6 +77,11 @@ fn macro_steps_enabled() -> bool {
 /// (retires the disk pool and falls back to two-tier + recompute).
 pub const DISK_FENCE_K: u32 = 3;
 
+/// Sentinel `req` id for prefix-cache entries in the tier-transition log
+/// (cache blocks belong to no live request). Entries always log layer 0:
+/// a prefix entry moves all its layers together.
+pub const PREFIX_REQ: ReqId = usize::MAX;
+
 /// An unfinished request exported by [`Engine::drain`], carrying exactly
 /// what a failover path needs to re-submit it elsewhere from scratch: the
 /// ORIGINAL lengths (any partially generated tokens are discarded — this
@@ -90,6 +95,9 @@ pub struct DrainedRequest {
     pub arrival: f64,
     pub prompt_len: usize,
     pub output_len: usize,
+    /// Shared-prefix identity, preserved so the failover target can
+    /// still match (and publish into) its own prefix cache.
+    pub prefix: PrefixKey,
 }
 
 /// Counters the experiments report alongside latency. Every `disk_*` /
@@ -130,6 +138,23 @@ pub struct EngineStats {
     /// The disk tier was fenced after K consecutive I/O errors: its pool
     /// was retired and the engine fell back to two-tier + recompute.
     pub disk_fenced: bool,
+    /// Prefix-cache hits served at admission. Every `prefix_*` counter
+    /// stays exactly 0 with caching off or on a prefix-free trace.
+    pub prefix_hits: u64,
+    /// Admissions that carried a prefix key but found no entry.
+    pub prefix_misses: u64,
+    /// Prompt tokens whose recompute was skipped by cache hits.
+    pub prefix_hit_tokens: u64,
+    /// Entries published into the cache.
+    pub prefix_inserts: u64,
+    /// Entries dropped from the cache (LRU, pressure, or drain).
+    pub prefix_evictions: u64,
+    /// Cache entries demoted a tier under pool pressure.
+    pub prefix_demotions: u64,
+    /// Cache entries promoted to GPU while serving a hit.
+    pub prefix_promotions: u64,
+    /// Bytes restored host/disk -> GPU to serve cache hits.
+    pub prefix_restore_bytes: f64,
 }
 
 /// Incrementally-maintained totals over the running set: the membership
@@ -396,6 +421,11 @@ impl<B: ExecutionBackend> Engine<B> {
         while let Some(&rid) = self.running.first() {
             self.preempt_recompute(rid);
         }
+        // the crash this models physically loses the cached KV too — the
+        // prefix cache must not survive a drain (and pools must be empty
+        // afterwards, as the failover invariants assert)
+        let cleared = self.kv.prefix_clear();
+        self.stats.prefix_evictions += cleared as u64;
         let mut out = Vec::with_capacity(self.waiting.len());
         while let Some(rid) = self.waiting.pop_front() {
             self.view_pop_waiting(rid);
@@ -406,6 +436,7 @@ impl<B: ExecutionBackend> Engine<B> {
                 arrival: r.arrival,
                 prompt_len: r.prompt_len,
                 output_len: r.output_len,
+                prefix: r.prefix,
             });
         }
         out.sort_by_key(|d| d.id);
@@ -564,6 +595,11 @@ impl<B: ExecutionBackend> Engine<B> {
                 Action::Decode => steps_taken = self.decode_or_fast_forward(deadline)?,
                 Action::Wait => {
                     if let Some(&r) = self.waiting.front() {
+                        // pool pressure from retained prefixes? free them
+                        // and re-run the scheduler before giving up on r
+                        if self.relieve_for_admission(r) {
+                            continue;
+                        }
                         // a request that can never fit (prompt KV exceeds the
                         // whole pool under this policy) would deadlock FCFS:
                         // reject it like a serving front-end would
@@ -708,6 +744,11 @@ impl<B: ExecutionBackend> Engine<B> {
             Action::Decode => steps_taken = self.decode_or_fast_forward(deadline)?,
             Action::Wait => {
                 if let Some(&r) = self.waiting.front() {
+                    // mirror try_run: retained prefixes yield before any
+                    // wait/drop verdict on the queue head
+                    if self.relieve_for_admission(r) {
+                        return Ok(true); // state changed: caller re-steps
+                    }
                     if self.never_fits(r) {
                         self.waiting.pop_front();
                         self.view_pop_waiting(r);
@@ -1067,11 +1108,17 @@ impl<B: ExecutionBackend> Engine<B> {
     /// have been freed. Returns false without mutating anything in the
     /// two-tier configuration (no disk pool).
     fn relieve_host_pressure(&mut self, need: usize) -> bool {
+        // prefix-cache entries go first (spill to disk or fall out of the
+        // cache entirely) — even in the two-tier configuration, where live
+        // tables have nowhere to spill but cache entries can simply die
+        let mut freed = self.demote_prefix_host(need);
+        if freed >= need {
+            return true;
+        }
         if self.kv.disk.total() == 0 {
             return false;
         }
         let n_layers = self.cfg.model.n_layers;
-        let mut freed = 0usize;
         for vi in (0..self.running.len()).rev() {
             let v = self.running[vi];
             for layer in 0..n_layers {
@@ -1089,6 +1136,162 @@ impl<B: ExecutionBackend> Engine<B> {
             }
         }
         freed >= need
+    }
+
+    // --- cross-request prefix cache -------------------------------------
+    //
+    // All five hooks are bit-invisible unless `cfg.prefix_cache` is on AND
+    // the trace carries non-zero prefix keys: with either absent the store
+    // stays empty, every early-return fires, and no pool observable moves
+    // — the property suite pins the engine to the frozen oracle on exactly
+    // that claim.
+
+    /// Admission-time lookup for `rid` (prefill length `len`), called
+    /// after its table was allocated and before the backend prices the
+    /// prefill. On a hit, `cached_prefix` tells the backend how many
+    /// prompt tokens to skip; host/disk hits add the restore transfer to
+    /// the batch duration and byte counters.
+    fn acquire_prefix(&mut self, rid: ReqId, len: usize, duration: &mut f64) {
+        if !self.cfg.prefix_cache {
+            return;
+        }
+        let key = self.requests[rid].prefix;
+        if key.hash == 0 {
+            return;
+        }
+        // always recompute at least the final prompt token: prefill must
+        // emit token 1, and the scheduler's estimate mirrors this cap
+        let want = key.len.min(len.saturating_sub(1));
+        match self.kv.prefix_acquire(key.hash, want) {
+            Some(hit) => {
+                self.requests[rid].cached_prefix = hit.tokens;
+                self.stats.prefix_hits += 1;
+                self.stats.prefix_hit_tokens += hit.tokens as u64;
+                let layers = self.cfg.model.n_layers;
+                match hit.tier {
+                    Residency::Gpu => {}
+                    Residency::Cpu => {
+                        *duration += self.cost.onload_time(hit.tokens, layers);
+                        self.stats.prefix_restore_bytes +=
+                            self.prefix_wire_bytes(hit.tokens);
+                    }
+                    Residency::Disk => {
+                        *duration += self.cost.disk_restore_time(hit.tokens, layers);
+                        self.stats.prefix_restore_bytes +=
+                            self.prefix_wire_bytes(hit.tokens);
+                    }
+                }
+                if hit.promoted {
+                    self.stats.prefix_promotions += 1;
+                    self.log_transition(
+                        PREFIX_REQ,
+                        0,
+                        hit.tier,
+                        Residency::Gpu,
+                        hit.blocks,
+                    );
+                }
+            }
+            None => self.stats.prefix_misses += 1,
+        }
+    }
+
+    /// Drop `rid`'s lease if it holds one (`cached_prefix` doubles as the
+    /// live-lease marker — set only by a successful acquire).
+    fn release_prefix_lease(&mut self, rid: ReqId) {
+        if self.requests[rid].cached_prefix > 0 {
+            let hash = self.requests[rid].prefix.hash;
+            self.kv.prefix_release(hash);
+            self.requests[rid].cached_prefix = 0;
+        }
+    }
+
+    /// Publish `rid`'s final context into the cache at completion.
+    fn publish_prefix(&mut self, rid: ReqId) {
+        if !self.cfg.prefix_cache {
+            return;
+        }
+        let key = self.requests[rid].prefix;
+        if key.publish == 0 {
+            return;
+        }
+        let out = self.kv.prefix_publish(key.publish, self.requests[rid].context_len());
+        if out.inserted {
+            self.stats.prefix_inserts += 1;
+        }
+        self.stats.prefix_evictions += out.evicted as u64;
+    }
+
+    /// Bytes `tokens` of cached KV occupy on the wire across all layers
+    /// (token-exact, matching `layer_wire_bytes`' accounting).
+    fn prefix_wire_bytes(&self, tokens: usize) -> f64 {
+        tokens as f64
+            * self.cfg.model.n_layers as f64
+            * self.cfg.offload_bytes_per_token_layer()
+            / self.cfg.tp as f64
+    }
+
+    /// Demote GPU-resident cache entries until `need` blocks free (or the
+    /// cache is out of GPU blocks). O(1) bail when the cache holds no GPU
+    /// blocks, so the pre-cache hot paths are untouched.
+    fn demote_prefix_gpu(&mut self, need: usize) -> usize {
+        if self.kv.prefix_blocks_on(Residency::Gpu) == 0 {
+            return 0;
+        }
+        let mut moves = Vec::new();
+        let freed = self.kv.prefix_demote_gpu(need, &mut moves);
+        self.note_prefix_moves(&moves);
+        freed
+    }
+
+    /// Host-tier analog of [`Engine::demote_prefix_gpu`].
+    fn demote_prefix_host(&mut self, need: usize) -> usize {
+        if self.kv.prefix_blocks_on(Residency::Cpu) == 0 {
+            return 0;
+        }
+        let mut moves = Vec::new();
+        let freed = self.kv.prefix_demote_host(need, &mut moves);
+        self.note_prefix_moves(&moves);
+        freed
+    }
+
+    /// Fold a batch of cache demotions into the stats and the transition
+    /// log (`PREFIX_REQ` sentinel rows; outright evictions have no
+    /// destination tier and only count).
+    fn note_prefix_moves(&mut self, moves: &[PrefixMove]) {
+        for m in moves {
+            match m.to {
+                Some(to) => {
+                    self.stats.prefix_demotions += 1;
+                    self.log_transition(PREFIX_REQ, 0, m.from, to, m.blocks);
+                }
+                None => self.stats.prefix_evictions += 1,
+            }
+        }
+    }
+
+    /// The scheduler returned `Wait` with `head` at the front of the
+    /// queue. If the cache is holding blocks the admission may need,
+    /// demote cache entries and report true so the caller re-runs the
+    /// scheduler on the roomier pools — a retained prefix must never
+    /// starve (or force the drop of) a live request. Terminates: every
+    /// true return strictly shrinks the cache's GPU/host footprint, and
+    /// nothing repopulates it while the queue is blocked.
+    fn relieve_for_admission(&mut self, head: ReqId) -> bool {
+        if !self.cfg.prefix_cache {
+            return false;
+        }
+        let demand =
+            self.requests[head].prefill_len().div_ceil(self.cfg.block_size)
+                * self.cfg.model.n_layers;
+        let mut freed = 0usize;
+        if self.kv.gpu.available() < demand {
+            freed += self.demote_prefix_gpu(demand - self.kv.gpu.available());
+        }
+        if self.kv.cpu.available() < demand {
+            freed += self.demote_prefix_host(demand - self.kv.cpu.available());
+        }
+        freed > 0
     }
 
     // --- decode fast-forward (macro-stepping) ---------------------------
@@ -1463,6 +1666,10 @@ impl<B: ExecutionBackend> Engine<B> {
             if self.requests[rid].prefill_start.is_none() {
                 self.requests[rid].prefill_start = Some(self.backend.clock().now());
             }
+            // prefix-cache lookup: the matched span skips recompute (the
+            // backend prices the suffix only); host/disk hits charge the
+            // restore transfer here, against the batch duration
+            self.acquire_prefix(rid, len, &mut duration);
             // execute: modeled duration (sim) or the real forward pass
             let out = self.backend.prefill(&self.requests[rid], &self.kv)?;
             duration += out.duration;
@@ -1699,11 +1906,18 @@ impl<B: ExecutionBackend> Engine<B> {
     /// layers of the most recently prefilled requests (§3.1.1: x/2 first,
     /// then all). vLLM: recompute-preempt the most recent request.
     fn relieve_gpu_pressure(&mut self, needy: ReqId) -> bool {
+        // retained prefixes are strictly lower-value than live decode:
+        // demote cache entries first, under both policies (a no-op — and
+        // bit-invisible — when the cache holds nothing on the GPU)
+        let need = self.requests[needy].context_len() / self.cfg.block_size + 1;
+        let prefix_freed = self.demote_prefix_gpu(need);
+        if prefix_freed >= need {
+            return true;
+        }
         match self.cfg.policy {
             Policy::LayerKv { .. } => {
-                let need = self.requests[needy].context_len() / self.cfg.block_size + 1;
                 let n_layers = self.cfg.model.n_layers;
-                let mut freed = 0usize;
+                let mut freed = prefix_freed;
                 for pass in 0..2 {
                     // most recently prefilled first: reverse sorted order
                     for vi in (0..self.running.len()).rev() {
@@ -1769,6 +1983,7 @@ impl<B: ExecutionBackend> Engine<B> {
     fn preempt_recompute(&mut self, rid: ReqId) {
         self.agg_remove(rid);
         self.view_remove_running(rid);
+        self.release_prefix_lease(rid);
         let _ = self.kv.release(rid);
         self.backend.evict(rid);
         self.running.retain(|&r| r != rid);
@@ -1827,6 +2042,8 @@ impl<B: ExecutionBackend> Engine<B> {
         let _ = self.kv.release(rid);
         self.backend.release(rid);
         self.running.retain(|&r| r != rid);
+        self.release_prefix_lease(rid);
+        self.publish_prefix(rid);
         let now = self.backend.clock().now();
         let r = &mut self.requests[rid];
         r.phase = Phase::Finished;
@@ -2119,6 +2336,87 @@ mod tests {
                 slow.sched_invocations()
             );
         }
+    }
+
+    fn session_trace(n_sessions: usize, rate: f64, seed: u64) -> Trace {
+        crate::workload::SessionWorkload::chat(n_sessions, rate).generate(&mut Rng::new(seed))
+    }
+
+    #[test]
+    fn prefix_cache_invisible_without_prefix_keys() {
+        // a trace with no prefix keys (every hash 0) must be bit-identical
+        // with the cache on or off — the store never populates, so every
+        // hook early-returns; full randomized coverage (routers x
+        // macro-stepping) lives in tests/prop_prefix.rs
+        for policy in [Policy::Vllm, Policy::LayerKv { slo_aware: true }] {
+            let trace = small_trace(2048, 15, 2.0);
+            let on = ServingConfig::llama2_7b_tp1()
+                .with_policy(policy)
+                .with_prefix_cache(true);
+            let off = ServingConfig::llama2_7b_tp1()
+                .with_policy(policy)
+                .with_prefix_cache(false);
+            let (a, sa) = run_trace(on, &trace, 0.8);
+            let (b, sb) = run_trace(off, &trace, 0.8);
+            assert_eq!(a.records, b.records, "policy {policy:?}");
+            assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+            assert_eq!(sa, sb, "policy {policy:?}");
+            assert_eq!(sa.prefix_hits, 0);
+            assert_eq!(sa.prefix_misses, 0);
+            assert_eq!(sa.prefix_inserts, 0);
+        }
+    }
+
+    #[test]
+    fn prefix_counters_reconcile_with_transition_log() {
+        let cfg = ServingConfig::llama2_7b_tp1()
+            .with_policy(Policy::LayerKv { slo_aware: true })
+            .with_prefix_cache(true);
+        let trace = session_trace(8, 2.0, 11);
+        let predictor = standard_predictor(&trace, 0.8);
+        let mut e = Engine::new(cfg, predictor);
+        e.enable_transition_log();
+        let _ = e.run(&trace);
+        let stats = e.stats().clone();
+        assert!(stats.prefix_inserts > 0, "session turns must publish");
+        assert!(stats.prefix_hits > 0, "later turns must hit the cache");
+        assert!(stats.prefix_hit_tokens > 0);
+        // every cache tier move — demotion under pool pressure, promotion
+        // on a warm/cold hit — must appear in the transition log under the
+        // PREFIX_REQ sentinel; outright evictions free blocks without a
+        // destination tier and only count
+        let log = e.take_transitions();
+        let cache_rows = log.iter().filter(|t| t.req == PREFIX_REQ).count() as u64;
+        assert_eq!(
+            cache_rows,
+            stats.prefix_promotions + stats.prefix_demotions,
+            "cache tier moves must reconcile with the transition log"
+        );
+        // live entries are exactly the published-minus-evicted set, and a
+        // drained engine holds no leases
+        assert_eq!(
+            e.kv.prefix_entries() as u64,
+            stats.prefix_inserts - stats.prefix_evictions
+        );
+        assert_eq!(e.kv.prefix_leases(), 0, "drained engine must hold no leases");
+    }
+
+    #[test]
+    fn prefix_cache_cuts_session_ttft() {
+        // multi-turn chat sessions share a long population prefix: with
+        // the cache on, later turns skip most of their prefill compute
+        let cfg = ServingConfig::llama2_7b_tp1()
+            .with_policy(Policy::LayerKv { slo_aware: true });
+        let trace = session_trace(8, 1.0, 7);
+        let (on, son) = run_trace(cfg.clone().with_prefix_cache(true), &trace, 0.8);
+        let (off, soff) = run_trace(cfg.with_prefix_cache(false), &trace, 0.8);
+        assert!(son.prefix_hits > 0);
+        assert_eq!(soff.prefix_hits + soff.prefix_misses + soff.prefix_inserts, 0);
+        let (t_on, t_off) = (on.ttft().mean(), off.ttft().mean());
+        assert!(
+            t_on < 0.85 * t_off,
+            "cache-on mean TTFT {t_on:.3}s must clearly beat cache-off {t_off:.3}s"
+        );
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! Request lifecycle: the state machine every request walks through the
 //! engine, plus the timing fields the SLO-aware scheduler consumes (Eq. 1).
 
-use crate::workload::TraceRequest;
+use crate::workload::{PrefixKey, TraceRequest};
 
 pub type ReqId = usize;
 
@@ -41,6 +41,13 @@ pub struct Request {
     pub predicted: (usize, usize),
     /// Recompute preemptions suffered (vLLM baseline path).
     pub preemptions: usize,
+    /// Shared-prefix identity from the trace (zero = none).
+    pub prefix: PrefixKey,
+    /// Tokens of this request's current prefill served from the prefix
+    /// cache (set at admission, 0 when caching is off or nothing
+    /// matched; also the live-lease marker — reset when the lease is
+    /// released).
+    pub cached_prefix: usize,
 }
 
 impl Request {
@@ -57,6 +64,8 @@ impl Request {
             finish: None,
             predicted,
             preemptions: 0,
+            prefix: t.prefix,
+            cached_prefix: 0,
         }
     }
 
@@ -113,7 +122,13 @@ mod tests {
 
     fn req() -> Request {
         Request::from_trace(
-            &TraceRequest { id: 0, arrival: 1.0, prompt_len: 100, output_len: 50 },
+            &TraceRequest {
+                id: 0,
+                arrival: 1.0,
+                prompt_len: 100,
+                output_len: 50,
+                ..Default::default()
+            },
             (32, 64),
         )
     }

@@ -147,6 +147,11 @@ impl Scheduler for LayerKvScheduler {
             for &rid in ctx.waiting {
                 let r = &ctx.requests[rid];
                 let len = r.prefill_len();
+                // Cache-aware admission: time gates (token budget, Eq. 2
+                // slack) see only the un-cached suffix the GPU will
+                // compute; block demand below stays on the full length so
+                // the solve matches what the engine actually allocates.
+                let eff = ctx.effective_prefill_len(rid);
                 let mut x = self.retained_layers(ctx, len);
                 let per_layer = len.div_ceil(ctx.cfg.block_size);
                 let (need_gpu, need_cpu, need_disk) = if disk_enabled {
@@ -165,7 +170,7 @@ impl Scheduler for LayerKvScheduler {
                     (per_layer * x, per_layer * (l - x), 0)
                 };
                 if seqs + 1 > ctx.cfg.max_num_seqs
-                    || batched_tokens + len > ctx.cfg.max_batched_tokens
+                    || batched_tokens + eff > ctx.cfg.max_batched_tokens
                     || free_gpu < need_gpu
                     || free_cpu < need_cpu
                     || free_disk < need_disk
@@ -174,7 +179,7 @@ impl Scheduler for LayerKvScheduler {
                 }
                 // Algorithm 1 line 6: admit while the cumulative prefill
                 // time stays inside every decoder's slack.
-                let t_prefill = ctx.cost.prefill_time(len);
+                let t_prefill = ctx.cost.prefill_time(eff);
                 if self.slo_aware && sum_prefill + t_prefill >= slack {
                     break;
                 }
@@ -182,7 +187,7 @@ impl Scheduler for LayerKvScheduler {
                 free_gpu -= need_gpu;
                 free_cpu -= need_cpu;
                 free_disk -= need_disk;
-                batched_tokens += len;
+                batched_tokens += eff;
                 seqs += 1;
                 admitted.push((rid, x)); // x already solved: engine reuses it
             }
@@ -296,7 +301,7 @@ mod tests {
         fn add_waiting(&mut self, prompt_len: usize) -> ReqId {
             let id = self.requests.len();
             self.requests.push(Request::from_trace(
-                &TraceRequest { id, arrival: 0.0, prompt_len, output_len: 512 },
+                &TraceRequest { id, arrival: 0.0, prompt_len, output_len: 512, ..Default::default() },
                 (256, 512),
             ));
             self.waiting.push(id);
@@ -306,7 +311,7 @@ mod tests {
         fn add_decoding(&mut self, prompt_len: usize, generated: usize, first_token: f64) -> ReqId {
             let id = self.requests.len();
             let mut r = Request::from_trace(
-                &TraceRequest { id, arrival: 0.0, prompt_len, output_len: 512 },
+                &TraceRequest { id, arrival: 0.0, prompt_len, output_len: 512, ..Default::default() },
                 (256, 512),
             );
             r.phase = Phase::Decoding;

@@ -32,6 +32,31 @@ pub struct SchedContext<'a> {
     pub cfg: &'a ServingConfig,
 }
 
+impl SchedContext<'_> {
+    /// Prefill tokens the GPU will actually *compute* for this request:
+    /// the prompt minus whatever block-aligned prefix the cache can
+    /// serve. Mirrors the engine's `prefix_acquire` cap exactly (same
+    /// floor-to-block-boundary, same "keep at least one token" clamp),
+    /// so admission gates on the cost the backend will later charge.
+    /// Block *demand* intentionally still uses the full length — cached
+    /// blocks are re-materialised into the request's own table, so the
+    /// allocation the scheduler solves for is unchanged.
+    pub fn effective_prefill_len(&self, rid: ReqId) -> usize {
+        let r = &self.requests[rid];
+        let len = r.prefill_len();
+        if !self.cfg.prefix_cache || r.prefix.hash == 0 {
+            return len;
+        }
+        match self.kv.prefix_probe(r.prefix.hash) {
+            Some((tokens, _)) => {
+                let want = r.prefix.len.min(len.saturating_sub(1));
+                len - tokens.min(want / self.cfg.block_size * self.cfg.block_size)
+            }
+            None => len,
+        }
+    }
+}
+
 /// What the engine should do this step.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum Action {

@@ -83,7 +83,7 @@ mod tests {
             .enumerate()
             .map(|(id, &prompt_len)| {
                 Request::from_trace(
-                    &TraceRequest { id, arrival: 0.0, prompt_len, output_len: 32 },
+                    &TraceRequest { id, arrival: 0.0, prompt_len, output_len: 32, ..Default::default() },
                     (32, 64),
                 )
             })

@@ -979,6 +979,161 @@ pub fn print_fleet(rows: &[FleetRow]) {
 }
 
 // ---------------------------------------------------------------------
+// Prefix sweep — cross-request prefix caching on multi-turn sessions:
+// the same chained-session trace with the cache off (every turn pays
+// full prefill) vs on (later turns recompute only their un-cached
+// suffix), plus the cluster-level comparison of kv-pressure routing
+// against the prefix-aware policy that steers session turns back to
+// the replica already holding their context.
+// ---------------------------------------------------------------------
+
+pub struct PrefixRow {
+    /// "engine" (single replica) or "cluster-K".
+    pub scope: &'static str,
+    /// Cache/router variant within the scope.
+    pub variant: &'static str,
+    pub completed: usize,
+    pub ttft_mean: f64,
+    pub ttft_p99: f64,
+    pub tput: f64,
+    pub hits: u64,
+    pub misses: u64,
+    /// Prompt tokens whose recompute was skipped by cache hits.
+    pub hit_tokens: u64,
+    pub inserts: u64,
+    pub evictions: u64,
+}
+
+/// Replicas in the cluster half of the sweep.
+pub const PREFIX_CLUSTER_K: usize = 2;
+
+/// The chained multi-turn chat trace the prefix sweep runs (see
+/// `SessionWorkload::chat`): long shared system prompts, short user
+/// turns, think-time gaps. Deterministic per seed.
+pub fn prefix_trace(n_sessions: usize, rate: f64, seed: u64) -> Trace {
+    crate::workload::SessionWorkload::chat(n_sessions, rate).generate(&mut Rng::new(seed))
+}
+
+/// The sweep at an explicit session count (tests and the CI smoke use a
+/// small one).
+pub fn prefix_sweep_with(n_sessions: usize) -> Vec<PrefixRow> {
+    #[derive(Clone, Copy)]
+    enum Cell {
+        Engine { cache: bool },
+        Cluster { router: RouterPolicy },
+    }
+    let cells = [
+        Cell::Engine { cache: false },
+        Cell::Engine { cache: true },
+        Cell::Cluster { router: RouterPolicy::KvPressure },
+        Cell::Cluster { router: RouterPolicy::PrefixAware },
+    ];
+    par_map(&cells, |&cell| match cell {
+        Cell::Engine { cache } => {
+            let trace = prefix_trace(n_sessions, 0.5, 47);
+            let cfg = setup("7b")
+                .with_policy(Policy::LayerKv { slo_aware: true })
+                .with_prefix_cache(cache);
+            let (rep, stats) = run_trace(cfg, &trace, PREDICTOR_ACC);
+            let mut ttft = rep.ttft();
+            PrefixRow {
+                scope: "engine",
+                variant: if cache { "cache" } else { "no-cache" },
+                completed: rep.records.len(),
+                ttft_mean: ttft.mean(),
+                ttft_p99: ttft.p99(),
+                tput: rep.throughput_tok_s(),
+                hits: stats.prefix_hits,
+                misses: stats.prefix_misses,
+                hit_tokens: stats.prefix_hit_tokens,
+                inserts: stats.prefix_inserts,
+                evictions: stats.prefix_evictions,
+            }
+        }
+        Cell::Cluster { router } => {
+            let k = PREFIX_CLUSTER_K;
+            let trace = prefix_trace(n_sessions * k, 0.5 * k as f64, 47);
+            let cfg = setup("7b")
+                .with_policy(Policy::LayerKv { slo_aware: true })
+                .with_prefix_cache(true);
+            let mut cluster = Cluster::new(&ClusterConfig::homogeneous(&cfg, k, router));
+            let out = cluster.run(&trace).expect("prefix cluster run");
+            let sum = |f: &dyn Fn(&crate::coordinator::EngineStats) -> u64| -> u64 {
+                out.per_replica.iter().map(|o| f(&o.stats)).sum()
+            };
+            let mut ttft = out.merged.ttft();
+            PrefixRow {
+                scope: "cluster-2",
+                variant: router.name(),
+                completed: out.merged.records.len(),
+                ttft_mean: ttft.mean(),
+                ttft_p99: ttft.p99(),
+                tput: out.merged.throughput_tok_s(),
+                hits: sum(&|s| s.prefix_hits),
+                misses: sum(&|s| s.prefix_misses),
+                hit_tokens: sum(&|s| s.prefix_hit_tokens),
+                inserts: sum(&|s| s.prefix_inserts),
+                evictions: sum(&|s| s.prefix_evictions),
+            }
+        }
+    })
+}
+
+pub fn prefix_sweep() -> Vec<PrefixRow> {
+    prefix_sweep_with(n_requests(60))
+}
+
+pub fn print_prefix(rows: &[PrefixRow]) {
+    let mut t = Table::new(
+        "Prefix sweep — cross-request prefix caching on multi-turn chat sessions \
+         (3k shared system prompts, chained histories, 20 s think time)",
+        &["scope", "variant", "completed", "TTFT mean(s)", "TTFT p99(s)", "tok/s",
+          "hits", "misses", "hit rate", "hit Mtok", "inserts", "evicts"],
+    );
+    for r in rows {
+        let total = r.hits + r.misses;
+        let hr = if total > 0 { r.hits as f64 / total as f64 } else { 0.0 };
+        t.row(&[
+            r.scope.to_string(),
+            r.variant.to_string(),
+            r.completed.to_string(),
+            format!("{:.3}", r.ttft_mean),
+            format!("{:.3}", r.ttft_p99),
+            format!("{:.1}", r.tput),
+            r.hits.to_string(),
+            r.misses.to_string(),
+            format!("{:.2}", hr),
+            format!("{:.2}", r.hit_tokens as f64 / 1e6),
+            r.inserts.to_string(),
+            r.evictions.to_string(),
+        ]);
+    }
+    t.print();
+    // headline: mean-TTFT reduction the cache buys on the same trace
+    let get = |variant: &str| rows.iter().find(|r| r.scope == "engine" && r.variant == variant);
+    if let (Some(off), Some(on)) = (get("no-cache"), get("cache")) {
+        let red = 100.0 * (1.0 - on.ttft_mean / off.ttft_mean.max(1e-9));
+        println!(
+            "engine: prefix cache cuts mean TTFT {:.3}s -> {:.3}s ({red:.1}% reduction), \
+             p99 {:.3}s -> {:.3}s",
+            off.ttft_mean, on.ttft_mean, off.ttft_p99, on.ttft_p99,
+        );
+    }
+    let getc = |variant: &str| rows.iter().find(|r| r.scope == "cluster-2" && r.variant == variant);
+    if let (Some(kv), Some(pa)) = (getc("kv-pressure"), getc("prefix-aware")) {
+        let (kt, pt) = (kv.hits + kv.misses, pa.hits + pa.misses);
+        println!(
+            "cluster: prefix-aware routing hit rate {:.2} vs kv-pressure {:.2}, \
+             mean TTFT {:.3}s vs {:.3}s",
+            if pt > 0 { pa.hits as f64 / pt as f64 } else { 0.0 },
+            if kt > 0 { kv.hits as f64 / kt as f64 } else { 0.0 },
+            pa.ttft_mean,
+            kv.ttft_mean,
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
 // Table 1 is qualitative — rendered directly.
 // ---------------------------------------------------------------------
 

@@ -1,8 +1,8 @@
 //! LayerKV command-line entry point.
 //!
 //! ```text
-//! layerkv experiment <fig1|fig4|fig5|fig6|fig7|fig8|tiers|bursty|cluster|cluster-wide|fleet|faults|table1|all>
-//!                    [--quick] [--macro-steps|--no-macro-steps]
+//! layerkv experiment <fig1|fig4|fig5|fig6|fig7|fig8|tiers|bursty|cluster|cluster-wide|fleet|faults|prefix|table1|all>
+//!                    [--quick] [--macro-steps|--no-macro-steps] [--no-prefix-cache]
 //! layerkv sim --model <7b|34b|70b> --policy <vllm|layerkv|layerkv-no-slo>
 //!             --ctx <tokens> --rate <req/s> --requests <n> [--sharegpt]
 //!             [--replicas N] [--router <policy>] [--faults SPEC] [--lockstep]
@@ -19,7 +19,8 @@
 //! serves the deterministic in-process executor instead of PJRT
 //! artifacts (works offline). `--replicas N` runs N engine workers behind
 //! the front-end, with `--router` picking the replica-selection policy
-//! (round-robin | jsq | kv-pressure | slo-aware — see `cluster/`).
+//! (round-robin | jsq | kv-pressure | slo-aware | prefix-aware — see
+//! `cluster/`).
 //!
 //! `sim --replicas N` routes the trace across an N-replica simulated
 //! cluster; `--faults SPEC` injects a deterministic fault schedule
@@ -75,14 +76,14 @@ fn print_help() {
         "layerkv — layer-wise KV cache management for LLM serving (paper reproduction)\n\
          \n\
          USAGE:\n\
-         \x20 layerkv experiment <fig1|fig4|fig5|fig6|fig7|fig8|tiers|bursty|cluster|cluster-wide|fleet|faults|table1|all>\n\
-         \x20                    [--quick] [--macro-steps|--no-macro-steps]\n\
+         \x20 layerkv experiment <fig1|fig4|fig5|fig6|fig7|fig8|tiers|bursty|cluster|cluster-wide|fleet|faults|prefix|table1|all>\n\
+         \x20                    [--quick] [--macro-steps|--no-macro-steps] [--no-prefix-cache]\n\
          \x20 layerkv sim --model 7b --policy layerkv --ctx 4096 --rate 1.0 --requests 100 [--sharegpt]\n\
-         \x20             [--replicas N] [--router round-robin|jsq|kv-pressure|slo-aware] [--lockstep]\n\
+         \x20             [--replicas N] [--router round-robin|jsq|kv-pressure|slo-aware|prefix-aware] [--lockstep]\n\
          \x20             [--faults crash=R@T1[:T2],straggle=R@T1:T2xF,io=R@T1:T2,retries=N,probation=S]\n\
          \x20 layerkv serve [--addr 127.0.0.1:7181] [--artifacts DIR] [--budget BYTES]\n\
          \x20               [--policy vllm|layerkv|layerkv-no-slo] [--max-batch N] [--ref-model]\n\
-         \x20               [--replicas N] [--router round-robin|jsq|kv-pressure|slo-aware]\n\
+         \x20               [--replicas N] [--router round-robin|jsq|kv-pressure|slo-aware|prefix-aware]\n\
          \x20 layerkv bench-check [--baseline BENCH_baseline.json] [--current BENCH_hotpath.json]\n\
          \x20                     [--factor 2.5] [--update]\n\
          \x20 layerkv selftest [--artifacts DIR]"
@@ -109,6 +110,11 @@ fn cmd_experiment(args: &[String]) -> anyhow::Result<()> {
     } else if flag(args, "--macro-steps") {
         std::env::set_var("LAYERKV_MACRO", "1");
     }
+    // cross-request prefix cache (default on; `experiment prefix` runs its
+    // own on/off contrast regardless of this toggle)
+    if flag(args, "--no-prefix-cache") {
+        std::env::set_var("LAYERKV_PREFIX", "0");
+    }
     let which = args.first().map(String::as_str).unwrap_or("all");
     let run = |id: &str| -> anyhow::Result<()> {
         match id {
@@ -130,6 +136,7 @@ fn cmd_experiment(args: &[String]) -> anyhow::Result<()> {
             // (kept out of `all` alongside cluster-wide — scale runs)
             "fleet" => exp::print_fleet(&exp::fleet_sweep()),
             "faults" => exp::print_faults(&exp::fault_sweep()),
+            "prefix" => exp::print_prefix(&exp::prefix_sweep()),
             other => anyhow::bail!("unknown experiment '{other}'"),
         }
         Ok(())
@@ -137,7 +144,7 @@ fn cmd_experiment(args: &[String]) -> anyhow::Result<()> {
     if which == "all" {
         for id in [
             "table1", "fig1", "fig4", "fig5", "fig6", "fig7", "fig8", "tiers", "bursty",
-            "cluster", "faults",
+            "cluster", "faults", "prefix",
         ] {
             run(id)?;
         }
@@ -237,7 +244,7 @@ fn sim_cluster(
     use layerkv::cluster::{Cluster, ClusterConfig, FaultPlan, RouterPolicy};
     let router_name = opt(args, "--router").unwrap_or_else(|| "kv-pressure".into());
     let router = RouterPolicy::parse(&router_name).ok_or_else(|| {
-        anyhow::anyhow!("unknown router '{router_name}' (round-robin|jsq|kv-pressure|slo-aware)")
+        anyhow::anyhow!("unknown router '{router_name}' (round-robin|jsq|kv-pressure|slo-aware|prefix-aware)")
     })?;
     let mut cluster = Cluster::new(&ClusterConfig::homogeneous(&cfg, replicas, router));
     if let Some(spec) = &faults_spec {
@@ -303,7 +310,7 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
     let router_name = opt(args, "--router").unwrap_or_else(|| "kv-pressure".into());
     let router = layerkv::cluster::RouterPolicy::parse(&router_name)
         .ok_or_else(|| anyhow::anyhow!(
-            "unknown router '{router_name}' (round-robin|jsq|kv-pressure|slo-aware)"
+            "unknown router '{router_name}' (round-robin|jsq|kv-pressure|slo-aware|prefix-aware)"
         ))?;
     let cfg = layerkv::runtime::RealEngineConfig {
         device_kv_budget: budget,
@@ -365,6 +372,7 @@ fn cmd_bench_check(args: &[String]) -> anyhow::Result<()> {
     let base = load_bench_json(&baseline)?;
     let mut failures: Vec<String> = Vec::new();
     let mut checked = 0usize;
+    let mut seed_ceilings = 0usize;
     for (name, ns, _) in &cur {
         if !gated(name) {
             continue;
@@ -378,6 +386,9 @@ fn cmd_bench_check(args: &[String]) -> anyhow::Result<()> {
                 checked += 1;
                 let ratio = ns / base_ns.max(1e-9);
                 let tag = if *base_iters == 0.0 { " [seed baseline]" } else { "" };
+                if *base_iters == 0.0 {
+                    seed_ceilings += 1;
+                }
                 if ratio > factor {
                     failures.push(format!(
                         "{name}: {ns:.1} ns/iter vs baseline {base_ns:.1} = {ratio:.2}x{tag}"
@@ -398,6 +409,21 @@ fn cmd_bench_check(args: &[String]) -> anyhow::Result<()> {
         checked > 0,
         "no comparable series found (checked prefixes: {PREFIXES:?})"
     );
+    // A seed ceiling (iters == 0 in the committed baseline) was never
+    // measured on this machine class, so "within {factor}x" of it means
+    // very little — passing against one used to be completely silent.
+    // Say so loudly, and emit a GitHub Actions `::warning` annotation so
+    // CI surfaces it on the run summary instead of burying it in the log.
+    if seed_ceilings > 0 {
+        let msg = format!(
+            "bench-check: {seed_ceilings}/{checked} series compared against SEED \
+             ceilings (iters == 0: never measured on this machine class) — the \
+             gate is advisory for those; refresh with `cargo bench` + \
+             `layerkv bench-check --update` on a representative machine"
+        );
+        eprintln!("WARNING: {msg}");
+        println!("::warning title=bench-check seed baseline::{msg}");
+    }
     if failures.is_empty() {
         println!("bench-check: {checked} series within {factor}x of the baseline");
         Ok(())

@@ -449,6 +449,7 @@ impl<M: TokenModel> RealEngine<M> {
                         .min(smax.saturating_sub(j.prompt.len()))
                         .min((max_prefill + 1).saturating_sub(j.prompt.len()))
                         .max(1),
+                    prefix: Default::default(),
                 })
                 .collect(),
         };

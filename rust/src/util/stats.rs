@@ -56,8 +56,12 @@ impl Series {
             return 0.0;
         }
         if !self.sorted {
-            self.samples
-                .sort_by(|a, b| a.partial_cmp(b).expect("NaN sample"));
+            // total_cmp: a single NaN sample (a degenerate record slipping
+            // through an upstream metric) must not panic the whole report.
+            // NaN sorts above +inf under the IEEE total order, so it lands
+            // at the tail and only the percentiles that genuinely reach
+            // into the tail ever see it.
+            self.samples.sort_by(f64::total_cmp);
             self.sorted = true;
         }
         let n = self.samples.len();
@@ -181,6 +185,25 @@ mod tests {
         assert_eq!(h.underflow, 1);
         assert_eq!(h.overflow, 1);
         assert_eq!(h.total(), 12);
+    }
+
+    #[test]
+    fn nan_sample_cannot_poison_percentiles() {
+        // regression: sort_by(partial_cmp(..).expect("NaN sample"))
+        // panicked the entire report when one record carried a NaN
+        let mut s = Series::new();
+        for i in 1..=99 {
+            s.push(i as f64);
+        }
+        s.push(f64::NAN);
+        // NaN sorts to the very tail under total_cmp: mid percentiles
+        // stay finite and correct
+        assert!((s.p50() - 50.5).abs() < 1e-9);
+        assert!(s.percentile(95.0).is_finite());
+        assert!((s.percentile(0.0) - 1.0).abs() < 1e-9);
+        // only the extreme tail, which genuinely includes the bad
+        // sample, reports it
+        assert!(s.percentile(100.0).is_nan());
     }
 
     #[test]

@@ -34,6 +34,7 @@ impl FixedWorkload {
                 arrival,
                 prompt_len: self.prompt_len,
                 output_len: self.output_len,
+                prefix: Default::default(),
             })
             .collect();
         Trace { requests }

@@ -8,13 +8,33 @@
 
 pub mod arrivals;
 pub mod fixed;
+pub mod session;
 pub mod sharegpt;
 pub mod trace;
 
 pub use arrivals::Arrivals;
+pub use session::SessionWorkload;
+
+/// Content-addressed prefix identity of a request (multi-turn sessions,
+/// shared system prompts). The default (all zeros) means "no shared
+/// prefix" and leaves every engine path byte-identical to a trace that
+/// never heard of prefix caching.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct PrefixKey {
+    /// Content hash of the reusable prefix (0 = none). Token ids are not
+    /// modeled, so the hash *is* the content identity: two requests share
+    /// a prefix iff their hashes match.
+    pub hash: u64,
+    /// Token length of that prefix (<= prompt_len; matching happens at
+    /// block granularity, so only whole blocks of it can be reused).
+    pub len: usize,
+    /// Hash under which this request publishes its own context for
+    /// successors when it completes (0 = publish nothing).
+    pub publish: u64,
+}
 
 /// One request as the workload layer hands it to the engine.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone, PartialEq, Default)]
 pub struct TraceRequest {
     pub id: usize,
     /// Seconds since trace start.
@@ -23,6 +43,8 @@ pub struct TraceRequest {
     /// True output length (the engine stops there; the predictor only sees
     /// a noisy bucket of it).
     pub output_len: usize,
+    /// Shared-prefix identity (zero = none; see [`PrefixKey`]).
+    pub prefix: PrefixKey,
 }
 
 /// A full trace, sorted by arrival time.
@@ -63,6 +85,18 @@ impl Trace {
             if r.prompt_len == 0 || r.output_len == 0 {
                 return Err(format!("degenerate request {}", r.id));
             }
+            if r.prefix.len > r.prompt_len {
+                return Err(format!(
+                    "request {}: prefix len {} exceeds prompt len {}",
+                    r.id, r.prefix.len, r.prompt_len
+                ));
+            }
+            if r.prefix.hash == 0 && r.prefix.len != 0 {
+                return Err(format!(
+                    "request {}: prefix len {} with no prefix hash",
+                    r.id, r.prefix.len
+                ));
+            }
         }
         Ok(())
     }
@@ -84,8 +118,8 @@ mod tests {
     fn validate_catches_disorder() {
         let t = Trace {
             requests: vec![
-                TraceRequest { id: 0, arrival: 1.0, prompt_len: 8, output_len: 8 },
-                TraceRequest { id: 1, arrival: 0.5, prompt_len: 8, output_len: 8 },
+                TraceRequest { id: 0, arrival: 1.0, prompt_len: 8, output_len: 8, ..Default::default() },
+                TraceRequest { id: 1, arrival: 0.5, prompt_len: 8, output_len: 8, ..Default::default() },
             ],
         };
         assert!(t.validate().is_err());
@@ -94,7 +128,7 @@ mod tests {
     #[test]
     fn validate_catches_bad_ids() {
         let t = Trace {
-            requests: vec![TraceRequest { id: 3, arrival: 0.0, prompt_len: 8, output_len: 8 }],
+            requests: vec![TraceRequest { id: 3, arrival: 0.0, prompt_len: 8, output_len: 8, ..Default::default() }],
         };
         assert!(t.validate().is_err());
     }
@@ -106,9 +140,9 @@ mod tests {
         for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
             let t = Trace {
                 requests: vec![
-                    TraceRequest { id: 0, arrival: 0.5, prompt_len: 8, output_len: 8 },
-                    TraceRequest { id: 1, arrival: bad, prompt_len: 8, output_len: 8 },
-                    TraceRequest { id: 2, arrival: 1.0, prompt_len: 8, output_len: 8 },
+                    TraceRequest { id: 0, arrival: 0.5, prompt_len: 8, output_len: 8, ..Default::default() },
+                    TraceRequest { id: 1, arrival: bad, prompt_len: 8, output_len: 8, ..Default::default() },
+                    TraceRequest { id: 2, arrival: 1.0, prompt_len: 8, output_len: 8, ..Default::default() },
                 ],
             };
             assert!(t.validate().is_err(), "arrival {bad} must be rejected");
@@ -116,10 +150,28 @@ mod tests {
         // a finite, sorted trace still validates
         let ok = Trace {
             requests: vec![
-                TraceRequest { id: 0, arrival: 0.0, prompt_len: 8, output_len: 8 },
-                TraceRequest { id: 1, arrival: 0.0, prompt_len: 8, output_len: 8 },
+                TraceRequest { id: 0, arrival: 0.0, prompt_len: 8, output_len: 8, ..Default::default() },
+                TraceRequest { id: 1, arrival: 0.0, prompt_len: 8, output_len: 8, ..Default::default() },
             ],
         };
         assert!(ok.validate().is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_bad_prefix_keys() {
+        let mut t = Trace {
+            requests: vec![TraceRequest {
+                id: 0,
+                arrival: 0.0,
+                prompt_len: 8,
+                output_len: 8,
+                prefix: PrefixKey { hash: 7, len: 9, publish: 0 },
+            }],
+        };
+        assert!(t.validate().is_err(), "prefix longer than the prompt");
+        t.requests[0].prefix = PrefixKey { hash: 0, len: 4, publish: 0 };
+        assert!(t.validate().is_err(), "prefix length without a hash");
+        t.requests[0].prefix = PrefixKey { hash: 7, len: 8, publish: 9 };
+        assert!(t.validate().is_ok());
     }
 }

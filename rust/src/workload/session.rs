@@ -1,0 +1,211 @@
+//! Multi-turn chat/RAG session workload — the shape the flat trace
+//! model cannot express: a population of users sharing a handful of
+//! long system prompts, each user holding a conversation whose turns
+//! arrive after think-time gaps and whose prompt is the full prior
+//! context plus a short new user message.
+//!
+//! Prefix identity is chained through [`PrefixKey`]:
+//!
+//! * turn 1 claims the population's shared system prompt
+//!   (`hash = population hash`) and publishes its context back under the
+//!   *population* hash — the first session to complete seeds the cache
+//!   every later session's turn 1 hits;
+//! * turn 2 still claims the population prefix (its own turn-1 context
+//!   was published under the population hash) and publishes its full
+//!   context under a session-chain hash;
+//! * turns 3+ claim the previous turn's session-chain hash — full
+//!   conversation-history reuse — and publish the chain forward.
+//!
+//! Arrivals are open-loop: turn t arrives a think-time gap after turn
+//! t-1's *arrival* (the generator cannot know completions). Gaps default
+//! to tens of seconds, so under sane load the predecessor has published
+//! by the time its successor arrives; when it hasn't, the lookup simply
+//! misses and the turn pays full prefill — conservation never depends on
+//! hit rate.
+
+use super::arrivals::Arrivals;
+use super::{PrefixKey, Trace, TraceRequest};
+use crate::util::Rng;
+
+/// Hashes must survive a JSON round-trip through f64 (trace.rs), so the
+/// generator masks them to 48 bits.
+const HASH_MASK: u64 = (1 << 48) - 1;
+
+/// splitmix64-style mix, masked to 48 bits and never 0 (0 means "no
+/// prefix" in [`PrefixKey`]).
+fn mix_hash(a: u64, b: u64) -> u64 {
+    let mut z = a ^ b.wrapping_mul(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    let h = (z ^ (z >> 31)) & HASH_MASK;
+    h.max(1)
+}
+
+#[derive(Debug, Clone)]
+pub struct SessionWorkload {
+    /// Conversations to generate.
+    pub n_sessions: usize,
+    /// Distinct shared system prompts the sessions draw from.
+    pub n_populations: usize,
+    /// Tokens of each population's shared system prompt.
+    pub shared_prefix_len: usize,
+    /// Turns per session, uniform in [min, max].
+    pub turns: (usize, usize),
+    /// Tokens of each new user message, uniform in [min, max].
+    pub user_len: (usize, usize),
+    /// Tokens of each assistant reply, uniform in [min, max].
+    pub output_len: (usize, usize),
+    /// Mean think-time gap between a turn's arrival and the next (s),
+    /// exponentially distributed.
+    pub mean_think_s: f64,
+    /// Session-start arrival process.
+    pub arrivals: Arrivals,
+}
+
+impl SessionWorkload {
+    /// A chat-assistant shape: long shared system prompts (the RAG/system
+    /// context that dominates prefill), short user turns, short replies.
+    pub fn chat(n_sessions: usize, rate: f64) -> Self {
+        SessionWorkload {
+            n_sessions,
+            n_populations: 4,
+            shared_prefix_len: 3072,
+            turns: (3, 6),
+            user_len: (32, 192),
+            output_len: (48, 160),
+            mean_think_s: 20.0,
+            arrivals: Arrivals::Poisson { rate },
+        }
+    }
+
+    /// Generate the interleaved trace: all sessions' turns merged, sorted
+    /// by arrival, ids dense. Deterministic per seed.
+    pub fn generate(&self, rng: &mut Rng) -> Trace {
+        assert!(self.n_sessions > 0 && self.n_populations > 0);
+        assert!(self.turns.0 >= 1 && self.turns.1 >= self.turns.0);
+        assert!(self.user_len.0 >= 1 && self.user_len.1 >= self.user_len.0);
+        assert!(self.output_len.0 >= 1 && self.output_len.1 >= self.output_len.0);
+        assert!(self.mean_think_s > 0.0 && self.mean_think_s.is_finite());
+
+        let starts = self.arrivals.generate(self.n_sessions, rng);
+        let mut requests = Vec::new();
+        for (sess, &start) in starts.iter().enumerate() {
+            let pop = rng.range_usize(0, self.n_populations);
+            let pop_hash = mix_hash(0x5E55, pop as u64);
+            let n_turns = rng.range_usize(self.turns.0, self.turns.1 + 1);
+            let mut arrival = start;
+            // context the previous turn published (tokens), and its hash
+            let mut chain_hash = 0u64;
+            let mut chain_len = 0usize;
+            for turn in 0..n_turns {
+                let user = rng.range_usize(self.user_len.0, self.user_len.1 + 1);
+                let output = rng.range_usize(self.output_len.0, self.output_len.1 + 1);
+                let (hash, cached_len, base) = if turn <= 1 {
+                    // turns 1-2 reuse the population's shared system
+                    // prompt (turn 2's own history lives under the
+                    // population hash too — see module docs)
+                    let base = if turn == 0 {
+                        self.shared_prefix_len
+                    } else {
+                        chain_len
+                    };
+                    (pop_hash, self.shared_prefix_len, base)
+                } else {
+                    (chain_hash, chain_len, chain_len)
+                };
+                let prompt_len = base + user;
+                let publish = if turn == 0 {
+                    pop_hash
+                } else {
+                    mix_hash(0xC0A1 + sess as u64, turn as u64)
+                };
+                requests.push(TraceRequest {
+                    id: 0, // assigned after the global sort
+                    arrival,
+                    prompt_len,
+                    output_len: output,
+                    prefix: PrefixKey { hash, len: cached_len, publish },
+                });
+                chain_hash = publish;
+                chain_len = prompt_len + output;
+                arrival += rng.exponential(1.0 / self.mean_think_s);
+            }
+        }
+        // merge the sessions into one arrival-ordered trace; total_cmp
+        // (plus the insertion index for ties) keeps the order total and
+        // deterministic
+        let mut order: Vec<usize> = (0..requests.len()).collect();
+        order.sort_by(|&a, &b| {
+            requests[a]
+                .arrival
+                .total_cmp(&requests[b].arrival)
+                .then(a.cmp(&b))
+        });
+        let mut sorted: Vec<TraceRequest> = order.into_iter().map(|i| requests[i].clone()).collect();
+        for (i, r) in sorted.iter_mut().enumerate() {
+            r.id = i;
+        }
+        let trace = Trace { requests: sorted };
+        debug_assert!(trace.validate().is_ok(), "{:?}", trace.validate());
+        trace
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generates_valid_chained_trace() {
+        let w = SessionWorkload::chat(12, 0.5);
+        let t = w.generate(&mut Rng::new(3));
+        t.validate().unwrap();
+        assert!(t.len() >= 12 * 3 && t.len() <= 12 * 6);
+        // every request claims and publishes a prefix
+        assert!(t.requests.iter().all(|r| r.prefix.hash != 0));
+        assert!(t.requests.iter().all(|r| r.prefix.publish != 0));
+        // hashes survive the f64 JSON round-trip
+        assert!(t
+            .requests
+            .iter()
+            .all(|r| r.prefix.hash < (1 << 48) && r.prefix.publish < (1 << 48)));
+        // later turns carry their whole history: some prompts must far
+        // exceed the shared prefix + one user message
+        let max = t.requests.iter().map(|r| r.prompt_len).max().unwrap();
+        assert!(max > w.shared_prefix_len + w.user_len.1 + w.output_len.1);
+    }
+
+    #[test]
+    fn shared_prefix_population_is_shared() {
+        let w = SessionWorkload::chat(30, 1.0);
+        let t = w.generate(&mut Rng::new(9));
+        // first turns across sessions collapse onto <= n_populations hashes
+        let mut pop_hashes: Vec<u64> = t
+            .requests
+            .iter()
+            .filter(|r| r.prefix.len == w.shared_prefix_len)
+            .map(|r| r.prefix.hash)
+            .collect();
+        assert!(!pop_hashes.is_empty());
+        pop_hashes.sort_unstable();
+        pop_hashes.dedup();
+        assert!(pop_hashes.len() <= w.n_populations);
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let w = SessionWorkload::chat(20, 1.0);
+        let a = w.generate(&mut Rng::new(77));
+        let b = w.generate(&mut Rng::new(77));
+        assert_eq!(a.requests, b.requests);
+    }
+
+    #[test]
+    fn think_time_spreads_turns() {
+        let w = SessionWorkload::chat(5, 10.0);
+        let t = w.generate(&mut Rng::new(21));
+        // the trace must span at least a couple of think gaps
+        let span = t.requests.last().unwrap().arrival - t.requests[0].arrival;
+        assert!(span > w.mean_think_s, "span={span}");
+    }
+}

@@ -52,6 +52,7 @@ impl ShareGptWorkload {
                 arrival,
                 prompt_len: self.sample_prompt(rng),
                 output_len: self.sample_output(rng),
+                prefix: Default::default(),
             })
             .collect();
         Trace { requests }

@@ -7,19 +7,35 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
-use super::{Trace, TraceRequest};
+use super::{PrefixKey, Trace, TraceRequest};
 use crate::util::Json;
 
 /// Write a trace as JSON-lines: {"id":0,"arrival":0.13,"prompt_len":...}.
+/// Prefix identity is only written when present, so prefix-free traces
+/// keep the exact line format earlier versions emitted.
 pub fn save(trace: &Trace, path: &Path) -> Result<()> {
     let mut f = std::fs::File::create(path)
         .with_context(|| format!("creating {}", path.display()))?;
     for r in &trace.requests {
-        writeln!(
-            f,
-            r#"{{"id":{},"arrival":{},"prompt_len":{},"output_len":{}}}"#,
-            r.id, r.arrival, r.prompt_len, r.output_len
-        )?;
+        if r.prefix == PrefixKey::default() {
+            writeln!(
+                f,
+                r#"{{"id":{},"arrival":{},"prompt_len":{},"output_len":{}}}"#,
+                r.id, r.arrival, r.prompt_len, r.output_len
+            )?;
+        } else {
+            writeln!(
+                f,
+                r#"{{"id":{},"arrival":{},"prompt_len":{},"output_len":{},"prefix_hash":{},"prefix_len":{},"publish_hash":{}}}"#,
+                r.id,
+                r.arrival,
+                r.prompt_len,
+                r.output_len,
+                r.prefix.hash,
+                r.prefix.len,
+                r.prefix.publish
+            )?;
+        }
     }
     Ok(())
 }
@@ -35,11 +51,23 @@ pub fn load(path: &Path) -> Result<Trace> {
         }
         let j = Json::parse(&line)
             .map_err(|e| anyhow::anyhow!("{}:{}: {e}", path.display(), lineno + 1))?;
+        // prefix fields are optional: traces written before prefix
+        // caching (or without shared prefixes) simply omit them. Hashes
+        // ride through f64 parsing, so generators keep them < 2^53
+        // (SessionWorkload masks to 48 bits).
+        let opt_u64 = |key: &str| -> u64 {
+            j.get(key).and_then(Json::as_f64).unwrap_or(0.0) as u64
+        };
         requests.push(TraceRequest {
             id: j.req("id")?.as_usize().context("id")?,
             arrival: j.req("arrival")?.as_f64().context("arrival")?,
             prompt_len: j.req("prompt_len")?.as_usize().context("prompt_len")?,
             output_len: j.req("output_len")?.as_usize().context("output_len")?,
+            prefix: PrefixKey {
+                hash: opt_u64("prefix_hash"),
+                len: j.get("prefix_len").and_then(Json::as_usize).unwrap_or(0),
+                publish: opt_u64("publish_hash"),
+            },
         });
     }
     let trace = Trace { requests };
@@ -59,6 +87,21 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("t.jsonl");
         let t = ShareGptWorkload::paper(2.0, 50).generate(&mut Rng::new(3));
+        save(&t, &path).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(t.requests, back.requests);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn roundtrip_with_prefixes() {
+        use crate::workload::SessionWorkload;
+        let dir =
+            std::env::temp_dir().join(format!("layerkv-trace-pfx-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("sessions.jsonl");
+        let t = SessionWorkload::chat(8, 1.0).generate(&mut Rng::new(4));
+        assert!(t.requests.iter().any(|r| r.prefix.hash != 0));
         save(&t, &path).unwrap();
         let back = load(&path).unwrap();
         assert_eq!(t.requests, back.requests);

@@ -1,0 +1,295 @@
+//! Prefix-cache invariants (randomized, seeded, replayable via
+//! LAYERKV_PROP_SEED / LAYERKV_PROP_CASES — see util::prop; CI's
+//! prop-deep job runs this suite at 512 cases):
+//!
+//! * generator determinism — `SessionWorkload` is a pure function of its
+//!   seed: same seed, same trace, down to every prefix key;
+//! * cache-off bit-identity — with `prefix_cache(false)` the engine is
+//!   bit-identical to the frozen pre-refactor reference on session
+//!   traces dense with prefix keys, and with the cache ON it stays
+//!   bit-identical on traces that carry no keys — the cache must be
+//!   unobservable unless both the flag and the keys are present;
+//! * macro-stepping and routers stay invisible with the cache ON —
+//!   cache ops only fire at admission/completion boundaries, which end
+//!   macro spans, and a 1-replica cluster routes identically under
+//!   every policy (including prefix-aware);
+//! * conservation — session traces through a k-replica cluster under a
+//!   random router: every request comes back exactly once, and the
+//!   prefix counters stay internally consistent per replica.
+
+#[path = "support/reference_engine.rs"]
+mod reference_engine;
+
+use layerkv::cluster::{Cluster, ClusterConfig, RouterPolicy};
+use layerkv::config::{Policy, ServingConfig};
+use layerkv::coordinator::{run_trace, standard_predictor, Engine, EngineStats};
+use layerkv::util::prop::prop;
+use layerkv::util::Rng;
+use layerkv::workload::arrivals::Arrivals;
+use layerkv::workload::fixed::FixedWorkload;
+use layerkv::workload::sharegpt::ShareGptWorkload;
+use layerkv::workload::{SessionWorkload, Trace};
+
+fn random_session_workload(rng: &mut Rng) -> SessionWorkload {
+    let mut w = SessionWorkload::chat(rng.range_usize(3, 14), rng.f64() * 1.5 + 0.3);
+    if rng.chance(0.3) {
+        w.shared_prefix_len = rng.range_usize(256, 3072);
+    }
+    if rng.chance(0.3) {
+        w.mean_think_s = rng.f64() * 30.0 + 2.0;
+    }
+    w
+}
+
+fn session_trace(rng: &mut Rng) -> Trace {
+    random_session_workload(rng).generate(rng)
+}
+
+/// A trace with NO prefix keys (every hash zero) — fixed or ShareGPT.
+fn keyless_trace(rng: &mut Rng, n: usize) -> Trace {
+    if rng.chance(0.5) {
+        ShareGptWorkload::paper(rng.f64() * 4.0 + 0.5, n).generate(rng)
+    } else {
+        FixedWorkload {
+            prompt_len: rng.range_usize(16, 4096),
+            output_len: rng.range_usize(4, 128),
+            n_requests: n,
+            arrivals: Arrivals::Poisson { rate: rng.f64() * 3.0 + 0.2 },
+        }
+        .generate(rng)
+    }
+}
+
+fn assert_stats_bit_identical(a: &EngineStats, b: &EngineStats, what: &str) {
+    assert_eq!(
+        (a.steps, a.prefill_steps, a.decode_steps, a.preemptions),
+        (b.steps, b.prefill_steps, b.decode_steps, b.preemptions),
+        "{what}: step counters diverge"
+    );
+    assert_eq!(
+        (a.proactive_offload_layers, a.oom_forced_offload_layers, a.onloaded_layers),
+        (b.proactive_offload_layers, b.oom_forced_offload_layers, b.onloaded_layers),
+        "{what}: residency counters diverge"
+    );
+    assert_eq!(a.dropped, b.dropped, "{what}: dropped lists diverge");
+    assert_eq!(a.offload_bytes.to_bits(), b.offload_bytes.to_bits(), "{what}: offload_bytes");
+    assert_eq!(
+        a.onload_stream_bytes.to_bits(),
+        b.onload_stream_bytes.to_bits(),
+        "{what}: onload_stream_bytes"
+    );
+    assert_eq!(a.stream_stall_s.to_bits(), b.stream_stall_s.to_bits(), "{what}: stream_stall_s");
+    assert_eq!(a.contention_s.to_bits(), b.contention_s.to_bits(), "{what}: contention_s");
+}
+
+fn assert_prefix_counters_zero(s: &EngineStats, what: &str) {
+    assert_eq!(
+        (s.prefix_hits, s.prefix_misses, s.prefix_hit_tokens, s.prefix_inserts),
+        (0, 0, 0, 0),
+        "{what}: prefix counters must stay zero"
+    );
+    assert_eq!(
+        (s.prefix_evictions, s.prefix_demotions, s.prefix_promotions),
+        (0, 0, 0),
+        "{what}: prefix movement counters must stay zero"
+    );
+    assert_eq!(s.prefix_restore_bytes.to_bits(), 0.0f64.to_bits(), "{what}: restore bytes");
+}
+
+#[test]
+fn prop_session_generator_deterministic_per_seed() {
+    prop(32, |rng| {
+        let w = random_session_workload(rng);
+        let seed = rng.next_u64();
+        let a = w.generate(&mut Rng::new(seed));
+        let b = w.generate(&mut Rng::new(seed));
+        assert_eq!(a.requests, b.requests, "same seed must yield the same trace");
+        a.validate().unwrap();
+        // ids dense and arrival-ordered; every key 48-bit clean (survives
+        // the JSON f64 round-trip) and never the reserved 0
+        for (i, r) in a.requests.iter().enumerate() {
+            assert_eq!(r.id, i);
+            assert!(r.prefix.hash != 0 && r.prefix.hash < (1 << 48));
+            assert!(r.prefix.publish != 0 && r.prefix.publish < (1 << 48));
+            assert!(r.prefix.len <= r.prompt_len);
+        }
+    });
+}
+
+/// With the cache DISABLED the engine must be bit-identical to the frozen
+/// pre-refactor reference even on traces dense with prefix keys: every
+/// hook is gated on `cfg.prefix_cache` before it reads the key.
+#[test]
+fn prop_cache_off_bit_identical_to_reference_on_session_traces() {
+    prop(6, |rng| {
+        let trace = session_trace(rng);
+        for policy in [
+            Policy::Vllm,
+            Policy::LayerKv { slo_aware: true },
+            Policy::LayerKv { slo_aware: false },
+        ] {
+            let cfg = ServingConfig::llama2_7b_tp1()
+                .with_policy(policy)
+                .with_prefix_cache(false);
+            let (rep, stats) = run_trace(cfg.clone(), &trace, 0.8);
+            let (ref_rep, ref_stats) = reference_engine::run_trace_reference(cfg, &trace, 0.8);
+            assert_eq!(rep.records, ref_rep.records, "{policy:?}: records diverge");
+            assert_eq!(rep.makespan.to_bits(), ref_rep.makespan.to_bits());
+            assert_stats_bit_identical(&stats, &ref_stats, &format!("{policy:?}"));
+            assert_prefix_counters_zero(&stats, &format!("{policy:?} cache-off"));
+        }
+    });
+}
+
+/// With the cache ENABLED but the trace carrying no keys, the store never
+/// populates and the engine stays bit-identical to the reference: the
+/// pre-cache fleet (every existing trace, golden, and experiment) cannot
+/// observe the feature.
+#[test]
+fn prop_cache_on_invisible_without_keys() {
+    prop(6, |rng| {
+        let n = rng.range_usize(5, 30);
+        let trace = keyless_trace(rng, n);
+        for policy in [Policy::Vllm, Policy::LayerKv { slo_aware: true }] {
+            let cfg = ServingConfig::llama2_7b_tp1()
+                .with_policy(policy)
+                .with_prefix_cache(true);
+            let (rep, stats) = run_trace(cfg.clone(), &trace, 0.8);
+            let (ref_rep, ref_stats) = reference_engine::run_trace_reference(cfg, &trace, 0.8);
+            assert_eq!(rep.records, ref_rep.records, "{policy:?}: records diverge");
+            assert_eq!(rep.makespan.to_bits(), ref_rep.makespan.to_bits());
+            assert_stats_bit_identical(&stats, &ref_stats, &format!("{policy:?}"));
+            assert_prefix_counters_zero(&stats, &format!("{policy:?} keyless"));
+        }
+    });
+}
+
+/// Cache ON, session trace: decode fast-forwarding must stay bit-invisible
+/// — cache ops (acquire at admission, publish at completion, demotion when
+/// a queued head waits) all fire at scheduler boundaries, and the macro
+/// path never skips one (it bails whenever the queue is non-empty).
+#[test]
+fn prop_macro_stepping_invisible_with_cache_on() {
+    prop(6, |rng| {
+        let trace = session_trace(rng);
+        for policy in [Policy::Vllm, Policy::LayerKv { slo_aware: true }] {
+            let cfg = ServingConfig::llama2_7b_tp1()
+                .with_policy(policy)
+                .with_prefix_cache(true);
+            let predictor = standard_predictor(&trace, 0.8);
+
+            let mut fast = Engine::new(cfg.clone(), predictor.clone());
+            fast.set_macro_steps(true);
+            fast.enable_transition_log();
+            let rep_fast = fast.run(&trace);
+
+            let mut slow = Engine::new(cfg, predictor);
+            slow.set_macro_steps(false);
+            slow.enable_transition_log();
+            let rep_slow = slow.run(&trace);
+
+            assert_eq!(rep_fast.records, rep_slow.records, "{policy:?}: records diverge");
+            assert_eq!(rep_fast.makespan.to_bits(), rep_slow.makespan.to_bits());
+            assert_eq!(fast.stats(), slow.stats(), "{policy:?}: stats diverge");
+            assert_eq!(
+                fast.take_transitions(),
+                slow.take_transitions(),
+                "{policy:?}: transition logs diverge"
+            );
+        }
+    });
+}
+
+/// A 1-replica cluster routes identically under every policy — including
+/// prefix-aware, whose affinity score cannot change a single-candidate
+/// argmax — so the whole incremental drive must reproduce `run_trace`
+/// bit-for-bit with the cache ON and keys present.
+#[test]
+fn prop_single_replica_identity_with_cache_on_across_routers() {
+    prop(4, |rng| {
+        let trace = session_trace(rng);
+        let cfg = ServingConfig::llama2_7b_tp1()
+            .with_policy(Policy::LayerKv { slo_aware: true })
+            .with_prefix_cache(true);
+        let (bare, bare_stats) = run_trace(cfg.clone(), &trace, 0.8);
+        for router in RouterPolicy::ALL {
+            let ccfg = ClusterConfig {
+                replicas: vec![cfg.clone()],
+                router: *router,
+                predictor_accuracy: 0.8,
+            };
+            let mut cluster = Cluster::new(&ccfg);
+            let out = cluster.run(&trace).expect("sim cluster never fails");
+            assert_eq!(
+                out.merged.records,
+                bare.records,
+                "router {}: records diverge from the bare engine",
+                router.name()
+            );
+            assert_eq!(out.merged.makespan.to_bits(), bare.makespan.to_bits());
+            assert_eq!(
+                &out.per_replica[0].stats,
+                &bare_stats,
+                "router {}: engine stats (incl. prefix counters) diverge",
+                router.name()
+            );
+        }
+    });
+}
+
+/// Session traces through a k-replica cluster, cache ON, random router:
+/// conservation holds regardless of hit rate, and the per-replica prefix
+/// counters stay internally consistent.
+#[test]
+fn prop_session_cluster_conserves_and_counters_consistent() {
+    prop(6, |rng| {
+        let trace = session_trace(rng);
+        let n = trace.requests.len();
+        let k = rng.range_usize(1, 5);
+        let router = RouterPolicy::ALL[rng.range_usize(0, RouterPolicy::ALL.len())];
+        let cfg = ServingConfig::llama2_7b_tp1()
+            .with_policy(Policy::LayerKv { slo_aware: true })
+            .with_prefix_cache(true);
+        let mut cluster = Cluster::new(&ClusterConfig::homogeneous(&cfg, k, router));
+        let out = cluster.run(&trace).expect("sim cluster never fails");
+        assert_eq!(
+            out.per_replica.iter().map(|o| o.routed).sum::<usize>(),
+            n,
+            "router {} on {k} replicas lost/duplicated a routing",
+            router.name()
+        );
+        let mut ids: Vec<usize> = out.merged.records.iter().map(|r| r.id).collect();
+        ids.extend(out.dropped.iter().copied());
+        ids.sort_unstable();
+        assert_eq!(
+            ids,
+            (0..n).collect::<Vec<_>>(),
+            "router {}: completions + drops must be a permutation of the trace",
+            router.name()
+        );
+        for (i, o) in out.per_replica.iter().enumerate() {
+            let s = &o.stats;
+            // an acquire happens at most once per prefill pass: one per
+            // routed request plus one per preemption-forced re-prefill;
+            // and hit tokens only exist where hits do
+            assert!(
+                s.prefix_hits + s.prefix_misses <= o.routed as u64 + s.preemptions,
+                "replica {i}: more lookups than prefill passes"
+            );
+            if s.prefix_hits == 0 {
+                assert_eq!(s.prefix_hit_tokens, 0, "replica {i}: phantom hit tokens");
+            }
+            // the store can never evict more than was ever inserted
+            assert!(
+                s.prefix_evictions <= s.prefix_inserts,
+                "replica {i}: evicted {} of only {} inserts",
+                s.prefix_evictions,
+                s.prefix_inserts
+            );
+            // restores are host/disk hits only — absent hits, no bytes
+            if s.prefix_hits == 0 {
+                assert_eq!(s.prefix_restore_bytes.to_bits(), 0.0f64.to_bits());
+            }
+        }
+    });
+}
