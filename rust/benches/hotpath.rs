@@ -430,6 +430,54 @@ fn main() {
         }
     });
 
+    // --- observability hot path -----------------------------------------
+    // The per-event cost an instrumented run pays: lifecycle records
+    // through the handle (lock + ring push, overwrite-oldest, 1000 per
+    // iter like predictor/predict) and one full gauge sweep (8 samples
+    // read straight off live engine state). Tracing OFF is a single
+    // branch per hook — this series prices tracing ON.
+    {
+        use layerkv::obs::{EventKind, TraceHandle, TraceRecord};
+        let h = TraceHandle::new(1 << 16, 1 << 14);
+        let mut t = 0.0f64;
+        bench("obs/trace_record", 1.0, || {
+            for i in 0..1000u64 {
+                t += 1e-4;
+                h.record(TraceRecord {
+                    t0: t,
+                    t1: t + 5e-5,
+                    kind: EventKind::Decode,
+                    track: (i % 4) as u32,
+                    req: i,
+                    a: 1,
+                    b: 0,
+                    c: 0,
+                });
+            }
+            black_box(h.lock().spans_len());
+        });
+
+        let cfg = ServingConfig::llama2_7b_tp1()
+            .with_policy(Policy::LayerKv { slo_aware: true });
+        let trace = FixedWorkload {
+            prompt_len: 512,
+            output_len: 64,
+            n_requests: 16,
+            arrivals: Arrivals::Burst,
+        }
+        .generate(&mut Rng::new(7));
+        let p = LengthPredictor::new(64, 0.8, 42);
+        let mut e = Engine::new(cfg, LengthPredictor::new(64, 0.8, 42));
+        e.set_tracer(h.clone());
+        for tr in &trace.requests {
+            e.submit(tr, p.predict(tr.id, tr.output_len));
+        }
+        bench("obs/gauge_sample", 1.0, || {
+            e.trace_sample_gauges();
+        });
+        black_box(e.now());
+    }
+
     // --- real PJRT path --------------------------------------------------
     let dir = layerkv::runtime::artifacts::default_dir();
     if dir.join("manifest.json").exists() {

@@ -52,7 +52,7 @@ pub mod router;
 
 pub use faults::{CrashWindow, FaultPlan, HealthRouter, IoBurst, Straggler};
 pub use replica::Replica;
-pub use report::{ClusterReport, ReplicaOutcome};
+pub use report::{ClusterReport, ReplicaOutcome, RequestAttribution};
 pub use router::{
     kv_pressure_score, make_router, prefix_affinity_score, ReplicaView, RouteQuery, Router,
     RouterPolicy,
@@ -67,6 +67,7 @@ use crate::config::ServingConfig;
 use crate::coordinator::backend::{ExecutionBackend, SimBackend};
 use crate::coordinator::{standard_predictor, Engine, LengthPredictor, CLOCK_EPS};
 use crate::metrics::{FaultEvent, FaultKind, FaultSummary, RequestRecord};
+use crate::obs::{self, EventKind, TraceHandle, TraceRecord};
 use crate::workload::{Trace, TraceRequest};
 
 use faults::HealthState;
@@ -117,6 +118,9 @@ pub struct Cluster<B: ExecutionBackend = SimBackend> {
     /// counter (`tests/prop_cluster_heap.rs` asserts the heap drive takes
     /// >=5x fewer than lockstep on a bursty 32-replica trace).
     advances: u64,
+    /// Cluster-level trace attachment for fault/resubmit/failed instants
+    /// (replica engines carry their own `EngineTrace`). None = off.
+    trace: Option<TraceHandle>,
 }
 
 /// Fleet-wide drive-mode default: `LAYERKV_LOCKSTEP=1` forces every
@@ -259,6 +263,7 @@ impl Cluster<SimBackend> {
             faults: None,
             lockstep: lockstep_default(),
             advances: 0,
+            trace: obs::sink::current(),
         }
     }
 }
@@ -279,6 +284,7 @@ impl<B: ExecutionBackend> Cluster<B> {
             faults: None,
             lockstep: lockstep_default(),
             advances: 0,
+            trace: obs::sink::current(),
         }
     }
 
@@ -301,6 +307,7 @@ impl<B: ExecutionBackend> Cluster<B> {
             ran: self.ran,
             lockstep: self.lockstep,
             advances: self.advances,
+            trace: self.trace,
             faults: Some(FaultRun {
                 plan,
                 events,
@@ -357,6 +364,66 @@ impl<B: ExecutionBackend> Cluster<B> {
 
     pub fn lockstep(&self) -> bool {
         self.lockstep
+    }
+
+    /// Attach the cluster and every replica engine to a tracer (each
+    /// engine allocates its own track, in replica order). Tests use this
+    /// for isolation; the CLI path attaches via the global sink instead.
+    pub fn set_tracer(&mut self, handle: TraceHandle) {
+        for rep in &mut self.replicas {
+            rep.engine.set_tracer(handle.clone());
+        }
+        self.trace = Some(handle);
+    }
+
+    /// Record a cluster-level instant on a replica's track (fault
+    /// applications, failover resubmits, retry exhaustions).
+    fn trace_cluster_instant(
+        &self,
+        kind: EventKind,
+        replica: usize,
+        t: f64,
+        gid: u64,
+        a: u64,
+        c: u64,
+    ) {
+        if let Some(h) = self.trace.as_ref() {
+            let track = self
+                .replicas
+                .get(replica)
+                .and_then(|r| r.engine.trace_track())
+                .unwrap_or(replica as u32);
+            h.record(TraceRecord { t0: t, t1: t, kind, track, req: gid, a, b: 0, c });
+        }
+    }
+
+    /// Fold one applied fault event into the trace as a Fault instant on
+    /// its target replica's track.
+    fn trace_fault(&self, ev: &FaultEvent) {
+        if self.trace.is_none() {
+            return;
+        }
+        let (code, slowdown_bits) = match ev.kind {
+            FaultKind::Crash => (obs::FAULT_CRASH, 0),
+            FaultKind::Recover => (obs::FAULT_RECOVER, 0),
+            FaultKind::StragglerStart { slowdown } => {
+                (obs::FAULT_STRAGGLER_START, slowdown.to_bits())
+            }
+            FaultKind::StragglerEnd => (obs::FAULT_STRAGGLER_END, 0),
+            FaultKind::IoErrorStart => (obs::FAULT_IO_ERROR_START, 0),
+            FaultKind::IoErrorEnd => (obs::FAULT_IO_ERROR_END, 0),
+        };
+        self.trace_cluster_instant(
+            EventKind::Fault,
+            ev.replica,
+            ev.t,
+            u64::MAX,
+            code,
+            slowdown_bits,
+        );
+        // fault boundaries are exactly where tier pressure and slowdown
+        // gauges change shape: sample the target replica
+        self.replicas[ev.replica].engine.trace_sample_gauges();
     }
 
     /// Scheduler-bearing replica advances the drive has issued so far
@@ -447,6 +514,7 @@ impl<B: ExecutionBackend> Cluster<B> {
                 rep.engine.wait_until(tr.arrival);
             }
             rep.submit(tr, predictor.predict(tr.id, tr.output_len));
+            rep.engine.trace_sample_gauges();
         }
         // remaining fault events (crashes/recoveries past the last
         // arrival) fire in order while the replicas drain toward them
@@ -470,7 +538,24 @@ impl<B: ExecutionBackend> Cluster<B> {
         self.advances += adv;
         // requests still parked (no replica ever recovered): failed
         if let Some(f) = &mut self.faults {
+            let trace = self.trace.as_ref();
+            let t = f.health.borrow().now;
             for tr in std::mem::take(&mut f.parked) {
+                if let Some(h) = trace {
+                    // never-recovered requests fail at the end of the run:
+                    // stamp the last health instant (the exporter re-sorts
+                    // events by timestamp, so track 0 is just a home lane)
+                    h.record(TraceRecord {
+                        t0: t,
+                        t1: t,
+                        kind: EventKind::Failed,
+                        track: 0,
+                        req: tr.id as u64,
+                        a: 0,
+                        b: 0,
+                        c: 0,
+                    });
+                }
                 f.failed.push(tr.id);
             }
         }
@@ -532,6 +617,7 @@ impl<B: ExecutionBackend> Cluster<B> {
                         .engine
                         .service_horizon_event(ev.t, cap, draining)?;
                     self.advances += decides;
+                    self.replicas[ev.idx].engine.trace_sample_gauges();
                     // a blocked replica (`progressed == false`) is not
                     // re-armed — it cannot change state without new input,
                     // and every external handler below refreshes it
@@ -588,6 +674,7 @@ impl<B: ExecutionBackend> Cluster<B> {
                             rep.engine.wait_until(tr.arrival);
                         }
                         rep.submit(tr, predictor.predict(tr.id, tr.output_len));
+                        rep.engine.trace_sample_gauges();
                     }
                     let cap = self.external_cap(trace, next_arrival, next_fault);
                     self.refresh_all(cap, &mut heap, &mut arm);
@@ -597,7 +684,24 @@ impl<B: ExecutionBackend> Cluster<B> {
         // heap empty: every live replica is quiescent (a replica with work
         // always re-arms), every arrival and fault has fired
         if let Some(f) = &mut self.faults {
+            let trace = self.trace.as_ref();
+            let t = f.health.borrow().now;
             for tr in std::mem::take(&mut f.parked) {
+                if let Some(h) = trace {
+                    // never-recovered requests fail at the end of the run:
+                    // stamp the last health instant (the exporter re-sorts
+                    // events by timestamp, so track 0 is just a home lane)
+                    h.record(TraceRecord {
+                        t0: t,
+                        t1: t,
+                        kind: EventKind::Failed,
+                        track: 0,
+                        req: tr.id as u64,
+                        a: 0,
+                        b: 0,
+                        c: 0,
+                    });
+                }
                 f.failed.push(tr.id);
             }
         }
@@ -649,6 +753,7 @@ impl<B: ExecutionBackend> Cluster<B> {
         f.health.borrow_mut().now = ev.t;
         self.apply_event(f, &ev, predictor)?;
         f.log.push(ev);
+        self.trace_fault(&ev);
         Ok(())
     }
 
@@ -807,6 +912,7 @@ impl<B: ExecutionBackend> Cluster<B> {
             f.health.borrow_mut().now = ev.t;
             self.apply_event(f, &ev, predictor)?;
             f.log.push(ev);
+            self.trace_fault(&ev);
         }
         Ok(())
     }
@@ -838,6 +944,14 @@ impl<B: ExecutionBackend> Cluster<B> {
                     *n += 1;
                     if *n > f.plan.retry_budget {
                         f.failed.push(gid); // budget exhausted: terminal
+                        self.trace_cluster_instant(
+                            EventKind::Failed,
+                            ev.replica,
+                            ev.t,
+                            gid as u64,
+                            0,
+                            0,
+                        );
                         continue;
                     }
                     f.retries_total += 1;
@@ -910,6 +1024,8 @@ impl<B: ExecutionBackend> Cluster<B> {
             rep.engine.wait_until(at);
         }
         rep.submit(&tr, predictor.predict(tr.id, tr.output_len));
+        self.trace_cluster_instant(EventKind::Resubmit, idx, at, tr.id as u64, 0, 0);
+        self.replicas[idx].engine.trace_sample_gauges();
         Ok(())
     }
 
@@ -930,13 +1046,20 @@ impl<B: ExecutionBackend> Cluster<B> {
     fn take_report(&mut self) -> ClusterReport {
         let mut merged: Vec<RequestRecord> = Vec::new();
         let mut dropped = Vec::new();
+        let mut attribution = Vec::new();
         let mut per_replica = Vec::with_capacity(self.replicas.len());
-        for rep in &mut self.replicas {
+        let retries = self.faults.as_ref().map(|f| &f.retries);
+        for (i, rep) in self.replicas.iter_mut().enumerate() {
             let report = rep.engine.take_report();
             let stats = rep.engine.stats().clone();
             for r in &report.records {
                 let mut g = r.clone();
                 g.id = rep.global_ids[r.id];
+                attribution.push(RequestAttribution {
+                    id: g.id,
+                    replica: i,
+                    retries: retries.and_then(|m| m.get(&g.id)).copied().unwrap_or(0),
+                });
                 merged.push(g);
             }
             for &local in &stats.dropped {
@@ -945,6 +1068,7 @@ impl<B: ExecutionBackend> Cluster<B> {
             per_replica.push(ReplicaOutcome { routed: rep.routed(), report, stats });
         }
         dropped.sort_unstable();
+        attribution.sort_unstable_by_key(|a| a.id);
         let (failed, faults) = match self.faults.as_mut() {
             Some(f) => {
                 // summary first: it reads `failed.len()` before the take
@@ -966,6 +1090,7 @@ impl<B: ExecutionBackend> Cluster<B> {
             failed,
             faults,
             per_replica,
+            attribution,
         }
     }
 }

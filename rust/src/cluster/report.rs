@@ -7,6 +7,21 @@ use crate::config::SloTargets;
 use crate::coordinator::EngineStats;
 use crate::metrics::{ClusterSummary, FaultSummary, ReplicaSummary, Report};
 
+/// Which engine served a completed request, and how many crash-failover
+/// re-submissions it survived on the way. Kept beside the merged report —
+/// not inside `RequestRecord` — because the record layout is pinned by
+/// the frozen pre-refactor oracle the property suites compare against.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RequestAttribution {
+    /// Global trace id (matches `merged.records[i].id`).
+    pub id: usize,
+    /// Replica index whose engine completed the request.
+    pub replica: usize,
+    /// Crash drains this request survived before completing (0 on a
+    /// fault-free run).
+    pub retries: u32,
+}
+
 /// One replica's share of a finished cluster run.
 #[derive(Debug, Clone)]
 pub struct ReplicaOutcome {
@@ -33,6 +48,9 @@ pub struct ClusterReport {
     /// Fault rollup, present iff the run carried a `FaultPlan`.
     pub faults: Option<FaultSummary>,
     pub per_replica: Vec<ReplicaOutcome>,
+    /// Per-completion serving attribution (replica + failover retries),
+    /// sorted by global id — one entry per record in `merged`.
+    pub attribution: Vec<RequestAttribution>,
 }
 
 impl ClusterReport {

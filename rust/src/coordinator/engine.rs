@@ -58,6 +58,7 @@ use crate::coordinator::predict::LengthPredictor;
 use crate::coordinator::request::{Phase, ReqId, Request};
 use crate::coordinator::scheduler::{make_scheduler, Action, SchedContext, Scheduler};
 use crate::metrics::{Report, RequestRecord, TierTransition};
+use crate::obs::{EngineTrace, EventKind, GaugeKind, GaugeSample, TraceHandle, TraceRecord};
 use crate::sim::CostModel;
 use crate::workload::{PrefixKey, Trace, TraceRequest};
 
@@ -225,6 +226,11 @@ pub struct Engine<B: ExecutionBackend = SimBackend> {
     /// Tier-transition log (None = disabled, the default — zero overhead
     /// on the hot path).
     transitions: Option<Vec<TierTransition>>,
+    /// Lifecycle-span tracer attachment (None = tracing off, the default
+    /// — the hot path pays one `is_some` check and allocates nothing).
+    /// Recording never feeds back into engine state: with tracing on,
+    /// results are bit-identical to tracing off (`tests/prop_obs.rs`).
+    trace: Option<EngineTrace>,
     /// Reusable per-step buffers (decode batch, finished list).
     active_buf: Vec<ReqId>,
     finished_buf: Vec<ReqId>,
@@ -327,6 +333,7 @@ impl<B: ExecutionBackend> Engine<B> {
             restore_threshold,
             host_spill_threshold,
             transitions: None,
+            trace: crate::obs::sink::current().map(EngineTrace::attach),
             active_buf: Vec::new(),
             finished_buf: Vec::new(),
             submitted_tokens: 0,
@@ -376,6 +383,69 @@ impl<B: ExecutionBackend> Engine<B> {
         self.transitions.take().unwrap_or_default()
     }
 
+    // --- tracing ---------------------------------------------------------
+    //
+    // All hooks below are pure observers: they read engine state and push
+    // records into the attached ring; nothing flows back. With `trace`
+    // None every hook is a single branch.
+
+    /// Attach this engine to a tracer (allocates its track). Tests use
+    /// this for isolation; the CLI path attaches via the global sink at
+    /// construction instead.
+    pub fn set_tracer(&mut self, handle: TraceHandle) {
+        self.trace = Some(EngineTrace::attach(handle));
+    }
+
+    /// The trace track (Perfetto process row) this engine records on.
+    pub fn trace_track(&self) -> Option<u32> {
+        self.trace.as_ref().map(|t| t.track)
+    }
+
+    /// Record one span/instant on this engine's track, resolving the
+    /// engine-local id to the trace's global id (the `PREFIX_REQ`
+    /// sentinel passes through as `u64::MAX`).
+    fn trace_emit(&self, kind: EventKind, t0: f64, t1: f64, rid: ReqId, a: u64, b: u64, c: u64) {
+        if let Some(et) = self.trace.as_ref() {
+            et.handle.record(TraceRecord {
+                t0,
+                t1,
+                kind,
+                track: et.track,
+                req: et.gid(rid),
+                a,
+                b,
+                c,
+            });
+        }
+    }
+
+    /// Instant event at the engine's current clock.
+    fn trace_instant(&self, kind: EventKind, rid: ReqId, a: u64, b: u64, c: u64) {
+        let now = self.backend.clock().now();
+        self.trace_emit(kind, now, now, rid, a, b, c);
+    }
+
+    /// Sample every gauge onto this engine's track at the current clock.
+    /// Called at existing event boundaries only (arrivals, cluster heap
+    /// services, fault events) — tracing introduces no events of its own.
+    pub fn trace_sample_gauges(&self) {
+        let Some(et) = self.trace.as_ref() else { return };
+        let t = self.backend.clock().now();
+        let track = et.track;
+        let mut tracer = et.handle.lock();
+        let mut g = |kind: GaugeKind, value: f64| {
+            tracer.gauge(GaugeSample { t, track, kind, value });
+        };
+        g(GaugeKind::GpuFreeBlocks, self.kv.gpu.available() as f64);
+        g(GaugeKind::HostFreeBlocks, self.kv.cpu.available() as f64);
+        g(GaugeKind::DiskFreeBlocks, self.kv.disk.available() as f64);
+        g(GaugeKind::QueueDepth, self.waiting.len() as f64);
+        g(GaugeKind::WaitingTokens, self.view.waiting_tokens as f64);
+        g(GaugeKind::RunningTokens, self.view.running_tokens as f64);
+        g(GaugeKind::Slowdown, self.backend.slowdown());
+        g(GaugeKind::PrefixGpuBlocks, self.kv.prefix_blocks_on(Residency::Gpu) as f64);
+    }
+
     fn log_transition(
         &mut self,
         rid: ReqId,
@@ -384,6 +454,15 @@ impl<B: ExecutionBackend> Engine<B> {
         to: Residency,
         blocks: usize,
     ) {
+        if self.trace.is_some() {
+            self.trace_instant(
+                EventKind::TierMove,
+                rid,
+                from.tier_index() as u64,
+                to.tier_index() as u64,
+                blocks as u64,
+            );
+        }
         if let Some(log) = self.transitions.as_mut() {
             log.push(TierTransition {
                 t: self.backend.clock().now(),
@@ -438,6 +517,7 @@ impl<B: ExecutionBackend> Engine<B> {
                 output_len: r.output_len,
                 prefix: r.prefix,
             });
+            self.trace_instant(EventKind::Drain, rid, 0, 0, 0);
         }
         out.sort_by_key(|d| d.id);
         debug_assert!(!self.has_work());
@@ -546,12 +626,25 @@ impl<B: ExecutionBackend> Engine<B> {
 
         loop {
             // admit arrivals up to `now`
+            let arrivals_before = next_arrival;
             while next_arrival < self.requests.len()
                 && self.requests[next_arrival].arrival
                     <= self.backend.clock().now() + CLOCK_EPS
             {
                 let rid = next_arrival;
                 next_arrival += 1;
+                if self.trace.is_some() {
+                    let r = &self.requests[rid];
+                    self.trace_emit(
+                        EventKind::Arrive,
+                        r.arrival,
+                        r.arrival,
+                        rid,
+                        r.prompt_len as u64,
+                        r.output_len as u64,
+                        0,
+                    );
+                }
                 if self.backend.supports_prompt(self.requests[rid].prompt_len) {
                     self.waiting.push_back(rid);
                     self.view_push_waiting(rid);
@@ -561,7 +654,11 @@ impl<B: ExecutionBackend> Engine<B> {
                     // emitting a zero-length record that skews TTFT/TPOT
                     self.stats.dropped.push(rid);
                     self.requests[rid].phase = Phase::Finished;
+                    self.trace_instant(EventKind::Drop, rid, 0, 0, 0);
                 }
+            }
+            if self.trace.is_some() && next_arrival != arrivals_before {
+                self.trace_sample_gauges();
             }
             // the macro-stepping event horizon: the next arrival instant
             let deadline = self
@@ -608,6 +705,7 @@ impl<B: ExecutionBackend> Engine<B> {
                             self.view_pop_waiting(r);
                             self.stats.dropped.push(r);
                             self.requests[r].phase = Phase::Finished;
+                            self.trace_instant(EventKind::Drop, r, 0, 0, 0);
                             continue;
                         }
                     }
@@ -626,6 +724,7 @@ impl<B: ExecutionBackend> Engine<B> {
                         self.view_pop_waiting(r);
                         self.stats.dropped.push(r);
                         self.requests[r].phase = Phase::Finished;
+                        self.trace_instant(EventKind::Drop, r, 0, 0, 0);
                     }
                 }
             }
@@ -688,6 +787,18 @@ impl<B: ExecutionBackend> Engine<B> {
         self.submitted_tokens += (tr.prompt_len + tr.output_len) as u64;
         let supported = self.backend.supports_prompt(r.prompt_len);
         self.requests.push(r);
+        if let Some(et) = self.trace.as_mut() {
+            et.bind(local, tr.id);
+        }
+        self.trace_emit(
+            EventKind::Arrive,
+            tr.arrival,
+            tr.arrival,
+            local,
+            tr.prompt_len as u64,
+            tr.output_len as u64,
+            0,
+        );
         if supported {
             self.waiting.push_back(local);
             self.view_push_waiting(local);
@@ -696,6 +807,7 @@ impl<B: ExecutionBackend> Engine<B> {
             // executor can never run
             self.stats.dropped.push(local);
             self.requests[local].phase = Phase::Finished;
+            self.trace_instant(EventKind::Drop, local, 0, 0, 0);
         }
         local
     }
@@ -754,6 +866,7 @@ impl<B: ExecutionBackend> Engine<B> {
                         self.view_pop_waiting(r);
                         self.stats.dropped.push(r);
                         self.requests[r].phase = Phase::Finished;
+                        self.trace_instant(EventKind::Drop, r, 0, 0, 0);
                         return Ok(true); // try_run's `continue`: no step count
                     }
                 }
@@ -772,6 +885,7 @@ impl<B: ExecutionBackend> Engine<B> {
                     self.view_pop_waiting(r);
                     self.stats.dropped.push(r);
                     self.requests[r].phase = Phase::Finished;
+                    self.trace_instant(EventKind::Drop, r, 0, 0, 0);
                 }
                 // falls through to the step count, as in try_run
             }
@@ -1167,6 +1281,13 @@ impl<B: ExecutionBackend> Engine<B> {
                 self.requests[rid].cached_prefix = hit.tokens;
                 self.stats.prefix_hits += 1;
                 self.stats.prefix_hit_tokens += hit.tokens as u64;
+                self.trace_instant(
+                    EventKind::PrefixHit,
+                    rid,
+                    hit.tokens as u64,
+                    hit.tier.tier_index() as u64,
+                    0,
+                );
                 let layers = self.cfg.model.n_layers;
                 match hit.tier {
                     Residency::Gpu => {}
@@ -1379,11 +1500,27 @@ impl<B: ExecutionBackend> Engine<B> {
     fn commit_fast_forward(&mut self, k: usize) {
         debug_assert_eq!(self.ff_durations.len(), k);
         let batch = self.running.len();
+        let span_begin = self.backend.clock().now();
         #[cfg(debug_assertions)]
-        let (now0, ctx0) = (self.backend.clock().now(), self.agg.resident_tokens);
+        let (now0, ctx0) = (span_begin, self.agg.resident_tokens);
         for &d in &self.ff_durations {
             self.backend.clock_mut().advance(d);
             self.scheduler.observe_decode_step(d);
+        }
+        if self.trace.is_some() {
+            // the whole macro-step renders as one decode span per request
+            let t1 = self.backend.clock().now();
+            for &rid in &self.running {
+                self.trace_emit(
+                    EventKind::Decode,
+                    span_begin,
+                    t1,
+                    rid,
+                    k as u64,
+                    self.agg.resident_tokens as u64,
+                    0,
+                );
+            }
         }
         #[cfg(debug_assertions)]
         debug_assert_eq!(
@@ -1547,12 +1684,29 @@ impl<B: ExecutionBackend> Engine<B> {
     fn commit_span_chunk(&mut self, c: usize) {
         debug_assert!(self.span_valid && self.span_pos + c <= self.span_durs.len());
         let batch = self.running.len();
+        let span_begin = self.backend.clock().now();
         #[cfg(debug_assertions)]
-        let (now0, ctx0) = (self.backend.clock().now(), self.agg.resident_tokens);
+        let (now0, ctx0) = (span_begin, self.agg.resident_tokens);
         for i in 0..c {
             let d = self.span_durs[self.span_pos + i];
             self.backend.clock_mut().advance(d);
             self.scheduler.observe_decode_step(d);
+        }
+        if self.trace.is_some() {
+            // a heap-driven span chunk renders as one decode span, same
+            // shape as the lockstep macro-step it replaces
+            let t1 = self.backend.clock().now();
+            for &rid in &self.running {
+                self.trace_emit(
+                    EventKind::Decode,
+                    span_begin,
+                    t1,
+                    rid,
+                    c as u64,
+                    self.agg.resident_tokens as u64,
+                    0,
+                );
+            }
         }
         #[cfg(debug_assertions)]
         debug_assert_eq!(
@@ -1664,8 +1818,14 @@ impl<B: ExecutionBackend> Engine<B> {
                 self.view_pop_waiting(rid);
             }
             if self.requests[rid].prefill_start.is_none() {
-                self.requests[rid].prefill_start = Some(self.backend.clock().now());
+                let now = self.backend.clock().now();
+                self.requests[rid].prefill_start = Some(now);
+                // the queued span closes at first admission; preempt
+                // re-admissions keep their original prefill_start and
+                // show up as Preempt instants instead
+                self.trace_emit(EventKind::Queued, self.requests[rid].arrival, now, rid, 0, 0, 0);
             }
+            self.trace_instant(EventKind::Admit, rid, x as u64, 0, 0);
             // prefix-cache lookup: the matched span skips recompute (the
             // backend prices the suffix only); host/disk hits charge the
             // restore transfer here, against the batch duration
@@ -1701,8 +1861,28 @@ impl<B: ExecutionBackend> Engine<B> {
         }
         self.stats.offload_bytes += offload_bytes;
         self.stats.spill_bytes += spill_bytes;
+        let prefill_begin = self.backend.clock().now();
         self.backend.clock_mut().advance(duration);
         self.stats.prefill_steps += 1;
+        if self.trace.is_some() {
+            // one prefill span per request admitted this batch (the batch
+            // shares one modeled duration, so the spans coincide)
+            let t1 = self.backend.clock().now();
+            for &(rid, _) in reqs {
+                if self.requests[rid].phase == Phase::Decoding {
+                    let r = &self.requests[rid];
+                    self.trace_emit(
+                        EventKind::Prefill,
+                        prefill_begin,
+                        t1,
+                        rid,
+                        r.prompt_len as u64,
+                        r.cached_prefix as u64,
+                        0,
+                    );
+                }
+            }
+        }
 
         // first token emitted at prefill end (fresh admissions only:
         // `generated == 0` — preempt re-admissions keep their history)
@@ -1713,6 +1893,7 @@ impl<B: ExecutionBackend> Engine<B> {
             {
                 if self.requests[rid].first_token.is_none() {
                     self.requests[rid].first_token = Some(now);
+                    self.trace_instant(EventKind::FirstToken, rid, 0, 0, 0);
                 }
                 self.requests[rid].generated = 1;
                 self.view_append_token(rid);
@@ -1801,9 +1982,16 @@ impl<B: ExecutionBackend> Engine<B> {
         self.stats.disk_stream_bytes += disk_stream_bytes;
         self.stats.disk_stall_s += out.disk_stall_s;
         self.stats.contention_s += out.contention_s;
+        let decode_begin = self.backend.clock().now();
         self.backend.clock_mut().advance(out.duration);
         self.stats.decode_steps += 1;
         self.scheduler.observe_decode_step(out.duration);
+        if self.trace.is_some() {
+            let t1 = self.backend.clock().now();
+            for &rid in &active {
+                self.trace_emit(EventKind::Decode, decode_begin, t1, rid, 1, total_ctx as u64, 0);
+            }
+        }
 
         // advance the active batch by one token
         let mut finished = std::mem::take(&mut self.finished_buf);
@@ -1993,6 +2181,7 @@ impl<B: ExecutionBackend> Engine<B> {
         // re-prefill (prompt + generated) — exactly what the scan counts
         self.view_push_waiting(rid);
         self.stats.preemptions += 1;
+        self.trace_instant(EventKind::Preempt, rid, 0, 0, 0);
     }
 
     /// Move parked layers back to GPU while free blocks last (oldest
@@ -2057,6 +2246,8 @@ impl<B: ExecutionBackend> Engine<B> {
             prompt_len: r.prompt_len,
             output_len: r.output_len,
         });
+        let generated = self.requests[rid].generated as u64;
+        self.trace_instant(EventKind::Finish, rid, generated, 0, 0);
     }
 }
 

@@ -1,4 +1,28 @@
-//! Aligned-text table rendering for experiment output.
+//! Aligned-text table rendering for experiment output, plus an optional
+//! JSON capture: while capture is armed, every printed table is also
+//! recorded as `{"title", "headers", "rows"}` so `experiment --json`
+//! can hand CI machine-checkable results instead of scraped stdout.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::util::Json;
+
+/// Armed by `begin_capture`; `Table::print` appends a JSON object per
+/// table while armed. Process-wide, like the experiment toggles
+/// (`LAYERKV_QUICK` etc.) — the CLI is single-threaded.
+static CAPTURE: Mutex<Option<Vec<Json>>> = Mutex::new(None);
+
+/// Start recording printed tables (clears any previous capture).
+pub fn begin_capture() {
+    *CAPTURE.lock().expect("capture poisoned") = Some(Vec::new());
+}
+
+/// Stop recording and return everything captured since `begin_capture`
+/// as a JSON array; `None` if capture was never armed.
+pub fn take_captured() -> Option<Json> {
+    CAPTURE.lock().expect("capture poisoned").take().map(Json::Arr)
+}
 
 pub struct Table {
     title: String,
@@ -48,8 +72,31 @@ impl Table {
         out
     }
 
+    /// The capture-side shape of this table.
+    fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        obj.insert("title".to_string(), Json::Str(self.title.clone()));
+        obj.insert(
+            "headers".to_string(),
+            Json::Arr(self.headers.iter().map(|h| Json::Str(h.clone())).collect()),
+        );
+        obj.insert(
+            "rows".to_string(),
+            Json::Arr(
+                self.rows
+                    .iter()
+                    .map(|r| Json::Arr(r.iter().map(|c| Json::Str(c.clone())).collect()))
+                    .collect(),
+            ),
+        );
+        Json::Obj(obj)
+    }
+
     pub fn print(&self) {
         print!("{}", self.render());
+        if let Some(cap) = CAPTURE.lock().expect("capture poisoned").as_mut() {
+            cap.push(self.to_json());
+        }
     }
 }
 
@@ -77,6 +124,31 @@ mod tests {
         let lines: Vec<&str> = s.lines().filter(|l| !l.is_empty()).collect();
         // header + separator + 2 rows + title
         assert_eq!(lines.len(), 5);
+    }
+
+    #[test]
+    fn capture_records_printed_tables_as_json() {
+        begin_capture();
+        let mut t = Table::new("capture-demo-q7", &["col", "val"]);
+        t.row(&["x".into(), "1.5".into()]);
+        t.print();
+        let cap = take_captured().expect("capture was armed");
+        // other tests may print tables concurrently: look for ours
+        let arr = cap.as_arr().expect("array of tables");
+        let ours = arr
+            .iter()
+            .find(|j| {
+                j.get("title").and_then(|t| t.as_str()) == Some("capture-demo-q7")
+            })
+            .expect("printed table captured");
+        assert_eq!(ours.req("headers").unwrap().as_arr().unwrap().len(), 2);
+        let rows = ours.req("rows").unwrap();
+        assert_eq!(rows.as_arr().unwrap().len(), 1);
+        // round-trips through the serializer
+        let reparsed = Json::parse(&cap.dump()).unwrap();
+        assert!(reparsed.as_arr().is_some());
+        // capture is one-shot: a second take is None until re-armed
+        assert!(take_captured().is_none());
     }
 
     #[test]

@@ -34,6 +34,7 @@ pub mod runtime;
 pub mod coordinator;
 pub mod experiments;
 pub mod metrics;
+pub mod obs;
 pub mod server;
 pub mod sim;
 pub mod util;

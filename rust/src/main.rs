@@ -11,8 +11,15 @@
 //!               [--ref-model] [--replicas N] [--router <policy>]
 //! layerkv bench-check [--baseline BENCH_baseline.json] [--current BENCH_hotpath.json]
 //!                     [--factor 2.5] [--update]
+//! layerkv trace-check TRACE.json
 //! layerkv selftest [--artifacts DIR]
 //! ```
+//!
+//! `sim`/`experiment --trace-out` records per-request lifecycle spans and
+//! virtual-time gauges into a bounded ring (`obs/`) and exports Chrome
+//! trace-event JSON; `--trace-jsonl` exports the same records as JSONL;
+//! `experiment --json` writes every printed table as machine-checkable
+//! JSON; `trace-check` validates an exported trace.
 //!
 //! `serve --policy` exercises every scheduler against real tokens —
 //! the same `make_scheduler` policies the simulator runs. `--ref-model`
@@ -51,6 +58,7 @@ fn main() -> ExitCode {
         "sim" => cmd_sim(rest),
         "serve" => cmd_serve(rest),
         "bench-check" => cmd_bench_check(rest),
+        "trace-check" => cmd_trace_check(rest),
         "selftest" => cmd_selftest(rest),
         "help" | "--help" | "-h" => {
             print_help();
@@ -78,15 +86,25 @@ fn print_help() {
          USAGE:\n\
          \x20 layerkv experiment <fig1|fig4|fig5|fig6|fig7|fig8|tiers|bursty|cluster|cluster-wide|fleet|faults|prefix|table1|all>\n\
          \x20                    [--quick] [--macro-steps|--no-macro-steps] [--no-prefix-cache]\n\
+         \x20                    [--json TABLES.json] [--trace-out TRACE.json] [--trace-jsonl TRACE.jsonl]\n\
          \x20 layerkv sim --model 7b --policy layerkv --ctx 4096 --rate 1.0 --requests 100 [--sharegpt]\n\
          \x20             [--replicas N] [--router round-robin|jsq|kv-pressure|slo-aware|prefix-aware] [--lockstep]\n\
          \x20             [--faults crash=R@T1[:T2],straggle=R@T1:T2xF,io=R@T1:T2,retries=N,probation=S]\n\
+         \x20             [--trace-out TRACE.json] [--trace-jsonl TRACE.jsonl]\n\
          \x20 layerkv serve [--addr 127.0.0.1:7181] [--artifacts DIR] [--budget BYTES]\n\
          \x20               [--policy vllm|layerkv|layerkv-no-slo] [--max-batch N] [--ref-model]\n\
          \x20               [--replicas N] [--router round-robin|jsq|kv-pressure|slo-aware|prefix-aware]\n\
          \x20 layerkv bench-check [--baseline BENCH_baseline.json] [--current BENCH_hotpath.json]\n\
          \x20                     [--factor 2.5] [--update]\n\
-         \x20 layerkv selftest [--artifacts DIR]"
+         \x20 layerkv trace-check TRACE.json\n\
+         \x20 layerkv selftest [--artifacts DIR]\n\
+         \n\
+         `--trace-out` records per-request lifecycle spans and virtual-time\n\
+         gauges into a bounded ring and writes Chrome trace-event JSON\n\
+         (load it in Perfetto or chrome://tracing); `--trace-jsonl` writes\n\
+         the same records as one JSON object per line. `trace-check`\n\
+         validates an exported trace (parses, per-track monotonic\n\
+         timestamps, every arrival reaches a terminal event)."
     );
 }
 
@@ -97,6 +115,65 @@ fn opt(args: &[String], key: &str) -> Option<String> {
 
 fn flag(args: &[String], key: &str) -> bool {
     args.iter().any(|a| a == key)
+}
+
+/// Install the process-global trace sink when `--trace-out` or
+/// `--trace-jsonl` is present. Must run before any engine is built —
+/// engines attach to the sink in their constructors; with no sink the
+/// tracing hooks cost one branch and allocate nothing.
+fn trace_sink(args: &[String]) -> Option<layerkv::obs::TraceHandle> {
+    (opt(args, "--trace-out").is_some() || opt(args, "--trace-jsonl").is_some()).then(|| {
+        layerkv::obs::sink::install(
+            layerkv::obs::DEFAULT_SPAN_CAP,
+            layerkv::obs::DEFAULT_GAUGE_CAP,
+        )
+    })
+}
+
+/// Write whatever the sink captured during this run: Chrome trace-event
+/// JSON for `--trace-out` (one track per replica, one lane per request
+/// phase), JSONL for `--trace-jsonl`. No-op when tracing was off.
+fn export_trace(args: &[String], sink: Option<layerkv::obs::TraceHandle>) -> anyhow::Result<()> {
+    let Some(handle) = sink else { return Ok(()) };
+    let tracer = handle.lock();
+    if let Some(path) = opt(args, "--trace-out") {
+        let j = layerkv::obs::export::chrome_trace(&tracer);
+        std::fs::write(&path, j.dump())
+            .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
+        println!(
+            "trace: {} span(s), {} gauge sample(s) -> {path} \
+             (load in Perfetto or chrome://tracing)",
+            tracer.spans_len(),
+            tracer.gauges_len()
+        );
+    }
+    if let Some(path) = opt(args, "--trace-jsonl") {
+        std::fs::write(&path, layerkv::obs::export::jsonl(&tracer))
+            .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
+        println!("trace: jsonl -> {path}");
+    }
+    drop(tracer);
+    layerkv::obs::sink::clear();
+    Ok(())
+}
+
+/// Validate an exported Chrome trace: it parses, timestamps are
+/// monotonic per track, and every arrived request reaches a terminal
+/// event (finish/drop/failed) unless the span ring wrapped.
+fn cmd_trace_check(args: &[String]) -> anyhow::Result<()> {
+    let path = args
+        .first()
+        .filter(|a| !a.starts_with("--"))
+        .cloned()
+        .ok_or_else(|| anyhow::anyhow!("usage: layerkv trace-check TRACE.json"))?;
+    let text = std::fs::read_to_string(&path)
+        .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+    let j = layerkv::util::Json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("parsing {path}: {e}"))?;
+    let summary = layerkv::obs::export::validate_chrome(&j)
+        .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+    println!("trace-check: {path}: {summary}");
+    Ok(())
 }
 
 fn cmd_experiment(args: &[String]) -> anyhow::Result<()> {
@@ -114,6 +191,11 @@ fn cmd_experiment(args: &[String]) -> anyhow::Result<()> {
     // own on/off contrast regardless of this toggle)
     if flag(args, "--no-prefix-cache") {
         std::env::set_var("LAYERKV_PREFIX", "0");
+    }
+    let sink = trace_sink(args);
+    let json_out = opt(args, "--json");
+    if json_out.is_some() {
+        exp::report::begin_capture();
     }
     let which = args.first().map(String::as_str).unwrap_or("all");
     let run = |id: &str| -> anyhow::Result<()> {
@@ -148,10 +230,17 @@ fn cmd_experiment(args: &[String]) -> anyhow::Result<()> {
         ] {
             run(id)?;
         }
-        Ok(())
     } else {
-        run(which)
+        run(which)?;
     }
+    if let Some(path) = json_out {
+        let cap = exp::report::take_captured()
+            .unwrap_or_else(|| layerkv::util::Json::Arr(Vec::new()));
+        std::fs::write(&path, cap.dump())
+            .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
+        println!("experiment tables -> {path}");
+    }
+    export_trace(args, sink)
 }
 
 fn parse_policy(name: &str) -> anyhow::Result<Policy> {
@@ -193,8 +282,12 @@ fn cmd_sim(args: &[String]) -> anyhow::Result<()> {
     let replicas: usize = opt(args, "--replicas").unwrap_or_else(|| "1".into()).parse()?;
     anyhow::ensure!(replicas >= 1, "--replicas must be at least 1");
     let faults_spec = opt(args, "--faults");
+    // engines attach to the sink at construction, so this must precede
+    // run_trace / Cluster::new
+    let sink = trace_sink(args);
     if replicas > 1 || faults_spec.is_some() {
-        return sim_cluster(args, cfg, &trace, replicas, faults_spec);
+        sim_cluster(args, cfg, &trace, replicas, faults_spec)?;
+        return export_trace(args, sink);
     }
     let (rep, stats) = run_trace(cfg.clone(), &trace, exp::PREDICTOR_ACC);
     let (mut ttft, mut tpot) = (rep.ttft(), rep.tpot());
@@ -230,7 +323,7 @@ fn cmd_sim(args: &[String]) -> anyhow::Result<()> {
         stats.offload_bytes / 1e6,
         stats.onload_stream_bytes / 1e6,
     );
-    Ok(())
+    export_trace(args, sink)
 }
 
 /// `sim` over a multi-replica cluster, optionally fault-injected.
@@ -352,7 +445,7 @@ fn load_bench_json(path: &str) -> anyhow::Result<Vec<(String, f64, f64)>> {
 
 /// CI perf gate: compare the fresh `BENCH_hotpath.json` against the
 /// committed baseline and fail on any `kv_manager/` / `scheduler/` /
-/// `engine/` / `cluster/` series regressing past `--factor` (default
+/// `engine/` / `cluster/` / `obs/` series regressing past `--factor` (default
 /// 2.5x), or silently vanishing from the run. `--update` refreshes the
 /// baseline from the current results instead (do this deliberately, on a
 /// representative machine, when a slowdown is intended).
@@ -366,7 +459,7 @@ fn cmd_bench_check(args: &[String]) -> anyhow::Result<()> {
         println!("bench-check: baseline {baseline} refreshed from {current}");
         return Ok(());
     }
-    const PREFIXES: &[&str] = &["kv_manager/", "scheduler/", "engine/", "cluster/"];
+    const PREFIXES: &[&str] = &["kv_manager/", "scheduler/", "engine/", "cluster/", "obs/"];
     let gated = |name: &str| PREFIXES.iter().any(|p| name.starts_with(p));
     let cur = load_bench_json(&current)?;
     let base = load_bench_json(&baseline)?;

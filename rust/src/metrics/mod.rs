@@ -399,6 +399,74 @@ mod tests {
     }
 
     #[test]
+    fn max_share_empty_single_and_skewed() {
+        let slo = SloTargets { ttft_s: 3.0, tpot_s: 10.0 };
+        // no replicas at all: 0, not NaN from 0/0
+        let empty = ClusterSummary::new(&Report::new(Vec::new()), &slo, Vec::new());
+        assert_eq!(empty.max_share(), 0.0);
+        // replicas present but nothing routed yet: same guard
+        let idle = ClusterSummary::new(
+            &Report::new(Vec::new()),
+            &slo,
+            vec![
+                ReplicaSummary::from_report(0, 0, 0, &Report::new(Vec::new()), &slo),
+                ReplicaSummary::from_report(1, 0, 0, &Report::new(Vec::new()), &slo),
+            ],
+        );
+        assert_eq!(idle.max_share(), 0.0);
+        // a single replica always holds the full share
+        let rep = Report::new(vec![rec(0, 0.0, 0.5, 1.0, 2.0, 10)]);
+        let single = ClusterSummary::new(
+            &rep,
+            &slo,
+            vec![ReplicaSummary::from_report(0, 5, 0, &rep, &slo)],
+        );
+        assert_eq!(single.max_share(), 1.0);
+        // fully skewed routing: one replica got everything
+        let skew = ClusterSummary::new(
+            &rep,
+            &slo,
+            vec![
+                ReplicaSummary::from_report(0, 8, 0, &rep, &slo),
+                ReplicaSummary::from_report(1, 0, 0, &Report::new(Vec::new()), &slo),
+            ],
+        );
+        assert_eq!(skew.max_share(), 1.0);
+    }
+
+    #[test]
+    fn goodput_zero_when_every_completion_violates() {
+        let slo = SloTargets { ttft_s: 0.5, tpot_s: 0.01 };
+        let rep = Report::new(vec![
+            rec(0, 0.0, 1.0, 2.0, 4.0, 10),
+            rec(1, 0.0, 2.0, 3.0, 5.0, 10),
+        ]);
+        assert_eq!(rep.goodput_req_s(&slo), 0.0);
+        assert!(rep.throughput_req_s() > 0.0); // raw throughput still counts them
+        assert_eq!(rep.slo_violation_rate(&slo), 1.0);
+    }
+
+    #[test]
+    fn empty_report_rollups_are_finite_zeros() {
+        let slo = SloTargets { ttft_s: 3.0, tpot_s: 10.0 };
+        let rep = Report::new(Vec::new());
+        assert_eq!(rep.makespan, 0.0);
+        assert_eq!(rep.throughput_tok_s(), 0.0);
+        assert_eq!(rep.throughput_req_s(), 0.0);
+        assert_eq!(rep.goodput_req_s(&slo), 0.0);
+        assert_eq!(rep.slo_violation_rate(&slo), 0.0);
+        // a zero-completion replica row renders 0s, never ±inf/NaN
+        let rs = ReplicaSummary::from_report(0, 0, 0, &rep, &slo);
+        assert!(rs.ttft_mean.is_finite() && rs.ttft_p99.is_finite());
+        assert_eq!(rs.ttft_mean, 0.0);
+        assert_eq!(rs.viol_rate, 0.0);
+        let mut ttft = rep.ttft();
+        assert_eq!(ttft.min(), 0.0);
+        assert_eq!(ttft.max(), 0.0);
+        assert_eq!(ttft.p99(), 0.0);
+    }
+
+    #[test]
     fn report_aggregates() {
         let recs = vec![rec(1, 0.0, 0.5, 1.0, 2.0, 10), rec(0, 0.0, 1.0, 2.0, 4.0, 20)];
         let rep = Report::new(recs);

@@ -1,0 +1,432 @@
+//! Trace exporters: Chrome trace-event JSON (load in Perfetto /
+//! `chrome://tracing`) and line-delimited JSON, plus the validator the
+//! CI smoke runs over exported traces (`trace-check`).
+//!
+//! Chrome mapping: one *process* (`pid`) per replica track, one *thread*
+//! (`tid`) per request phase — lane 0 carries instant events (arrivals,
+//! tier moves, faults, terminals), lanes 1-3 the queued/prefill/decode
+//! spans. Gauges render as "C" counter events on lane 0, so Perfetto
+//! draws per-replica free-block / queue-depth / slowdown graphs under
+//! each replica's span rows. Timestamps are virtual seconds scaled to
+//! the format's microseconds.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::{fault_name, EventKind, GaugeSample, TraceRecord, Tracer};
+use crate::util::Json;
+
+fn num(x: f64) -> Json {
+    Json::Num(x)
+}
+
+fn jstr(s: &str) -> Json {
+    Json::Str(s.to_string())
+}
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    let mut m = BTreeMap::new();
+    for (k, v) in pairs {
+        m.insert(k.to_string(), v);
+    }
+    Json::Obj(m)
+}
+
+/// `req` payload as exported: the prefix-store sentinel renders as -1.
+fn req_num(req: u64) -> Json {
+    if req == u64::MAX {
+        num(-1.0)
+    } else {
+        num(req as f64)
+    }
+}
+
+/// Kind-specific args for one record (always includes `req`).
+fn record_args(r: &TraceRecord) -> Json {
+    let mut pairs: Vec<(&str, Json)> = vec![("req", req_num(r.req))];
+    match r.kind {
+        EventKind::Arrive => {
+            pairs.push(("prompt_len", num(r.a as f64)));
+            pairs.push(("output_len", num(r.b as f64)));
+        }
+        EventKind::Admit => pairs.push(("retained_layers", num(r.a as f64))),
+        EventKind::Prefill => {
+            pairs.push(("prompt_len", num(r.a as f64)));
+            pairs.push(("cached_prefix", num(r.b as f64)));
+        }
+        EventKind::Decode => {
+            pairs.push(("iterations", num(r.a as f64)));
+            pairs.push(("batch_tokens", num(r.b as f64)));
+        }
+        EventKind::TierMove => {
+            pairs.push(("from_tier", num(r.a as f64)));
+            pairs.push(("to_tier", num(r.b as f64)));
+            pairs.push(("blocks", num(r.c as f64)));
+        }
+        EventKind::PrefixHit => {
+            pairs.push(("tokens", num(r.a as f64)));
+            pairs.push(("tier", num(r.b as f64)));
+        }
+        EventKind::Fault => {
+            pairs.push(("fault", jstr(fault_name(r.a))));
+            if r.c != 0 {
+                pairs.push(("slowdown", num(f64::from_bits(r.c))));
+            }
+        }
+        EventKind::Finish => pairs.push(("generated", num(r.a as f64))),
+        EventKind::Queued
+        | EventKind::FirstToken
+        | EventKind::Preempt
+        | EventKind::Drain
+        | EventKind::Resubmit
+        | EventKind::Drop
+        | EventKind::Failed => {}
+    }
+    obj(pairs)
+}
+
+fn span_event(r: &TraceRecord) -> Json {
+    obj(vec![
+        ("ph", jstr("X")),
+        ("name", jstr(r.kind.name())),
+        ("cat", jstr("lifecycle")),
+        ("pid", num(r.track as f64)),
+        ("tid", num(r.kind.lane() as f64)),
+        ("ts", num(r.t0 * 1e6)),
+        ("dur", num((r.t1 - r.t0).max(0.0) * 1e6)),
+        ("args", record_args(r)),
+    ])
+}
+
+fn instant_event(r: &TraceRecord) -> Json {
+    obj(vec![
+        ("ph", jstr("i")),
+        ("name", jstr(r.kind.name())),
+        ("cat", jstr("lifecycle")),
+        ("pid", num(r.track as f64)),
+        ("tid", num(r.kind.lane() as f64)),
+        ("ts", num(r.t0 * 1e6)),
+        ("s", jstr("t")),
+        ("args", record_args(r)),
+    ])
+}
+
+fn counter_event(g: &GaugeSample) -> Json {
+    obj(vec![
+        ("ph", jstr("C")),
+        ("name", jstr(g.kind.name())),
+        ("pid", num(g.track as f64)),
+        ("tid", num(0.0)),
+        ("ts", num(g.t * 1e6)),
+        ("args", obj(vec![("value", num(g.value))])),
+    ])
+}
+
+const LANE_NAMES: [&str; 4] = ["events", "queued", "prefill", "decode"];
+
+/// Render the tracer's contents as one Chrome trace-event JSON document.
+pub fn chrome_trace(t: &Tracer) -> Json {
+    let mut tracks: BTreeSet<u32> = BTreeSet::new();
+    for r in t.spans() {
+        tracks.insert(r.track);
+    }
+    for g in t.gauges() {
+        tracks.insert(g.track);
+    }
+
+    // metadata first: Perfetto names the process/thread rows from these
+    let mut events: Vec<Json> = Vec::new();
+    for &track in &tracks {
+        events.push(obj(vec![
+            ("ph", jstr("M")),
+            ("name", jstr("process_name")),
+            ("pid", num(track as f64)),
+            ("args", obj(vec![("name", jstr(&format!("replica-{track}")))])),
+        ]));
+        for (lane, lane_name) in LANE_NAMES.iter().enumerate() {
+            events.push(obj(vec![
+                ("ph", jstr("M")),
+                ("name", jstr("thread_name")),
+                ("pid", num(track as f64)),
+                ("tid", num(lane as f64)),
+                ("args", obj(vec![("name", jstr(lane_name))])),
+            ]));
+        }
+    }
+
+    // data events, sorted by virtual timestamp (total order: exported
+    // traces are monotonic per track by construction)
+    let mut timed: Vec<(f64, Json)> = Vec::new();
+    for r in t.spans() {
+        let ev = if r.kind.is_span() { span_event(r) } else { instant_event(r) };
+        timed.push((r.t0, ev));
+    }
+    for g in t.gauges() {
+        timed.push((g.t, counter_event(g)));
+    }
+    timed.sort_by(|a, b| a.0.total_cmp(&b.0));
+    events.extend(timed.into_iter().map(|(_, e)| e));
+
+    obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", jstr("ms")),
+        (
+            "otherData",
+            obj(vec![
+                ("span_count", num(t.spans_len() as f64)),
+                ("gauge_count", num(t.gauges_len() as f64)),
+                ("dropped_spans", num(t.spans_dropped() as f64)),
+                ("dropped_gauges", num(t.gauges_dropped() as f64)),
+            ]),
+        ),
+    ])
+}
+
+/// Render the tracer's contents as JSONL: one self-describing object per
+/// line (spans/instants first, then gauges), for ad-hoc tooling.
+pub fn jsonl(t: &Tracer) -> String {
+    let mut out = String::new();
+    for r in t.spans() {
+        let line = obj(vec![
+            ("type", jstr(if r.kind.is_span() { "span" } else { "instant" })),
+            ("kind", jstr(r.kind.name())),
+            ("track", num(r.track as f64)),
+            ("req", req_num(r.req)),
+            ("t0", num(r.t0)),
+            ("t1", num(r.t1)),
+            ("args", record_args(r)),
+        ]);
+        out.push_str(&line.dump());
+        out.push('\n');
+    }
+    for g in t.gauges() {
+        let line = obj(vec![
+            ("type", jstr("gauge")),
+            ("kind", jstr(g.kind.name())),
+            ("track", num(g.track as f64)),
+            ("t", num(g.t)),
+            ("value", num(g.value)),
+        ]);
+        out.push_str(&line.dump());
+        out.push('\n');
+    }
+    out
+}
+
+/// Validate an exported Chrome trace document (the `trace-check` CLI and
+/// the prop suite run this): every event well-formed, timestamps
+/// monotonic per (track, lane), and — unless the span ring wrapped —
+/// every arrived request reaching a terminal mark (finish/drop/failed).
+/// Returns a one-line summary on success.
+pub fn validate_chrome(j: &Json) -> Result<String, String> {
+    let events = j
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| "missing traceEvents array".to_string())?;
+    let mut last: BTreeMap<(u64, u64), f64> = BTreeMap::new();
+    let mut tracks: BTreeSet<u64> = BTreeSet::new();
+    let mut arrived: BTreeSet<i64> = BTreeSet::new();
+    let mut terminal: BTreeSet<i64> = BTreeSet::new();
+    let mut n_events = 0usize;
+    for (i, ev) in events.iter().enumerate() {
+        let ph = ev
+            .get("ph")
+            .and_then(Json::as_str)
+            .ok_or_else(|| format!("event {i}: missing ph"))?;
+        if ph == "M" {
+            continue;
+        }
+        let pid = ev
+            .get("pid")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| format!("event {i}: missing pid"))? as u64;
+        let tid = ev.get("tid").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+        let ts = ev
+            .get("ts")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| format!("event {i}: missing ts"))?;
+        if !ts.is_finite() {
+            return Err(format!("event {i}: non-finite ts"));
+        }
+        if let Some(&prev) = last.get(&(pid, tid)) {
+            if ts < prev {
+                return Err(format!(
+                    "track {pid} lane {tid}: ts went backwards ({ts} after {prev})"
+                ));
+            }
+        }
+        last.insert((pid, tid), ts);
+        tracks.insert(pid);
+        n_events += 1;
+        if ph == "X" {
+            let dur = ev
+                .get("dur")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("event {i}: X event missing dur"))?;
+            if !(dur >= 0.0) {
+                return Err(format!("event {i}: negative or NaN dur {dur}"));
+            }
+        }
+        let name = ev.get("name").and_then(Json::as_str).unwrap_or("");
+        let req = ev.get("args").and_then(|a| a.get("req")).and_then(Json::as_f64);
+        if let Some(r) = req {
+            let r = r as i64;
+            if r >= 0 {
+                if name == "arrive" {
+                    arrived.insert(r);
+                }
+                if matches!(name, "finish" | "drop" | "failed") {
+                    terminal.insert(r);
+                }
+            }
+        }
+    }
+    let dropped = j
+        .get("otherData")
+        .and_then(|o| o.get("dropped_spans"))
+        .and_then(Json::as_f64)
+        .unwrap_or(0.0);
+    if dropped == 0.0 {
+        for r in &arrived {
+            if !terminal.contains(r) {
+                return Err(format!("request {r} arrived but never reached a terminal span"));
+            }
+        }
+    }
+    Ok(format!(
+        "{n_events} events on {} track(s); {} request(s) arrived, {} terminal{}",
+        tracks.len(),
+        arrived.len(),
+        terminal.len(),
+        if dropped > 0.0 { " (span ring wrapped; lifecycle check skipped)" } else { "" }
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{GaugeKind, TraceHandle};
+
+    fn sample_handle() -> TraceHandle {
+        let h = TraceHandle::new(64, 64);
+        let span = |t0: f64, t1: f64, kind: EventKind, req: u64| TraceRecord {
+            t0,
+            t1,
+            kind,
+            track: 0,
+            req,
+            a: 8,
+            b: 4,
+            c: 0,
+        };
+        h.record(span(0.0, 0.0, EventKind::Arrive, 0));
+        h.record(span(0.0, 0.5, EventKind::Queued, 0));
+        h.record(span(0.5, 0.9, EventKind::Prefill, 0));
+        h.record(span(0.9, 0.9, EventKind::FirstToken, 0));
+        h.record(span(0.9, 2.0, EventKind::Decode, 0));
+        h.record(span(2.0, 2.0, EventKind::Finish, 0));
+        h.gauge(GaugeSample { t: 0.5, track: 0, kind: GaugeKind::QueueDepth, value: 1.0 });
+        h.gauge(GaugeSample { t: 2.0, track: 0, kind: GaugeKind::QueueDepth, value: 0.0 });
+        h
+    }
+
+    #[test]
+    fn chrome_export_roundtrips_and_validates() {
+        let h = sample_handle();
+        let t = h.lock();
+        let j = chrome_trace(&t);
+        // serialization roundtrip through the in-tree parser
+        let parsed = Json::parse(&j.dump()).expect("chrome trace parses");
+        let summary = validate_chrome(&parsed).expect("trace validates");
+        assert!(summary.contains("1 track(s)"), "{summary}");
+        assert!(summary.contains("1 request(s) arrived"), "{summary}");
+        // spans became X events with nonnegative dur, instants i events
+        let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        assert!(events.iter().any(|e| e.get("ph").unwrap().as_str() == Some("X")));
+        assert!(events.iter().any(|e| e.get("ph").unwrap().as_str() == Some("C")));
+        assert!(events
+            .iter()
+            .any(|e| e.get("name").and_then(Json::as_str) == Some("process_name")));
+    }
+
+    #[test]
+    fn jsonl_lines_each_parse() {
+        let h = sample_handle();
+        let t = h.lock();
+        let text = jsonl(&t);
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 8); // 6 records + 2 gauges
+        for line in lines {
+            let j = Json::parse(line).expect("jsonl line parses");
+            assert!(j.get("type").is_some());
+        }
+    }
+
+    #[test]
+    fn validator_catches_missing_terminal() {
+        let h = TraceHandle::new(8, 8);
+        h.record(TraceRecord {
+            t0: 0.0,
+            t1: 0.0,
+            kind: EventKind::Arrive,
+            track: 0,
+            req: 5,
+            a: 0,
+            b: 0,
+            c: 0,
+        });
+        let j = chrome_trace(&h.lock());
+        let err = validate_chrome(&j).unwrap_err();
+        assert!(err.contains("request 5"), "{err}");
+    }
+
+    #[test]
+    fn validator_catches_backwards_timestamps() {
+        let src = r#"{"traceEvents": [
+            {"ph": "i", "name": "arrive", "pid": 0, "tid": 0, "ts": 5.0, "s": "t"},
+            {"ph": "i", "name": "finish", "pid": 0, "tid": 0, "ts": 1.0, "s": "t"}
+        ]}"#;
+        let j = Json::parse(src).unwrap();
+        let err = validate_chrome(&j).unwrap_err();
+        assert!(err.contains("backwards"), "{err}");
+    }
+
+    #[test]
+    fn wrapped_ring_skips_lifecycle_check_but_stays_valid() {
+        let h = TraceHandle::new(2, 2);
+        for i in 0..5u64 {
+            h.record(TraceRecord {
+                t0: i as f64,
+                t1: i as f64,
+                kind: EventKind::Arrive,
+                track: 0,
+                req: i,
+                a: 0,
+                b: 0,
+                c: 0,
+            });
+        }
+        let t = h.lock();
+        assert!(t.spans_dropped() > 0);
+        let summary = validate_chrome(&chrome_trace(&t)).expect("wrapped trace valid");
+        assert!(summary.contains("ring wrapped"), "{summary}");
+    }
+
+    #[test]
+    fn prefix_store_sentinel_renders_as_minus_one() {
+        let h = TraceHandle::new(8, 8);
+        h.record(TraceRecord {
+            t0: 1.0,
+            t1: 1.0,
+            kind: EventKind::TierMove,
+            track: 0,
+            req: u64::MAX,
+            a: 1,
+            b: 0,
+            c: 4,
+        });
+        let j = chrome_trace(&h.lock());
+        let dump = j.dump();
+        assert!(dump.contains("\"req\":-1"), "{dump}");
+        validate_chrome(&j).expect("sentinel-only trace valid");
+    }
+}

@@ -1,0 +1,502 @@
+//! Deterministic observability plane: per-request lifecycle spans and
+//! virtual-time gauges, recorded into preallocated ring buffers and
+//! exported as Chrome trace-event JSON (Perfetto-loadable) or JSONL.
+//!
+//! Design contract (property-tested in `tests/prop_obs.rs`):
+//!
+//! * **Invisible to results.** Tracing never mutates engine or cluster
+//!   state, never draws randomness, and never changes control flow: with
+//!   tracing on, records/makespan/stats are bit-identical to tracing off
+//!   across routers x macro-stepping x heap-vs-lockstep x fault plans.
+//!   With tracing off the hot paths pay one `Option::is_some` check and
+//!   allocate nothing.
+//! * **Bounded memory.** Both rings are preallocated at install time and
+//!   overwrite their oldest entries when full; `dropped()` counts what
+//!   was overwritten so exporters can flag truncated traces.
+//! * **Virtual time.** Every record is stamped with the owning engine's
+//!   clock (simulated seconds on `SimBackend`), so a trace of a
+//!   macro-stepped heap-driven fleet reads the same as one from the
+//!   lockstep oracle.
+//!
+//! The engine and cluster attach to a [`TraceHandle`] either explicitly
+//! (`set_tracer`) or via the process-global [`sink`] the CLI installs
+//! for `--trace-out`; each engine allocates its own track (one Perfetto
+//! process row per replica).
+
+pub mod export;
+
+use std::sync::{Arc, Mutex, MutexGuard};
+
+/// Default span-ring capacity installed by the CLI (~4 MB of records).
+pub const DEFAULT_SPAN_CAP: usize = 1 << 16;
+/// Default gauge-ring capacity installed by the CLI.
+pub const DEFAULT_GAUGE_CAP: usize = 1 << 14;
+
+/// Fault instant codes (the `a` payload of [`EventKind::Fault`] records);
+/// the cluster maps its `FaultKind` onto these when folding fault events
+/// into the trace.
+pub const FAULT_CRASH: u64 = 0;
+pub const FAULT_RECOVER: u64 = 1;
+pub const FAULT_STRAGGLER_START: u64 = 2;
+pub const FAULT_STRAGGLER_END: u64 = 3;
+pub const FAULT_IO_ERROR_START: u64 = 4;
+pub const FAULT_IO_ERROR_END: u64 = 5;
+
+/// Human name of a fault instant code (for exporters).
+pub fn fault_name(code: u64) -> &'static str {
+    match code {
+        FAULT_CRASH => "crash",
+        FAULT_RECOVER => "recover",
+        FAULT_STRAGGLER_START => "straggler_start",
+        FAULT_STRAGGLER_END => "straggler_end",
+        FAULT_IO_ERROR_START => "io_error_start",
+        FAULT_IO_ERROR_END => "io_error_end",
+        _ => "unknown",
+    }
+}
+
+/// What one trace record describes. Spans carry `[t0, t1]`; instants
+/// carry `t0 == t1`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// Request entered the system (instant at its arrival time).
+    /// `a` = prompt tokens, `b` = output tokens.
+    Arrive,
+    /// Span from arrival to first admission into prefill.
+    Queued,
+    /// Admission instant. `a` = retained layers granted at admission.
+    Admit,
+    /// Span over the prefill batch that produced this request's first
+    /// token. `a` = prompt tokens prefetched, `b` = prefix tokens served
+    /// from cache.
+    Prefill,
+    /// First token emitted (instant; the TTFT mark).
+    FirstToken,
+    /// Span over one decode step or one macro-stepped decode run.
+    /// `a` = decode iterations covered, `b` = batch tokens in flight.
+    Decode,
+    /// Preempted back to the waiting queue (recompute path).
+    Preempt,
+    /// One layer's residency move. `a` = source tier, `b` = destination
+    /// tier (`metrics::TIER_*`), `c` = layer-blocks moved.
+    TierMove,
+    /// Prefix-cache hit at admission. `a` = tokens served from cache,
+    /// `b` = tier the cached blocks resided on.
+    PrefixHit,
+    /// Evicted unfinished by a drain (crash failover / scale-down).
+    Drain,
+    /// Re-submitted to another replica after a drain.
+    Resubmit,
+    /// A fault-plan event applied to this replica. `a` = fault code
+    /// (`FAULT_*`), `c` = slowdown bits for straggler starts.
+    Fault,
+    /// Completed (terminal). `a` = tokens generated.
+    Finish,
+    /// Dropped by admission control (terminal).
+    Drop,
+    /// Exhausted its failover retry budget (terminal, cluster-level).
+    Failed,
+}
+
+impl EventKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::Arrive => "arrive",
+            EventKind::Queued => "queued",
+            EventKind::Admit => "admit",
+            EventKind::Prefill => "prefill",
+            EventKind::FirstToken => "first_token",
+            EventKind::Decode => "decode",
+            EventKind::Preempt => "preempt",
+            EventKind::TierMove => "tier_move",
+            EventKind::PrefixHit => "prefix_hit",
+            EventKind::Drain => "drain",
+            EventKind::Resubmit => "resubmit",
+            EventKind::Fault => "fault",
+            EventKind::Finish => "finish",
+            EventKind::Drop => "drop",
+            EventKind::Failed => "failed",
+        }
+    }
+
+    /// Spans render as Chrome "X" complete events; everything else as
+    /// "i" instants.
+    pub fn is_span(&self) -> bool {
+        matches!(self, EventKind::Queued | EventKind::Prefill | EventKind::Decode)
+    }
+
+    /// Which per-replica lane (Chrome `tid`) the record renders on: one
+    /// lane per request phase plus lane 0 for instants.
+    pub fn lane(&self) -> u32 {
+        match self {
+            EventKind::Queued => 1,
+            EventKind::Prefill => 2,
+            EventKind::Decode => 3,
+            _ => 0,
+        }
+    }
+
+    /// Terminal lifecycle marks: every arrived request must reach one
+    /// (validated by `export::validate_chrome` unless the ring wrapped).
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, EventKind::Finish | EventKind::Drop | EventKind::Failed)
+    }
+}
+
+/// One span or instant, stamped in virtual time. `req` is the trace's
+/// global request id (`u64::MAX` = the shared prefix store, not a
+/// request). `a`/`b`/`c` are kind-specific payloads (see [`EventKind`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceRecord {
+    pub t0: f64,
+    pub t1: f64,
+    pub kind: EventKind,
+    pub track: u32,
+    pub req: u64,
+    pub a: u64,
+    pub b: u64,
+    pub c: u64,
+}
+
+/// What a gauge sample measures.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GaugeKind {
+    GpuFreeBlocks,
+    HostFreeBlocks,
+    DiskFreeBlocks,
+    QueueDepth,
+    WaitingTokens,
+    RunningTokens,
+    Slowdown,
+    PrefixGpuBlocks,
+}
+
+impl GaugeKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            GaugeKind::GpuFreeBlocks => "gpu_free_blocks",
+            GaugeKind::HostFreeBlocks => "host_free_blocks",
+            GaugeKind::DiskFreeBlocks => "disk_free_blocks",
+            GaugeKind::QueueDepth => "queue_depth",
+            GaugeKind::WaitingTokens => "waiting_tokens",
+            GaugeKind::RunningTokens => "running_tokens",
+            GaugeKind::Slowdown => "slowdown",
+            GaugeKind::PrefixGpuBlocks => "prefix_gpu_blocks",
+        }
+    }
+}
+
+/// One gauge sample on one replica's track, in virtual time. Sampled at
+/// existing event boundaries (arrivals, horizon services, fault events)
+/// — never from new heap events.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GaugeSample {
+    pub t: f64,
+    pub track: u32,
+    pub kind: GaugeKind,
+    pub value: f64,
+}
+
+/// Fixed-capacity overwrite-oldest ring. Preallocated at construction;
+/// `push` never allocates past the first `cap` entries and never grows
+/// the buffer, so tracing memory is bounded for arbitrarily long runs.
+#[derive(Debug, Clone)]
+pub struct Ring<T: Copy> {
+    buf: Vec<T>,
+    cap: usize,
+    /// Index of the oldest entry once the ring has wrapped.
+    head: usize,
+    /// Entries overwritten (or discarded on a zero-capacity ring).
+    dropped: u64,
+}
+
+impl<T: Copy> Ring<T> {
+    pub fn new(cap: usize) -> Self {
+        Ring { buf: Vec::with_capacity(cap), cap, head: 0, dropped: 0 }
+    }
+
+    pub fn push(&mut self, x: T) {
+        if self.cap == 0 {
+            self.dropped += 1;
+        } else if self.buf.len() < self.cap {
+            self.buf.push(x);
+        } else {
+            self.buf[self.head] = x;
+            self.head = (self.head + 1) % self.cap;
+            self.dropped += 1;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Entries lost to overwriting; nonzero means the exported trace is
+    /// missing its oldest records.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Oldest-to-newest iteration.
+    pub fn iter(&self) -> impl Iterator<Item = &T> {
+        self.buf[self.head..].iter().chain(self.buf[..self.head].iter())
+    }
+}
+
+/// The recorder: span + gauge rings plus the track allocator replicas
+/// draw their Perfetto process ids from.
+#[derive(Debug, Clone)]
+pub struct Tracer {
+    spans: Ring<TraceRecord>,
+    gauges: Ring<GaugeSample>,
+    next_track: u32,
+}
+
+impl Tracer {
+    pub fn new(span_cap: usize, gauge_cap: usize) -> Self {
+        Tracer { spans: Ring::new(span_cap), gauges: Ring::new(gauge_cap), next_track: 0 }
+    }
+
+    pub fn record(&mut self, r: TraceRecord) {
+        self.spans.push(r);
+    }
+
+    pub fn gauge(&mut self, g: GaugeSample) {
+        self.gauges.push(g);
+    }
+
+    /// Hand out the next track id (one per attached engine, in attach
+    /// order — replica i gets track i when a cluster attaches in order).
+    pub fn alloc_track(&mut self) -> u32 {
+        let t = self.next_track;
+        self.next_track += 1;
+        t
+    }
+
+    pub fn spans(&self) -> impl Iterator<Item = &TraceRecord> {
+        self.spans.iter()
+    }
+
+    pub fn gauges(&self) -> impl Iterator<Item = &GaugeSample> {
+        self.gauges.iter()
+    }
+
+    pub fn spans_len(&self) -> usize {
+        self.spans.len()
+    }
+
+    pub fn gauges_len(&self) -> usize {
+        self.gauges.len()
+    }
+
+    pub fn span_capacity(&self) -> usize {
+        self.spans.capacity()
+    }
+
+    pub fn gauge_capacity(&self) -> usize {
+        self.gauges.capacity()
+    }
+
+    pub fn spans_dropped(&self) -> u64 {
+        self.spans.dropped()
+    }
+
+    pub fn gauges_dropped(&self) -> u64 {
+        self.gauges.dropped()
+    }
+}
+
+/// Shared, thread-safe handle to one [`Tracer`]. Cloned into every
+/// attached engine/cluster; `par_map` experiment cells and server worker
+/// threads can all feed one trace.
+#[derive(Debug, Clone)]
+pub struct TraceHandle(Arc<Mutex<Tracer>>);
+
+impl TraceHandle {
+    pub fn new(span_cap: usize, gauge_cap: usize) -> Self {
+        TraceHandle(Arc::new(Mutex::new(Tracer::new(span_cap, gauge_cap))))
+    }
+
+    pub fn record(&self, r: TraceRecord) {
+        self.lock().record(r);
+    }
+
+    pub fn gauge(&self, g: GaugeSample) {
+        self.lock().gauge(g);
+    }
+
+    pub fn alloc_track(&self) -> u32 {
+        self.lock().alloc_track()
+    }
+
+    /// Direct access (exporters, batched gauge writes). A panicked
+    /// recorder thread must not poison everyone else's trace.
+    pub fn lock(&self) -> MutexGuard<'_, Tracer> {
+        self.0.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+/// One engine's attachment to a trace: its handle, its track, and the
+/// local-id -> global-trace-id binding for requests routed in via
+/// `submit` (whose engine-local ids differ from the trace's).
+#[derive(Debug, Clone)]
+pub struct EngineTrace {
+    pub handle: TraceHandle,
+    pub track: u32,
+    gids: Vec<usize>,
+}
+
+impl EngineTrace {
+    pub fn attach(handle: TraceHandle) -> Self {
+        let track = handle.alloc_track();
+        EngineTrace { handle, track, gids: Vec::new() }
+    }
+
+    /// Bind engine-local request id -> global trace id.
+    pub fn bind(&mut self, local: usize, gid: usize) {
+        if self.gids.len() <= local {
+            self.gids.resize(local + 1, usize::MAX);
+        }
+        self.gids[local] = gid;
+    }
+
+    /// Global trace id for an engine-local id (falls back to the local
+    /// id, which already *is* the trace id on the whole-trace run path).
+    pub fn gid(&self, local: usize) -> u64 {
+        match self.gids.get(local) {
+            Some(&g) if g != usize::MAX => g as u64,
+            _ => local as u64,
+        }
+    }
+}
+
+/// Process-global sink: the CLI installs a handle before constructing
+/// engines/clusters, which self-attach in their constructors; the CLI
+/// exports and clears afterwards. Tests that need isolation bypass the
+/// sink entirely via `set_tracer`.
+pub mod sink {
+    use super::TraceHandle;
+    use std::sync::Mutex;
+
+    static SINK: Mutex<Option<TraceHandle>> = Mutex::new(None);
+
+    /// Install a fresh tracer as the process-global sink and return it.
+    pub fn install(span_cap: usize, gauge_cap: usize) -> TraceHandle {
+        let h = TraceHandle::new(span_cap, gauge_cap);
+        *SINK.lock().unwrap_or_else(|e| e.into_inner()) = Some(h.clone());
+        h
+    }
+
+    /// The currently installed sink, if any (engine constructors call
+    /// this; None means tracing is off and costs nothing).
+    pub fn current() -> Option<TraceHandle> {
+        SINK.lock().unwrap_or_else(|e| e.into_inner()).clone()
+    }
+
+    pub fn clear() {
+        *SINK.lock().unwrap_or_else(|e| e.into_inner()) = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(t: f64, kind: EventKind, req: u64) -> TraceRecord {
+        TraceRecord { t0: t, t1: t, kind, track: 0, req, a: 0, b: 0, c: 0 }
+    }
+
+    #[test]
+    fn ring_never_exceeds_capacity_and_keeps_newest() {
+        let mut r: Ring<u64> = Ring::new(4);
+        for i in 0..10u64 {
+            r.push(i);
+            assert!(r.len() <= 4);
+        }
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.dropped(), 6);
+        let got: Vec<u64> = r.iter().copied().collect();
+        assert_eq!(got, vec![6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn zero_capacity_ring_discards_everything() {
+        let mut r: Ring<u64> = Ring::new(0);
+        r.push(1);
+        r.push(2);
+        assert_eq!(r.len(), 0);
+        assert_eq!(r.dropped(), 2);
+        assert!(r.iter().next().is_none());
+    }
+
+    #[test]
+    fn tracer_allocates_distinct_tracks() {
+        let h = TraceHandle::new(16, 16);
+        assert_eq!(h.alloc_track(), 0);
+        assert_eq!(h.alloc_track(), 1);
+        assert_eq!(h.alloc_track(), 2);
+    }
+
+    #[test]
+    fn engine_trace_gid_binding_and_fallback() {
+        let mut et = EngineTrace::attach(TraceHandle::new(16, 16));
+        // unbound locals fall back to themselves (whole-trace run path)
+        assert_eq!(et.gid(3), 3);
+        et.bind(0, 41);
+        et.bind(2, 7);
+        assert_eq!(et.gid(0), 41);
+        assert_eq!(et.gid(1), 1); // gap stays fallback
+        assert_eq!(et.gid(2), 7);
+        // the PREFIX_REQ sentinel passes through as u64::MAX
+        assert_eq!(et.gid(usize::MAX), u64::MAX);
+    }
+
+    #[test]
+    fn records_iterate_oldest_to_newest() {
+        let h = TraceHandle::new(3, 3);
+        for i in 0..5 {
+            h.record(rec(i as f64, EventKind::Decode, i));
+        }
+        let t = h.lock();
+        let reqs: Vec<u64> = t.spans().map(|r| r.req).collect();
+        assert_eq!(reqs, vec![2, 3, 4]);
+        assert_eq!(t.spans_dropped(), 2);
+        assert_eq!(t.span_capacity(), 3);
+    }
+
+    #[test]
+    fn sink_install_current_clear() {
+        // serialized against nothing: tests in this module are the only
+        // sink users in the unit suite
+        sink::clear();
+        assert!(sink::current().is_none());
+        let h = sink::install(8, 8);
+        let c = sink::current().expect("installed");
+        c.record(rec(0.0, EventKind::Arrive, 0));
+        assert_eq!(h.lock().spans_len(), 1);
+        sink::clear();
+        assert!(sink::current().is_none());
+    }
+
+    #[test]
+    fn kind_taxonomy() {
+        assert!(EventKind::Decode.is_span());
+        assert!(!EventKind::Finish.is_span());
+        assert!(EventKind::Finish.is_terminal());
+        assert!(EventKind::Drop.is_terminal());
+        assert!(EventKind::Failed.is_terminal());
+        assert!(!EventKind::Arrive.is_terminal());
+        assert_eq!(EventKind::Prefill.lane(), 2);
+        assert_eq!(EventKind::Fault.lane(), 0);
+        assert_eq!(fault_name(FAULT_CRASH), "crash");
+        assert_eq!(fault_name(99), "unknown");
+    }
+}

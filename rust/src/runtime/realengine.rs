@@ -71,6 +71,9 @@ pub struct ServeOutcome {
     /// Latency report over the completed requests (engine-internal ids,
     /// i.e. positions in arrival order).
     pub report: Report,
+    /// The engine's counters for this batch (preemptions, offload
+    /// traffic, cache hits) — the `/metrics` endpoint renders these.
+    pub stats: crate::coordinator::EngineStats,
 }
 
 #[derive(Debug, Clone)]
@@ -538,7 +541,7 @@ impl<M: TokenModel> RealEngine<M> {
                 )
             })
             .collect();
-        Ok(ServeOutcome { results, dropped, report })
+        Ok(ServeOutcome { results, dropped, report, stats })
     }
 }
 

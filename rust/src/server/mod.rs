@@ -34,15 +34,21 @@
 //! explicitly errored, never silently lost. This is the thread-level
 //! twin of `cluster::faults`' crash failover.
 //!
+//! The same port answers `GET /metrics` with the Prometheus text
+//! exposition format: protocol counters (requests/responses/failovers),
+//! the routing ledger (queued jobs/tokens, TTFT EWMA, liveness) and the
+//! accumulated `EngineStats` of every worker, labelled by worker index.
+//!
 //! Example session: `cargo run --release -- serve` then
 //! `printf '{"id":1,"prompt":[1,2,3],"max_new_tokens":4}\n' | nc 127.0.0.1 7181`
+//! or `curl http://127.0.0.1:7181/metrics`
 
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::path::Path;
 use std::rc::Rc;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
@@ -51,6 +57,7 @@ use anyhow::{Context, Result};
 
 use crate::cluster::router::ewma_update;
 use crate::cluster::RouterPolicy;
+use crate::coordinator::EngineStats;
 use crate::runtime::{RealEngine, RealEngineConfig, RefModel, ServeRequest, TokenModel};
 use crate::util::{Json, Rng};
 
@@ -131,6 +138,66 @@ fn pick_worker(policy: RouterPolicy, loads: &[WorkerLoad], rr: usize) -> Option<
     })
 }
 
+/// One worker's accumulated serving totals for `/metrics` — folded in
+/// batch by batch as its engine finishes `serve` calls.
+#[derive(Debug, Clone, Default)]
+struct WorkerStats {
+    /// Micro-batches this worker served.
+    batches: u64,
+    /// Well-formed requests the engine rejected (oversized prompts etc.).
+    rejected: u64,
+    /// Engine counters summed across batches (`dropped` stays empty: the
+    /// ids are batch-local and meaningless across batches).
+    engine: EngineStats,
+}
+
+/// Fold one batch's engine counters into a worker's running totals.
+fn fold_stats(acc: &mut EngineStats, s: &EngineStats) {
+    acc.steps += s.steps;
+    acc.prefill_steps += s.prefill_steps;
+    acc.decode_steps += s.decode_steps;
+    acc.preemptions += s.preemptions;
+    acc.proactive_offload_layers += s.proactive_offload_layers;
+    acc.oom_forced_offload_layers += s.oom_forced_offload_layers;
+    acc.onloaded_layers += s.onloaded_layers;
+    acc.offload_bytes += s.offload_bytes;
+    acc.onload_stream_bytes += s.onload_stream_bytes;
+    acc.stream_stall_s += s.stream_stall_s;
+    acc.contention_s += s.contention_s;
+    acc.spilled_layers += s.spilled_layers;
+    acc.disk_promoted_layers += s.disk_promoted_layers;
+    acc.spill_bytes += s.spill_bytes;
+    acc.disk_restore_bytes += s.disk_restore_bytes;
+    acc.disk_stream_bytes += s.disk_stream_bytes;
+    acc.disk_stall_s += s.disk_stall_s;
+    acc.disk_io_errors += s.disk_io_errors;
+    acc.disk_fenced |= s.disk_fenced;
+    acc.prefix_hits += s.prefix_hits;
+    acc.prefix_misses += s.prefix_misses;
+    acc.prefix_hit_tokens += s.prefix_hit_tokens;
+    acc.prefix_inserts += s.prefix_inserts;
+    acc.prefix_evictions += s.prefix_evictions;
+    acc.prefix_demotions += s.prefix_demotions;
+    acc.prefix_promotions += s.prefix_promotions;
+    acc.prefix_restore_bytes += s.prefix_restore_bytes;
+}
+
+/// Append one `# HELP` + `# TYPE` header pair (Prometheus text format).
+fn prom_family(out: &mut String, name: &str, kind: &str, help: &str) {
+    use std::fmt::Write as _;
+    let _ = writeln!(out, "# HELP layerkv_{name} {help}");
+    let _ = writeln!(out, "# TYPE layerkv_{name} {kind}");
+}
+
+/// Append one sample line, optionally labelled with its worker index.
+fn prom_sample(out: &mut String, name: &str, worker: Option<usize>, v: f64) {
+    use std::fmt::Write as _;
+    let _ = match worker {
+        Some(w) => writeln!(out, "layerkv_{name}{{worker=\"{w}\"}} {v}"),
+        None => writeln!(out, "layerkv_{name} {v}"),
+    };
+}
+
 /// The shared front-end: per-worker queues plus the load ledger the
 /// router reads.
 struct Frontend {
@@ -140,6 +207,14 @@ struct Frontend {
     txs: Vec<Mutex<mpsc::Sender<Job>>>,
     /// Per-job reply deadline; missing it fences the worker as hung.
     reply_timeout: Duration,
+    /// Protocol counters for `/metrics`.
+    requests_total: AtomicU64,
+    responses_ok: AtomicU64,
+    responses_err: AtomicU64,
+    /// Workers fenced out of routing (crash, hang, or dead queue).
+    failovers_total: AtomicU64,
+    /// Per-worker engine totals, folded in as batches complete.
+    worker_stats: Mutex<Vec<WorkerStats>>,
 }
 
 impl Frontend {
@@ -148,8 +223,13 @@ impl Frontend {
             policy,
             rr: AtomicUsize::new(0),
             loads: Mutex::new(vec![WorkerLoad::default(); txs.len()]),
+            worker_stats: Mutex::new(vec![WorkerStats::default(); txs.len()]),
             txs: txs.into_iter().map(Mutex::new).collect(),
             reply_timeout: REPLY_TIMEOUT,
+            requests_total: AtomicU64::new(0),
+            responses_ok: AtomicU64::new(0),
+            responses_err: AtomicU64::new(0),
+            failovers_total: AtomicU64::new(0),
         }
     }
 
@@ -164,6 +244,7 @@ impl Frontend {
     /// keeps any late `job_done` from a merely-slow worker harmless.
     fn fence(&self, worker: usize) {
         self.loads.lock().expect("load ledger poisoned")[worker].dead = true;
+        self.failovers_total.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Route and enqueue one job, returning the worker it landed on;
@@ -198,6 +279,7 @@ impl Frontend {
                     loads[w].queued_jobs = loads[w].queued_jobs.saturating_sub(1);
                     loads[w].queued_tokens = loads[w].queued_tokens.saturating_sub(tokens);
                     loads[w].dead = true;
+                    self.failovers_total.fetch_add(1, Ordering::Relaxed);
                 }
             }
         }
@@ -245,6 +327,196 @@ impl Frontend {
         if let Some(t) = ttft_s {
             l.ewma_ttft_s = Some(ewma_update(l.ewma_ttft_s, t));
         }
+    }
+
+    /// Fold one served batch's engine counters into a worker's totals.
+    fn record_batch(&self, worker: usize, s: &EngineStats, rejected: u64) {
+        let mut all = self.worker_stats.lock().expect("worker stats poisoned");
+        let w = &mut all[worker];
+        w.batches += 1;
+        w.rejected += rejected;
+        fold_stats(&mut w.engine, s);
+    }
+
+    /// Render the live `/metrics` payload in the Prometheus text
+    /// exposition format: protocol counters, the routing ledger, and
+    /// every engine counter as a per-worker series.
+    fn metrics_text(&self) -> String {
+        let mut o = String::new();
+        prom_family(&mut o, "requests_total", "counter", "Request lines received");
+        prom_sample(
+            &mut o,
+            "requests_total",
+            None,
+            self.requests_total.load(Ordering::Relaxed) as f64,
+        );
+        prom_family(&mut o, "responses_total", "counter", "Responses sent, by status");
+        {
+            use std::fmt::Write as _;
+            let ok = self.responses_ok.load(Ordering::Relaxed);
+            let err = self.responses_err.load(Ordering::Relaxed);
+            let _ = writeln!(o, "layerkv_responses_total{{status=\"ok\"}} {ok}");
+            let _ = writeln!(o, "layerkv_responses_total{{status=\"error\"}} {err}");
+        }
+        prom_family(&mut o, "failovers_total", "counter", "Workers fenced out of routing");
+        prom_sample(
+            &mut o,
+            "failovers_total",
+            None,
+            self.failovers_total.load(Ordering::Relaxed) as f64,
+        );
+
+        let loads = self.loads.lock().expect("load ledger poisoned").clone();
+        prom_family(&mut o, "worker_up", "gauge", "1 while the worker is routable");
+        for (i, l) in loads.iter().enumerate() {
+            prom_sample(&mut o, "worker_up", Some(i), if l.dead { 0.0 } else { 1.0 });
+        }
+        prom_family(&mut o, "worker_queued_jobs", "gauge", "Jobs routed and unanswered");
+        for (i, l) in loads.iter().enumerate() {
+            prom_sample(&mut o, "worker_queued_jobs", Some(i), l.queued_jobs as f64);
+        }
+        prom_family(
+            &mut o,
+            "worker_queued_tokens",
+            "gauge",
+            "Prompt+decode tokens of queued jobs (KV-demand proxy)",
+        );
+        for (i, l) in loads.iter().enumerate() {
+            prom_sample(&mut o, "worker_queued_tokens", Some(i), l.queued_tokens as f64);
+        }
+        prom_family(
+            &mut o,
+            "worker_ttft_ewma_seconds",
+            "gauge",
+            "EWMA of delivered TTFTs (0 until the first)",
+        );
+        for (i, l) in loads.iter().enumerate() {
+            prom_sample(
+                &mut o,
+                "worker_ttft_ewma_seconds",
+                Some(i),
+                l.ewma_ttft_s.unwrap_or(0.0),
+            );
+        }
+
+        let stats = self.worker_stats.lock().expect("worker stats poisoned").clone();
+        prom_family(&mut o, "worker_batches_total", "counter", "Micro-batches served");
+        for (i, w) in stats.iter().enumerate() {
+            prom_sample(&mut o, "worker_batches_total", Some(i), w.batches as f64);
+        }
+        prom_family(
+            &mut o,
+            "worker_rejected_total",
+            "counter",
+            "Well-formed requests the engine rejected",
+        );
+        for (i, w) in stats.iter().enumerate() {
+            prom_sample(&mut o, "worker_rejected_total", Some(i), w.rejected as f64);
+        }
+        // coerce each closure to a fn pointer so one loop renders the
+        // whole engine-counter table
+        type Get = fn(&EngineStats) -> f64;
+        let engine_counters: &[(&str, &str, Get)] = &[
+            ("engine_steps_total", "Scheduler steps executed", |s| s.steps as f64),
+            ("engine_prefill_steps_total", "Prefill steps", |s| s.prefill_steps as f64),
+            ("engine_decode_steps_total", "Decode steps", |s| s.decode_steps as f64),
+            ("engine_preemptions_total", "Recompute preemptions", |s| s.preemptions as f64),
+            (
+                "engine_proactive_offload_layers_total",
+                "Layers offloaded GPU->host proactively",
+                |s| s.proactive_offload_layers as f64,
+            ),
+            (
+                "engine_oom_offload_layers_total",
+                "Layers force-offloaded under GPU pressure",
+                |s| s.oom_forced_offload_layers as f64,
+            ),
+            ("engine_onload_layers_total", "Layers restored host->GPU", |s| {
+                s.onloaded_layers as f64
+            }),
+            ("engine_offload_bytes_total", "Bytes offloaded GPU->host", |s| s.offload_bytes),
+            (
+                "engine_onload_stream_bytes_total",
+                "Bytes streamed host->GPU during decode",
+                |s| s.onload_stream_bytes,
+            ),
+            (
+                "engine_stream_stall_seconds_total",
+                "Decode time lost to host-KV streaming",
+                |s| s.stream_stall_s,
+            ),
+            (
+                "engine_contention_seconds_total",
+                "Decode time lost to PCIe contention",
+                |s| s.contention_s,
+            ),
+            ("engine_spilled_layers_total", "Layers spilled host->disk", |s| {
+                s.spilled_layers as f64
+            }),
+            (
+                "engine_disk_promoted_layers_total",
+                "Layers restored disk->GPU",
+                |s| s.disk_promoted_layers as f64,
+            ),
+            ("engine_spill_bytes_total", "Bytes written to the disk tier", |s| s.spill_bytes),
+            (
+                "engine_disk_restore_bytes_total",
+                "Bytes read back from the disk tier",
+                |s| s.disk_restore_bytes,
+            ),
+            (
+                "engine_disk_stream_bytes_total",
+                "Bytes decode streamed from disk",
+                |s| s.disk_stream_bytes,
+            ),
+            (
+                "engine_disk_stall_seconds_total",
+                "Decode time lost to the disk link",
+                |s| s.disk_stall_s,
+            ),
+            ("engine_disk_io_errors_total", "Disk-tier I/O failures", |s| {
+                s.disk_io_errors as f64
+            }),
+            ("engine_disk_fenced", "1 after the disk tier was retired", |s| {
+                if s.disk_fenced {
+                    1.0
+                } else {
+                    0.0
+                }
+            }),
+            ("engine_prefix_hits_total", "Prefix-cache hits", |s| s.prefix_hits as f64),
+            ("engine_prefix_misses_total", "Prefix-cache misses", |s| s.prefix_misses as f64),
+            (
+                "engine_prefix_hit_tokens_total",
+                "Prompt tokens served from the prefix cache",
+                |s| s.prefix_hit_tokens as f64,
+            ),
+            ("engine_prefix_inserts_total", "Prefix-cache inserts", |s| {
+                s.prefix_inserts as f64
+            }),
+            ("engine_prefix_evictions_total", "Prefix-cache evictions", |s| {
+                s.prefix_evictions as f64
+            }),
+            ("engine_prefix_demotions_total", "Prefix entries demoted a tier", |s| {
+                s.prefix_demotions as f64
+            }),
+            ("engine_prefix_promotions_total", "Prefix entries promoted to GPU", |s| {
+                s.prefix_promotions as f64
+            }),
+            (
+                "engine_prefix_restore_bytes_total",
+                "Bytes restored to serve prefix hits",
+                |s| s.prefix_restore_bytes,
+            ),
+        ];
+        for (name, help, get) in engine_counters {
+            let kind = if *name == "engine_disk_fenced" { "gauge" } else { "counter" };
+            prom_family(&mut o, name, kind, help);
+            for (i, w) in stats.iter().enumerate() {
+                prom_sample(&mut o, name, Some(i), get(&w.engine));
+            }
+        }
+        o
     }
 }
 
@@ -314,6 +586,7 @@ fn engine_worker<M: TokenModel>(
             .collect();
         match engine.serve(reqs) {
             Ok(out) => {
+                front.record_batch(worker, &out.stats, out.dropped.len() as u64);
                 for r in out.results {
                     let job = &jobs[r.id];
                     let line = render_response(
@@ -342,6 +615,22 @@ fn engine_worker<M: TokenModel>(
     }
 }
 
+/// Full HTTP response for a `GET <path>` line on the JSON port — the
+/// `/metrics` scrape surface (Prometheus text format); anything else is
+/// a 404. Split out of `handle_conn` so it tests without a socket.
+fn http_response(path: &str, front: &Frontend) -> String {
+    let (status, body) = if path == "/metrics" {
+        ("200 OK", front.metrics_text())
+    } else {
+        ("404 Not Found", "not found\n".to_string())
+    };
+    format!(
+        "HTTP/1.1 {status}\r\nContent-Type: text/plain; version=0.0.4\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )
+}
+
 fn handle_conn(stream: TcpStream, front: Arc<Frontend>) {
     let peer = stream.peer_addr().ok();
     let mut writer = match stream.try_clone() {
@@ -354,6 +643,14 @@ fn handle_conn(stream: TcpStream, front: Arc<Frontend>) {
         if line.trim().is_empty() {
             continue;
         }
+        // an HTTP GET on the JSON port: answer the scrape and close (the
+        // remaining header lines die with the connection)
+        if let Some(rest) = line.strip_prefix("GET ") {
+            let path = rest.split_whitespace().next().unwrap_or("");
+            let _ = write!(writer, "{}", http_response(path, &front));
+            return;
+        }
+        front.requests_total.fetch_add(1, Ordering::Relaxed);
         let reply = match parse_request(&line) {
             Ok(req) => {
                 // per-request deterministic jitter seed: replays of the
@@ -363,6 +660,15 @@ fn handle_conn(stream: TcpStream, front: Arc<Frontend>) {
             }
             Err(e) => render_error(None, &format!("{e:#}")),
         };
+        let failed = match Json::parse(&reply) {
+            Ok(j) => j.get("error").is_some(),
+            Err(_) => true,
+        };
+        if failed {
+            front.responses_err.fetch_add(1, Ordering::Relaxed);
+        } else {
+            front.responses_ok.fetch_add(1, Ordering::Relaxed);
+        }
         if writeln!(writer, "{reply}").is_err() {
             break;
         }
@@ -432,7 +738,8 @@ pub fn serve(
     }
     let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
     println!(
-        "layerkv serving on {addr} ({replicas} replica{}, router {})",
+        "layerkv serving on {addr} ({replicas} replica{}, router {}); \
+         GET /metrics for Prometheus counters",
         if replicas == 1 { "" } else { "s" },
         router.name()
     );
@@ -648,6 +955,64 @@ mod tests {
         assert_eq!(j.req("id").unwrap().as_usize(), Some(7));
         assert_eq!(j.req("output").unwrap().as_arr().unwrap().len(), 2);
         assert!(j.req("ttft_ms").unwrap().as_f64().unwrap() > 12.0);
+    }
+
+    #[test]
+    fn metrics_text_renders_counters_and_worker_series() {
+        let (tx0, _rx0) = mpsc::channel::<Job>();
+        let (tx1, _rx1) = mpsc::channel::<Job>();
+        let front = Frontend::new(RouterPolicy::RoundRobin, vec![tx0, tx1]);
+        front.requests_total.fetch_add(3, Ordering::Relaxed);
+        front.responses_ok.fetch_add(2, Ordering::Relaxed);
+        front.responses_err.fetch_add(1, Ordering::Relaxed);
+        front.fence(1);
+        front.record_batch(
+            0,
+            &EngineStats {
+                steps: 7,
+                preemptions: 2,
+                prefix_hits: 4,
+                offload_bytes: 1024.0,
+                ..Default::default()
+            },
+            1,
+        );
+        let text = front.metrics_text();
+        assert!(text.contains("# TYPE layerkv_requests_total counter"));
+        assert!(text.contains("layerkv_requests_total 3"));
+        assert!(text.contains("layerkv_responses_total{status=\"ok\"} 2"));
+        assert!(text.contains("layerkv_responses_total{status=\"error\"} 1"));
+        assert!(text.contains("layerkv_failovers_total 1"));
+        assert!(text.contains("layerkv_worker_up{worker=\"0\"} 1"));
+        assert!(text.contains("layerkv_worker_up{worker=\"1\"} 0"));
+        assert!(text.contains("layerkv_engine_steps_total{worker=\"0\"} 7"));
+        assert!(text.contains("layerkv_engine_preemptions_total{worker=\"0\"} 2"));
+        assert!(text.contains("layerkv_engine_prefix_hits_total{worker=\"0\"} 4"));
+        assert!(text.contains("layerkv_engine_offload_bytes_total{worker=\"0\"} 1024"));
+        assert!(text.contains("layerkv_worker_rejected_total{worker=\"0\"} 1"));
+        assert!(text.contains("layerkv_worker_batches_total{worker=\"0\"} 1"));
+        // series for the second worker exist too (all zero)
+        assert!(text.contains("layerkv_engine_steps_total{worker=\"1\"} 0"));
+    }
+
+    #[test]
+    fn metrics_endpoint_speaks_http() {
+        let (tx0, _rx0) = mpsc::channel::<Job>();
+        let front = Frontend::new(RouterPolicy::RoundRobin, vec![tx0]);
+        let resp = http_response("/metrics", &front);
+        assert!(resp.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(resp.contains("Content-Type: text/plain"));
+        let body = resp.split("\r\n\r\n").nth(1).expect("has a body");
+        assert!(body.contains("layerkv_requests_total 0"));
+        let len: usize = resp
+            .split("Content-Length: ")
+            .nth(1)
+            .and_then(|s| s.split('\r').next())
+            .and_then(|s| s.parse().ok())
+            .expect("content length");
+        assert_eq!(len, body.len());
+        let missing = http_response("/nope", &front);
+        assert!(missing.starts_with("HTTP/1.1 404"));
     }
 
     #[test]

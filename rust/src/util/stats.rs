@@ -32,11 +32,21 @@ impl Series {
         self.samples.iter().sum::<f64>() / self.samples.len() as f64
     }
 
+    /// Smallest sample; 0.0 on an empty series — like `mean` and
+    /// `percentile`, so a replica that completed nothing renders as `-`
+    /// / 0 instead of poisoning report rollups with ±inf.
     pub fn min(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
         self.samples.iter().copied().fold(f64::INFINITY, f64::min)
     }
 
+    /// Largest sample; 0.0 on an empty series (see [`Series::min`]).
     pub fn max(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
         self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
     }
 
@@ -151,6 +161,21 @@ mod tests {
         let mut s = Series::new();
         assert_eq!(s.mean(), 0.0);
         assert_eq!(s.percentile(99.0), 0.0);
+        // regression: these returned +inf / -inf on an empty series,
+        // which leaked into zero-completion replica rows as NaN deltas
+        assert_eq!(s.min(), 0.0);
+        assert_eq!(s.max(), 0.0);
+        assert!(s.min().is_finite() && s.max().is_finite());
+    }
+
+    #[test]
+    fn min_max_on_populated_series() {
+        let mut s = Series::new();
+        for x in [4.0, -2.0, 9.0] {
+            s.push(x);
+        }
+        assert_eq!(s.min(), -2.0);
+        assert_eq!(s.max(), 9.0);
     }
 
     #[test]

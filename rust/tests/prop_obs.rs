@@ -1,0 +1,233 @@
+//! Observability-plane invariants (randomized, seeded, replayable via
+//! LAYERKV_PROP_SEED / LAYERKV_PROP_CASES — see util::prop):
+//!
+//! * bit-invisibility — attaching a tracer changes NOTHING about the
+//!   simulation: merged records, makespan bits, drops, failures, fault
+//!   summaries, rendered fault logs, per-replica routing, attribution
+//!   and every engine counter are identical with tracing on vs off,
+//!   across routers x macro-stepping x heap/lockstep drives x generated
+//!   fault plans. Tracing is a pure observer, not a participant.
+//! * well-formedness — the Chrome trace exported from any traced run
+//!   passes `validate_chrome`: monotonic per-lane timestamps and every
+//!   arrived request reaching a terminal mark (finish/drop/failed).
+//! * bounded memory — the span/gauge rings never exceed their
+//!   configured capacity; overflowing runs overwrite oldest-first and
+//!   the (wrapped) export still validates.
+
+use layerkv::cluster::{Cluster, ClusterConfig, FaultPlan, RouterPolicy};
+use layerkv::config::{Policy, ServingConfig};
+use layerkv::obs::export::{chrome_trace, validate_chrome};
+use layerkv::obs::TraceHandle;
+use layerkv::util::prop::prop;
+use layerkv::util::Rng;
+use layerkv::workload::arrivals::Arrivals;
+use layerkv::workload::fixed::FixedWorkload;
+use layerkv::workload::sharegpt::ShareGptWorkload;
+use layerkv::workload::Trace;
+
+fn random_policy(rng: &mut Rng) -> Policy {
+    match rng.range(0, 3) {
+        0 => Policy::Vllm,
+        1 => Policy::LayerKv { slo_aware: true },
+        _ => Policy::LayerKv { slo_aware: false },
+    }
+}
+
+fn random_trace(rng: &mut Rng, n: usize) -> Trace {
+    let rate = rng.f64() * 4.0 + 0.5;
+    let arrivals = if rng.chance(0.4) {
+        Arrivals::bursty(rate, rng.f64() * 2.0 + 1.5)
+    } else {
+        Arrivals::Poisson { rate }
+    };
+    if rng.chance(0.5) {
+        let mut w = ShareGptWorkload::paper(rate, n);
+        w.arrivals = arrivals;
+        w.generate(rng)
+    } else {
+        FixedWorkload {
+            prompt_len: rng.range_usize(16, 4096),
+            output_len: rng.range_usize(4, 128),
+            n_requests: n,
+            arrivals,
+        }
+        .generate(rng)
+    }
+}
+
+#[test]
+fn prop_tracing_is_bit_invisible() {
+    prop(8, |rng| {
+        let n = rng.range_usize(8, 30);
+        // k=1 exercises the pure single-engine path too
+        let k = rng.range_usize(1, 5);
+        let router = RouterPolicy::ALL[rng.range_usize(0, RouterPolicy::ALL.len())];
+        let lockstep = rng.chance(0.5);
+        let macro_steps = rng.chance(0.5);
+        let trace = random_trace(rng, n);
+        let cfg = ServingConfig::llama2_7b_tp1().with_policy(random_policy(rng));
+        let plan = if rng.chance(0.5) {
+            let horizon = trace
+                .requests
+                .last()
+                .map(|r| r.arrival)
+                .unwrap_or(0.0)
+                .max(1.0);
+            Some(FaultPlan::generate(rng.range(0, 1 << 30) as u64, k, horizon * 1.3))
+        } else {
+            None
+        };
+        // per-instance handle (not the global sink): tests run in
+        // parallel and must not observe each other's engines
+        let run = |tracer: Option<&TraceHandle>| {
+            let mut cluster = Cluster::new(&ClusterConfig::homogeneous(&cfg, k, router));
+            if let Some(p) = &plan {
+                cluster = cluster.with_faults(p.clone());
+            }
+            cluster.set_lockstep(lockstep);
+            cluster.set_macro_steps(macro_steps);
+            if let Some(h) = tracer {
+                cluster.set_tracer(h.clone());
+            }
+            let out = cluster.run(&trace).expect("sim cluster never fails");
+            let log: Vec<String> =
+                cluster.fault_log().iter().map(|e| e.render()).collect();
+            (out, log)
+        };
+        let handle = TraceHandle::new(1 << 16, 1 << 14);
+        let (a, log_a) = run(Some(&handle));
+        let (b, log_b) = run(None);
+        let label = format!(
+            "router {} k={k} lockstep={lockstep} macro={macro_steps} faulted={}",
+            router.name(),
+            plan.is_some()
+        );
+        assert_eq!(a.merged.records, b.merged.records, "{label}: records");
+        assert_eq!(
+            a.merged.makespan.to_bits(),
+            b.merged.makespan.to_bits(),
+            "{label}: makespan bits"
+        );
+        assert_eq!(a.dropped, b.dropped, "{label}: drops");
+        assert_eq!(a.failed, b.failed, "{label}: failures");
+        assert_eq!(a.faults, b.faults, "{label}: fault summary");
+        assert_eq!(a.attribution, b.attribution, "{label}: attribution");
+        assert_eq!(log_a, log_b, "{label}: rendered fault log");
+        for (pa, pb) in a.per_replica.iter().zip(&b.per_replica) {
+            assert_eq!(pa.routed, pb.routed, "{label}: routing diverged");
+            assert_eq!(
+                pa.report.records, pb.report.records,
+                "{label}: per-replica records diverged"
+            );
+            // every engine counter identical — tracing reads state, it
+            // never feeds back into scheduling or transfers
+            assert_eq!(&pa.stats, &pb.stats, "{label}: engine stats diverged");
+        }
+        // attribution covers exactly the merged completions, in order
+        assert_eq!(a.attribution.len(), a.merged.records.len(), "{label}");
+        for (att, rec) in a.attribution.iter().zip(&a.merged.records) {
+            assert_eq!(att.id, rec.id, "{label}: attribution order");
+            assert!(att.replica < k, "{label}: replica index out of range");
+            if plan.is_none() {
+                assert_eq!(att.retries, 0, "{label}: retries on a fault-free run");
+            }
+        }
+        // the traced run produced a well-formed, bounded trace
+        let t = handle.lock();
+        assert!(t.spans_len() <= t.span_capacity(), "{label}: span ring overflow");
+        assert!(t.gauges_len() <= t.gauge_capacity(), "{label}: gauge ring overflow");
+        if !a.merged.records.is_empty() {
+            assert!(t.spans_len() > 0, "{label}: completions left no spans");
+        }
+        let doc = chrome_trace(&t);
+        validate_chrome(&doc)
+            .unwrap_or_else(|e| panic!("{label}: exported trace invalid: {e}"));
+    });
+}
+
+/// A deliberately tiny ring under a run that emits far more events than
+/// it can hold: memory stays bounded (oldest records overwritten, never
+/// grown), behavior stays bit-identical, and the wrapped export still
+/// validates (the lifecycle check downgrades, monotonicity holds).
+#[test]
+fn overflowing_ring_stays_bounded_and_invisible() {
+    let cfg = ServingConfig::llama2_7b_tp1()
+        .with_policy(Policy::LayerKv { slo_aware: true });
+    let trace = FixedWorkload {
+        prompt_len: 512,
+        output_len: 64,
+        n_requests: 64,
+        arrivals: Arrivals::Poisson { rate: 4.0 },
+    }
+    .generate(&mut Rng::new(11));
+    let ccfg = ClusterConfig::homogeneous(&cfg, 2, RouterPolicy::KvPressure);
+    let handle = TraceHandle::new(64, 32);
+    let mut traced = Cluster::new(&ccfg);
+    traced.set_tracer(handle.clone());
+    let a = traced.run(&trace).expect("sim cluster run");
+    let mut plain = Cluster::new(&ccfg);
+    let b = plain.run(&trace).expect("sim cluster run");
+    assert_eq!(a.merged.records, b.merged.records);
+    assert_eq!(a.merged.makespan.to_bits(), b.merged.makespan.to_bits());
+    let t = handle.lock();
+    // 64 requests x (queued + prefill + per-token decode + finish) is
+    // thousands of records: both rings must have wrapped, at capacity
+    assert_eq!(t.spans_len(), t.span_capacity());
+    assert!(t.spans_dropped() > 0, "span ring never wrapped");
+    assert!(t.gauges_len() <= t.gauge_capacity());
+    assert!(t.gauges_dropped() > 0, "gauge ring never wrapped");
+    let summary = validate_chrome(&chrome_trace(&t)).expect("wrapped trace valid");
+    assert!(summary.contains("ring wrapped"), "{summary}");
+}
+
+/// Crash-failover attribution: requests drained off a crashed replica
+/// and finished elsewhere carry `retries > 0`, never attributed to the
+/// replica that was down for the whole arrival window.
+#[test]
+fn attribution_tracks_failover_retries() {
+    let cfg = ServingConfig::llama2_7b_tp1()
+        .with_policy(Policy::LayerKv { slo_aware: true });
+    let trace = FixedWorkload {
+        prompt_len: 256,
+        output_len: 128,
+        n_requests: 40,
+        arrivals: Arrivals::Poisson { rate: 4.0 },
+    }
+    .generate(&mut Rng::new(5));
+    // replica 0 crashes at t=2s (its first routed requests, with ~5s of
+    // decode ahead, are mid-flight) and stays down past the last arrival
+    let plan = FaultPlan::parse_spec("crash=0@2:60,retries=3").expect("spec");
+    let ccfg = ClusterConfig::homogeneous(&cfg, 3, RouterPolicy::RoundRobin);
+    let mut cluster = Cluster::new(&ccfg).with_faults(plan);
+    let out = cluster.run(&trace).expect("sim cluster run");
+    assert_eq!(out.attribution.len(), out.merged.records.len());
+    let moved: u64 = out.attribution.iter().map(|a| a.retries as u64).sum();
+    assert!(moved > 0, "crash at t=2 must drain at least one in-flight request");
+    let summary = out.faults.expect("faulted run has a summary");
+    assert!(
+        moved <= summary.retries,
+        "completed-request retries ({moved}) exceed total failovers ({})",
+        summary.retries
+    );
+    for a in &out.attribution {
+        if a.retries > 0 {
+            assert_ne!(
+                a.replica, 0,
+                "request {} retried onto the replica that was down",
+                a.id
+            );
+        }
+    }
+    // fault-free control: same trace, nobody retries, per-replica
+    // attribution counts reconcile with routed completions
+    let mut plain = Cluster::new(&ccfg);
+    let po = plain.run(&trace).expect("sim cluster run");
+    assert!(po.attribution.iter().all(|a| a.retries == 0));
+    let mut counts = vec![0usize; 3];
+    for a in &po.attribution {
+        counts[a.replica] += 1;
+    }
+    for (i, rep) in po.per_replica.iter().enumerate() {
+        assert_eq!(counts[i], rep.report.records.len(), "replica {i}");
+    }
+}
