@@ -63,12 +63,25 @@ pub struct IoBurst {
     pub until: f64,
 }
 
+/// One planned live migration: at `at`, replica `src` drains with full
+/// state ([`crate::coordinator::Engine::drain_with_state`]) and `dst`
+/// adopts every exported request; `src` is then fenced for the rest of
+/// the run (scale-down / rebalance semantics — administratively down,
+/// not crashed, so nothing counts against retry budgets).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Migration {
+    pub src: usize,
+    pub dst: usize,
+    pub at: f64,
+}
+
 /// A deterministic, virtual-time fault schedule for one cluster run.
 #[derive(Debug, Clone, PartialEq)]
 pub struct FaultPlan {
     pub crashes: Vec<CrashWindow>,
     pub stragglers: Vec<Straggler>,
     pub io_bursts: Vec<IoBurst>,
+    pub migrations: Vec<Migration>,
     /// Max re-submissions per request after crash drains; a request
     /// drained more than this many times is failed, exactly once.
     pub retry_budget: u32,
@@ -82,6 +95,7 @@ impl Default for FaultPlan {
             crashes: Vec::new(),
             stragglers: Vec::new(),
             io_bursts: Vec::new(),
+            migrations: Vec::new(),
             retry_budget: 2,
             probation_s: 5.0,
         }
@@ -92,7 +106,10 @@ impl FaultPlan {
     /// No faults scheduled (budget/probation knobs don't count: with no
     /// events they can never fire).
     pub fn is_empty(&self) -> bool {
-        self.crashes.is_empty() && self.stragglers.is_empty() && self.io_bursts.is_empty()
+        self.crashes.is_empty()
+            && self.stragglers.is_empty()
+            && self.io_bursts.is_empty()
+            && self.migrations.is_empty()
     }
 
     /// Seeded random plan over `n_replicas` replicas and a `horizon_s`
@@ -188,6 +205,13 @@ impl FaultPlan {
                 });
             }
         }
+        for m in &self.migrations {
+            evs.push(FaultEvent {
+                t: m.at,
+                replica: m.src,
+                kind: FaultKind::Migrate { dst: m.dst },
+            });
+        }
         // total_cmp, not partial_cmp: `validate()` rejects NaN times at
         // every construction edge, but a sort must never be the thing
         // that panics on a hostile plan (this used to be a user-reachable
@@ -231,8 +255,42 @@ impl FaultPlan {
         for b in &self.io_bursts {
             closed(&format!("io burst on replica {}", b.replica), b.from, b.until)?;
         }
+        for m in &self.migrations {
+            if !m.at.is_finite() || m.at < 0.0 {
+                return Err(format!(
+                    "migration {} -> {}: time {} must be finite and >= 0",
+                    m.src, m.dst, m.at
+                ));
+            }
+            if m.src == m.dst {
+                return Err(format!("migration {} -> {}: source equals destination", m.src, m.dst));
+            }
+        }
         if !self.probation_s.is_finite() || self.probation_s < 0.0 {
             return Err(format!("probation {} must be finite and >= 0", self.probation_s));
+        }
+        // Overlapping crash windows on the same replica would double-drain
+        // it: the second crash fires while the replica is already down and
+        // empty, and its recover re-opens a window the first crash still
+        // owns. Touching windows (next starts exactly when the previous
+        // recovers) and zero-length windows stay legal — only a strict
+        // overlap is a plan bug.
+        let mut by_replica: std::collections::BTreeMap<usize, Vec<(f64, f64)>> =
+            std::collections::BTreeMap::new();
+        for c in &self.crashes {
+            by_replica.entry(c.replica).or_default().push((c.at, c.recover_at));
+        }
+        for (replica, mut windows) in by_replica {
+            windows.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.total_cmp(&b.1)));
+            for w in windows.windows(2) {
+                if w[1].0 < w[0].1 {
+                    return Err(format!(
+                        "crash windows on replica {replica} overlap: \
+                         [{}, {}) and [{}, {}) (a replica cannot crash while down)",
+                        w[0].0, w[0].1, w[1].0, w[1].1
+                    ));
+                }
+            }
         }
         Ok(())
     }
@@ -242,7 +300,8 @@ impl FaultPlan {
         let c = self.crashes.iter().map(|c| c.replica);
         let s = self.stragglers.iter().map(|s| s.replica);
         let b = self.io_bursts.iter().map(|b| b.replica);
-        c.chain(s).chain(b).max()
+        let m = self.migrations.iter().flat_map(|m| [m.src, m.dst]);
+        c.chain(s).chain(b).chain(m).max()
     }
 
     /// Parse a CLI fault spec: comma-separated clauses
@@ -251,10 +310,12 @@ impl FaultPlan {
     ///   never recovers)
     /// * `straggle=R@T1:T2xF` — replica R runs Fx slower from T1 to T2
     /// * `io=R@T1:T2` — replica R's disk tier errors from T1 to T2
+    /// * `migrate=S>D@T` — at T, drain replica S with state and adopt
+    ///   everything on replica D; S is fenced afterwards (scale-down)
     /// * `retries=N` — per-request retry budget (default 2)
     /// * `probation=S` — post-recovery probation seconds (default 5)
     ///
-    /// e.g. `--faults crash=1@20:60,straggle=0@10:40x4,retries=3`
+    /// e.g. `--faults crash=1@20:60,straggle=0@10:40x4,migrate=2>0@80,retries=3`
     pub fn parse_spec(spec: &str) -> Result<FaultPlan, String> {
         let mut plan = FaultPlan::default();
         for clause in spec.split(',').filter(|c| !c.is_empty()) {
@@ -269,6 +330,20 @@ impl FaultPlan {
                 "probation" => {
                     plan.probation_s =
                         val.parse().map_err(|_| format!("bad probation `{val}`"))?;
+                }
+                "migrate" => {
+                    let (pair, t) = val
+                        .split_once('@')
+                        .ok_or_else(|| format!("`{clause}`: expected S>D@T"))?;
+                    let (src, dst) = pair
+                        .split_once('>')
+                        .ok_or_else(|| format!("`{clause}`: expected S>D@T"))?;
+                    let src: usize =
+                        src.parse().map_err(|_| format!("bad replica `{src}`"))?;
+                    let dst: usize =
+                        dst.parse().map_err(|_| format!("bad replica `{dst}`"))?;
+                    let at: f64 = t.parse().map_err(|_| format!("bad time `{t}`"))?;
+                    plan.migrations.push(Migration { src, dst, at });
                 }
                 "crash" | "straggle" | "io" => {
                     let (rep, win) = val
@@ -523,6 +598,73 @@ mod tests {
         assert!(FaultPlan::parse_spec("straggle=0@1:2x0.5").is_err());
         assert!(FaultPlan::parse_spec("io=0@9:4").is_err());
         assert!(FaultPlan::parse_spec("io=0@5").is_err(), "io needs a closed window");
+    }
+
+    #[test]
+    fn overlapping_crash_windows_on_one_replica_are_rejected() {
+        // hand-built: [10, 50) and [30, 70) on replica 1 — the second
+        // crash would fire while the replica is already down (the
+        // double-drain hazard), so validate refuses the plan
+        let plan = FaultPlan {
+            crashes: vec![
+                CrashWindow { replica: 1, at: 10.0, recover_at: 50.0 },
+                CrashWindow { replica: 1, at: 30.0, recover_at: 70.0 },
+            ],
+            ..FaultPlan::default()
+        };
+        let err = plan.validate().unwrap_err();
+        assert!(err.contains("overlap"), "{err}");
+        // a strict overlap with an open (never-recover) first window too
+        let plan = FaultPlan {
+            crashes: vec![
+                CrashWindow { replica: 0, at: 10.0, recover_at: f64::INFINITY },
+                CrashWindow { replica: 0, at: 30.0, recover_at: 40.0 },
+            ],
+            ..FaultPlan::default()
+        };
+        assert!(plan.validate().is_err());
+        // the same windows on DIFFERENT replicas are fine
+        let plan = FaultPlan {
+            crashes: vec![
+                CrashWindow { replica: 0, at: 10.0, recover_at: 50.0 },
+                CrashWindow { replica: 1, at: 30.0, recover_at: 70.0 },
+            ],
+            ..FaultPlan::default()
+        };
+        assert!(plan.validate().is_ok());
+        // touching windows (recover exactly at the next crash) and
+        // zero-length windows stay legal — only strict overlap rejects
+        let plan = FaultPlan {
+            crashes: vec![
+                CrashWindow { replica: 2, at: 10.0, recover_at: 20.0 },
+                CrashWindow { replica: 2, at: 20.0, recover_at: 20.0 },
+                CrashWindow { replica: 2, at: 25.0, recover_at: 25.0 },
+            ],
+            ..FaultPlan::default()
+        };
+        assert!(plan.validate().is_ok());
+        // and the same hazard arriving via the CLI spec is a parse error
+        let res = FaultPlan::parse_spec("crash=1@10:50,crash=1@30:70");
+        assert!(res.is_err(), "overlapping spec must be rejected, got {res:?}");
+        assert!(FaultPlan::parse_spec("crash=1@10:30,crash=1@30:70").is_ok());
+    }
+
+    #[test]
+    fn migrate_spec_roundtrip_and_rejections() {
+        let plan = FaultPlan::parse_spec("migrate=2>0@80,crash=1@20:60").unwrap();
+        assert_eq!(plan.migrations, vec![Migration { src: 2, dst: 0, at: 80.0 }]);
+        assert!(!plan.is_empty());
+        assert_eq!(plan.max_replica(), Some(2));
+        let evs = plan.events();
+        assert!(evs
+            .iter()
+            .any(|e| e.replica == 2 && e.kind == FaultKind::Migrate { dst: 0 }));
+
+        assert!(FaultPlan::parse_spec("migrate=2@80").is_err(), "needs S>D");
+        assert!(FaultPlan::parse_spec("migrate=2>2@80").is_err(), "src == dst");
+        assert!(FaultPlan::parse_spec("migrate=2>0@NaN").is_err());
+        assert!(FaultPlan::parse_spec("migrate=2>0@-5").is_err());
+        assert!(FaultPlan::parse_spec("migrate=2>0").is_err(), "needs @T");
     }
 
     #[test]

@@ -50,7 +50,7 @@ pub mod replica;
 pub mod report;
 pub mod router;
 
-pub use faults::{CrashWindow, FaultPlan, HealthRouter, IoBurst, Straggler};
+pub use faults::{CrashWindow, FaultPlan, HealthRouter, IoBurst, Migration, Straggler};
 pub use replica::Replica;
 pub use report::{ClusterReport, ReplicaOutcome, RequestAttribution};
 pub use router::{
@@ -65,6 +65,7 @@ use std::rc::Rc;
 
 use crate::config::ServingConfig;
 use crate::coordinator::backend::{ExecutionBackend, SimBackend};
+use crate::coordinator::block::RequestSnapshot;
 use crate::coordinator::{standard_predictor, Engine, LengthPredictor, CLOCK_EPS};
 use crate::metrics::{FaultEvent, FaultKind, FaultSummary, RequestRecord};
 use crate::obs::{self, EventKind, TraceHandle, TraceRecord};
@@ -207,11 +208,26 @@ struct FaultRun {
     retries_total: u64,
     /// Requests with no live replica to land on, waiting for a recovery.
     parked: Vec<TraceRequest>,
+    /// Checkpointed snapshots with no live replica (or a down migration
+    /// destination) to land on — the stateful analogue of `parked`,
+    /// adopted instead of re-submitted when a recovery comes.
+    parked_snaps: Vec<RequestSnapshot>,
     /// Global ids that exhausted the retry budget (or never found a live
     /// replica).
     failed: Vec<usize>,
     /// Events actually applied, in order — a determinism witness.
     log: Vec<FaultEvent>,
+    /// Drained requests adopted from checkpoint snapshots (stateful
+    /// failover + migrations) instead of re-submitted from scratch.
+    adoptions: u64,
+    /// Prefill-equivalent tokens failover had to recompute: prompt +
+    /// committed for from-scratch re-submissions and degraded adoptions,
+    /// only the suffix past the checkpoint for real adoptions.
+    recomputed_tokens: u64,
+    /// Tokens resumed straight from durable checkpoints (prompt +
+    /// resumed progress per successful adoption) — lost work failover
+    /// did NOT have to redo.
+    resumed_tokens: u64,
 }
 
 impl FaultRun {
@@ -234,6 +250,24 @@ impl FaultRun {
             retries: self.retries_total,
             failed: self.failed.len(),
             downtime_s,
+            migrations: count(|k| matches!(k, FaultKind::Migrate { .. })),
+            adoptions: self.adoptions,
+            recomputed_tokens: self.recomputed_tokens,
+            resumed_tokens: self.resumed_tokens,
+        }
+    }
+
+    /// Fold one adoption's outcome into the failover cost counters. A
+    /// degraded adoption (`resumed == 0`: destination cannot restore, or
+    /// the snapshot carried no durable checkpoint) recomputes the whole
+    /// context, exactly like a from-scratch re-submission.
+    fn note_adoption(&mut self, snap: &RequestSnapshot, resumed: usize) {
+        self.adoptions += 1;
+        if resumed > 0 {
+            self.resumed_tokens += (snap.prompt_len + resumed) as u64;
+            self.recomputed_tokens += (snap.generated - resumed) as u64;
+        } else {
+            self.recomputed_tokens += (snap.prompt_len + snap.generated) as u64;
         }
     }
 }
@@ -316,8 +350,12 @@ impl<B: ExecutionBackend> Cluster<B> {
                 retries: HashMap::new(),
                 retries_total: 0,
                 parked: Vec::new(),
+                parked_snaps: Vec::new(),
                 failed: Vec::new(),
                 log: Vec::new(),
+                adoptions: 0,
+                recomputed_tokens: 0,
+                resumed_tokens: 0,
             }),
         }
     }
@@ -412,6 +450,9 @@ impl<B: ExecutionBackend> Cluster<B> {
             FaultKind::StragglerEnd => (obs::FAULT_STRAGGLER_END, 0),
             FaultKind::IoErrorStart => (obs::FAULT_IO_ERROR_START, 0),
             FaultKind::IoErrorEnd => (obs::FAULT_IO_ERROR_END, 0),
+            // the payload word carries the destination instead of a
+            // slowdown factor — `fault_name` disambiguates on the code
+            FaultKind::Migrate { dst } => (obs::FAULT_MIGRATE, dst as u64),
         };
         self.trace_cluster_instant(
             EventKind::Fault,
@@ -456,6 +497,49 @@ impl<B: ExecutionBackend> Cluster<B> {
             self.run_heap(trace, &predictor)?;
         }
         Ok(self.take_report())
+    }
+
+    /// Administrative live migration: immediately drain `src` with full
+    /// state and adopt everything on `dst` (scale-down / rebalance). The
+    /// planned mid-run equivalent is the `migrate=SRC>DST@T` fault-plan
+    /// clause. The source's admission stays closed afterwards; with a
+    /// fault plan attached it is also health-fenced and the migration
+    /// joins the fault log and summary. Returns the requests moved.
+    pub fn migrate(&mut self, src: usize, dst: usize) -> anyhow::Result<usize> {
+        let n = self.replicas.len();
+        anyhow::ensure!(src < n && dst < n, "migrate {src}->{dst}: cluster has {n} replicas");
+        anyhow::ensure!(src != dst, "migration source and destination must differ");
+        anyhow::ensure!(
+            self.ran || self.faults.is_some(),
+            "migrate before run needs a fault plan attached — the health \
+             table is what keeps the router off the drained source"
+        );
+        if let Some(f) = &self.faults {
+            anyhow::ensure!(
+                !f.health.borrow().down[dst],
+                "migration destination {dst} is down"
+            );
+        }
+        let at = self.replicas[src].engine.now().max(self.replicas[dst].engine.now());
+        let snaps = self.drain_replica_with_state(src, at);
+        let moved = snaps.len();
+        for snap in snaps {
+            let rep = &mut self.replicas[dst];
+            if at > rep.engine.now() + CLOCK_EPS {
+                rep.engine.wait_until(at);
+            }
+            let (_, resumed) = rep.adopt(&snap);
+            if let Some(f) = &mut self.faults {
+                f.note_adoption(&snap, resumed);
+            }
+        }
+        let ev = FaultEvent { t: at, replica: src, kind: FaultKind::Migrate { dst } };
+        if let Some(f) = &mut self.faults {
+            f.health.borrow_mut().down[src] = true;
+            f.log.push(ev);
+        }
+        self.trace_fault(&ev);
+        Ok(moved)
     }
 
     /// The PR-6 virtual-time lockstep drive, kept verbatim as the oracle
@@ -537,30 +621,40 @@ impl<B: ExecutionBackend> Cluster<B> {
         }
         self.advances += adv;
         // requests still parked (no replica ever recovered): failed
-        if let Some(f) = &mut self.faults {
-            let trace = self.trace.as_ref();
-            let t = f.health.borrow().now;
-            for tr in std::mem::take(&mut f.parked) {
-                if let Some(h) = trace {
-                    // never-recovered requests fail at the end of the run:
-                    // stamp the last health instant (the exporter re-sorts
-                    // events by timestamp, so track 0 is just a home lane)
-                    h.record(TraceRecord {
-                        t0: t,
-                        t1: t,
-                        kind: EventKind::Failed,
-                        track: 0,
-                        req: tr.id as u64,
-                        a: 0,
-                        b: 0,
-                        c: 0,
-                    });
-                }
-                f.failed.push(tr.id);
-            }
-        }
+        self.fail_parked();
         self.pump_feedback();
         Ok(())
+    }
+
+    /// Requests (and checkpointed snapshots) still parked at the end of a
+    /// run — no replica ever recovered to take them — fail terminally.
+    /// Both drive modes end here.
+    fn fail_parked(&mut self) {
+        let Some(f) = &mut self.faults else { return };
+        let trace = self.trace.as_ref();
+        let t = f.health.borrow().now;
+        let ids = std::mem::take(&mut f.parked)
+            .into_iter()
+            .map(|tr| tr.id)
+            .chain(std::mem::take(&mut f.parked_snaps).into_iter().map(|s| s.id));
+        for id in ids {
+            if let Some(h) = trace {
+                // never-recovered requests fail at the end of the run:
+                // stamp the last health instant (the exporter re-sorts
+                // events by timestamp, so track 0 is just a home lane)
+                h.record(TraceRecord {
+                    t0: t,
+                    t1: t,
+                    kind: EventKind::Failed,
+                    track: 0,
+                    req: id as u64,
+                    a: 0,
+                    b: 0,
+                    c: 0,
+                });
+            }
+            f.failed.push(id);
+        }
     }
 
     /// The event-heap drive: pop the globally earliest event — a replica
@@ -683,28 +777,7 @@ impl<B: ExecutionBackend> Cluster<B> {
         }
         // heap empty: every live replica is quiescent (a replica with work
         // always re-arms), every arrival and fault has fired
-        if let Some(f) = &mut self.faults {
-            let trace = self.trace.as_ref();
-            let t = f.health.borrow().now;
-            for tr in std::mem::take(&mut f.parked) {
-                if let Some(h) = trace {
-                    // never-recovered requests fail at the end of the run:
-                    // stamp the last health instant (the exporter re-sorts
-                    // events by timestamp, so track 0 is just a home lane)
-                    h.record(TraceRecord {
-                        t0: t,
-                        t1: t,
-                        kind: EventKind::Failed,
-                        track: 0,
-                        req: tr.id as u64,
-                        a: 0,
-                        b: 0,
-                        c: 0,
-                    });
-                }
-                f.failed.push(tr.id);
-            }
-        }
+        self.fail_parked();
         self.pump_feedback();
         Ok(())
     }
@@ -733,7 +806,11 @@ impl<B: ExecutionBackend> Cluster<B> {
             // held across the replica walk
             let health = f.health.borrow();
             match ev.kind {
-                FaultKind::Crash | FaultKind::Recover => {
+                // crash/recover route work through the router's views and
+                // a migration hands work to its destination: every live
+                // replica must be at the event instant, exactly as the
+                // lockstep drive has it
+                FaultKind::Crash | FaultKind::Recover | FaultKind::Migrate { .. } => {
                     for (i, rep) in self.replicas.iter_mut().enumerate() {
                         if health.down[i] {
                             continue;
@@ -929,17 +1006,16 @@ impl<B: ExecutionBackend> Cluster<B> {
                     return Ok(()); // overlapping windows: already down
                 }
                 f.health.borrow_mut().down[ev.replica] = true;
-                let (drained, gids) = {
-                    let rep = &mut self.replicas[ev.replica];
-                    if ev.t > rep.engine.now() + CLOCK_EPS {
-                        rep.engine.wait_until(ev.t);
+                for snap in self.drain_replica_with_state(ev.replica, ev.t) {
+                    if snap.checkpointed > 0 {
+                        // a durable checkpoint survives the crash: adopt on
+                        // a survivor, re-prefilling only the suffix past
+                        // the checkpoint. Not a retry — the budget is
+                        // charged only for full recomputation.
+                        self.adopt_snapshot(f, snap, ev.t)?;
+                        continue;
                     }
-                    let drained = rep.engine.drain();
-                    let gids: Vec<usize> =
-                        drained.iter().map(|d| rep.global_ids[d.id]).collect();
-                    (drained, gids)
-                };
-                for (d, gid) in drained.into_iter().zip(gids) {
+                    let gid = snap.id;
                     let n = f.retries.entry(gid).or_insert(0);
                     *n += 1;
                     if *n > f.plan.retry_budget {
@@ -955,12 +1031,14 @@ impl<B: ExecutionBackend> Cluster<B> {
                         continue;
                     }
                     f.retries_total += 1;
+                    // from-scratch failover redoes the whole context
+                    f.recomputed_tokens += (snap.prompt_len + snap.generated) as u64;
                     let tr = TraceRequest {
                         id: gid,
-                        arrival: d.arrival, // original: TTFT includes downtime
-                        prompt_len: d.prompt_len,
-                        output_len: d.output_len,
-                        prefix: d.prefix, // failover target can still match/publish
+                        arrival: snap.arrival, // original: TTFT includes downtime
+                        prompt_len: snap.prompt_len,
+                        output_len: snap.output_len,
+                        prefix: snap.prefix, // failover target can still match/publish
                     };
                     self.resubmit(f, tr, predictor, ev.t)?;
                 }
@@ -981,6 +1059,23 @@ impl<B: ExecutionBackend> Cluster<B> {
                 for tr in std::mem::take(&mut f.parked) {
                     self.resubmit(f, tr, predictor, ev.t)?;
                 }
+                for snap in std::mem::take(&mut f.parked_snaps) {
+                    self.adopt_snapshot(f, snap, ev.t)?;
+                }
+            }
+            FaultKind::Migrate { dst } => {
+                if f.health.borrow().down[ev.replica] {
+                    return Ok(()); // source already fenced: nothing to move
+                }
+                for snap in self.drain_replica_with_state(ev.replica, ev.t) {
+                    // migration always moves state — even requests with no
+                    // checkpoint are adopted (degrading to recompute on the
+                    // destination), never charged against the retry budget
+                    self.adopt_snapshot_to(f, snap, dst, ev.t)?;
+                }
+                // the source leaves the fleet after handing its state over:
+                // fenced like a crash with no scheduled recovery
+                f.health.borrow_mut().down[ev.replica] = true;
             }
             FaultKind::StragglerStart { slowdown } => {
                 // through the engine, not the backend: the engine's cached
@@ -1027,6 +1122,84 @@ impl<B: ExecutionBackend> Cluster<B> {
         self.trace_cluster_instant(EventKind::Resubmit, idx, at, tr.id as u64, 0, 0);
         self.replicas[idx].engine.trace_sample_gauges();
         Ok(())
+    }
+
+    /// Drain one replica with full per-request state at cluster time `t`,
+    /// re-keying every snapshot to its global trace id. Execution side
+    /// effects are bit-identical to the stateless `Engine::drain` the
+    /// crash path used before snapshots existed.
+    fn drain_replica_with_state(&mut self, replica: usize, t: f64) -> Vec<RequestSnapshot> {
+        let rep = &mut self.replicas[replica];
+        if t > rep.engine.now() + CLOCK_EPS {
+            rep.engine.wait_until(t);
+        }
+        let mut snaps = rep.engine.drain_with_state();
+        for s in &mut snaps {
+            s.id = rep.global_ids[s.id];
+        }
+        snaps
+    }
+
+    /// Route a drained snapshot (global-keyed) to a live replica at
+    /// cluster time `at` and adopt it there, resuming from its durable
+    /// checkpoint when the destination can restore. Parks it when every
+    /// replica is down.
+    fn adopt_snapshot(
+        &mut self,
+        f: &mut FaultRun,
+        snap: RequestSnapshot,
+        at: f64,
+    ) -> anyhow::Result<()> {
+        if !f.health.borrow().any_up() {
+            f.parked_snaps.push(snap);
+            return Ok(());
+        }
+        self.pump_feedback();
+        let tr = TraceRequest {
+            id: snap.id,
+            arrival: snap.arrival,
+            prompt_len: snap.prompt_len,
+            output_len: snap.output_len,
+            prefix: snap.prefix,
+        };
+        let idx = self.route_request(&tr);
+        debug_assert!(
+            !f.health.borrow().down[idx],
+            "health router must fence crashed replicas"
+        );
+        self.adopt_on(f, snap, idx, at);
+        Ok(())
+    }
+
+    /// Adopt a drained snapshot on an explicit destination (migration).
+    /// Parks it when the destination is itself down.
+    fn adopt_snapshot_to(
+        &mut self,
+        f: &mut FaultRun,
+        snap: RequestSnapshot,
+        dst: usize,
+        at: f64,
+    ) -> anyhow::Result<()> {
+        if f.health.borrow().down[dst] {
+            f.parked_snaps.push(snap);
+            return Ok(());
+        }
+        self.adopt_on(f, snap, dst, at);
+        Ok(())
+    }
+
+    /// The shared tail of both adoption paths: hand the snapshot to the
+    /// chosen replica's engine and fold the outcome into the failover
+    /// cost counters. The engine emits the Adopt trace instant itself
+    /// (it knows how many tokens actually resumed).
+    fn adopt_on(&mut self, f: &mut FaultRun, snap: RequestSnapshot, idx: usize, at: f64) {
+        let rep = &mut self.replicas[idx];
+        if at > rep.engine.now() + CLOCK_EPS {
+            rep.engine.wait_until(at);
+        }
+        let (_, resumed) = rep.adopt(&snap);
+        f.note_adoption(&snap, resumed);
+        self.replicas[idx].engine.trace_sample_gauges();
     }
 
     /// Feed newly completed requests' TTFTs to the router.
@@ -1391,6 +1564,133 @@ mod tests {
         // the dispatcher must notice the disorder and take the oracle path
         assert_eq!(out_a.merged.records, out_b.merged.records);
         assert_eq!(a.advances(), b.advances());
+    }
+
+    #[test]
+    fn checkpointed_failover_adopts_and_never_inflates_recompute() {
+        // one crash window, disk-tiered config: execution up to the crash
+        // is bit-identical with checkpointing on or off (the write is
+        // virtual), so both runs drain the same victims with the same
+        // progress — adoption can only shrink the recompute bill
+        let base = ServingConfig::llama2_7b_tp1()
+            .with_policy(Policy::LayerKv { slo_aware: true })
+            .with_disk(crate::config::DiskSpec::nvme_4tb());
+        let plan = FaultPlan {
+            crashes: vec![CrashWindow { replica: 0, at: 1.5, recover_at: f64::INFINITY }],
+            ..FaultPlan::default()
+        };
+        let run = |cfg: &ServingConfig| {
+            let t = trace(24, 3.0);
+            let mut cluster =
+                Cluster::new(&ClusterConfig::homogeneous(cfg, 3, RouterPolicy::KvPressure))
+                    .with_faults(plan.clone());
+            let out = cluster.run(&t).unwrap();
+            assert_eq!(out.accounted(), 24);
+            out.faults.unwrap()
+        };
+        let off = run(&base.clone());
+        let on = run(&base.with_checkpointing(8));
+        assert_eq!(off.adoptions, 0, "checkpointing off never adopts");
+        assert_eq!(off.resumed_tokens, 0);
+        assert!(on.recomputed_tokens <= off.recomputed_tokens);
+        // adopted requests skip the retry budget, so retries can only drop
+        assert!(on.retries <= off.retries);
+        // every adoption either resumed tokens or degraded to recompute;
+        // resumed work never appears without an adoption
+        assert!(on.resumed_tokens == 0 || on.adoptions > 0);
+    }
+
+    #[test]
+    fn planned_migration_moves_state_and_fences_source() {
+        let cfg = ServingConfig::llama2_7b_tp1()
+            .with_policy(Policy::LayerKv { slo_aware: true });
+        let t = trace(24, 3.0);
+        let plan = FaultPlan {
+            migrations: vec![Migration { src: 0, dst: 1, at: 1.0 }],
+            ..FaultPlan::default()
+        };
+        let mut cluster = Cluster::new(&ClusterConfig::homogeneous(
+            &cfg,
+            2,
+            RouterPolicy::RoundRobin,
+        ))
+        .with_faults(plan);
+        let out = cluster.run(&t).unwrap();
+        // migration never loses or fails a request: everything the source
+        // held is adopted by the destination and runs to completion
+        assert_eq!(out.accounted(), 24);
+        assert!(out.failed.is_empty());
+        assert!(out.dropped.is_empty());
+        let f = out.faults.unwrap();
+        assert_eq!(f.migrations, 1);
+        assert_eq!(f.retries, 0, "migration is adoption, not failover retries");
+        // the fenced source takes no post-migration traffic
+        assert!(out.per_replica[0].routed < 24);
+        assert_eq!(cluster.fault_log().len(), 1);
+    }
+
+    #[test]
+    fn migration_heap_matches_lockstep_bit_for_bit() {
+        let cfg = ServingConfig::llama2_7b_tp1()
+            .with_policy(Policy::LayerKv { slo_aware: true })
+            .with_disk(crate::config::DiskSpec::nvme_4tb())
+            .with_checkpointing(8);
+        let plan = FaultPlan {
+            crashes: vec![CrashWindow { replica: 2, at: 2.0, recover_at: 4.0 }],
+            migrations: vec![Migration { src: 0, dst: 1, at: 1.0 }],
+            probation_s: 0.5,
+            ..FaultPlan::default()
+        };
+        for router in RouterPolicy::ALL {
+            let t = trace(24, 3.0);
+            let mut heap = Cluster::new(&ClusterConfig::homogeneous(&cfg, 3, *router))
+                .with_faults(plan.clone());
+            heap.set_lockstep(false);
+            let a = heap.run(&t).unwrap();
+            let log_a: Vec<String> =
+                heap.fault_log().iter().map(|e| e.render()).collect();
+            let mut lock = Cluster::new(&ClusterConfig::homogeneous(&cfg, 3, *router))
+                .with_faults(plan.clone());
+            lock.set_lockstep(true);
+            let b = lock.run(&t).unwrap();
+            let log_b: Vec<String> =
+                lock.fault_log().iter().map(|e| e.render()).collect();
+            assert_eq!(a.merged.records, b.merged.records, "router {}", router.name());
+            assert_eq!(a.dropped, b.dropped, "router {}", router.name());
+            assert_eq!(a.failed, b.failed, "router {}", router.name());
+            assert_eq!(log_a, log_b, "router {}", router.name());
+            assert_eq!(a.faults, b.faults, "router {}", router.name());
+        }
+    }
+
+    #[test]
+    fn administrative_migrate_validates_and_moves() {
+        let cfg = ServingConfig::llama2_7b_tp1()
+            .with_policy(Policy::LayerKv { slo_aware: true });
+        let mut cluster = Cluster::new(&ClusterConfig::homogeneous(
+            &cfg,
+            2,
+            RouterPolicy::RoundRobin,
+        ));
+        // no fault plan and not yet run: the router would keep routing to
+        // the drained source, so this must be refused
+        assert!(cluster.migrate(0, 1).is_err());
+        let mut faulted = Cluster::new(&ClusterConfig::homogeneous(
+            &cfg,
+            2,
+            RouterPolicy::RoundRobin,
+        ))
+        .with_faults(FaultPlan::default());
+        assert!(faulted.migrate(0, 0).is_err(), "src == dst");
+        assert!(faulted.migrate(0, 7).is_err(), "out of range");
+        // idle pre-run migration: nothing to move, source fenced, logged
+        assert_eq!(faulted.migrate(0, 1).unwrap(), 0);
+        assert_eq!(faulted.fault_log().len(), 1);
+        let t = trace(8, 3.0);
+        let out = faulted.run(&t).unwrap();
+        assert_eq!(out.accounted(), 8);
+        assert_eq!(out.per_replica[0].routed, 0, "fenced source takes nothing");
+        assert_eq!(out.faults.unwrap().migrations, 1);
     }
 
     #[test]

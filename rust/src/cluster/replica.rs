@@ -9,6 +9,7 @@
 //! records.
 
 use crate::coordinator::backend::ExecutionBackend;
+use crate::coordinator::block::RequestSnapshot;
 use crate::coordinator::{Engine, ReqId};
 use crate::workload::TraceRequest;
 
@@ -39,6 +40,17 @@ impl<B: ExecutionBackend> Replica<B> {
         debug_assert_eq!(local, self.global_ids.len());
         self.global_ids.push(tr.id);
         local
+    }
+
+    /// Adopt a snapshot drained from another replica (its `id` must
+    /// already be the global trace id), recording the id mapping exactly
+    /// like `submit`. Returns `(engine-local id, tokens resumed from the
+    /// checkpoint — 0 when the engine degraded to recompute)`.
+    pub fn adopt(&mut self, snap: &RequestSnapshot) -> (ReqId, usize) {
+        let (local, resumed) = self.engine.adopt(snap);
+        debug_assert_eq!(local, self.global_ids.len());
+        self.global_ids.push(snap.id);
+        (local, resumed)
     }
 
     /// The earliest instant this replica's state can change without new

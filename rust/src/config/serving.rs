@@ -82,12 +82,26 @@ pub struct ServingConfig {
     /// requests without a prefix hash never touch the cache, so traces
     /// with zero shared prefixes behave identically either way.
     pub prefix_cache: bool,
+    /// Incremental KV checkpointing: write a durable disk checkpoint of
+    /// each running request every K committed tokens (0 = off, the
+    /// default; `LAYERKV_CKPT=K` or `--ckpt K` enables it). Checkpoints
+    /// are *virtual* on the execution path — they never advance the clock
+    /// (the write rides under decode like the §3.1.1 offload legs), so
+    /// turning them on is execution-bit-identical off the failover path.
+    /// A fenced disk tier stops checkpointing cleanly (recompute path).
+    pub ckpt_every_tokens: usize,
 }
 
 /// Default for [`ServingConfig::prefix_cache`]: on unless
 /// `LAYERKV_PREFIX=0`.
 fn prefix_cache_default() -> bool {
     std::env::var("LAYERKV_PREFIX").map(|v| v != "0").unwrap_or(true)
+}
+
+/// Default for [`ServingConfig::ckpt_every_tokens`]: off unless
+/// `LAYERKV_CKPT=K` (K > 0).
+fn ckpt_default() -> usize {
+    std::env::var("LAYERKV_CKPT").ok().and_then(|v| v.parse().ok()).unwrap_or(0)
 }
 
 /// Precision of offloaded KV (paper §8: "integrating KV cache quantization
@@ -135,6 +149,7 @@ impl ServingConfig {
             x_override: None,
             offload_quant: OffloadQuant::None,
             prefix_cache: prefix_cache_default(),
+            ckpt_every_tokens: ckpt_default(),
         }
     }
 
@@ -163,6 +178,12 @@ impl ServingConfig {
     /// Enable/disable cross-request prefix caching.
     pub fn with_prefix_cache(mut self, on: bool) -> Self {
         self.prefix_cache = on;
+        self
+    }
+
+    /// Checkpoint every `k` committed tokens (0 disables).
+    pub fn with_checkpointing(mut self, k: usize) -> Self {
+        self.ckpt_every_tokens = k;
         self
     }
 

@@ -263,6 +263,30 @@ pub trait ExecutionBackend {
         1.0
     }
 
+    /// Whether adopted KV state can resume decoding directly from a
+    /// restored block map. The analytic simulator can (its KV is pure
+    /// accounting, so `allocate_layerwise` + a restore charge recreates
+    /// it); a real backend whose tensors died with the source process
+    /// cannot — adopted requests there take the recompute (re-prefill)
+    /// path, which the deterministic RefModel makes token-bit-identical.
+    fn supports_kv_restore(&self) -> bool {
+        false
+    }
+
+    /// Export the real token streams `(prompt, out)` for a live request
+    /// so a snapshot can carry them across replicas. `None` for modeled
+    /// backends — no actual tokens exist.
+    fn snapshot_tokens(&self, rid: ReqId) -> Option<(Vec<i32>, Vec<i32>)> {
+        let _ = rid;
+        None
+    }
+
+    /// Install a snapshot's token streams for an adopted request (lane
+    /// `rid` on *this* backend). No-op for modeled backends.
+    fn adopt(&mut self, rid: ReqId, tokens: Option<(Vec<i32>, Vec<i32>)>) {
+        let _ = (rid, tokens);
+    }
+
     /// Recompute preemption: the request's KV is dropped everywhere; its
     /// generated-so-far tokens survive for the re-prefill.
     fn evict(&mut self, rid: ReqId) {
@@ -322,6 +346,12 @@ impl ExecutionBackend for SimBackend {
     /// single-step until the slowdown lifts.
     fn supports_fast_forward(&self) -> bool {
         self.slowdown == 1.0
+    }
+
+    /// Modeled KV is pure accounting: an adopted block map plus the
+    /// restore-time charge fully recreates the drained state.
+    fn supports_kv_restore(&self) -> bool {
+        true
     }
 
     fn set_slowdown(&mut self, factor: f64) {

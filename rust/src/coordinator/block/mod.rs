@@ -5,10 +5,12 @@
 
 pub mod allocator;
 pub mod prefix;
+pub mod snapshot;
 pub mod table;
 
 pub use allocator::{BlockId, BlockPool};
 pub use prefix::{PrefixHit, PrefixMove, PrefixPublish, PrefixStore};
+pub use snapshot::RequestSnapshot;
 pub use table::{LayerBlockTable, LayerEntry, Residency};
 
 use std::collections::HashMap;

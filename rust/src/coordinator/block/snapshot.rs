@@ -1,0 +1,269 @@
+//! Serializable per-request KV snapshots — the unit of stateful failover.
+//!
+//! A [`RequestSnapshot`] captures everything `Engine::adopt` needs to
+//! resume a drained request on another replica without re-prefilling the
+//! committed span: identity and lengths from the trace, scheduler
+//! progress (generated count, timing fields, the predictor's bucket —
+//! carried so the adopting engine needs no predictor), the layer-wise
+//! residency map at drain time, the durable checkpoint watermark, and —
+//! for real (token-producing) backends — the actual token streams.
+//!
+//! The JSON codec is hand-rolled over `util::Json` (no serde offline) so
+//! snapshots can cross process boundaries (server workers, future
+//! scale-down tooling); `parse` rejects malformed input instead of
+//! defaulting fields.
+
+use crate::coordinator::block::Residency;
+use crate::util::Json;
+use crate::workload::PrefixKey;
+
+/// Everything needed to resume one drained request elsewhere.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RequestSnapshot {
+    /// Trace-global request id (the cluster's identity, not the engine's
+    /// dense local id).
+    pub id: usize,
+    pub arrival: f64,
+    pub prompt_len: usize,
+    pub output_len: usize,
+    pub prefix: PrefixKey,
+    /// Tokens committed at drain time (scheduler progress).
+    pub generated: usize,
+    /// Tokens covered by the last durable disk checkpoint (0 = none; the
+    /// adopter can resume at most this far without recompute).
+    pub checkpointed: usize,
+    pub prefill_start: Option<f64>,
+    pub first_token: Option<f64>,
+    pub preemptions: usize,
+    /// The predictor's output-length bucket, carried verbatim so adoption
+    /// is predictor-free and bit-stable across replicas.
+    pub predicted: (usize, usize),
+    /// Layer-wise residency at drain time (empty when the request was
+    /// still queued — nothing was allocated).
+    pub layers: Vec<Residency>,
+    /// Real-backend token streams `(prompt, out)`; `None` for modeled
+    /// backends (no actual tokens exist).
+    pub tokens: Option<(Vec<i32>, Vec<i32>)>,
+}
+
+impl RequestSnapshot {
+    /// Tokens a resumed decode can keep without recompute: the committed
+    /// span up to the durable checkpoint.
+    pub fn resumable(&self) -> usize {
+        self.generated.min(self.checkpointed)
+    }
+
+    /// Serialize to a JSON string (stable key order via `Json::dump`).
+    pub fn render(&self) -> String {
+        self.to_json().dump()
+    }
+
+    fn to_json(&self) -> Json {
+        use std::collections::BTreeMap;
+        let mut m = BTreeMap::new();
+        m.insert("id".into(), Json::Num(self.id as f64));
+        m.insert("arrival".into(), Json::Num(self.arrival));
+        m.insert("prompt_len".into(), Json::Num(self.prompt_len as f64));
+        m.insert("output_len".into(), Json::Num(self.output_len as f64));
+        m.insert(
+            "prefix".into(),
+            Json::Arr(vec![
+                Json::Num(self.prefix.hash as f64),
+                Json::Num(self.prefix.len as f64),
+                Json::Num(self.prefix.publish as f64),
+            ]),
+        );
+        m.insert("generated".into(), Json::Num(self.generated as f64));
+        m.insert("checkpointed".into(), Json::Num(self.checkpointed as f64));
+        m.insert("prefill_start".into(), opt_num(self.prefill_start));
+        m.insert("first_token".into(), opt_num(self.first_token));
+        m.insert("preemptions".into(), Json::Num(self.preemptions as f64));
+        m.insert(
+            "predicted".into(),
+            Json::Arr(vec![
+                Json::Num(self.predicted.0 as f64),
+                Json::Num(self.predicted.1 as f64),
+            ]),
+        );
+        m.insert(
+            "layers".into(),
+            Json::Arr(
+                self.layers
+                    .iter()
+                    .map(|r| Json::Num(r.tier_index() as f64))
+                    .collect(),
+            ),
+        );
+        m.insert(
+            "tokens".into(),
+            match &self.tokens {
+                None => Json::Null,
+                Some((prompt, out)) => Json::Arr(vec![
+                    Json::Arr(prompt.iter().map(|&t| Json::Num(t as f64)).collect()),
+                    Json::Arr(out.iter().map(|&t| Json::Num(t as f64)).collect()),
+                ]),
+            },
+        );
+        Json::Obj(m)
+    }
+
+    /// Parse a snapshot back from its `render` output.
+    pub fn parse(s: &str) -> anyhow::Result<RequestSnapshot> {
+        let j = Json::parse(s).map_err(|e| anyhow::anyhow!("snapshot: {e}"))?;
+        Self::from_json(&j)
+    }
+
+    fn from_json(j: &Json) -> anyhow::Result<RequestSnapshot> {
+        let num = |k: &str| -> anyhow::Result<usize> {
+            j.req(k)?.as_usize().ok_or_else(|| anyhow::anyhow!("snapshot key '{k}' not a number"))
+        };
+        let f = |k: &str| -> anyhow::Result<f64> {
+            j.req(k)?.as_f64().ok_or_else(|| anyhow::anyhow!("snapshot key '{k}' not a number"))
+        };
+        let opt = |k: &str| -> anyhow::Result<Option<f64>> {
+            match j.req(k)? {
+                Json::Null => Ok(None),
+                v => v
+                    .as_f64()
+                    .map(Some)
+                    .ok_or_else(|| anyhow::anyhow!("snapshot key '{k}' not a number")),
+            }
+        };
+        let pair = j
+            .req("predicted")?
+            .as_arr()
+            .filter(|a| a.len() == 2)
+            .ok_or_else(|| anyhow::anyhow!("snapshot 'predicted' not a pair"))?;
+        let prefix = j
+            .req("prefix")?
+            .as_arr()
+            .filter(|a| a.len() == 3)
+            .ok_or_else(|| anyhow::anyhow!("snapshot 'prefix' not a triple"))?;
+        let layers = j
+            .req("layers")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("snapshot 'layers' not an array"))?
+            .iter()
+            .map(|v| match v.as_usize() {
+                Some(0) => Ok(Residency::Gpu),
+                Some(1) => Ok(Residency::Cpu),
+                Some(2) => Ok(Residency::Disk),
+                _ => Err(anyhow::anyhow!("snapshot layer tier out of range")),
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let tokens = match j.req("tokens")? {
+            Json::Null => None,
+            v => {
+                let streams = v
+                    .as_arr()
+                    .filter(|a| a.len() == 2)
+                    .ok_or_else(|| anyhow::anyhow!("snapshot 'tokens' not a stream pair"))?;
+                let decode = |s: &Json| -> anyhow::Result<Vec<i32>> {
+                    s.as_arr()
+                        .ok_or_else(|| anyhow::anyhow!("snapshot token stream not an array"))?
+                        .iter()
+                        .map(|t| {
+                            t.as_f64()
+                                .map(|x| x as i32)
+                                .ok_or_else(|| anyhow::anyhow!("snapshot token not a number"))
+                        })
+                        .collect()
+                };
+                Some((decode(&streams[0])?, decode(&streams[1])?))
+            }
+        };
+        Ok(RequestSnapshot {
+            id: num("id")?,
+            arrival: f("arrival")?,
+            prompt_len: num("prompt_len")?,
+            output_len: num("output_len")?,
+            prefix: PrefixKey {
+                hash: prefix[0].as_f64().unwrap_or(0.0) as u64,
+                len: prefix[1].as_usize().unwrap_or(0),
+                publish: prefix[2].as_f64().unwrap_or(0.0) as u64,
+            },
+            generated: num("generated")?,
+            checkpointed: num("checkpointed")?,
+            prefill_start: opt("prefill_start")?,
+            first_token: opt("first_token")?,
+            preemptions: num("preemptions")?,
+            predicted: (
+                pair[0].as_usize().unwrap_or(0),
+                pair[1].as_usize().unwrap_or(0),
+            ),
+            layers,
+            tokens,
+        })
+    }
+}
+
+fn opt_num(v: Option<f64>) -> Json {
+    match v {
+        Some(x) => Json::Num(x),
+        None => Json::Null,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap() -> RequestSnapshot {
+        RequestSnapshot {
+            id: 17,
+            arrival: 3.25,
+            prompt_len: 2048,
+            output_len: 256,
+            prefix: PrefixKey { hash: 0xABCD, len: 512, publish: 0x1234 },
+            generated: 120,
+            checkpointed: 96,
+            prefill_start: Some(4.5),
+            first_token: Some(5.125),
+            preemptions: 1,
+            predicted: (64, 256),
+            layers: vec![Residency::Gpu, Residency::Cpu, Residency::Disk, Residency::Gpu],
+            tokens: Some((vec![1, 2, 3], vec![7, 8])),
+        }
+    }
+
+    #[test]
+    fn roundtrips_bit_identically() {
+        let s = snap();
+        let back = RequestSnapshot::parse(&s.render()).unwrap();
+        assert_eq!(back, s);
+        assert_eq!(back.arrival.to_bits(), s.arrival.to_bits());
+        assert_eq!(back.resumable(), 96);
+    }
+
+    #[test]
+    fn roundtrips_queued_request_without_state() {
+        let s = RequestSnapshot {
+            generated: 0,
+            checkpointed: 0,
+            prefill_start: None,
+            first_token: None,
+            layers: Vec::new(),
+            tokens: None,
+            ..snap()
+        };
+        let back = RequestSnapshot::parse(&s.render()).unwrap();
+        assert_eq!(back, s);
+        assert_eq!(back.resumable(), 0);
+    }
+
+    #[test]
+    fn rejects_malformed_input() {
+        assert!(RequestSnapshot::parse("{").is_err());
+        assert!(RequestSnapshot::parse("{}").is_err());
+        // a layer tier out of range must not default to something valid
+        let mut s = snap().render();
+        s = s.replace("\"layers\":[0,1,2,0]", "\"layers\":[0,9,2,0]");
+        assert!(RequestSnapshot::parse(&s).is_err());
+    }
+
+    #[test]
+    fn resumable_clamps_to_generated() {
+        let s = RequestSnapshot { generated: 10, checkpointed: 50, ..snap() };
+        assert_eq!(s.resumable(), 10);
+    }
+}

@@ -52,7 +52,7 @@ use std::collections::VecDeque;
 
 use crate::config::{Policy, ServingConfig};
 use crate::coordinator::backend::{Clock, ExecutionBackend, SimBackend};
-use crate::coordinator::block::{KvError, KvManager, PrefixMove, Residency};
+use crate::coordinator::block::{KvError, KvManager, PrefixMove, RequestSnapshot, Residency};
 use crate::coordinator::horizon::{decode_horizon, HorizonInputs};
 use crate::coordinator::predict::LengthPredictor;
 use crate::coordinator::request::{Phase, ReqId, Request};
@@ -87,7 +87,10 @@ pub const PREFIX_REQ: ReqId = usize::MAX;
 /// what a failover path needs to re-submit it elsewhere from scratch: the
 /// ORIGINAL lengths (any partially generated tokens are discarded — this
 /// is recompute preemption across replicas) and the original arrival, so
-/// the eventual record's TTFT/queueing includes the downtime.
+/// the eventual record's TTFT/queueing includes the downtime. The
+/// progress fields (`committed`, `checkpointed`) make the wasted work
+/// measurable — and, via [`Engine::drain_with_state`] +
+/// [`Engine::adopt`], recoverable.
 #[derive(Debug, Clone, PartialEq)]
 pub struct DrainedRequest {
     /// Engine-local id (dense submission order); the caller owns the
@@ -99,6 +102,14 @@ pub struct DrainedRequest {
     /// Shared-prefix identity, preserved so the failover target can
     /// still match (and publish into) its own prefix cache.
     pub prefix: PrefixKey,
+    /// Tokens the request had committed when it was drained — the decode
+    /// progress a from-scratch re-submission throws away.
+    pub committed: usize,
+    /// Tokens covered by the last durable disk checkpoint (0 with
+    /// checkpointing off or the disk tier fenced — the fenced tier's
+    /// checkpoints are not trustworthy, so failover degrades cleanly to
+    /// the recompute path).
+    pub checkpointed: usize,
 }
 
 /// Counters the experiments report alongside latency. Every `disk_*` /
@@ -156,6 +167,24 @@ pub struct EngineStats {
     pub prefix_promotions: u64,
     /// Bytes restored host/disk -> GPU to serve cache hits.
     pub prefix_restore_bytes: f64,
+    /// Incremental checkpoints written to the disk tier. All `ckpt_*`
+    /// counters stay exactly 0 with checkpointing off (`ckpt_every_tokens
+    /// == 0`), and checkpointing never perturbs execution either way —
+    /// writes are virtual (priced, not clocked).
+    pub ckpt_writes: u64,
+    /// Bytes those checkpoints wrote (incremental: each write covers only
+    /// tokens since the previous durable point).
+    pub ckpt_bytes: f64,
+    /// Seconds of disk-link time the checkpoint writes would consume —
+    /// accounted, never added to the clock (writes ride the idle disk
+    /// link off the critical path).
+    pub ckpt_write_s: f64,
+    /// Requests this engine adopted from another engine's
+    /// [`Engine::drain_with_state`] snapshot.
+    pub adoptions: u64,
+    /// Bytes read from the durable checkpoint store to restore adopted
+    /// requests' KV.
+    pub adopt_restore_bytes: f64,
 }
 
 /// Incrementally-maintained totals over the running set: the membership
@@ -510,18 +539,72 @@ impl<B: ExecutionBackend> Engine<B> {
             self.view_pop_waiting(rid);
             let r = &mut self.requests[rid];
             r.phase = Phase::Finished; // terminal here; lives on via re-submit
+            let committed = r.generated;
+            let checkpointed = if self.stats.disk_fenced { 0 } else { r.last_ckpt };
             out.push(DrainedRequest {
                 id: rid,
                 arrival: r.arrival,
                 prompt_len: r.prompt_len,
                 output_len: r.output_len,
                 prefix: r.prefix,
+                committed,
+                checkpointed,
             });
-            self.trace_instant(EventKind::Drain, rid, 0, 0, 0);
+            self.trace_instant(EventKind::Drain, rid, committed as u64, checkpointed as u64, 0);
         }
         out.sort_by_key(|d| d.id);
         debug_assert!(!self.has_work());
         out
+    }
+
+    /// [`Engine::drain`], but each unfinished request is exported as a
+    /// full [`RequestSnapshot`]: decode progress, timing history, the
+    /// layer-wise tier residency its KV held, and (on real backends) the
+    /// token streams. The snapshot captures running-request state
+    /// *before* the drain's recompute-preemption tears the block tables
+    /// down. Ids are engine-local, like `drain` — the caller owns the
+    /// local -> global mapping. Execution side effects are bit-identical
+    /// to `drain` (same preemptions, same trace instants, same stats).
+    pub fn drain_with_state(&mut self) -> Vec<RequestSnapshot> {
+        // Residency and backend tokens exist only while the request is
+        // running; everything else survives the drain on the Request.
+        let mut live: Vec<(ReqId, Vec<Residency>, Option<(Vec<i32>, Vec<i32>)>)> = self
+            .running
+            .iter()
+            .map(|&rid| {
+                let layers = self
+                    .kv
+                    .table(rid)
+                    .map(|t| t.layers.iter().map(|e| e.residency).collect())
+                    .unwrap_or_default();
+                (rid, layers, self.backend.snapshot_tokens(rid))
+            })
+            .collect();
+        self.drain()
+            .into_iter()
+            .map(|d| {
+                let (layers, tokens) = match live.iter_mut().find(|(rid, ..)| *rid == d.id) {
+                    Some((_, l, t)) => (std::mem::take(l), t.take()),
+                    None => (Vec::new(), None),
+                };
+                let r = &self.requests[d.id];
+                RequestSnapshot {
+                    id: d.id,
+                    arrival: d.arrival,
+                    prompt_len: d.prompt_len,
+                    output_len: d.output_len,
+                    prefix: d.prefix,
+                    generated: d.committed,
+                    checkpointed: d.checkpointed,
+                    prefill_start: r.prefill_start,
+                    first_token: r.first_token,
+                    preemptions: r.preemptions,
+                    predicted: r.predicted,
+                    layers,
+                    tokens,
+                }
+            })
+            .collect()
     }
 
     /// Re-open admission after a `drain` (a recovered replica).
@@ -810,6 +893,120 @@ impl<B: ExecutionBackend> Engine<B> {
             self.trace_instant(EventKind::Drop, local, 0, 0, 0);
         }
         local
+    }
+
+    /// Adopt a request exported by another engine's
+    /// [`Engine::drain_with_state`] (crash failover, live migration). The
+    /// request keeps its identity and history — original arrival (so the
+    /// eventual record's queueing latency includes the downtime),
+    /// first-token instant, preemption count. When a durable checkpoint
+    /// exists and this backend restores modeled KV, the layer-wise
+    /// allocation is rebuilt through the same tiered admission solve a
+    /// fresh prefill would use and the request re-enters the decode loop
+    /// directly, paying only the checkpoint-read transfer — no recompute.
+    /// Otherwise it degrades to recompute-preemption semantics: re-enter
+    /// the queue `Preempted` and re-prefill prompt + generated-so-far
+    /// (real backends replay deterministically from the adopted token
+    /// streams). Returns `(engine-local id, tokens resumed without
+    /// recompute)` — 0 resumed on the recompute path.
+    pub fn adopt(&mut self, snap: &RequestSnapshot) -> (ReqId, usize) {
+        debug_assert!(self.admission_open, "adopt on a drained engine (reopen_admission first)");
+        self.span_valid = false;
+        let local: ReqId = self.requests.len();
+        let tr = TraceRequest {
+            id: snap.id,
+            arrival: snap.arrival,
+            prompt_len: snap.prompt_len,
+            output_len: snap.output_len,
+            prefix: snap.prefix,
+        };
+        let mut r = Request::from_trace(&tr, snap.predicted);
+        r.id = local;
+        r.prefill_start = snap.prefill_start;
+        r.first_token = snap.first_token;
+        r.preemptions = snap.preemptions;
+        self.submitted_tokens += (snap.prompt_len + snap.output_len) as u64;
+        let supported = self.backend.supports_prompt(snap.prompt_len);
+        self.requests.push(r);
+        if let Some(et) = self.trace.as_mut() {
+            et.bind(local, snap.id);
+        }
+        // install token streams first, even for drops — real backends
+        // index their per-request lanes by the dense local id
+        self.backend.adopt(local, snap.tokens.clone());
+        if !supported {
+            self.stats.dropped.push(local);
+            self.requests[local].phase = Phase::Finished;
+            self.trace_instant(EventKind::Drop, local, 0, 0, 0);
+            return (local, 0);
+        }
+        let resume = snap.resumable();
+        if resume > 0 && self.backend.supports_kv_restore() && self.kv.disk.total() > 0 {
+            // the durable prefix (prompt + resumed tokens) re-enters the
+            // tier hierarchy through the admission-path feasibility solve
+            let len = snap.prompt_len + resume;
+            let per_layer = len.div_ceil(self.cfg.block_size);
+            let alloc = match self.cfg.policy {
+                Policy::Vllm => self.kv.allocate_full(local, len),
+                Policy::LayerKv { .. } => {
+                    let x0 = self.cost.min_resident_layers(len);
+                    let (x, _) = self
+                        .cost
+                        .tiered_admission(len, x0, per_layer, self.kv.cpu.available());
+                    self.kv.allocate_layerwise(local, len, x)
+                }
+            };
+            if alloc.is_ok() {
+                let layers = self.cfg.model.n_layers;
+                let now = self.backend.clock().now();
+                {
+                    let r = &mut self.requests[local];
+                    r.generated = resume;
+                    r.last_ckpt = resume;
+                    r.phase = Phase::Decoding;
+                    if r.prefill_start.is_none() {
+                        r.prefill_start = Some(now);
+                    }
+                }
+                // the checkpoint read is a real disk -> GPU transfer on
+                // the adopting replica's critical path (unlike the write,
+                // which rode the idle link)
+                self.backend.clock_mut().advance(self.cost.disk_restore_time(len, layers));
+                self.stats.adoptions += 1;
+                self.stats.adopt_restore_bytes += len as f64
+                    * layers as f64
+                    * self.cfg.offload_bytes_per_token_layer()
+                    / self.cfg.tp as f64;
+                let ps = self.requests[local].prefill_start.unwrap();
+                let reqs_ref = &self.requests;
+                let pos = self
+                    .running
+                    .partition_point(|&o| reqs_ref[o].prefill_start.unwrap_or(0.0) <= ps);
+                self.running.insert(pos, local);
+                self.agg_admit(local);
+                self.view_admit_running(local);
+                self.trace_instant(
+                    EventKind::Adopt,
+                    local,
+                    snap.generated as u64,
+                    resume as u64,
+                    0,
+                );
+                return (local, resume);
+            }
+        }
+        // degraded adoption: no checkpoint (or no restore path / no room) —
+        // re-enter the queue; decode progress survives via recompute
+        // preemption semantics (re-prefill covers prompt + generated)
+        if snap.generated > 0 {
+            let r = &mut self.requests[local];
+            r.generated = snap.generated;
+            r.phase = Phase::Preempted;
+        }
+        self.waiting.push_back(local);
+        self.view_push_waiting(local);
+        self.trace_instant(EventKind::Adopt, local, snap.generated as u64, 0, 0);
+        (local, 0)
     }
 
     /// One scheduling step of the incremental path with no arrival in
@@ -1147,6 +1344,48 @@ impl<B: ExecutionBackend> Engine<B> {
     fn layer_wire_bytes(&self, rid: ReqId) -> f64 {
         let tokens = self.kv.table(rid).map(|t| t.tokens).unwrap_or(0);
         tokens as f64 * self.cfg.offload_bytes_per_token_layer() / self.cfg.tp as f64
+    }
+
+    /// Virtual incremental checkpointing: after `rid`'s committed-token
+    /// count grows, advance its durable point to the latest crossing of
+    /// the `ckpt_every_tokens` grid (plus an initial point at token 1, so
+    /// the expensive prefill becomes durable as soon as any decode
+    /// progress exists). Writes are *virtual*: bytes and disk-link
+    /// seconds are accounted in the `ckpt_*` stats — priced through the
+    /// same wire-bytes model as spills — but the clock never advances, so
+    /// checkpointing on is execution-bit-identical to off
+    /// (`tests/prop_migration.rs` pins this). The durable point after any
+    /// commit depends only on `generated`, never on how commits were
+    /// chunked, so lockstep and heap drives agree on every snapshot.
+    /// Skipped while the disk tier is faulty, fenced, or absent — a
+    /// checkpoint nobody could read back is not durability.
+    fn maybe_checkpoint(&mut self, rid: ReqId) {
+        let k = self.cfg.ckpt_every_tokens;
+        if k == 0 {
+            return;
+        }
+        if self.disk_faulty || self.kv.disk.total() == 0 {
+            return;
+        }
+        let r = &self.requests[rid];
+        let g = r.generated;
+        let target = if g >= k { g - g % k } else { usize::from(g >= 1) };
+        if target <= r.last_ckpt {
+            return;
+        }
+        // incremental: the first write covers the prompt too (the whole
+        // durable prefix), later writes only the tokens since the last
+        let delta =
+            if r.last_ckpt == 0 { r.prompt_len + target } else { target - r.last_ckpt };
+        let layers = self.cfg.model.n_layers;
+        self.requests[rid].last_ckpt = target;
+        self.stats.ckpt_writes += 1;
+        self.stats.ckpt_bytes += delta as f64
+            * layers as f64
+            * self.cfg.offload_bytes_per_token_layer()
+            / self.cfg.tp as f64;
+        self.stats.ckpt_write_s += self.cost.spill_time(delta, layers);
+        self.trace_instant(EventKind::Checkpoint, rid, target as u64, delta as u64, 0);
     }
 
     /// Spill with backend mirroring and stats: host -> disk. Decode-batch
@@ -1539,6 +1778,7 @@ impl<B: ExecutionBackend> Engine<B> {
             debug_assert!(!r.done(), "horizon must stop before any completion");
             self.view.running_tokens += k;
             self.view.running_remaining_tokens -= consumed;
+            self.maybe_checkpoint(rid);
         }
         self.agg.resident_tokens += k * batch;
         self.stats.decode_steps += k as u64;
@@ -1725,6 +1965,7 @@ impl<B: ExecutionBackend> Engine<B> {
             debug_assert!(!r.done(), "horizon must stop before any completion");
             self.view.running_tokens += c;
             self.view.running_remaining_tokens -= consumed;
+            self.maybe_checkpoint(rid);
         }
         self.agg.resident_tokens += c * batch;
         self.stats.decode_steps += c as u64;
@@ -1904,6 +2145,8 @@ impl<B: ExecutionBackend> Engine<B> {
                 }
                 if self.requests[rid].done() {
                     self.complete(rid);
+                } else {
+                    self.maybe_checkpoint(rid);
                 }
             }
         }
@@ -2041,6 +2284,8 @@ impl<B: ExecutionBackend> Engine<B> {
             }
             if self.requests[rid].done() {
                 finished.push(rid);
+            } else {
+                self.maybe_checkpoint(rid);
             }
         }
         for &rid in &finished {

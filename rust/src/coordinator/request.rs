@@ -48,6 +48,10 @@ pub struct Request {
     /// matched; also the live-lease marker — reset when the lease is
     /// released).
     pub cached_prefix: usize,
+    /// Committed tokens covered by the last durable disk checkpoint
+    /// (0 = none; stays 0 when checkpointing is off or the disk tier is
+    /// fenced). Failover can resume this far without recompute.
+    pub last_ckpt: usize,
 }
 
 impl Request {
@@ -66,6 +70,7 @@ impl Request {
             preemptions: 0,
             prefix: t.prefix,
             cached_prefix: 0,
+            last_ckpt: 0,
         }
     }
 

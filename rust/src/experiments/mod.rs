@@ -719,6 +719,10 @@ pub struct FaultRow {
     pub completed: usize,
     pub failed: usize,
     pub retries: u64,
+    /// Prefill tokens whose compute was repeated by crash failover.
+    pub recomputed_tokens: u64,
+    /// Victims resumed from a checkpoint instead of resubmitted.
+    pub adoptions: u64,
     pub downtime_s: f64,
     pub ttft_p99: f64,
     pub viol: f64,
@@ -784,6 +788,8 @@ pub fn fault_sweep_with(n_per_replica: usize) -> Vec<FaultRow> {
             completed: out.merged.records.len(),
             failed: out.failed.len(),
             retries: f.retries,
+            recomputed_tokens: f.recomputed_tokens,
+            adoptions: f.adoptions,
             downtime_s: f.downtime_s,
             ttft_p99: ttft.p99(),
             viol: out.merged.slo_violation_rate(&cfg.slo),
@@ -800,8 +806,8 @@ pub fn print_faults(rows: &[FaultRow]) {
     let mut t = Table::new(
         "Fault sweep — router policies under crashes/stragglers/disk-I/O bursts \
          (3 replicas, bursty ShareGPT load, 2.5 req/s per replica mean)",
-        &["scenario", "router", "completed", "failed", "retries", "down(s)",
-          "TTFT p99(s)", "viol %", "goodput req/s"],
+        &["scenario", "router", "completed", "failed", "retries", "recomputed tok",
+          "adoptions", "down(s)", "TTFT p99(s)", "viol %", "goodput req/s"],
     );
     for r in rows {
         t.row(&[
@@ -810,6 +816,8 @@ pub fn print_faults(rows: &[FaultRow]) {
             r.completed.to_string(),
             r.failed.to_string(),
             r.retries.to_string(),
+            r.recomputed_tokens.to_string(),
+            r.adoptions.to_string(),
             format!("{:.1}", r.downtime_s),
             format!("{:.2}", r.ttft_p99),
             format!("{:.1}", 100.0 * r.viol),
@@ -837,6 +845,122 @@ pub fn print_faults(rows: &[FaultRow]) {
                 rr.ttft_p99,
             );
         }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Checkpointed failover — the stateful-failover contrast: the same
+// crash-heavy plan (every replica down once, staggered so survivors can
+// adopt) run recompute-only vs with layer-wise KV checkpointing to the
+// NVMe tier. Without checkpoints every crash victim re-prefills its
+// whole context on a survivor; with them the survivor restores the
+// last checkpoint and re-prefills only the few-token suffix, so the
+// recomputed-prefill-token bill collapses.
+// ---------------------------------------------------------------------
+
+/// Checkpoint cadence the contrast (and the CI smoke) uses: one
+/// incremental disk checkpoint per 8 committed tokens.
+pub const CKPT_EVERY: usize = 8;
+
+pub struct CkptRow {
+    /// "recompute-only" or "ckpt-8".
+    pub variant: &'static str,
+    pub completed: usize,
+    pub failed: usize,
+    pub retries: u64,
+    pub adoptions: u64,
+    pub recomputed_tokens: u64,
+    pub resumed_tokens: u64,
+    pub ttft_p99: f64,
+}
+
+/// Crash-heavy plan: each of the 3 replicas goes down once, the windows
+/// staggered so no two overlap and two survivors are always up to adopt
+/// the victims' checkpoints.
+fn ckpt_crash_plan(horizon: f64) -> FaultPlan {
+    let mut plan = FaultPlan { probation_s: horizon * 0.05, ..FaultPlan::default() };
+    for r in 0..3usize {
+        let at = horizon * (0.25 + 0.18 * r as f64);
+        plan.crashes.push(CrashWindow { replica: r, at, recover_at: at + horizon * 0.12 });
+    }
+    plan
+}
+
+/// The contrast at an explicit per-replica request count (tests and the
+/// CI smoke use a small one).
+pub fn ckpt_contrast_with(n_per_replica: usize) -> Vec<CkptRow> {
+    const K: usize = 3;
+    let variants: &[(&'static str, usize)] =
+        &[("recompute-only", 0), ("ckpt-8", CKPT_EVERY)];
+    par_map(variants, |&(variant, every)| {
+        let rate = CLUSTER_RATE_PER_REPLICA * K as f64;
+        let trace = cluster_trace(rate, n_per_replica * K, 23);
+        let horizon =
+            trace.requests.last().map(|r| r.arrival).unwrap_or(0.0).max(1.0);
+        // both variants get the NVMe tier (checkpoints live there); only
+        // the cadence differs, so the contrast isolates checkpointing
+        let mut cfg = setup("7b")
+            .with_policy(Policy::LayerKv { slo_aware: true })
+            .with_disk(crate::config::DiskSpec::nvme_4tb());
+        if every > 0 {
+            cfg = cfg.with_checkpointing(every);
+        }
+        let mut cluster =
+            Cluster::new(&ClusterConfig::homogeneous(&cfg, K, RouterPolicy::KvPressure))
+                .with_faults(ckpt_crash_plan(horizon));
+        let out = cluster.run(&trace).expect("ckpt contrast run");
+        let f = out.faults.clone().unwrap_or_default();
+        let mut ttft = out.merged.ttft();
+        CkptRow {
+            variant,
+            completed: out.merged.records.len(),
+            failed: out.failed.len(),
+            retries: f.retries,
+            adoptions: f.adoptions,
+            recomputed_tokens: f.recomputed_tokens,
+            resumed_tokens: f.resumed_tokens,
+            ttft_p99: ttft.p99(),
+        }
+    })
+}
+
+pub fn ckpt_contrast() -> Vec<CkptRow> {
+    ckpt_contrast_with(n_requests(100))
+}
+
+/// Title prefix `faults-check` locates the captured table by.
+pub const CKPT_TABLE_TITLE: &str = "Checkpointed failover";
+
+pub fn print_ckpt(rows: &[CkptRow]) {
+    let mut t = Table::new(
+        "Checkpointed failover — crash-heavy plan (every replica down once, staggered) \
+         on 3 replicas with an NVMe tier: recompute-only vs checkpointing every 8 tokens",
+        &["failover", "completed", "failed", "retries", "adoptions",
+          "recomputed tok", "resumed tok", "TTFT p99(s)"],
+    );
+    for r in rows {
+        t.row(&[
+            r.variant.to_string(),
+            r.completed.to_string(),
+            r.failed.to_string(),
+            r.retries.to_string(),
+            r.adoptions.to_string(),
+            r.recomputed_tokens.to_string(),
+            r.resumed_tokens.to_string(),
+            format!("{:.2}", r.ttft_p99),
+        ]);
+    }
+    t.print();
+    let get = |v: &str| rows.iter().find(|r| r.variant == v);
+    if let (Some(off), Some(on)) = (get("recompute-only"), get("ckpt-8")) {
+        let red = 100.0
+            * (1.0 - on.recomputed_tokens as f64 / off.recomputed_tokens.max(1) as f64);
+        println!(
+            "checkpointing cut recomputed prefill tokens by {red:.1}% \
+             ({} -> {}), adopting {} crash victim(s) mid-decode \
+             ({} tokens resumed from checkpoints)",
+            off.recomputed_tokens, on.recomputed_tokens, on.adoptions, on.resumed_tokens,
+        );
     }
 }
 

@@ -5,13 +5,14 @@
 //!                    [--quick] [--macro-steps|--no-macro-steps] [--no-prefix-cache]
 //! layerkv sim --model <7b|34b|70b> --policy <vllm|layerkv|layerkv-no-slo>
 //!             --ctx <tokens> --rate <req/s> --requests <n> [--sharegpt]
-//!             [--replicas N] [--router <policy>] [--faults SPEC] [--lockstep]
+//!             [--replicas N] [--router <policy>] [--faults SPEC] [--ckpt K] [--lockstep]
 //! layerkv serve [--addr 127.0.0.1:7181] [--artifacts DIR] [--budget BYTES]
 //!               [--policy <vllm|layerkv|layerkv-no-slo>] [--max-batch N]
 //!               [--ref-model] [--replicas N] [--router <policy>]
 //! layerkv bench-check [--baseline BENCH_baseline.json] [--current BENCH_hotpath.json]
 //!                     [--factor 2.5] [--update]
 //! layerkv trace-check TRACE.json
+//! layerkv faults-check TABLES.json [--min-reduction PCT]
 //! layerkv selftest [--artifacts DIR]
 //! ```
 //!
@@ -31,8 +32,13 @@
 //!
 //! `sim --replicas N` routes the trace across an N-replica simulated
 //! cluster; `--faults SPEC` injects a deterministic fault schedule
-//! (`crash=R@T1[:T2],straggle=R@T1:T2xF,io=R@T1:T2,retries=N,probation=S`
-//! — see `cluster::faults::FaultPlan::parse_spec`). `--lockstep` (or
+//! (`crash=R@T1[:T2],straggle=R@T1:T2xF,io=R@T1:T2,migrate=S>D@T,retries=N,probation=S`
+//! — see `cluster::faults::FaultPlan::parse_spec`). `--ckpt K` turns on
+//! layer-wise KV checkpointing every K committed tokens (provisioning
+//! the NVMe tier when the preset has none), so crash victims are
+//! adopted from their last checkpoint instead of recomputed;
+//! `faults-check` asserts the checkpointing headline (recomputed-token
+//! reduction) from an `experiment faults --json` capture. `--lockstep` (or
 //! LAYERKV_LOCKSTEP=1) drives the cluster on the per-arrival lockstep
 //! oracle instead of the cluster-wide event heap — bit-identical
 //! results, O(replicas x arrivals) cost.
@@ -59,6 +65,7 @@ fn main() -> ExitCode {
         "serve" => cmd_serve(rest),
         "bench-check" => cmd_bench_check(rest),
         "trace-check" => cmd_trace_check(rest),
+        "faults-check" => cmd_faults_check(rest),
         "selftest" => cmd_selftest(rest),
         "help" | "--help" | "-h" => {
             print_help();
@@ -89,14 +96,15 @@ fn print_help() {
          \x20                    [--json TABLES.json] [--trace-out TRACE.json] [--trace-jsonl TRACE.jsonl]\n\
          \x20 layerkv sim --model 7b --policy layerkv --ctx 4096 --rate 1.0 --requests 100 [--sharegpt]\n\
          \x20             [--replicas N] [--router round-robin|jsq|kv-pressure|slo-aware|prefix-aware] [--lockstep]\n\
-         \x20             [--faults crash=R@T1[:T2],straggle=R@T1:T2xF,io=R@T1:T2,retries=N,probation=S]\n\
-         \x20             [--trace-out TRACE.json] [--trace-jsonl TRACE.jsonl]\n\
+         \x20             [--faults crash=R@T1[:T2],straggle=R@T1:T2xF,io=R@T1:T2,migrate=S>D@T,retries=N,probation=S]\n\
+         \x20             [--ckpt K] [--trace-out TRACE.json] [--trace-jsonl TRACE.jsonl]\n\
          \x20 layerkv serve [--addr 127.0.0.1:7181] [--artifacts DIR] [--budget BYTES]\n\
          \x20               [--policy vllm|layerkv|layerkv-no-slo] [--max-batch N] [--ref-model]\n\
          \x20               [--replicas N] [--router round-robin|jsq|kv-pressure|slo-aware|prefix-aware]\n\
          \x20 layerkv bench-check [--baseline BENCH_baseline.json] [--current BENCH_hotpath.json]\n\
          \x20                     [--factor 2.5] [--update]\n\
          \x20 layerkv trace-check TRACE.json\n\
+         \x20 layerkv faults-check TABLES.json [--min-reduction PCT]\n\
          \x20 layerkv selftest [--artifacts DIR]\n\
          \n\
          `--trace-out` records per-request lifecycle spans and virtual-time\n\
@@ -176,6 +184,95 @@ fn cmd_trace_check(args: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// CI chaos gate: read an `experiment faults --json` capture, find the
+/// checkpointed-failover table, and fail unless checkpointing cut the
+/// recomputed prefill tokens by at least `--min-reduction` percent
+/// (default 50) while actually adopting crash victims.
+fn cmd_faults_check(args: &[String]) -> anyhow::Result<()> {
+    let path = args
+        .first()
+        .filter(|a| !a.starts_with("--"))
+        .cloned()
+        .ok_or_else(|| {
+            anyhow::anyhow!("usage: layerkv faults-check TABLES.json [--min-reduction PCT]")
+        })?;
+    let min_reduction: f64 =
+        opt(args, "--min-reduction").unwrap_or_else(|| "50".into()).parse()?;
+    let text = std::fs::read_to_string(&path)
+        .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+    let j = layerkv::util::Json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("parsing {path}: {e}"))?;
+    let tables = j
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("{path}: expected an array of captured tables"))?;
+    let table = tables
+        .iter()
+        .find(|t| {
+            t.get("title")
+                .and_then(|s| s.as_str())
+                .is_some_and(|s| s.starts_with(exp::CKPT_TABLE_TITLE))
+        })
+        .ok_or_else(|| {
+            anyhow::anyhow!(
+                "{path}: no '{}' table — generate it with \
+                 `layerkv experiment faults --json {path}`",
+                exp::CKPT_TABLE_TITLE
+            )
+        })?;
+    let headers = table
+        .req("headers")?
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("{path}: headers must be an array"))?
+        .iter()
+        .map(|h| h.as_str().unwrap_or("").to_string())
+        .collect::<Vec<_>>();
+    let col = |name: &str| -> anyhow::Result<usize> {
+        headers
+            .iter()
+            .position(|h| h == name)
+            .ok_or_else(|| anyhow::anyhow!("{path}: missing column '{name}'"))
+    };
+    let (variant_c, recomp_c, adopt_c) =
+        (col("failover")?, col("recomputed tok")?, col("adoptions")?);
+    let rows = table
+        .req("rows")?
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("{path}: rows must be an array"))?;
+    let cell = |variant: &str, c: usize| -> anyhow::Result<f64> {
+        rows.iter()
+            .filter_map(|r| r.as_arr())
+            .find(|r| r.get(variant_c).and_then(|v| v.as_str()) == Some(variant))
+            .and_then(|r| r.get(c))
+            .and_then(|v| v.as_str())
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| anyhow::anyhow!("{path}: no numeric row for '{variant}'"))
+    };
+    let off = cell("recompute-only", recomp_c)?;
+    let on = cell("ckpt-8", recomp_c)?;
+    let adoptions = cell("ckpt-8", adopt_c)?;
+    anyhow::ensure!(
+        off > 0.0,
+        "recompute-only run incurred no recomputed tokens: the crash plan \
+         found no victims, so the contrast is vacuous"
+    );
+    anyhow::ensure!(
+        adoptions > 0.0,
+        "checkpointed run adopted no crash victims: checkpointing never engaged"
+    );
+    let reduction = 100.0 * (1.0 - on / off);
+    anyhow::ensure!(
+        reduction >= min_reduction,
+        "checkpointing cut recomputed prefill tokens by only {reduction:.1}% \
+         ({off:.0} -> {on:.0}), below the {min_reduction:.0}% floor"
+    );
+    println!(
+        "faults-check: checkpointing cut recomputed prefill tokens by \
+         {reduction:.1}% ({off:.0} -> {on:.0}, {adoptions:.0} adoption(s)) \
+         — >= {min_reduction:.0}% floor"
+    );
+    Ok(())
+}
+
 fn cmd_experiment(args: &[String]) -> anyhow::Result<()> {
     if flag(args, "--quick") {
         std::env::set_var("LAYERKV_QUICK", "1");
@@ -217,7 +314,13 @@ fn cmd_experiment(args: &[String]) -> anyhow::Result<()> {
             // the event-heap payoff: 64-512 replicas under diurnal load
             // (kept out of `all` alongside cluster-wide — scale runs)
             "fleet" => exp::print_fleet(&exp::fleet_sweep()),
-            "faults" => exp::print_faults(&exp::fault_sweep()),
+            "faults" => {
+                exp::print_faults(&exp::fault_sweep());
+                // the stateful-failover headline: recompute-only vs
+                // checkpointed adoption under a crash-heavy plan
+                // (`faults-check` asserts it from the --json capture)
+                exp::print_ckpt(&exp::ckpt_contrast());
+            }
             "prefix" => exp::print_prefix(&exp::prefix_sweep()),
             other => anyhow::bail!("unknown experiment '{other}'"),
         }
@@ -260,7 +363,17 @@ fn cmd_sim(args: &[String]) -> anyhow::Result<()> {
     let n: usize = opt(args, "--requests").unwrap_or_else(|| "100".into()).parse()?;
     let seed: u64 = opt(args, "--seed").unwrap_or_else(|| "7".into()).parse()?;
 
-    let cfg: ServingConfig = exp::setup(&model).with_policy(policy);
+    let mut cfg: ServingConfig = exp::setup(&model).with_policy(policy);
+    if let Some(k) = opt(args, "--ckpt") {
+        let every: usize = k.parse()?;
+        anyhow::ensure!(every > 0, "--ckpt must be a positive token count");
+        // checkpoints live on the disk tier; provision the NVMe spec the
+        // tiered presets use when the chosen preset has none
+        if !cfg.node.disk.enabled() {
+            cfg.node.disk = layerkv::config::DiskSpec::nvme_4tb();
+        }
+        cfg = cfg.with_checkpointing(every);
+    }
     let trace = if let Some(path) = opt(args, "--trace") {
         // replay a recorded JSON-lines trace
         layerkv::workload::trace::load(std::path::Path::new(&path))?
@@ -380,8 +493,13 @@ fn sim_cluster(
     if let Some(f) = &out.faults {
         println!(
             "faults crashes {}   recoveries {}   stragglers {}   io bursts {}   \
-             retries {}   downtime {:.1}s",
-            f.crashes, f.recoveries, f.straggler_windows, f.io_bursts, f.retries, f.downtime_s
+             migrations {}   retries {}   downtime {:.1}s",
+            f.crashes, f.recoveries, f.straggler_windows, f.io_bursts, f.migrations,
+            f.retries, f.downtime_s
+        );
+        println!(
+            "failover adoptions {}   resumed tokens {}   recomputed tokens {}",
+            f.adoptions, f.resumed_tokens, f.recomputed_tokens
         );
         for ev in cluster.fault_log() {
             println!("  {}", ev.render());

@@ -62,19 +62,25 @@ pub enum FaultKind {
     /// Disk-tier I/O errors begin on this replica.
     IoErrorStart,
     IoErrorEnd,
+    /// Planned live migration: this replica (the source) drains with
+    /// full state and `dst` adopts everything; the source is then fenced
+    /// (administratively down, scale-down semantics).
+    Migrate { dst: usize },
 }
 
 impl FaultKind {
     /// Stable ordering rank for same-instant events (crashes before
-    /// recoveries so a zero-length window still drains).
+    /// recoveries so a zero-length window still drains; migrations after
+    /// crashes so a same-instant crash on the destination is seen).
     pub fn rank(&self) -> u8 {
         match self {
             FaultKind::Crash => 0,
-            FaultKind::StragglerStart { .. } => 1,
-            FaultKind::IoErrorStart => 2,
-            FaultKind::IoErrorEnd => 3,
-            FaultKind::StragglerEnd => 4,
-            FaultKind::Recover => 5,
+            FaultKind::Migrate { .. } => 1,
+            FaultKind::StragglerStart { .. } => 2,
+            FaultKind::IoErrorStart => 3,
+            FaultKind::IoErrorEnd => 4,
+            FaultKind::StragglerEnd => 5,
+            FaultKind::Recover => 6,
         }
     }
 }
@@ -111,6 +117,20 @@ pub struct FaultSummary {
     /// Σ per-replica seconds spent crashed (windows still open at the end
     /// of the run count up to the run's end).
     pub downtime_s: f64,
+    /// Planned live migrations executed (source drained with state, every
+    /// request adopted by the destination).
+    pub migrations: usize,
+    /// Drained requests adopted from a checkpoint snapshot instead of
+    /// re-submitted from scratch (checkpointed failover + migrations).
+    pub adoptions: u64,
+    /// Prefill-equivalent tokens failover had to recompute: the whole
+    /// context (prompt + committed) for from-scratch re-submissions, only
+    /// the suffix past the checkpoint for adoptions. The headline the
+    /// checkpointing experiment contrasts.
+    pub recomputed_tokens: u64,
+    /// Tokens failover resumed straight from durable checkpoints (prompt
+    /// + checkpointed progress of each adopted request).
+    pub resumed_tokens: u64,
 }
 
 /// Per-request latency record (all timestamps in seconds of engine time).

@@ -73,10 +73,21 @@ fn record_args(r: &TraceRecord) -> Json {
             }
         }
         EventKind::Finish => pairs.push(("generated", num(r.a as f64))),
+        EventKind::Drain => {
+            pairs.push(("committed", num(r.a as f64)));
+            pairs.push(("checkpointed", num(r.b as f64)));
+        }
+        EventKind::Checkpoint => {
+            pairs.push(("durable_tokens", num(r.a as f64)));
+            pairs.push(("delta_tokens", num(r.b as f64)));
+        }
+        EventKind::Adopt => {
+            pairs.push(("committed", num(r.a as f64)));
+            pairs.push(("resumed", num(r.b as f64)));
+        }
         EventKind::Queued
         | EventKind::FirstToken
         | EventKind::Preempt
-        | EventKind::Drain
         | EventKind::Resubmit
         | EventKind::Drop
         | EventKind::Failed => {}
@@ -215,7 +226,9 @@ pub fn jsonl(t: &Tracer) -> String {
 /// Validate an exported Chrome trace document (the `trace-check` CLI and
 /// the prop suite run this): every event well-formed, timestamps
 /// monotonic per (track, lane), and — unless the span ring wrapped —
-/// every arrived request reaching a terminal mark (finish/drop/failed).
+/// every arrived request reaching a terminal mark (finish/drop/failed)
+/// and every drained request later re-entering somewhere (an `adopt` or
+/// `resubmit` instant) or exhausting its retry budget (`failed`).
 /// Returns a one-line summary on success.
 pub fn validate_chrome(j: &Json) -> Result<String, String> {
     let events = j
@@ -226,6 +239,8 @@ pub fn validate_chrome(j: &Json) -> Result<String, String> {
     let mut tracks: BTreeSet<u64> = BTreeSet::new();
     let mut arrived: BTreeSet<i64> = BTreeSet::new();
     let mut terminal: BTreeSet<i64> = BTreeSet::new();
+    let mut drained: BTreeSet<i64> = BTreeSet::new();
+    let mut redispatched: BTreeSet<i64> = BTreeSet::new();
     let mut n_events = 0usize;
     for (i, ev) in events.iter().enumerate() {
         let ph = ev
@@ -277,6 +292,12 @@ pub fn validate_chrome(j: &Json) -> Result<String, String> {
                 if matches!(name, "finish" | "drop" | "failed") {
                     terminal.insert(r);
                 }
+                if name == "drain" {
+                    drained.insert(r);
+                }
+                if matches!(name, "adopt" | "resubmit" | "failed") {
+                    redispatched.insert(r);
+                }
             }
         }
     }
@@ -289,6 +310,13 @@ pub fn validate_chrome(j: &Json) -> Result<String, String> {
         for r in &arrived {
             if !terminal.contains(r) {
                 return Err(format!("request {r} arrived but never reached a terminal span"));
+            }
+        }
+        for r in &drained {
+            if !redispatched.contains(r) {
+                return Err(format!(
+                    "request {r} was drained but never adopted, resubmitted, or failed"
+                ));
             }
         }
     }
@@ -377,6 +405,47 @@ mod tests {
         let j = chrome_trace(&h.lock());
         let err = validate_chrome(&j).unwrap_err();
         assert!(err.contains("request 5"), "{err}");
+    }
+
+    #[test]
+    fn validator_requires_drain_to_pair_with_adopt_or_resubmit() {
+        let rec = |t: f64, kind: EventKind| TraceRecord {
+            t0: t,
+            t1: t,
+            kind,
+            track: 0,
+            req: 3,
+            a: 0,
+            b: 0,
+            c: 0,
+        };
+        // drained and never seen again: rejected
+        let h = TraceHandle::new(16, 16);
+        h.record(rec(0.0, EventKind::Arrive));
+        h.record(rec(1.0, EventKind::Drain));
+        h.record(rec(2.0, EventKind::Finish));
+        let err = validate_chrome(&chrome_trace(&h.lock())).unwrap_err();
+        assert!(err.contains("drained"), "{err}");
+        // drained then adopted: valid
+        let h = TraceHandle::new(16, 16);
+        h.record(rec(0.0, EventKind::Arrive));
+        h.record(rec(1.0, EventKind::Drain));
+        h.record(rec(1.5, EventKind::Adopt));
+        h.record(rec(2.0, EventKind::Finish));
+        validate_chrome(&chrome_trace(&h.lock())).expect("adopted drain valid");
+        // drained then resubmitted: valid
+        let h = TraceHandle::new(16, 16);
+        h.record(rec(0.0, EventKind::Arrive));
+        h.record(rec(1.0, EventKind::Drain));
+        h.record(rec(1.5, EventKind::Resubmit));
+        h.record(rec(2.0, EventKind::Finish));
+        validate_chrome(&chrome_trace(&h.lock())).expect("resubmitted drain valid");
+        // drained then failed (budget exhausted): valid
+        let h = TraceHandle::new(16, 16);
+        h.record(rec(0.0, EventKind::Arrive));
+        h.record(rec(1.0, EventKind::Drain));
+        h.record(rec(2.0, EventKind::Failed));
+        validate_chrome(&chrome_trace(&h.lock())).expect("failed drain valid");
     }
 
     #[test]

@@ -41,6 +41,7 @@ pub const FAULT_STRAGGLER_START: u64 = 2;
 pub const FAULT_STRAGGLER_END: u64 = 3;
 pub const FAULT_IO_ERROR_START: u64 = 4;
 pub const FAULT_IO_ERROR_END: u64 = 5;
+pub const FAULT_MIGRATE: u64 = 6;
 
 /// Human name of a fault instant code (for exporters).
 pub fn fault_name(code: u64) -> &'static str {
@@ -51,6 +52,7 @@ pub fn fault_name(code: u64) -> &'static str {
         FAULT_STRAGGLER_END => "straggler_end",
         FAULT_IO_ERROR_START => "io_error_start",
         FAULT_IO_ERROR_END => "io_error_end",
+        FAULT_MIGRATE => "migrate",
         _ => "unknown",
     }
 }
@@ -84,9 +86,19 @@ pub enum EventKind {
     /// `b` = tier the cached blocks resided on.
     PrefixHit,
     /// Evicted unfinished by a drain (crash failover / scale-down).
+    /// `a` = tokens committed at the drain, `b` = tokens covered by the
+    /// last durable checkpoint.
     Drain,
     /// Re-submitted to another replica after a drain.
     Resubmit,
+    /// Incremental KV checkpoint written to the disk tier (virtual: the
+    /// write is priced, never clocked). `a` = committed tokens now
+    /// durable, `b` = tokens this write covered.
+    Checkpoint,
+    /// Adopted by another replica from a drain-with-state snapshot.
+    /// `a` = tokens committed at the drain, `b` = tokens resumed from the
+    /// durable checkpoint (0 = degraded to the recompute path).
+    Adopt,
     /// A fault-plan event applied to this replica. `a` = fault code
     /// (`FAULT_*`), `c` = slowdown bits for straggler starts.
     Fault,
@@ -112,6 +124,8 @@ impl EventKind {
             EventKind::PrefixHit => "prefix_hit",
             EventKind::Drain => "drain",
             EventKind::Resubmit => "resubmit",
+            EventKind::Checkpoint => "checkpoint",
+            EventKind::Adopt => "adopt",
             EventKind::Fault => "fault",
             EventKind::Finish => "finish",
             EventKind::Drop => "drop",
@@ -496,7 +510,13 @@ mod tests {
         assert!(!EventKind::Arrive.is_terminal());
         assert_eq!(EventKind::Prefill.lane(), 2);
         assert_eq!(EventKind::Fault.lane(), 0);
+        assert!(!EventKind::Checkpoint.is_span());
+        assert!(!EventKind::Adopt.is_span());
+        assert!(!EventKind::Adopt.is_terminal());
+        assert_eq!(EventKind::Checkpoint.name(), "checkpoint");
+        assert_eq!(EventKind::Adopt.lane(), 0);
         assert_eq!(fault_name(FAULT_CRASH), "crash");
+        assert_eq!(fault_name(FAULT_MIGRATE), "migrate");
         assert_eq!(fault_name(99), "unknown");
     }
 }

@@ -195,8 +195,10 @@ impl<M: TokenModel> PjrtBackend<M> {
     }
 
     /// Register each job's prompt tokens, indexed by engine `ReqId`
-    /// (position in the trace).
-    fn load_jobs(&mut self, jobs: &[ServeRequest]) {
+    /// (position in the trace). Public so failover harnesses can build a
+    /// backend for a standalone `Engine` and later install adopted lanes
+    /// beside these (see `ExecutionBackend::adopt`).
+    pub fn load_jobs(&mut self, jobs: &[ServeRequest]) {
         self.gens = jobs
             .iter()
             .map(|j| Gen { prompt: j.prompt.clone(), out: Vec::new() })
@@ -362,6 +364,26 @@ impl<M: TokenModel> ExecutionBackend for PjrtBackend<M> {
         if let Some(p) = self.pending.remove(&rid) {
             self.store.append_row(rid, &p.rows);
             self.gens[rid].out.push(p.token);
+        }
+    }
+
+    // `supports_kv_restore` stays false: the crash that produced the
+    // snapshot physically lost this store's tensors, so adoption goes
+    // through the recompute re-prefill path — which replays the adopted
+    // token streams below deterministically.
+
+    fn snapshot_tokens(&self, rid: ReqId) -> Option<(Vec<i32>, Vec<i32>)> {
+        self.gens.get(rid).map(|g| (g.prompt.clone(), g.out.clone()))
+    }
+
+    fn adopt(&mut self, rid: ReqId, tokens: Option<(Vec<i32>, Vec<i32>)>) {
+        // lanes are indexed by the dense engine-local id: backfill any
+        // gap (defensive; adoption normally lands at gens.len())
+        if self.gens.len() <= rid {
+            self.gens.resize_with(rid + 1, Gen::default);
+        }
+        if let Some((prompt, out)) = tokens {
+            self.gens[rid] = Gen { prompt, out };
         }
     }
 

@@ -38,6 +38,9 @@
 //! exposition format: protocol counters (requests/responses/failovers),
 //! the routing ledger (queued jobs/tokens, TTFT EWMA, liveness) and the
 //! accumulated `EngineStats` of every worker, labelled by worker index.
+//! `GET /healthz` is the liveness probe: per-worker `{dead, hung,
+//! fenced}` as JSON, HTTP 200 while any worker is routable and 503 once
+//! the whole fleet is fenced.
 //!
 //! Example session: `cargo run --release -- serve` then
 //! `printf '{"id":1,"prompt":[1,2,3],"max_new_tokens":4}\n' | nc 127.0.0.1 7181`
@@ -79,6 +82,16 @@ struct WorkerLoad {
     /// Its queue receiver is gone (worker thread died): never route here
     /// again, and ignore whatever in-flight ledger shares it froze.
     dead: bool,
+    /// It missed a reply deadline (wedged engine, still holding its
+    /// queue): fenced like dead, but reported distinctly on `/healthz`.
+    hung: bool,
+}
+
+impl WorkerLoad {
+    /// Out of the routing rotation for any reason.
+    fn fenced(&self) -> bool {
+        self.dead || self.hung
+    }
 }
 
 /// Rough per-token service time of the CPU executors — only used to put
@@ -99,7 +112,7 @@ const BACKOFF_BASE_S: f64 = 5e-3;
 /// every worker is dead. `rr` is the round-robin cursor value for this
 /// job. Ties break toward the lowest index, like the simulation router.
 fn pick_worker(policy: RouterPolicy, loads: &[WorkerLoad], rr: usize) -> Option<usize> {
-    let alive = loads.iter().filter(|l| !l.dead).count();
+    let alive = loads.iter().filter(|l| !l.fenced()).count();
     if alive == 0 {
         return None;
     }
@@ -107,7 +120,7 @@ fn pick_worker(policy: RouterPolicy, loads: &[WorkerLoad], rr: usize) -> Option<
         let mut best = 0usize;
         let mut best_score = f64::INFINITY;
         for (i, l) in loads.iter().enumerate() {
-            if l.dead {
+            if l.fenced() {
                 continue;
             }
             let s = score(l);
@@ -125,7 +138,7 @@ fn pick_worker(policy: RouterPolicy, loads: &[WorkerLoad], rr: usize) -> Option<
             loads
                 .iter()
                 .enumerate()
-                .filter(|(_, l)| !l.dead)
+                .filter(|(_, l)| !l.fenced())
                 .nth(nth)
                 .map(|(i, _)| i)
                 .unwrap_or(0)
@@ -180,6 +193,11 @@ fn fold_stats(acc: &mut EngineStats, s: &EngineStats) {
     acc.prefix_demotions += s.prefix_demotions;
     acc.prefix_promotions += s.prefix_promotions;
     acc.prefix_restore_bytes += s.prefix_restore_bytes;
+    acc.ckpt_writes += s.ckpt_writes;
+    acc.ckpt_bytes += s.ckpt_bytes;
+    acc.ckpt_write_s += s.ckpt_write_s;
+    acc.adoptions += s.adoptions;
+    acc.adopt_restore_bytes += s.adopt_restore_bytes;
 }
 
 /// Append one `# HELP` + `# TYPE` header pair (Prometheus text format).
@@ -207,6 +225,12 @@ struct Frontend {
     txs: Vec<Mutex<mpsc::Sender<Job>>>,
     /// Per-job reply deadline; missing it fences the worker as hung.
     reply_timeout: Duration,
+    /// Base delay of the failover backoff (doubles per attempt).
+    backoff_base_s: f64,
+    /// Sleep hook between failover attempts — injectable so integration
+    /// tests record the exact deterministic backoff schedule instead of
+    /// actually sleeping through it.
+    sleeper: Box<dyn Fn(Duration) + Send + Sync>,
     /// Protocol counters for `/metrics`.
     requests_total: AtomicU64,
     responses_ok: AtomicU64,
@@ -226,6 +250,8 @@ impl Frontend {
             worker_stats: Mutex::new(vec![WorkerStats::default(); txs.len()]),
             txs: txs.into_iter().map(Mutex::new).collect(),
             reply_timeout: REPLY_TIMEOUT,
+            backoff_base_s: BACKOFF_BASE_S,
+            sleeper: Box::new(|d| std::thread::sleep(d)),
             requests_total: AtomicU64::new(0),
             responses_ok: AtomicU64::new(0),
             responses_err: AtomicU64::new(0),
@@ -239,11 +265,32 @@ impl Frontend {
         self
     }
 
-    /// Fence a worker out of routing (crashed or hung). Its in-flight
-    /// ledger shares are frozen but ignored from here on; `saturating_sub`
-    /// keeps any late `job_done` from a merely-slow worker harmless.
-    fn fence(&self, worker: usize) {
-        self.loads.lock().expect("load ledger poisoned")[worker].dead = true;
+    /// Replace the backoff schedule (base seconds + sleep hook). Tests
+    /// inject a recorder so failover runs deterministically with no real
+    /// sleeping; the jitter itself is already seeded per request id.
+    #[cfg(test)]
+    fn with_backoff(
+        mut self,
+        base_s: f64,
+        sleeper: Box<dyn Fn(Duration) + Send + Sync>,
+    ) -> Self {
+        self.backoff_base_s = base_s;
+        self.sleeper = sleeper;
+        self
+    }
+
+    /// Fence a worker out of routing — `hung` for a missed reply deadline
+    /// (the thread still holds its queue), dead for a dropped queue. Its
+    /// in-flight ledger shares are frozen but ignored from here on;
+    /// `saturating_sub` keeps any late `job_done` from a merely-slow
+    /// worker harmless.
+    fn fence(&self, worker: usize, hung: bool) {
+        let l = &mut self.loads.lock().expect("load ledger poisoned")[worker];
+        if hung {
+            l.hung = true;
+        } else {
+            l.dead = true;
+        }
         self.failovers_total.fetch_add(1, Ordering::Relaxed);
     }
 
@@ -297,8 +344,8 @@ impl Frontend {
         let id = req.id;
         for attempt in 0..self.txs.len() {
             if attempt > 0 {
-                let base = BACKOFF_BASE_S * (1u64 << (attempt - 1).min(10)) as f64;
-                std::thread::sleep(Duration::from_secs_f64(base * (0.5 + 0.5 * rng.f64())));
+                let base = self.backoff_base_s * (1u64 << (attempt - 1).min(10)) as f64;
+                (self.sleeper)(Duration::from_secs_f64(base * (0.5 + 0.5 * rng.f64())));
             }
             let (rtx, rrx) = mpsc::channel();
             let Some(w) = self.dispatch(req.clone(), rtx) else { break };
@@ -307,11 +354,11 @@ impl Frontend {
                 // timeout: the worker is hung on this job (or wedged
                 // behind one). Fence it; if it ever answers, the reply
                 // lands in this dropped channel and the ledger update is
-                // ignored (dead workers are never routed to again).
-                // Disconnected: the worker thread died mid-batch and
-                // dropped our reply sender. Same treatment.
-                Err(mpsc::RecvTimeoutError::Timeout)
-                | Err(mpsc::RecvTimeoutError::Disconnected) => self.fence(w),
+                // ignored (fenced workers are never routed to again).
+                Err(mpsc::RecvTimeoutError::Timeout) => self.fence(w, true),
+                // the worker thread died mid-batch and dropped our reply
+                // sender: dead, not hung
+                Err(mpsc::RecvTimeoutError::Disconnected) => self.fence(w, false),
             }
         }
         render_error(Some(id), "no live engine workers")
@@ -369,7 +416,7 @@ impl Frontend {
         let loads = self.loads.lock().expect("load ledger poisoned").clone();
         prom_family(&mut o, "worker_up", "gauge", "1 while the worker is routable");
         for (i, l) in loads.iter().enumerate() {
-            prom_sample(&mut o, "worker_up", Some(i), if l.dead { 0.0 } else { 1.0 });
+            prom_sample(&mut o, "worker_up", Some(i), if l.fenced() { 0.0 } else { 1.0 });
         }
         prom_family(&mut o, "worker_queued_jobs", "gauge", "Jobs routed and unanswered");
         for (i, l) in loads.iter().enumerate() {
@@ -508,6 +555,23 @@ impl Frontend {
                 "Bytes restored to serve prefix hits",
                 |s| s.prefix_restore_bytes,
             ),
+            ("engine_ckpt_writes_total", "Incremental KV checkpoints written", |s| {
+                s.ckpt_writes as f64
+            }),
+            ("engine_ckpt_bytes_total", "Bytes of KV checkpointed to disk", |s| s.ckpt_bytes),
+            (
+                "engine_ckpt_write_seconds_total",
+                "Idle-link time spent writing checkpoints",
+                |s| s.ckpt_write_s,
+            ),
+            ("engine_adoptions_total", "Requests adopted from checkpoints", |s| {
+                s.adoptions as f64
+            }),
+            (
+                "engine_adopt_restore_bytes_total",
+                "Bytes read back restoring adopted requests",
+                |s| s.adopt_restore_bytes,
+            ),
         ];
         for (name, help, get) in engine_counters {
             let kind = if *name == "engine_disk_fenced" { "gauge" } else { "counter" };
@@ -517,6 +581,34 @@ impl Frontend {
             }
         }
         o
+    }
+
+    /// The `/healthz` body plus its routability verdict: per-worker
+    /// `{dead, hung, fenced}` and an overall status — `true` (HTTP 200)
+    /// while at least one worker is routable, `false` (503) when the
+    /// whole fleet is fenced.
+    fn healthz_json(&self) -> (bool, String) {
+        let loads = self.loads.lock().expect("load ledger poisoned").clone();
+        let any_up = loads.iter().any(|l| !l.fenced());
+        let workers: Vec<Json> = loads
+            .iter()
+            .enumerate()
+            .map(|(i, l)| {
+                let mut o = BTreeMap::new();
+                o.insert("worker".to_string(), Json::Num(i as f64));
+                o.insert("dead".to_string(), Json::Bool(l.dead));
+                o.insert("hung".to_string(), Json::Bool(l.hung));
+                o.insert("fenced".to_string(), Json::Bool(l.fenced()));
+                Json::Obj(o)
+            })
+            .collect();
+        let mut top = BTreeMap::new();
+        top.insert(
+            "status".to_string(),
+            Json::Str(if any_up { "ok" } else { "down" }.to_string()),
+        );
+        top.insert("workers".to_string(), Json::Arr(workers));
+        (any_up, Json::Obj(top).dump())
     }
 }
 
@@ -616,16 +708,23 @@ fn engine_worker<M: TokenModel>(
 }
 
 /// Full HTTP response for a `GET <path>` line on the JSON port — the
-/// `/metrics` scrape surface (Prometheus text format); anything else is
-/// a 404. Split out of `handle_conn` so it tests without a socket.
+/// `/metrics` scrape surface (Prometheus text format) and the
+/// `/healthz` liveness probe (JSON per-worker `{dead, hung, fenced}`,
+/// 200 while any worker is routable, 503 when the whole fleet is
+/// fenced); anything else is a 404. Split out of `handle_conn` so it
+/// tests without a socket.
 fn http_response(path: &str, front: &Frontend) -> String {
-    let (status, body) = if path == "/metrics" {
-        ("200 OK", front.metrics_text())
+    let (status, ctype, body) = if path == "/metrics" {
+        ("200 OK", "text/plain; version=0.0.4", front.metrics_text())
+    } else if path == "/healthz" {
+        let (up, body) = front.healthz_json();
+        let status = if up { "200 OK" } else { "503 Service Unavailable" };
+        (status, "application/json", body + "\n")
     } else {
-        ("404 Not Found", "not found\n".to_string())
+        ("404 Not Found", "text/plain; version=0.0.4", "not found\n".to_string())
     };
     format!(
-        "HTTP/1.1 {status}\r\nContent-Type: text/plain; version=0.0.4\r\n\
+        "HTTP/1.1 {status}\r\nContent-Type: {ctype}\r\n\
          Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
         body.len()
     )
@@ -755,7 +854,13 @@ mod tests {
     use super::*;
 
     fn load(jobs: usize, tokens: usize, ewma: Option<f64>) -> WorkerLoad {
-        WorkerLoad { queued_jobs: jobs, queued_tokens: tokens, ewma_ttft_s: ewma, dead: false }
+        WorkerLoad {
+            queued_jobs: jobs,
+            queued_tokens: tokens,
+            ewma_ttft_s: ewma,
+            dead: false,
+            hung: false,
+        }
     }
 
     #[test]
@@ -787,6 +892,17 @@ mod tests {
         }
         loads[1].dead = true;
         assert_eq!(pick_worker(RouterPolicy::KvPressure, &loads, 0), None);
+    }
+
+    #[test]
+    fn pick_worker_skips_hung_workers_too() {
+        let mut loads = vec![load(0, 0, None), load(5, 9000, Some(3.0))];
+        loads[0].hung = true;
+        for p in RouterPolicy::ALL {
+            assert_eq!(pick_worker(*p, &loads, 0), Some(1), "policy {}", p.name());
+        }
+        loads[1].hung = true;
+        assert_eq!(pick_worker(RouterPolicy::RoundRobin, &loads, 0), None);
     }
 
     #[test]
@@ -872,7 +988,10 @@ mod tests {
         let (tx1, rx1) = mpsc::channel::<Job>();
         let front = Arc::new(
             Frontend::new(RouterPolicy::RoundRobin, vec![tx0, tx1])
-                .with_reply_timeout(Duration::from_millis(50)),
+                .with_reply_timeout(Duration::from_millis(50))
+                // no-op sleeper: the failover path runs deterministically
+                // with zero wall-clock backoff
+                .with_backoff(BACKOFF_BASE_S, Box::new(|_| {})),
         );
         // worker 0 hangs: accepts jobs forever, never replies
         let hung = std::thread::spawn(move || {
@@ -890,9 +1009,12 @@ mod tests {
             assert!(j.get("error").is_none(), "unexpected error: {line}");
             assert_eq!(j.req("id").unwrap().as_usize(), Some(id));
         }
-        assert!(front.loads.lock().unwrap()[0].dead, "timeout fences the hung worker");
+        let l = front.loads.lock().unwrap()[0].clone();
+        assert!(l.hung, "timeout fences the worker as hung");
+        assert!(!l.dead, "a hang is not a death: its queue is still held");
+        assert!(l.fenced());
         // only the first request paid the timeout: the fence keeps every
-        // later round-robin pick off the dead worker. Worker threads park
+        // later round-robin pick off the hung worker. Worker threads park
         // in recv (they hold their own Arc<Frontend>); don't join.
         drop((live, hung));
     }
@@ -965,7 +1087,7 @@ mod tests {
         front.requests_total.fetch_add(3, Ordering::Relaxed);
         front.responses_ok.fetch_add(2, Ordering::Relaxed);
         front.responses_err.fetch_add(1, Ordering::Relaxed);
-        front.fence(1);
+        front.fence(1, false);
         front.record_batch(
             0,
             &EngineStats {
@@ -1013,6 +1135,128 @@ mod tests {
         assert_eq!(len, body.len());
         let missing = http_response("/nope", &front);
         assert!(missing.starts_with("HTTP/1.1 404"));
+    }
+
+    #[test]
+    fn failover_backoff_is_seeded_exponential_and_injectable() {
+        // worker 0 accepts each job, then drops it (reply sender dies) ->
+        // Disconnected -> fence -> one backed-off failover to worker 1
+        let (tx0, rx0) = mpsc::channel::<Job>();
+        let (tx1, rx1) = mpsc::channel::<Job>();
+        let slept = Arc::new(Mutex::new(Vec::<Duration>::new()));
+        let rec = Arc::clone(&slept);
+        let base = 0.25; // large on purpose: a real sleep here would hang the test
+        let front = Arc::new(
+            Frontend::new(RouterPolicy::RoundRobin, vec![tx0, tx1]).with_backoff(
+                base,
+                Box::new(move |d| rec.lock().unwrap().push(d)),
+            ),
+        );
+        let dropper = std::thread::spawn(move || while rx0.recv().is_ok() {});
+        let live = spawn_live_worker(rx1, Arc::clone(&front), 1);
+        let replies = call_ids(&front, &[900]);
+        let j = Json::parse(&replies[0]).unwrap();
+        assert!(j.get("error").is_none(), "failover must answer: {}", replies[0]);
+        assert!(front.loads.lock().unwrap()[0].dead);
+        // exactly one backoff (attempt 1), jittered into [base/2, base)
+        let sleeps = slept.lock().unwrap().clone();
+        assert_eq!(sleeps.len(), 1);
+        let s = sleeps[0].as_secs_f64();
+        assert!((base * 0.5..base).contains(&s), "jittered backoff {s} vs base {base}");
+        // and bit-exactly the seeded schedule: replaying the request
+        // replays the delay, independent of wall-clock or thread timing
+        let expect = base * (0.5 + 0.5 * Rng::new(900).f64());
+        assert!((s - expect).abs() < 1e-12, "jitter {s} != seeded {expect}");
+        drop((dropper, live));
+    }
+
+    #[test]
+    fn healthz_reports_per_worker_state_without_a_socket() {
+        let (tx0, _rx0) = mpsc::channel::<Job>();
+        let (tx1, _rx1) = mpsc::channel::<Job>();
+        let front = Frontend::new(RouterPolicy::RoundRobin, vec![tx0, tx1]);
+        // all live: 200 with every flag false
+        let resp = http_response("/healthz", &front);
+        assert!(resp.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(resp.contains("Content-Type: application/json"));
+        let body = resp.split("\r\n\r\n").nth(1).expect("has a body");
+        let j = Json::parse(body.trim()).unwrap();
+        assert_eq!(j.req("status").unwrap().as_str(), Some("ok"));
+        let workers = j.req("workers").unwrap().as_arr().unwrap();
+        assert_eq!(workers.len(), 2);
+        for w in workers {
+            assert_eq!(w.req("dead").unwrap().as_bool(), Some(false));
+            assert_eq!(w.req("hung").unwrap().as_bool(), Some(false));
+            assert_eq!(w.req("fenced").unwrap().as_bool(), Some(false));
+        }
+        // hang worker 0: still 200 (worker 1 routable), flags split
+        front.fence(0, true);
+        let (up, body) = front.healthz_json();
+        assert!(up);
+        let j = Json::parse(&body).unwrap();
+        let workers = j.req("workers").unwrap().as_arr().unwrap();
+        assert_eq!(workers[0].req("hung").unwrap().as_bool(), Some(true));
+        assert_eq!(workers[0].req("dead").unwrap().as_bool(), Some(false));
+        assert_eq!(workers[0].req("fenced").unwrap().as_bool(), Some(true));
+        assert_eq!(workers[1].req("fenced").unwrap().as_bool(), Some(false));
+        // kill worker 1 too: the whole fleet is fenced -> 503
+        front.fence(1, false);
+        let resp = http_response("/healthz", &front);
+        assert!(resp.starts_with("HTTP/1.1 503 Service Unavailable\r\n"));
+        let body = resp.split("\r\n\r\n").nth(1).unwrap();
+        let j = Json::parse(body.trim()).unwrap();
+        assert_eq!(j.req("status").unwrap().as_str(), Some("down"));
+        assert_eq!(
+            j.req("workers").unwrap().as_arr().unwrap()[1].req("dead").unwrap().as_bool(),
+            Some(true)
+        );
+    }
+
+    #[test]
+    fn healthz_integration_reflects_a_crashed_worker() {
+        // worker 0 "crashed before boot" (queue receiver dropped); its
+        // death is only discovered when traffic tries to land on it
+        let (tx0, rx0) = mpsc::channel::<Job>();
+        let (tx1, rx1) = mpsc::channel::<Job>();
+        drop(rx0);
+        let front = Arc::new(Frontend::new(RouterPolicy::RoundRobin, vec![tx0, tx1]));
+        let live = spawn_live_worker(rx1, Arc::clone(&front), 1);
+        let (up_before, _) = front.healthz_json();
+        assert!(up_before, "undetected crash: still reported routable");
+        let replies = call_ids(&front, &[55, 56]);
+        for line in &replies {
+            assert!(Json::parse(line).unwrap().get("error").is_none(), "{line}");
+        }
+        // the crash surfaced through dispatch: healthz now shows it dead
+        let resp = http_response("/healthz", &front);
+        assert!(resp.starts_with("HTTP/1.1 200 OK\r\n"), "survivor keeps the fleet up");
+        let body = resp.split("\r\n\r\n").nth(1).unwrap();
+        let j = Json::parse(body.trim()).unwrap();
+        let workers = j.req("workers").unwrap().as_arr().unwrap();
+        assert_eq!(workers[0].req("dead").unwrap().as_bool(), Some(true));
+        assert_eq!(workers[0].req("fenced").unwrap().as_bool(), Some(true));
+        assert_eq!(workers[1].req("fenced").unwrap().as_bool(), Some(false));
+        drop(live);
+    }
+
+    #[test]
+    fn fold_stats_accumulates_checkpoint_and_adoption_counters() {
+        let mut acc = EngineStats::default();
+        let s = EngineStats {
+            ckpt_writes: 3,
+            ckpt_bytes: 4096.0,
+            ckpt_write_s: 0.5,
+            adoptions: 2,
+            adopt_restore_bytes: 2048.0,
+            ..Default::default()
+        };
+        fold_stats(&mut acc, &s);
+        fold_stats(&mut acc, &s);
+        assert_eq!(acc.ckpt_writes, 6);
+        assert_eq!(acc.adoptions, 4);
+        assert!((acc.ckpt_bytes - 8192.0).abs() < 1e-9);
+        assert!((acc.ckpt_write_s - 1.0).abs() < 1e-12);
+        assert!((acc.adopt_restore_bytes - 4096.0).abs() < 1e-9);
     }
 
     #[test]

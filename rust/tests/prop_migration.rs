@@ -1,0 +1,464 @@
+//! Stateful-failover invariants: checkpointing, adoption, and live
+//! migration (randomized, seeded, replayable via LAYERKV_PROP_SEED /
+//! LAYERKV_PROP_CASES — see util::prop):
+//!
+//! * ckpt-off drive invariance — with checkpointing disabled, a faulted
+//!   cluster run is **bit-identical** across the event-heap and lockstep
+//!   drives, with decode fast-forwarding both on and off, under every
+//!   generated fault plan. The failover/adoption machinery must cost
+//!   exactly nothing when it is gated off.
+//! * checkpointing is execution-invisible — enabling `--ckpt K` changes
+//!   counters only: records, makespan bits, and drops are bit-identical
+//!   to the same run without checkpointing (the write rides the idle
+//!   disk link and never advances the clock).
+//! * conservation + replay with checkpointing on — generated fault plans
+//!   over a checkpoint-enabled fleet still partition the trace id space,
+//!   and the same (trace, plan) pair replays byte-identically including
+//!   the failover summary and fault-event log.
+//! * planned migration — a `migrate=S>D@T` clause drains the source and
+//!   adopts everything on the destination: nothing fails, nothing is
+//!   charged to the retry budget, and the event joins the fault log.
+//! * adopted decode is token-exact — a real (RefModel) engine drained
+//!   mid-decode and adopted by a fresh engine emits bit-identical token
+//!   streams to an uninterrupted run (`tests/golden/cluster_faulted.jsonl`
+//!   covers the cluster-level replay of a faulted run).
+
+use std::rc::Rc;
+
+use layerkv::cluster::{
+    Cluster, ClusterConfig, CrashWindow, FaultPlan, Migration, RouterPolicy,
+};
+use layerkv::config::{DiskSpec, Policy, ServingConfig};
+use layerkv::coordinator::{Engine, KvManager, LengthPredictor};
+use layerkv::runtime::{tiny_serving_config, PjrtBackend, RefModel, ServeRequest, TokenModel};
+use layerkv::util::prop::prop;
+use layerkv::util::Rng;
+use layerkv::workload::arrivals::Arrivals;
+use layerkv::workload::fixed::FixedWorkload;
+use layerkv::workload::sharegpt::ShareGptWorkload;
+use layerkv::workload::{trace, Trace, TraceRequest};
+
+fn random_policy(rng: &mut Rng) -> Policy {
+    match rng.range(0, 3) {
+        0 => Policy::Vllm,
+        1 => Policy::LayerKv { slo_aware: true },
+        _ => Policy::LayerKv { slo_aware: false },
+    }
+}
+
+fn random_trace(rng: &mut Rng, n: usize) -> Trace {
+    let rate = rng.f64() * 4.0 + 0.5;
+    let arrivals = if rng.chance(0.4) {
+        Arrivals::bursty(rate, rng.f64() * 2.0 + 1.5)
+    } else {
+        Arrivals::Poisson { rate }
+    };
+    if rng.chance(0.5) {
+        let mut w = ShareGptWorkload::paper(rate, n);
+        w.arrivals = arrivals;
+        w.generate(rng)
+    } else {
+        FixedWorkload {
+            prompt_len: rng.range_usize(16, 4096),
+            output_len: rng.range_usize(4, 128),
+            n_requests: n,
+            arrivals,
+        }
+        .generate(rng)
+    }
+}
+
+fn horizon_of(trace: &Trace) -> f64 {
+    trace.requests.last().map(|r| r.arrival).unwrap_or(0.0).max(1.0)
+}
+
+/// A checkpoint-capable fleet config: the sim presets default to no disk
+/// tier, and checkpoints need somewhere durable to land.
+fn ckpt_cfg(policy: Policy, every: usize) -> ServingConfig {
+    let cfg = ServingConfig::llama2_7b_tp1()
+        .with_policy(policy)
+        .with_disk(DiskSpec::nvme_4tb());
+    if every > 0 {
+        cfg.with_checkpointing(every)
+    } else {
+        cfg
+    }
+}
+
+/// The merged ids + drops + failures must be a permutation of `0..n`.
+fn assert_conserved(out: &layerkv::cluster::ClusterReport, n: usize, label: &str) {
+    assert_eq!(out.accounted(), n, "{label}: accounting mismatch");
+    let mut ids: Vec<usize> = out.merged.records.iter().map(|r| r.id).collect();
+    ids.extend(out.dropped.iter().copied());
+    ids.extend(out.failed.iter().copied());
+    ids.sort_unstable();
+    assert_eq!(
+        ids,
+        (0..n).collect::<Vec<_>>(),
+        "{label}: completions + drops + failures must partition the trace"
+    );
+}
+
+type FaultedOutcome = (layerkv::cluster::ClusterReport, Vec<String>);
+
+fn run_faulted(
+    cfg: &ServingConfig,
+    k: usize,
+    router: RouterPolicy,
+    plan: &FaultPlan,
+    trace: &Trace,
+    lockstep: bool,
+    macro_steps: bool,
+) -> FaultedOutcome {
+    let mut cluster =
+        Cluster::new(&ClusterConfig::homogeneous(cfg, k, router)).with_faults(plan.clone());
+    cluster.set_lockstep(lockstep);
+    cluster.set_macro_steps(macro_steps);
+    let out = cluster.run(trace).expect("faulted sim cluster never errors");
+    let log: Vec<String> = cluster.fault_log().iter().map(|e| e.render()).collect();
+    (out, log)
+}
+
+/// With checkpointing off (the PR-6 fault plane), the new snapshot/adopt
+/// machinery must be invisible: heap vs lockstep x macro on/off stay
+/// bit-identical under generated fault plans, per router.
+#[test]
+fn prop_ckpt_off_faulted_runs_are_drive_invariant() {
+    prop(4, |rng| {
+        let n = rng.range_usize(8, 26);
+        let k = rng.range_usize(2, 4);
+        let router = RouterPolicy::ALL[rng.range_usize(0, RouterPolicy::ALL.len())];
+        let trace = random_trace(rng, n);
+        let plan =
+            FaultPlan::generate(rng.range(0, 1 << 30) as u64, k, horizon_of(&trace) * 1.2);
+        let cfg = ServingConfig::llama2_7b_tp1().with_policy(random_policy(rng));
+        let (base, log_base) = run_faulted(&cfg, k, router, &plan, &trace, false, true);
+        for (lockstep, macro_steps) in [(false, false), (true, true), (true, false)] {
+            let (out, log) = run_faulted(&cfg, k, router, &plan, &trace, lockstep, macro_steps);
+            let label = format!(
+                "router {} k={k} lockstep={lockstep} macro={macro_steps}",
+                router.name()
+            );
+            assert_eq!(base.merged.records, out.merged.records, "{label}: records");
+            assert_eq!(
+                base.merged.makespan.to_bits(),
+                out.merged.makespan.to_bits(),
+                "{label}: makespan bits"
+            );
+            assert_eq!(base.dropped, out.dropped, "{label}: drops");
+            assert_eq!(base.failed, out.failed, "{label}: failures");
+            assert_eq!(base.faults, out.faults, "{label}: fault summary");
+            assert_eq!(log_base, log, "{label}: fault-event log");
+        }
+        assert_conserved(&base, n, "ckpt-off drive invariance");
+        let f = base.faults.as_ref().expect("plan attached");
+        assert_eq!(f.adoptions, 0, "no checkpoints -> every failover is a resubmit");
+        assert_eq!(f.resumed_tokens, 0, "nothing durable to resume from");
+    });
+}
+
+/// Checkpoint writes ride the idle disk link and advance no clock:
+/// enabling them must not change execution, only the counters. (The
+/// counters themselves are chunking-dependent across drive modes and are
+/// deliberately NOT compared here.)
+#[test]
+fn prop_checkpointing_is_execution_invisible() {
+    prop(5, |rng| {
+        let n = rng.range_usize(6, 24);
+        let k = rng.range_usize(1, 4);
+        let router = RouterPolicy::ALL[rng.range_usize(0, RouterPolicy::ALL.len())];
+        let trace = random_trace(rng, n);
+        let policy = random_policy(rng);
+        let every = rng.range_usize(1, 32);
+        for macro_steps in [true, false] {
+            let mut off = Cluster::new(&ClusterConfig::homogeneous(
+                &ckpt_cfg(policy, 0),
+                k,
+                router,
+            ));
+            off.set_macro_steps(macro_steps);
+            let a = off.run(&trace).expect("sim cluster never fails");
+            let mut on = Cluster::new(&ClusterConfig::homogeneous(
+                &ckpt_cfg(policy, every),
+                k,
+                router,
+            ));
+            on.set_macro_steps(macro_steps);
+            let b = on.run(&trace).expect("sim cluster never fails");
+            let label =
+                format!("router {} k={k} every={every} macro={macro_steps}", router.name());
+            assert_eq!(a.merged.records, b.merged.records, "{label}: records");
+            assert_eq!(
+                a.merged.makespan.to_bits(),
+                b.merged.makespan.to_bits(),
+                "{label}: makespan bits"
+            );
+            assert_eq!(a.dropped, b.dropped, "{label}: drops");
+            let off_writes: u64 = a.per_replica.iter().map(|p| p.stats.ckpt_writes).sum();
+            assert_eq!(off_writes, 0, "{label}: checkpointing off writes nothing");
+            if !b.merged.records.is_empty() {
+                let on_writes: u64 = b.per_replica.iter().map(|p| p.stats.ckpt_writes).sum();
+                assert!(
+                    on_writes > 0,
+                    "{label}: committed tokens with ckpt on must checkpoint"
+                );
+            }
+        }
+    });
+}
+
+/// Generated fault plans over a checkpoint-enabled fleet: the id space
+/// still partitions, and the same (trace, plan) pair replays
+/// byte-identically — including the adoption/recompute accounting.
+#[test]
+fn prop_checkpointed_faulted_runs_conserve_and_replay() {
+    prop(6, |rng| {
+        let n = rng.range_usize(10, 32);
+        let k = rng.range_usize(2, 5);
+        let router = RouterPolicy::ALL[rng.range_usize(0, RouterPolicy::ALL.len())];
+        let trace = random_trace(rng, n);
+        let plan =
+            FaultPlan::generate(rng.range(0, 1 << 30) as u64, k, horizon_of(&trace) * 1.3);
+        let cfg = ckpt_cfg(random_policy(rng), rng.range_usize(1, 16));
+        let (a, log_a) = run_faulted(&cfg, k, router, &plan, &trace, false, true);
+        let (b, log_b) = run_faulted(&cfg, k, router, &plan, &trace, false, true);
+        let label = format!("router {} k={k}", router.name());
+        assert_conserved(&a, n, &label);
+        assert_eq!(a.merged.records, b.merged.records, "{label}: records must replay");
+        assert_eq!(a.merged.makespan.to_bits(), b.merged.makespan.to_bits(), "{label}");
+        assert_eq!(a.failed, b.failed, "{label}: failures must replay");
+        assert_eq!(a.faults, b.faults, "{label}: failover summary must replay");
+        assert_eq!(log_a, log_b, "{label}: fault-event log must replay");
+        let f = a.faults.as_ref().expect("plan attached");
+        assert_eq!(f.failed, a.failed.len(), "{label}: summary/report failed mismatch");
+        assert!(
+            f.resumed_tokens == 0 || f.adoptions > 0,
+            "{label}: resumed tokens imply adoptions"
+        );
+    });
+}
+
+/// A planned live migration moves every in-flight request to the
+/// destination: nothing fails, the retry budget is untouched, and the
+/// migration is visible in both the fault log and the summary.
+#[test]
+fn prop_planned_migration_moves_state_without_failures() {
+    prop(6, |rng| {
+        let n = rng.range_usize(8, 26);
+        let k = 3usize;
+        let router = RouterPolicy::ALL[rng.range_usize(0, RouterPolicy::ALL.len())];
+        let trace = random_trace(rng, n);
+        let src = rng.range_usize(0, k);
+        let mut dst = rng.range_usize(0, k - 1);
+        if dst >= src {
+            dst += 1;
+        }
+        // strictly before the last arrival: events scheduled past the end
+        // of the run legitimately never fire, and this one must
+        let last = trace.requests.last().map(|r| r.arrival).unwrap_or(0.0);
+        let plan = FaultPlan {
+            migrations: vec![Migration { src, dst, at: last * 0.5 }],
+            ..FaultPlan::default()
+        };
+        plan.validate().expect("hand-built migration plan is valid");
+        let with_ckpt = rng.chance(0.5);
+        let cfg = if with_ckpt {
+            ckpt_cfg(random_policy(rng), 8)
+        } else {
+            ServingConfig::llama2_7b_tp1().with_policy(random_policy(rng))
+        };
+        let (out, log) = run_faulted(&cfg, k, router, &plan, &trace, false, true);
+        let label = format!("router {} {src}->{dst} ckpt={with_ckpt}", router.name());
+        assert_conserved(&out, n, &label);
+        assert!(out.failed.is_empty(), "{label}: migration never fails a request");
+        let f = out.faults.as_ref().expect("plan attached");
+        assert_eq!(f.migrations, 1, "{label}: the planned migration fires once");
+        assert_eq!(f.retries, 0, "{label}: adoption is never charged as a retry");
+        assert_eq!(log.len(), 1, "{label}: exactly the migration event fires");
+        // same plan, same trace: byte-identical replay
+        let (out2, log2) = run_faulted(&cfg, k, router, &plan, &trace, false, true);
+        assert_eq!(out.merged.records, out2.merged.records, "{label}: replay");
+        assert_eq!(out.faults, out2.faults, "{label}: summary replay");
+        assert_eq!(log, log2, "{label}: log replay");
+    });
+}
+
+// ---------------------------------------------------------------------
+// Token-exact adoption on a real (RefModel) engine
+// ---------------------------------------------------------------------
+
+fn ref_jobs() -> Vec<ServeRequest> {
+    (0..4)
+        .map(|id| ServeRequest {
+            id,
+            prompt: (0..24 + id * 3).map(|t| ((id * 13 + t * 7) % 256) as i32).collect(),
+            max_new_tokens: 8,
+            arrival_s: 0.0,
+        })
+        .collect()
+}
+
+fn ref_trace(jobs: &[ServeRequest]) -> Trace {
+    Trace {
+        requests: jobs
+            .iter()
+            .map(|j| TraceRequest {
+                id: j.id,
+                arrival: 0.0,
+                prompt_len: j.prompt.len(),
+                output_len: j.max_new_tokens,
+                prefix: Default::default(),
+            })
+            .collect(),
+    }
+}
+
+/// A standalone `Engine` over the deterministic RefModel executor — the
+/// same construction `RealEngine::serve` performs, minus the wrapper.
+fn ref_engine(jobs: &[ServeRequest]) -> Engine<PjrtBackend<RefModel>> {
+    let model = Rc::new(RefModel::new());
+    let spec = model.spec().clone();
+    let scfg = tiny_serving_config(&spec, Policy::LayerKv { slo_aware: true }, 8);
+    let layer_block_bytes = scfg.block_size * 2 * spec.n_kv_heads * spec.head_dim * 4;
+    let kv = KvManager::new_tiered(
+        (2 << 20) / layer_block_bytes,
+        4096,
+        0,
+        scfg.block_size,
+        spec.n_layers,
+    );
+    let mut backend = PjrtBackend::new(model, 8);
+    backend.load_jobs(jobs);
+    let predictor = LengthPredictor::new(spec.max_seq.max(2), 1.0, 42);
+    Engine::with_parts(scfg, kv, backend, predictor)
+}
+
+/// The tentpole's correctness anchor: interrupt a real engine mid-decode,
+/// export snapshots, adopt them on a fresh engine (which has never seen
+/// the prompts), and the completed token streams are bit-identical to an
+/// uninterrupted run. The RefModel backend cannot restore KV, so this
+/// exercises the degraded recompute-re-prefill adoption path end to end.
+#[test]
+fn adopted_requests_emit_bit_identical_tokens() {
+    let jobs = ref_jobs();
+    let trace = ref_trace(&jobs);
+
+    // uninterrupted baseline
+    let mut golden = ref_engine(&jobs);
+    let report = golden.try_run(&trace).expect("ref engine serves");
+    assert_eq!(report.records.len(), jobs.len(), "baseline completes everything");
+    let base: Vec<(Vec<i32>, Vec<i32>)> = (0..jobs.len())
+        .map(|rid| golden.backend.snapshot_tokens(rid).expect("baseline lane"))
+        .collect();
+    for (j, (_, out)) in jobs.iter().zip(&base) {
+        assert_eq!(out.len(), j.max_new_tokens, "baseline emits full streams");
+    }
+
+    // interrupted run: submit everything, step a few scheduler rounds,
+    // then drain with state mid-decode
+    let mut victim = ref_engine(&jobs);
+    let mirror = LengthPredictor::new(RefModel::new().spec().max_seq.max(2), 1.0, 42);
+    for tr in &trace.requests {
+        victim.submit(tr, mirror.predict(tr.id, tr.output_len));
+    }
+    for _ in 0..6 {
+        victim.step_once(false).expect("victim step");
+    }
+    let snaps = victim.drain_with_state();
+    assert_eq!(snaps.len(), jobs.len(), "nothing finished in 6 steps");
+    assert!(
+        snaps.iter().any(|s| s.generated > 0 && s.generated < s.output_len),
+        "fixture must interrupt at least one request mid-decode"
+    );
+    for s in &snaps {
+        let (prompt, out) = s.tokens.as_ref().expect("real backend exports tokens");
+        assert_eq!(prompt, &jobs[s.id].prompt, "snapshot carries the prompt");
+        assert_eq!(out.len(), s.generated, "snapshot tokens match progress");
+    }
+
+    // a fresh engine that never saw the jobs adopts every snapshot
+    let mut survivor = ref_engine(&[]);
+    for snap in &snaps {
+        let (_, resumed) = survivor.adopt(snap);
+        assert_eq!(resumed, 0, "RefModel cannot restore KV: recompute adoption");
+    }
+    while survivor.has_work() {
+        survivor.step_once(true).expect("survivor step");
+    }
+    assert_eq!(survivor.records().len(), snaps.len(), "survivor finishes all adoptees");
+
+    // adoption order is the survivor's dense local id order
+    for (local, snap) in snaps.iter().enumerate() {
+        let (prompt, out) = survivor.backend.snapshot_tokens(local).expect("adopted lane");
+        let (gp, go) = &base[snap.id];
+        assert_eq!(&prompt, gp, "request {}: prompt survives adoption", snap.id);
+        assert_eq!(&out, go, "request {}: tokens must be bit-identical", snap.id);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Golden faulted-cluster replay
+// ---------------------------------------------------------------------
+
+fn golden_faulted_trace() -> Trace {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/golden/cluster_faulted.jsonl");
+    trace::load(&path).expect("committed golden faulted trace must load")
+}
+
+/// The committed fault schedule replayed over the committed trace: one
+/// transient crash, one permanent crash, a straggler window, and an I/O
+/// burst, all mid-trace.
+fn golden_fault_plan() -> FaultPlan {
+    FaultPlan {
+        crashes: vec![
+            CrashWindow { replica: 1, at: 6.0, recover_at: 14.0 },
+            CrashWindow { replica: 2, at: 18.0, recover_at: f64::INFINITY },
+        ],
+        stragglers: vec![layerkv::cluster::Straggler {
+            replica: 0,
+            from: 10.0,
+            until: 16.0,
+            slowdown: 2.5,
+        }],
+        io_bursts: vec![layerkv::cluster::IoBurst { replica: 0, from: 20.0, until: 24.0 }],
+        ..FaultPlan::default()
+    }
+}
+
+/// Golden replay (satellite 5): the committed faulted run — hand-written
+/// trace, fixed plan, checkpointing off — is bit-identical between the
+/// event-heap fast path and the lockstep oracle, macro-stepping on and
+/// off, and replays deterministically.
+#[test]
+fn golden_faulted_cluster_replays_bit_identically() {
+    let tr = golden_faulted_trace();
+    assert_eq!(tr.requests.len(), 32, "committed fixture changed shape");
+    let plan = golden_fault_plan();
+    plan.validate().expect("committed fault plan is valid");
+    let cfg = ServingConfig::llama2_7b_tp1().with_policy(Policy::LayerKv { slo_aware: true });
+    for router in RouterPolicy::ALL {
+        let (fast, log_fast) = run_faulted(&cfg, 3, *router, &plan, &tr, false, true);
+        assert_conserved(&fast, 32, router.name());
+        let f = fast.faults.as_ref().expect("plan attached");
+        assert_eq!(f.crashes, 2, "both committed crashes fire");
+        assert_eq!(f.recoveries, 1, "only the transient crash recovers");
+        for (lockstep, macro_steps) in [(true, true), (true, false), (false, false)] {
+            let (out, log) = run_faulted(&cfg, 3, *router, &plan, &tr, lockstep, macro_steps);
+            let label = format!(
+                "router {} lockstep={lockstep} macro={macro_steps}",
+                router.name()
+            );
+            assert_eq!(fast.merged.records, out.merged.records, "{label}: records");
+            assert_eq!(
+                fast.merged.makespan.to_bits(),
+                out.merged.makespan.to_bits(),
+                "{label}: makespan bits"
+            );
+            assert_eq!(fast.dropped, out.dropped, "{label}: drops");
+            assert_eq!(fast.failed, out.failed, "{label}: failures");
+            assert_eq!(fast.faults, out.faults, "{label}: fault summary");
+            assert_eq!(log_fast, log, "{label}: fault-event log");
+        }
+    }
+}
